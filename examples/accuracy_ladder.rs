@@ -1,0 +1,73 @@
+//! Figure 11a/11b: the DSP-reduction ladder with its accuracy trajectory,
+//! and the per-technique ablations, combining the rust resource model
+//! with the accuracy measurements from the python build (which ran the
+//! bit-exact integer model over the trained tiny-ViT).
+//!
+//! Run: `cargo run --release --example accuracy_ladder`
+
+use hgpipe::arch::dsp::dsp_ladder;
+use hgpipe::arch::parallelism::design_network;
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::util::json::Json;
+
+fn main() -> hgpipe::Result<()> {
+    let cfg = ViTConfig::deit_tiny();
+    let d = design_network(&cfg, Precision::A4W3, 2);
+
+    let path = std::path::Path::new("artifacts/accuracy_ladder.json");
+    let acc = if path.exists() {
+        Some(Json::parse(&std::fs::read_to_string(path)?).map_err(|e| anyhow::anyhow!(e))?)
+    } else {
+        println!("(accuracy_ladder.json missing — showing DSP ladder only; run `make artifacts`)");
+        None
+    };
+
+    println!("=== Figure 11a: DSP usage ladder (DeiT-tiny design) ===");
+    println!("{:<40} {:>10} {:>12}", "step", "DSPs ours", "DSPs paper");
+    for s in dsp_ladder(&d) {
+        println!(
+            "{:<40} {:>10} {:>12}",
+            s.name,
+            s.dsps,
+            s.paper_dsps.map(|p| p.to_string()).unwrap_or_default()
+        );
+    }
+
+    if let Some(acc) = &acc {
+        // the accuracy trajectory (tiny-ViT substitution; see DESIGN.md)
+        for prec in ["a4w4", "a3w3"] {
+            let Some(ladder) = acc.get(prec).and_then(|p| p.get("ladder")) else { continue };
+            println!("\n=== accuracy trajectory [{prec}] (tiny-ViT, synthetic 10-class) ===");
+            for step in [
+                "fp32",
+                "lut_mac",
+                "pot_lut",
+                "+inverted_exp",
+                "+requant_calib",
+                "+gelu_calib",
+                "+segmented_recip",
+            ] {
+                if let Some(a) = ladder.get(step).and_then(|x| x.as_f64()) {
+                    println!("  {step:<18} {:.3}", a);
+                }
+            }
+        }
+        println!("\n=== Figure 11b: ablations (accuracy delta vs full pipeline) ===");
+        for prec in ["a4w4", "a3w3"] {
+            let Some(p) = acc.get(prec) else { continue };
+            let full = p
+                .get("ladder")
+                .and_then(|l| l.get("+segmented_recip"))
+                .and_then(|x| x.as_f64())
+                .unwrap_or(f64::NAN);
+            println!("[{prec}] full = {full:.3}");
+            if let Some(abl) = p.get("ablation").and_then(|a| a.as_obj()) {
+                for (name, v) in abl {
+                    let a = v.as_f64().unwrap_or(f64::NAN);
+                    println!("  {name:<22} {a:.3} ({:+.3})", a - full);
+                }
+            }
+        }
+    }
+    Ok(())
+}

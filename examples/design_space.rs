@@ -1,0 +1,69 @@
+//! Design-space exploration: sweep networks x precisions x platforms
+//! through the parallelism designer + deployment model (the ablation
+//! DESIGN.md calls out: what the hand-crafted Table-1 point trades).
+//!
+//! Run: `cargo run --release --example design_space`
+
+use hgpipe::arch::parallelism::{balance_target, design_network};
+use hgpipe::metrics::{datapath_luts, deploy};
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::platform::Fpga;
+
+fn main() {
+    println!("=== designer sweep: network x precision ===");
+    println!(
+        "{:<12} {:<6} {:>9} {:>10} {:>11} {:>12}",
+        "network", "prec", "MACs", "wBRAMs", "target II", "datapath LUT"
+    );
+    for cfg in [ViTConfig::tiny_synth(), ViTConfig::deit_tiny(), ViTConfig::deit_small()] {
+        for prec in [Precision::A8W8, Precision::A4W4, Precision::A4W3, Precision::A3W3] {
+            let d = design_network(&cfg, prec, 2);
+            println!(
+                "{:<12} {:<6} {:>9} {:>10} {:>11} {:>12}",
+                cfg.name,
+                prec.label(),
+                d.total_macs(),
+                d.total_brams(),
+                d.target_ii,
+                datapath_luts(&d),
+            );
+        }
+    }
+
+    println!("\n=== TP sweep: balance target vs token parallelism (deit-tiny) ===");
+    let cfg = ViTConfig::deit_tiny();
+    for tp in [1u64, 2, 4, 7] {
+        let d = design_network(&cfg, Precision::A4W3, tp);
+        println!(
+            "TP={tp}: target II {:>7}  MACs {:>7}  ideal fps@425MHz {:>6.0}",
+            balance_target(&cfg, tp),
+            d.total_macs(),
+            425e6 / d.accelerator_ii() as f64
+        );
+    }
+
+    println!("\n=== deployment sweep: what fits where ===");
+    println!(
+        "{:<12} {:<6} {:<8} {:>6} {:>8} {:>9} {:>8}",
+        "network", "prec", "device", "scale", "FPS", "GOPs", "GOPs/kLUT"
+    );
+    for (cfg, prec, fpga, freq) in [
+        (ViTConfig::deit_tiny(), Precision::A4W4, Fpga::zcu102(), 375e6),
+        (ViTConfig::deit_tiny(), Precision::A4W4, Fpga::vck190(), 425e6),
+        (ViTConfig::deit_tiny(), Precision::A3W3, Fpga::vck190(), 425e6),
+        (ViTConfig::deit_small(), Precision::A3W3, Fpga::vck190(), 350e6),
+        (ViTConfig::deit_small(), Precision::A4W4, Fpga::vck190(), 350e6),
+    ] {
+        let r = deploy(&cfg, prec, &fpga, freq);
+        println!(
+            "{:<12} {:<6} {:<8} {:>6} {:>8.0} {:>9.0} {:>8.2}",
+            cfg.name,
+            prec.label(),
+            fpga.name,
+            r.scale,
+            r.fps,
+            r.gops,
+            r.gops_per_klut()
+        );
+    }
+}

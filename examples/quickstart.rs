@@ -1,0 +1,56 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. the parallelism designer produces the paper's Table-1 design;
+//! 2. the cycle-accurate simulator reproduces the Fig.-12 timing;
+//! 3. the PJRT runtime loads the AOT-compiled quantized ViT
+//!    (`make artifacts` first) and classifies a synthetic image.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hgpipe::arch::parallelism::design_network;
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::ModelServer;
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::sim::{self, builder::Paradigm, SimConfig};
+use hgpipe::util::prng::Prng;
+
+fn main() -> hgpipe::Result<()> {
+    // ---- 1. design ---------------------------------------------------------
+    let cfg = ViTConfig::deit_tiny();
+    let design = design_network(&cfg, Precision::A4W3, 2);
+    println!(
+        "[design] {}: {} modules, {} MAC units, target II {}",
+        cfg.name,
+        design.modules.len(),
+        design.total_macs(),
+        design.target_ii
+    );
+
+    // ---- 2. simulate -------------------------------------------------------
+    let pipeline =
+        sim::build_vit(&design, &cfg, Paradigm::Hybrid, SimConfig::matched(&design, &cfg));
+    let r = sim::run(&pipeline, 3, 5_000_000);
+    let s = sim::trace::summarize(&r, 425e6).expect("sim completes");
+    println!(
+        "[sim]    stable II {} cycles -> {:.0} img/s ideal at 425 MHz (paper: 57624 -> 7353)",
+        s.stable_ii, s.ideal_fps
+    );
+
+    // ---- 3. serve ----------------------------------------------------------
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("[serve]  artifacts/ missing — run `make artifacts` for the PJRT demo");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let model = "tiny-synth"; // small and fast; use deit-tiny for the full net
+    let server = ModelServer::start(&manifest, model, 2)?;
+    let mut rng = Prng::new(1);
+    let image: Vec<f32> = (0..server.tokens_per_image()).map(|_| rng.f64() as f32).collect();
+    let reply = server.submit(image)?.recv()?;
+    println!(
+        "[serve]  '{}' classified one image as class {} in {:?}",
+        model, reply.argmax, reply.latency
+    );
+    Ok(())
+}

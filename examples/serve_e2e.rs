@@ -1,0 +1,105 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E workload).
+//!
+//! Loads the trained tiny-ViT *and* the full DeiT-tiny AOT artifacts,
+//! serves batched requests through the coordinator (dynamic batcher +
+//! PJRT executor), reports latency percentiles / throughput / accuracy —
+//! proving all three layers compose with python nowhere on the path.
+//!
+//! Run: `cargo run --release --example serve_e2e [-- --deit-requests 32]`
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::ModelServer;
+use hgpipe::util::json::Json;
+use hgpipe::util::prng::Prng;
+
+fn main() -> hgpipe::Result<()> {
+    let deit_requests: usize = std::env::args()
+        .skip_while(|a| a != "--deit-requests")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+    let dir = std::path::Path::new("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let manifest = Manifest::load(dir)?;
+
+    // ---- phase 1: accuracy on the real eval batch (tiny-ViT) --------------
+    println!("=== phase 1: tiny-ViT accuracy (real trained model, 512 eval images) ===");
+    let (tokens, labels, shape) = load_eval_set(dir)?;
+    let tiny = ModelServer::start(&manifest, "tiny-synth", 2)?;
+    let per = shape[1] * shape[2];
+    let images: Vec<Vec<f32>> = tokens.chunks(per).map(|c| c.to_vec()).collect();
+    let t0 = std::time::Instant::now();
+    let responses = tiny.infer_all(images)?;
+    let correct = responses.iter().zip(&labels).filter(|(r, &l)| r.argmax == l as usize).count();
+    let dt = t0.elapsed();
+    println!(
+        "accuracy {}/{} = {:.2}%   throughput {:.0} img/s",
+        correct,
+        labels.len(),
+        100.0 * correct as f64 / labels.len() as f64,
+        labels.len() as f64 / dt.as_secs_f64()
+    );
+    println!("{}", tiny.metrics.lock().unwrap().summary());
+    drop(tiny);
+
+    // ---- phase 2: DeiT-tiny latency/throughput (full paper network) -------
+    println!("\n=== phase 2: DeiT-tiny serving ({deit_requests} requests, batch variants 1+8) ===");
+    let deit = ModelServer::start(&manifest, "deit-tiny", 4)?;
+    let mut rng = Prng::new(11);
+    let n_tok = deit.tokens_per_image();
+    let imgs: Vec<Vec<f32>> =
+        (0..deit_requests).map(|_| (0..n_tok).map(|_| rng.f64() as f32).collect()).collect();
+    let t0 = std::time::Instant::now();
+    let responses = deit.infer_all(imgs)?;
+    let dt = t0.elapsed();
+    println!(
+        "{} inferences in {:.2?} = {:.2} img/s (CPU PJRT; the FPGA-cycle model puts the fabric at 7139 img/s)",
+        responses.len(),
+        dt,
+        responses.len() as f64 / dt.as_secs_f64()
+    );
+    println!("{}", deit.metrics.lock().unwrap().summary());
+
+    // batch-1 vs batch-8 must agree numerically on identical input
+    println!("\n=== phase 3: batch-variant consistency ===");
+    let probe: Vec<f32> = (0..n_tok).map(|_| rng.f64() as f32).collect();
+    let single = deit.submit(probe.clone())?.recv()?;
+    let mut batch: Vec<Vec<f32>> = vec![probe; 8];
+    for extra in batch.iter_mut().skip(1) {
+        for v in extra.iter_mut() {
+            *v = rng.f64() as f32;
+        }
+    }
+    let replies = deit.infer_all(batch)?;
+    let drift = single
+        .logits
+        .iter()
+        .zip(&replies[0].logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |logit drift| between batch-1 and batch-8 paths: {drift:e}");
+    anyhow::ensure!(drift < 1e-3, "batch variants disagree");
+    println!("OK");
+    Ok(())
+}
+
+fn load_eval_set(dir: &std::path::Path) -> hgpipe::Result<(Vec<f32>, Vec<u8>, [usize; 3])> {
+    let v = Json::parse(&std::fs::read_to_string(dir.join("manifest.json"))?)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let es = v.get("eval_set").ok_or_else(|| anyhow::anyhow!("no eval_set in manifest"))?;
+    let sh: Vec<usize> = es
+        .get("shape")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as usize)
+        .collect();
+    let tokens_raw = std::fs::read(dir.join(es.get("tokens").unwrap().as_str().unwrap()))?;
+    let labels = std::fs::read(dir.join(es.get("labels").unwrap().as_str().unwrap()))?;
+    let tokens: Vec<f32> = tokens_raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok((tokens, labels, [sh[0], sh[1], sh[2]]))
+}

@@ -1,0 +1,44 @@
+//! Figure 12: the hybrid-grained pipeline timing diagram, cycle-accurate.
+//!
+//! Run: `cargo run --release --example timing_diagram [-- --images 3]`
+
+use hgpipe::arch::parallelism::design_network;
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::sim::{self, builder::Paradigm, SimConfig};
+
+fn main() {
+    let images: u64 = std::env::args()
+        .skip_while(|a| a != "--images")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let cfg = ViTConfig::deit_tiny();
+    let d = design_network(&cfg, Precision::A4W3, 2);
+    let p = sim::build_vit(&d, &cfg, Paradigm::Hybrid, SimConfig::matched(&d, &cfg));
+    let t0 = std::time::Instant::now();
+    let r = sim::run(&p, images, 50_000_000);
+    println!("{}", sim::trace::render_gantt(&r, 110));
+    let s = sim::trace::summarize(&r, 425e6).expect("completes");
+    println!("simulated {} cycles in {:?}", r.cycles, t0.elapsed());
+    println!("                         ours        paper");
+    println!("stable II            {:>9}       57,624", s.stable_ii);
+    println!("Image1 total cycles  {:>9}      824,843", s.first_image_cycles);
+    println!("latency (ms)         {:>9.3}        0.136", s.latency_ms);
+    println!("ideal img/s          {:>9.0}        7,353", s.ideal_fps);
+
+    // busiest/stalliest stages — useful for understanding the pipeline
+    println!("\nper-stage utilization extremes:");
+    let mut utils: Vec<(f64, String)> = r
+        .stage_specs
+        .iter()
+        .zip(&r.stage_states)
+        .map(|(sp, st)| (st.busy_cycles as f64 / r.cycles as f64, sp.name.clone()))
+        .collect();
+    utils.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    for (u, n) in utils.iter().take(3) {
+        println!("  busiest: {n:<22} {:.1}%", u * 100.0);
+    }
+    for (u, n) in utils.iter().rev().take(3) {
+        println!("  idlest : {n:<22} {:.1}%", u * 100.0);
+    }
+}

@@ -1,0 +1,5 @@
+"""HG-PIPE build-time python package: L1 Pallas kernels, L2 JAX model, AOT.
+
+Never imported at runtime — the rust binary consumes only the HLO text and
+JSON artifacts this package emits (``make artifacts``).
+"""

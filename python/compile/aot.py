@@ -1,0 +1,366 @@
+"""AOT build pipeline: train/calibrate/quantize → lower to HLO text.
+
+Emits into ``artifacts/`` (all consumed by the rust side; python never runs
+at request time):
+
+  * ``deit_tiny_a4w4_b{1,8}.hlo.txt``  — full quantized DeiT-tiny forward
+    (float tokens in, float logits out), batch 1 and 8 variants for the
+    serving batcher.
+  * ``deit_tiny_block_pallas.hlo.txt`` — one encoder block lowered through
+    the L1 *Pallas kernels* (StMM tiles, LUT ops, fused attention head),
+    proving the kernel → HLO → PJRT path.
+  * ``tinyvit_int.hlo.txt``            — trained tiny-ViT (synthetic
+    10-class), used by the rust accuracy harness.
+  * ``tables_deit_tiny_a4w4.json`` (+a3w3) — the full LUT set.
+  * ``golden_tables.json``             — deterministic fixture the rust
+    table generator must reproduce (golden cross-check).
+  * ``accuracy_ladder.json``           — Fig. 11a ladder + Fig. 11b
+    ablations measured on the tiny-ViT.
+  * ``manifest.json`` / ``quant_report.json`` — metadata for the runtime.
+
+HLO **text** is the interchange format (NOT serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import tables
+from .kernels import ref
+from .quantize import QuantParams
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default elides big weight tensors as
+    # "{...}", which the HLO text parser cannot reload — the weights ARE
+    # the model, so print them in full.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_to_file(fn, example_args, path: str) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {"path": os.path.basename(path), "bytes": len(text), "lower_s": round(time.time() - t0, 2)}
+
+
+# ---------------------------------------------------------------------------
+# block-level pallas artifact
+# ---------------------------------------------------------------------------
+
+
+def block_pallas_fn(qm, block: int = 0):
+    """One encoder block through the L1 Pallas kernels (x_q int32 (T,D))."""
+    from .kernels import attention_head, layernorm_tiled, lut_apply_tiled, matmul_os
+
+    cfg = qm.cfg
+    p = f"b{block}"
+    sc, W, L = qm.scalars, qm.weights, qm.luts
+    h, dh = cfg.heads, cfg.head_dim
+    t = cfg.tokens
+
+    ln1_rs = ref.lut_params(L[f"{p}.ln1.rsqrt"])
+    ln1_rq = ref.lut_params(L[f"{p}.ln1.rq"])
+    qkv_rq = ref.lut_params(L[f"{p}.qkv"])
+    exp_l = ref.lut_params(L[f"{p}.attn.exp"])
+    recip_s = ref.seg_params(L[f"{p}.attn.recip"])
+    prob_l = ref.lut_params(L[f"{p}.attn.prob"])
+    rv_rq = ref.lut_params(L[f"{p}.rv"])
+    proj_rq = ref.lut_params(L[f"{p}.proj"])
+    ln2_rs = ref.lut_params(L[f"{p}.ln2.rsqrt"])
+    ln2_rq = ref.lut_params(L[f"{p}.ln2.rq"])
+    gelu_l = ref.lut_params(L[f"{p}.gelu"])
+    mm2_rq = ref.lut_params(L[f"{p}.mm2"])
+
+    wqkv = jnp.asarray(W[f"{p}.qkv_w"], jnp.int32)
+    bqkv = jnp.asarray(W[f"{p}.qkv_b"], jnp.int32)
+    wproj = jnp.asarray(W[f"{p}.proj_w"], jnp.int32)
+    bproj = jnp.asarray(W[f"{p}.proj_b"], jnp.int32)
+    w1 = jnp.asarray(W[f"{p}.mm1_w"], jnp.int32)
+    b1 = jnp.asarray(W[f"{p}.mm1_b"], jnp.int32)
+    w2 = jnp.asarray(W[f"{p}.mm2_w"], jnp.int32)
+    b2 = jnp.asarray(W[f"{p}.mm2_b"], jnp.int32)
+
+    def fn(x):
+        # MHA block — Table 1 parallelism (TP=2; CIP/COP per module)
+        n = layernorm_tiled(x, sc[f"{p}.ln1.guard"], ln1_rs, ln1_rq, tp=2)
+        qkv = matmul_os(n, wqkv, bqkv, tp=2, cip=cfg.dim // 2, cop=cfg.dim // 2)
+        qkv = lut_apply_tiled(qkv, qkv_rq, tp=2)
+        heads = []
+        for hi in range(h):
+            q = qkv[:, hi * dh : (hi + 1) * dh]
+            k = qkv[:, cfg.dim + hi * dh : cfg.dim + (hi + 1) * dh]
+            v = qkv[:, 2 * cfg.dim + hi * dh : 2 * cfg.dim + (hi + 1) * dh]
+            heads.append(attention_head(q, k, v, exp_l, recip_s, prob_l, tp=2))
+        a = jnp.concatenate(heads, axis=-1)
+        a = lut_apply_tiled(a, rv_rq, tp=2)
+        o = matmul_os(a, wproj, bproj, tp=2, cip=cfg.dim // 2, cop=cfg.dim // 2)
+        o = lut_apply_tiled(o, proj_rq, tp=2)
+        x = x + o
+        # MLP block
+        n2 = layernorm_tiled(x, sc[f"{p}.ln2.guard"], ln2_rs, ln2_rq, tp=2)
+        hd = matmul_os(n2, w1, b1, tp=2, cip=cfg.dim // 2, cop=cfg.hidden // 2)
+        hd = lut_apply_tiled(hd, gelu_l, tp=2)
+        o2 = matmul_os(hd, w2, b2, tp=2, cip=cfg.hidden // 2, cop=cfg.dim // 2)
+        o2 = lut_apply_tiled(o2, mm2_rq, tp=2)
+        return (x + o2,)
+
+    return fn, jax.ShapeDtypeStruct((t, cfg.dim), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# accuracy ladder + ablations (Fig. 11a / 11b) on the tiny-ViT
+# ---------------------------------------------------------------------------
+
+
+LADDER = [
+    # (step name matching Fig. 11a, LutOptions or special mode)
+    ("fp32", "float"),
+    ("lut_mac", "affine"),  # LUT MAC units, exact non-linears
+    ("pot_lut", M.LutOptions(False, False, False, False)),
+    ("+inverted_exp", M.LutOptions(True, False, False, False)),
+    ("+requant_calib", M.LutOptions(True, True, False, False)),
+    ("+gelu_calib", M.LutOptions(True, True, True, False)),
+    ("+segmented_recip", M.LutOptions(True, True, True, True)),
+]
+
+ABLATIONS = [
+    ("w/o inverted_exp", M.LutOptions(False, True, True, True)),
+    ("w/o requant_calib", M.LutOptions(True, False, True, True)),
+    ("w/o gelu_calib", M.LutOptions(True, True, False, True)),
+    ("w/o segmented_recip", M.LutOptions(True, True, True, False)),
+]
+
+
+def measure_accuracy(params, cfg, calib_toks, eval_toks, eval_ys) -> dict:
+    from .model import AffineCalib, build_quantized, forward_f32, forward_int
+
+    out = {"ladder": {}, "ablation": {}}
+
+    def acc_of(logits):
+        return float((np.asarray(logits).argmax(1) == eval_ys).mean())
+
+    for name, mode in LADDER:
+        if mode == "float":
+            out["ladder"][name] = acc_of(forward_f32(params, eval_toks, cfg))
+            continue
+        qm = build_quantized(params, cfg, calib_toks, opts=M.LutOptions())
+        xq = qm.input_q.quantize(eval_toks)
+        if mode == "affine":
+            strat = AffineCalib(qm.act_params, qm.scalars)
+            out["ladder"][name] = acc_of(forward_int(qm, xq, strat, xp=np))
+            continue
+        qm = build_quantized(params, cfg, calib_toks, opts=mode)
+        out["ladder"][name] = acc_of(M.forward_int_np(qm, qm.input_q.quantize(eval_toks)))
+
+    for name, opts in ABLATIONS:
+        qm = build_quantized(params, cfg, calib_toks, opts=opts)
+        out["ablation"][name] = acc_of(M.forward_int_np(qm, qm.input_q.quantize(eval_toks)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# golden table fixture (rust cross-check)
+# ---------------------------------------------------------------------------
+
+
+def golden_fixture() -> dict:
+    """Deterministic table-generation cases. in_scales are exact binary
+    fractions so both languages see identical f64 inputs; entries may vary
+    by ±1 LSB where libm exp/sqrt differ by an ulp."""
+    out_q = QuantParams(scale=0.125, zero_point=0, bits=4, signed=True)
+    out_q8 = QuantParams(scale=0.0078125, zero_point=0, bits=8, signed=False)
+    cases = {}
+
+    t = tables.requant_table("rq", -1000, 2000, 0.03125, out_q)
+    cases["requant"] = {"spec": {"alpha": -1000, "beta": 2000, "in_scale": 0.03125,
+                                 "out": {"scale": 0.125, "bits": 4, "signed": True}},
+                        "table": t.to_dict()}
+    t = tables.joint_calibrate("rq_cal", lambda x: x, -4000, 4000, 0.03125, 6, out_q)
+    cases["requant_calibrated"] = {"spec": {"alpha": -4000, "beta": 4000, "in_scale": 0.03125},
+                                   "table": t.to_dict()}
+    t = tables.gelu_requant_table("gelu", -800, 800, 0.0078125, out_q)
+    cases["gelu"] = {"spec": {"alpha": -800, "beta": 800, "in_scale": 0.0078125},
+                     "table": t.to_dict()}
+    t = tables.exp_table_inverted("exp", -5000, 0, 0.001953125)
+    cases["exp_inverted"] = {"spec": {"alpha": -5000, "beta": 0, "in_scale": 0.001953125},
+                             "table": t.to_dict()}
+    s = tables.recip_table_segmented("recip", 200, 40000, 0.00390625)
+    cases["recip_segmented"] = {"spec": {"alpha": 200, "beta": 40000, "in_scale": 0.00390625},
+                                "table": s.to_dict()}
+    t = tables.rsqrt_table("rsqrt", 50, 100000, 0.0625)
+    cases["rsqrt"] = {"spec": {"alpha": 50, "beta": 100000, "in_scale": 0.0625},
+                      "table": t.to_dict()}
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# main build
+# ---------------------------------------------------------------------------
+
+
+def dump_qm_tables(qm, path):
+    tables.dump_tables(qm.luts, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--calib-batch", type=int, default=4)
+    ap.add_argument("--quick", action="store_true", help="skip deit artifacts (tests only)")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    manifest: dict = {"artifacts": {}, "models": {}}
+    rng = np.random.default_rng(42)
+
+    # ---- golden table fixture -------------------------------------------
+    with open(os.path.join(outdir, "golden_tables.json"), "w") as f:
+        json.dump(golden_fixture(), f, indent=1, sort_keys=True)
+    print("wrote golden_tables.json")
+
+    # ---- tiny-ViT: train, accuracy ladder, artifact ----------------------
+    from .train import synth_images, train
+
+    tcfg = M.tiny_synth()
+    cache = os.path.join(outdir, "tinyvit_params.pkl")
+    if os.path.exists(cache):
+        with open(cache, "rb") as f:
+            blob = pickle.load(f)
+        tparams, float_acc = blob["params"], blob["float_acc"]
+        print(f"loaded cached tiny-ViT params (float acc {float_acc:.4f})")
+    else:
+        tparams, losses, float_acc = train(tcfg, steps=args.train_steps)
+        with open(cache, "wb") as f:
+            pickle.dump({"params": tparams, "losses": losses, "float_acc": float_acc}, f)
+
+    calib_imgs, _ = synth_images(rng, 64)
+    calib_toks = M.patchify(calib_imgs, tcfg)
+    eval_imgs, eval_ys = synth_images(np.random.default_rng(7), 1000)
+    eval_toks = M.patchify(eval_imgs, tcfg)
+
+    for bits in (4, 3):
+        cfgb = M.tiny_synth(act_bits=bits, weight_bits=bits)
+        acc = measure_accuracy(tparams, cfgb, calib_toks, eval_toks, eval_ys)
+        acc["float_acc"] = float_acc
+        key = f"a{bits}w{bits}"
+        manifest["models"].setdefault("tinyvit", {})[key] = acc
+        print(f"tinyvit {key}: ladder={acc['ladder']}")
+    with open(os.path.join(outdir, "accuracy_ladder.json"), "w") as f:
+        json.dump(manifest["models"]["tinyvit"], f, indent=1, sort_keys=True)
+
+    # evaluation batch for the rust-side accuracy harness: raw f32 tokens
+    # + u8 labels (no numpy at runtime — plain little-endian binary)
+    eval_n = 512
+    toks512 = eval_toks[:eval_n].astype("<f4")
+    with open(os.path.join(outdir, "eval_tokens.bin"), "wb") as f:
+        f.write(toks512.tobytes())
+    with open(os.path.join(outdir, "eval_labels.bin"), "wb") as f:
+        f.write(eval_ys[:eval_n].astype("u1").tobytes())
+    manifest["eval_set"] = {
+        "tokens": "eval_tokens.bin",
+        "labels": "eval_labels.bin",
+        "count": eval_n,
+        "shape": [eval_n, tcfg.tokens, tcfg.patch_dim],
+    }
+
+    # tiny-ViT serving artifact (full LUT pipeline, batch 16)
+    qm_t = M.build_quantized(tparams, tcfg, calib_toks)
+    info = lower_to_file(
+        lambda x: (M.end_to_end_jnp(qm_t, x),),
+        [jax.ShapeDtypeStruct((16, tcfg.tokens, tcfg.patch_dim), jnp.float32)],
+        os.path.join(outdir, "tinyvit_int.hlo.txt"),
+    )
+    manifest["artifacts"]["tinyvit_int"] = {
+        **info,
+        "input": [16, tcfg.tokens, tcfg.patch_dim],
+        "output": [16, tcfg.num_classes],
+        "model": "tiny-synth", "precision": "a4w4",
+    }
+    dump_qm_tables(qm_t, os.path.join(outdir, "tables_tinyvit_a4w4.json"))
+
+    if args.quick:
+        with open(os.path.join(outdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print("quick mode: skipped deit artifacts")
+        return
+
+    # ---- DeiT-tiny (paper workload) ---------------------------------------
+    dcfg = M.deit_tiny()
+    dparams = M.init_params(rng, dcfg)
+    dimgs = rng.uniform(0.0, 1.0, (args.calib_batch, dcfg.img_size, dcfg.img_size, 3))
+    dtoks = M.patchify(dimgs, dcfg)
+    t0 = time.time()
+    qm_d = M.build_quantized(dparams, dcfg, dtoks)
+    print(f"deit-tiny a4w4 calibration: {time.time()-t0:.1f}s, {qm_d.lut_count()} luts")
+    dump_qm_tables(qm_d, os.path.join(outdir, "tables_deit_tiny_a4w4.json"))
+
+    for batch in (1, 8):
+        info = lower_to_file(
+            lambda x: (M.end_to_end_jnp(qm_d, x),),
+            [jax.ShapeDtypeStruct((batch, dcfg.tokens, dcfg.patch_dim), jnp.float32)],
+            os.path.join(outdir, f"deit_tiny_a4w4_b{batch}.hlo.txt"),
+        )
+        manifest["artifacts"][f"deit_tiny_a4w4_b{batch}"] = {
+            **info,
+            "input": [batch, dcfg.tokens, dcfg.patch_dim],
+            "output": [batch, dcfg.num_classes],
+            "model": "deit-tiny", "precision": "a4w4",
+        }
+        print(f"deit_tiny_a4w4_b{batch}: {info}")
+
+    # single block through the Pallas kernels
+    fn, spec = block_pallas_fn(qm_d, 0)
+    info = lower_to_file(fn, [spec], os.path.join(outdir, "deit_tiny_block_pallas.hlo.txt"))
+    manifest["artifacts"]["deit_tiny_block_pallas"] = {
+        **info,
+        "input": [dcfg.tokens, dcfg.dim],
+        "output": [dcfg.tokens, dcfg.dim],
+        "model": "deit-tiny", "precision": "a4w4", "layer": "block0-pallas",
+    }
+    print(f"deit_tiny_block_pallas: {info}")
+
+    # A3W3 table set (resource/accuracy analysis; Table 2 A3W3 column)
+    dcfg3 = M.deit_tiny(act_bits=3, weight_bits=3)
+    qm_d3 = M.build_quantized(dparams, dcfg3, dtoks)
+    dump_qm_tables(qm_d3, os.path.join(outdir, "tables_deit_tiny_a3w3.json"))
+
+    # ---- quant report ------------------------------------------------------
+    report = {
+        "deit_tiny_a4w4": {
+            "lut_count": qm_d.lut_count(),
+            "input_scale": qm_d.input_q.scale,
+            "s0": qm_d.s0,
+            "ops_per_inference": dcfg.ops_per_inference,
+        },
+        "deit_tiny_a3w3": {"lut_count": qm_d3.lut_count()},
+        "tinyvit_a4w4": {"lut_count": qm_t.lut_count(), "float_acc": float_acc},
+    }
+    with open(os.path.join(outdir, "quant_report.json"), "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print("manifest written; artifact build complete")
+
+
+if __name__ == "__main__":
+    main()

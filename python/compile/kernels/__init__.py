@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (interpret mode) + pure-jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .attention import attention_head  # noqa: F401
+from .layernorm import layernorm_tiled  # noqa: F401
+from .lut_ops import lut_apply_tiled, seg_apply_tiled  # noqa: F401
+from .matmul_os import matmul_os  # noqa: F401

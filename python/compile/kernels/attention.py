@@ -1,0 +1,131 @@
+"""Pallas fused attention head — the QK MatMul → Softmax → RV MatMul chain.
+
+This kernel is the hybrid-grained pipeline's hot spot expressed in Pallas
+terms: the Q branch streams fine-grained (TP tokens per grid step) while
+the K and V operands are *whole-tensor* blocks — the BlockSpec analogue of
+the deep buffers of Sec. 4.2 (the buffer "is deep enough to hold the
+entire K or V tensor", re-read for every output tile = COT re-reads). The
+V operand arrives already transposed-in-access by the BlockSpec, the
+Transpose Module analogue.
+
+Numerics are identical to ref.attention_head_int (exact int equality).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    e_ent_ref,
+    rs_ent_ref,
+    rf_ent_ref,
+    p_ent_ref,
+    o_ref,
+    *,
+    e_alpha: int,
+    e_shift: int,
+    e_bits: int,
+    pivot: int,
+    rs_alpha: int,
+    rs_shift: int,
+    rs_bits: int,
+    rf_alpha: int,
+    rf_shift: int,
+    rf_bits: int,
+    ratio_log2: int,
+    p_alpha: int,
+    p_shift: int,
+    p_bits: int,
+):
+    q = q_ref[...].astype(jnp.int32)  # (TP, dh)
+    k = k_ref[...].astype(jnp.int32)  # (T, dh) — deep buffer
+    v = v_ref[...].astype(jnp.int32)  # (T, dh) — deep buffer (transposed access)
+
+    # QK MatMul (DyMM): scores (TP, T)
+    scores = jnp.matmul(q, k.T, preferred_element_type=jnp.int32)
+
+    # Softmax: max-subtract + inverted Exp LUT (Sec. 4.4.7)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    d = scores - m  # <= 0, beta anchored at 0
+    ei = jnp.clip(jnp.right_shift(e_alpha - d, e_shift), 0, (1 << e_bits) - 1)
+    e = jnp.take(e_ent_ref[...], ei)
+
+    # row sum + segmented Recip LUT (Sec. 4.4.6)
+    tot = jnp.sum(e, axis=-1, keepdims=True)
+    si = jnp.clip(jnp.right_shift(tot - rs_alpha, rs_shift), 0, (1 << rs_bits) - 1)
+    fi = jnp.clip(jnp.right_shift(tot - rf_alpha, rf_shift), 0, (1 << rf_bits) - 1)
+    sv = jnp.left_shift(jnp.take(rs_ent_ref[...], si), ratio_log2)
+    fv = jnp.take(rf_ent_ref[...], fi)
+    r = jnp.where(tot < pivot, sv, fv)
+
+    # probability ReQuant LUT
+    pr = e * r
+    pi = jnp.clip(jnp.right_shift(pr - p_alpha, p_shift), 0, (1 << p_bits) - 1)
+    probs = jnp.take(p_ent_ref[...], pi)
+
+    # RV MatMul (DyMM): (TP, T) @ (T, dh)
+    o_ref[...] = jnp.matmul(probs, v, preferred_element_type=jnp.int32)
+
+
+def attention_head(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    exp_lut,
+    recip_seg,
+    prob_lut,
+    *,
+    tp: int = 2,
+) -> jnp.ndarray:
+    """q,k,v: (T, dh) int32 -> (T, dh) int32 RV accumulator."""
+    e_alpha, e_shift, e_bits, e_inv, e_ent = exp_lut
+    assert e_inv, "softmax exp table must be inverted-indexed (Sec. 4.4.7)"
+    pivot, steep, flat, ratio_log2 = recip_seg
+    rs_alpha, rs_shift, rs_bits, _, rs_ent = steep
+    rf_alpha, rf_shift, rf_bits, _, rf_ent = flat
+    p_alpha, p_shift, p_bits, p_inv, p_ent = prob_lut
+    assert not p_inv
+    t, dh = q.shape
+    assert k.shape == (t, dh) and v.shape == (t, dh)
+    assert t % tp == 0
+
+    return pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            e_alpha=e_alpha,
+            e_shift=e_shift,
+            e_bits=e_bits,
+            pivot=pivot,
+            rs_alpha=rs_alpha,
+            rs_shift=rs_shift,
+            rs_bits=rs_bits,
+            rf_alpha=rf_alpha,
+            rf_shift=rf_shift,
+            rf_bits=rf_bits,
+            ratio_log2=ratio_log2,
+            p_alpha=p_alpha,
+            p_shift=p_shift,
+            p_bits=p_bits,
+        ),
+        grid=(t // tp,),
+        in_specs=[
+            pl.BlockSpec((tp, dh), lambda ti: (ti, 0)),  # Q: fine-grained stream
+            pl.BlockSpec((t, dh), lambda ti: (0, 0)),  # K: deep buffer
+            pl.BlockSpec((t, dh), lambda ti: (0, 0)),  # V: deep buffer
+            pl.BlockSpec((int(e_ent.shape[0]),), lambda ti: (0,)),
+            pl.BlockSpec((int(rs_ent.shape[0]),), lambda ti: (0,)),
+            pl.BlockSpec((int(rf_ent.shape[0]),), lambda ti: (0,)),
+            pl.BlockSpec((int(p_ent.shape[0]),), lambda ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tp, dh), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, dh), jnp.int32),
+        interpret=True,
+    )(q.astype(jnp.int32), k.astype(jnp.int32), v.astype(jnp.int32), e_ent, rs_ent, rf_ent, p_ent)

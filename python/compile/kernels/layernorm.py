@@ -1,0 +1,83 @@
+"""Pallas integer LayerNorm — the three-pass LayerNorm module (Table 1).
+
+The accelerator's LayerNorm makes three passes over each token (hence its
+II is 3x the elementwise II in Table 1): sum, variance, normalize. This
+kernel processes TP tokens per grid step and performs all three passes in
+registers (the passes are over the *channel* axis, which fits on-chip —
+exactly why the module needs no coarse-grained buffering).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(
+    x_ref,
+    rs_ent_ref,
+    rq_ent_ref,
+    o_ref,
+    *,
+    guard_shift: int,
+    rs_alpha: int,
+    rs_shift: int,
+    rs_bits: int,
+    rq_alpha: int,
+    rq_shift: int,
+    rq_bits: int,
+):
+    x = x_ref[...].astype(jnp.int32)
+    ci = x.shape[-1]
+    # pass 1: mean (kept as sum; c = CI*x - S keeps everything integer)
+    s = jnp.sum(x, axis=-1, keepdims=True)
+    c = ci * x - s
+    # pass 2: variance accumulator with overflow guard shift
+    cg = jnp.right_shift(c, guard_shift)
+    v = jnp.sum(cg * cg, axis=-1, keepdims=True)
+    ri = jnp.clip(jnp.right_shift(v - rs_alpha, rs_shift), 0, (1 << rs_bits) - 1)
+    r = jnp.take(rs_ent_ref[...], ri)
+    # pass 3: normalize + ReQuant LUT
+    p = c * r
+    qi = jnp.clip(jnp.right_shift(p - rq_alpha, rq_shift), 0, (1 << rq_bits) - 1)
+    o_ref[...] = jnp.take(rq_ent_ref[...], qi)
+
+
+def layernorm_tiled(
+    x: jnp.ndarray,
+    guard_shift: int,
+    rsqrt_lut,
+    requant_lut,
+    *,
+    tp: int = 2,
+) -> jnp.ndarray:
+    """Integer LayerNorm over (T, CI) int32; exact match of ref.layernorm_int."""
+    rs_alpha, rs_shift, rs_bits, rs_inv, rs_ent = rsqrt_lut
+    rq_alpha, rq_shift, rq_bits, rq_inv, rq_ent = requant_lut
+    assert not rs_inv and not rq_inv
+    t, ci = x.shape
+    assert t % tp == 0
+    return pl.pallas_call(
+        functools.partial(
+            _ln_kernel,
+            guard_shift=guard_shift,
+            rs_alpha=rs_alpha,
+            rs_shift=rs_shift,
+            rs_bits=rs_bits,
+            rq_alpha=rq_alpha,
+            rq_shift=rq_shift,
+            rq_bits=rq_bits,
+        ),
+        grid=(t // tp,),
+        in_specs=[
+            pl.BlockSpec((tp, ci), lambda ti: (ti, 0)),
+            pl.BlockSpec((int(rs_ent.shape[0]),), lambda ti: (0,)),
+            pl.BlockSpec((int(rq_ent.shape[0]),), lambda ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tp, ci), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, ci), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), rs_ent, rq_ent)

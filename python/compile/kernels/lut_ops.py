@@ -1,0 +1,106 @@
+"""Pallas LUT-application kernels — the non-linear PEs (Sec. 4.4).
+
+Each non-linear module of the accelerator (GeLU, ReQuant, Exp, Recip,
+Rsqrt) is a bank of parallel table-lookup units: compute the PoT-shifted
+index (a subtract + arithmetic shift — no DSP), then read the table. The
+Pallas kernel is the same shape: an elementwise tile op whose body is
+shift → clip → gather. The table rides along as a kernel operand (the
+BRAM/LUTRAM analogue) broadcast to every grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_kernel(x_ref, ent_ref, o_ref, *, alpha: int, shift: int, n_bits: int, inverted: bool):
+    x = x_ref[...].astype(jnp.int32)
+    raw = jnp.right_shift(alpha - x if inverted else x - alpha, shift)
+    idx = jnp.clip(raw, 0, (1 << n_bits) - 1)
+    o_ref[...] = jnp.take(ent_ref[...], idx)
+
+
+def lut_apply_tiled(
+    x: jnp.ndarray,
+    lut,
+    *,
+    tp: int = 2,
+) -> jnp.ndarray:
+    """Apply a LUT tuple (ref.lut_params layout) over a (T, C) int32 tensor,
+    tiled token-wise with parallelism TP (Table 1: LayerNorm/Softmax P=2)."""
+    alpha, shift, n_bits, inverted, entries = lut
+    t, c = x.shape
+    assert t % tp == 0, f"TP must divide T: {t} % {tp}"
+    depth = int(entries.shape[0])
+    return pl.pallas_call(
+        functools.partial(
+            _lut_kernel, alpha=alpha, shift=shift, n_bits=n_bits, inverted=inverted
+        ),
+        grid=(t // tp,),
+        in_specs=[
+            pl.BlockSpec((tp, c), lambda ti: (ti, 0)),
+            pl.BlockSpec((depth,), lambda ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tp, c), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), entries)
+
+
+def _seg_kernel(
+    x_ref,
+    s_ent_ref,
+    f_ent_ref,
+    o_ref,
+    *,
+    pivot: int,
+    s_alpha: int,
+    s_shift: int,
+    s_bits: int,
+    f_alpha: int,
+    f_shift: int,
+    f_bits: int,
+    ratio_log2: int,
+):
+    x = x_ref[...].astype(jnp.int32)
+    si = jnp.clip(jnp.right_shift(x - s_alpha, s_shift), 0, (1 << s_bits) - 1)
+    fi = jnp.clip(jnp.right_shift(x - f_alpha, f_shift), 0, (1 << f_bits) - 1)
+    sv = jnp.left_shift(jnp.take(s_ent_ref[...], si), ratio_log2)
+    fv = jnp.take(f_ent_ref[...], fi)
+    o_ref[...] = jnp.where(x < pivot, sv, fv)
+
+
+def seg_apply_tiled(x: jnp.ndarray, seg, *, tp: int = 2) -> jnp.ndarray:
+    """Segmented-table lookup (Recip, Sec. 4.4.6) over (T, C) int32."""
+    pivot, steep, flat, ratio_log2 = seg
+    s_alpha, s_shift, s_bits, s_inv, s_ent = steep
+    f_alpha, f_shift, f_bits, f_inv, f_ent = flat
+    assert not s_inv and not f_inv, "recip segments are normal-indexed"
+    t, c = x.shape
+    assert t % tp == 0
+    return pl.pallas_call(
+        functools.partial(
+            _seg_kernel,
+            pivot=pivot,
+            s_alpha=s_alpha,
+            s_shift=s_shift,
+            s_bits=s_bits,
+            f_alpha=f_alpha,
+            f_shift=f_shift,
+            f_bits=f_bits,
+            ratio_log2=ratio_log2,
+        ),
+        grid=(t // tp,),
+        in_specs=[
+            pl.BlockSpec((tp, c), lambda ti: (ti, 0)),
+            pl.BlockSpec((int(s_ent.shape[0]),), lambda ti: (0,)),
+            pl.BlockSpec((int(f_ent.shape[0]),), lambda ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tp, c), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), s_ent, f_ent)

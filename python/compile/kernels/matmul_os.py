@@ -1,0 +1,73 @@
+"""Tiled Output-Stationary integer matmul — the StMM / DyMM PE (Sec. 4.3).
+
+The accelerator tiles all three MM loops (Token, Output Channel, Input
+Channel) with tile sizes TP/COP/CIP and keeps the partial sum stationary in
+the PE while input-channel tiles stream through (Fig. 8). The Pallas grid
+is exactly that loop nest: ``grid = (TT, COT, CIT)``; the output block is
+revisited across the CIT axis, accumulating in place — Output Stationary.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and correctness (exact int equality vs ``ref.matmul_acc``)
+is the contract here. On a real TPU this BlockSpec is also the VMEM
+residency plan: the weight block (CIP x COP) is the BRAM ROM analogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, cit: int):
+    """One (TP, COP) output tile; grid axis 2 streams CIP-wide input tiles."""
+    ci_step = pl.program_id(2)
+
+    @pl.when(ci_step == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...].astype(jnp.int32), o_ref.shape)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jnp.matmul(x, w, preferred_element_type=jnp.int32)
+
+
+def matmul_os(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    *,
+    tp: int = 2,
+    cip: int = 16,
+    cop: int = 16,
+) -> jnp.ndarray:
+    """x:(T,CI) int32, w:(CI,CO) int32, bias:(CO,) -> (T,CO) int32 accumulator.
+
+    tp/cip/cop are the Table-1 parallelism parameters (TP, CIP, COP); they
+    must divide the corresponding dimensions (the parallelism designer in
+    rust/src/arch guarantees this for every module of the network).
+    """
+    t, ci = x.shape
+    ci2, co = w.shape
+    assert ci == ci2, f"inner dims mismatch: {ci} vs {ci2}"
+    assert t % tp == 0 and ci % cip == 0 and co % cop == 0, (
+        f"tiling must divide dims: T={t}%{tp} CI={ci}%{cip} CO={co}%{cop}"
+    )
+    if bias is None:
+        bias = jnp.zeros((co,), jnp.int32)
+    tt, cit, cot = t // tp, ci // cip, co // cop
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, cit=cit),
+        grid=(tt, cot, cit),
+        in_specs=[
+            pl.BlockSpec((tp, cip), lambda ti, coi, cii: (ti, cii)),
+            pl.BlockSpec((cip, cop), lambda ti, coi, cii: (cii, coi)),
+            pl.BlockSpec((cop,), lambda ti, coi, cii: (coi,)),
+        ],
+        out_specs=pl.BlockSpec((tp, cop), lambda ti, coi, cii: (ti, coi)),
+        out_shape=jax.ShapeDtypeStruct((t, co), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), w.astype(jnp.int32), bias.astype(jnp.int32))

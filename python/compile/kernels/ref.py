@@ -1,0 +1,192 @@
+"""Pure-jnp oracle of the HG-PIPE integer dataflow.
+
+These functions define the *canonical* integer semantics of every module in
+the accelerator (Table 1 of the paper): StMM/DyMM accumulation, LUT-based
+non-linear operators, integer LayerNorm and Softmax. The Pallas kernels in
+this package implement the same functions tile-by-tile and the test suite
+asserts **exact integer equality** against these references — integers admit
+no tolerance.
+
+All activations are int32 carrying low-bit values; accumulators are int32.
+A LUT is passed as the tuple ``(alpha, shift, n_bits, inverted, entries)``
+with ``entries`` an int32 array — the jit-traceable mirror of
+``tables.LutTable``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def lut_params(table):
+    """tables.LutTable -> jit-friendly tuple."""
+    return (
+        int(table.alpha),
+        int(table.shift),
+        int(table.n_bits),
+        bool(table.inverted),
+        jnp.asarray(np.asarray(table.entries, dtype=np.int32)),
+    )
+
+
+def seg_params(seg):
+    """tables.SegmentedTable -> (pivot, steep_tuple, flat_tuple, ratio_log2).
+
+    The two segments own independent PoT output scales. 1/x is decreasing,
+    so the steep segment's outputs (and hence its PoT scale) dominate:
+    steep_scale >= flat_scale. Downstream integer arithmetic uses the
+    *flat* (finer) scale as the common one, left-shifting steep entries by
+    ratio_log2 = log2(steep_scale / flat_scale) >= 0 at lookup time.
+    """
+    import math
+
+    ratio = seg.steep.out_scale / seg.flat.out_scale
+    ratio_log2 = int(round(math.log2(ratio))) if ratio > 0 else 0
+    assert ratio_log2 >= 0, "steep segment must have the coarser scale"
+    assert abs(ratio - 2.0**ratio_log2) < 1e-12, "segment scales must be PoT-related"
+    return (int(seg.pivot), lut_params(seg.steep), lut_params(seg.flat), ratio_log2)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+
+def matmul_acc(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """StMM/DyMM accumulation: int32 OS matmul. x:(T,CI) w:(CI,CO) -> (T,CO)."""
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[None, :]
+    return acc
+
+
+def residual_add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Residual Add module: same-scale integer add (one extra bit of range)."""
+    return a.astype(jnp.int32) + b.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# LUT application (Sec. 4.4.2 / 4.4.7)
+# ---------------------------------------------------------------------------
+
+
+def lut_apply(x: jnp.ndarray, lut) -> jnp.ndarray:
+    alpha, shift, n_bits, inverted, entries = lut
+    x = x.astype(jnp.int32)
+    if inverted:
+        raw = jnp.right_shift(alpha - x, shift)
+    else:
+        raw = jnp.right_shift(x - alpha, shift)
+    idx = jnp.clip(raw, 0, (1 << n_bits) - 1)
+    return jnp.take(entries, idx)
+
+
+def seg_apply(x: jnp.ndarray, seg) -> jnp.ndarray:
+    """Segmented table lookup, result in the flat segment's (finer) scale."""
+    pivot, steep, flat, ratio_log2 = seg
+    sv = jnp.left_shift(lut_apply(x, steep), ratio_log2)
+    fv = lut_apply(x, flat)
+    return jnp.where(x.astype(jnp.int32) < pivot, sv, fv)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm module (three passes; Rsqrt table; Table 1 row "LayerNorm")
+# ---------------------------------------------------------------------------
+
+
+def layernorm_int(x: jnp.ndarray, guard_shift: int, rsqrt_lut, requant_lut) -> jnp.ndarray:
+    """Integer LayerNorm.
+
+    x: (T, CI) int32. Per token:
+      pass 1: S = sum(x)            -> centered c = CI*x - S  (scale s/CI)
+      pass 2: V = sum((c>>g)^2)     -> r = RsqrtLUT(V)
+      pass 3: p = c * r             -> ReQuantLUT(p)
+    Affine LN weights (gamma/beta) are folded into the following MM's
+    weights/bias, as on the accelerator.
+    """
+    x = x.astype(jnp.int32)
+    ci = x.shape[-1]
+    s = jnp.sum(x, axis=-1, keepdims=True)
+    c = ci * x - s
+    cg = jnp.right_shift(c, guard_shift)
+    v = jnp.sum(cg * cg, axis=-1, keepdims=True)
+    r = lut_apply(v, rsqrt_lut)
+    p = c * r
+    return lut_apply(p, requant_lut)
+
+
+# ---------------------------------------------------------------------------
+# Softmax module (max-subtract, inverted Exp LUT, segmented Recip LUT)
+# ---------------------------------------------------------------------------
+
+
+def softmax_int(scores: jnp.ndarray, exp_lut, recip_seg, prob_lut) -> jnp.ndarray:
+    """Integer softmax over the last axis.
+
+    scores: (..., T) int32 accumulators of QK^T.
+      pass 1: m = max(scores)
+      pass 2: e = ExpLUT(scores - m)   (inverted index, beta anchored at 0)
+      pass 3: E = sum(e); r = RecipLUT(E); prob = ReQuantLUT(e * r)
+    """
+    scores = scores.astype(jnp.int32)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = lut_apply(scores - m, exp_lut)
+    tot = jnp.sum(e, axis=-1, keepdims=True)
+    r = seg_apply(tot, recip_seg)
+    return lut_apply(e * r, prob_lut)
+
+
+# ---------------------------------------------------------------------------
+# GeLU (fused GeLU-ReQuant table, Sec. 4.4.3) — just a lut_apply
+# ---------------------------------------------------------------------------
+
+
+def gelu_int(acc: jnp.ndarray, gelu_lut) -> jnp.ndarray:
+    return lut_apply(acc, gelu_lut)
+
+
+# ---------------------------------------------------------------------------
+# one attention head (DyMM chain): scores -> softmax -> probs @ V
+# ---------------------------------------------------------------------------
+
+
+def attention_head_int(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    exp_lut,
+    recip_seg,
+    prob_lut,
+) -> jnp.ndarray:
+    """q,k,v: (T, dh) int32 -> (T, dh) int32 accumulator of R@V.
+
+    QK MatMul and RV MatMul are DyMMs: the K / V operands stream from the
+    deep buffers (Sec. 4.2); numerically they are plain int matmuls.
+    """
+    scores = matmul_acc(q, k.T)
+    probs = softmax_int(scores, exp_lut, recip_seg, prob_lut)
+    return matmul_acc(probs, v)
+
+
+# ---------------------------------------------------------------------------
+# float references for accuracy experiments
+# ---------------------------------------------------------------------------
+
+
+def layernorm_f32(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def softmax_f32(x: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gelu_f32(x: jnp.ndarray) -> jnp.ndarray:
+    from jax.scipy.special import erf
+
+    return 0.5 * x * (1.0 + erf(x / jnp.sqrt(2.0)))

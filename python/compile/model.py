@@ -1,0 +1,775 @@
+"""L2 — the quantized ViT (DeiT) model in the HG-PIPE integer dataflow.
+
+The forward pass is written once, parameterized by an array module ``xp``
+(numpy for calibration, jax.numpy for AOT lowering) and a *requant
+strategy*:
+
+  * ``AffineCalib`` — exact affine ReQuant (Eq. 4 computed in full
+    precision). Used during calibration to record the integer accumulator
+    ranges every LUT needs; it is also the "LUT-free" accuracy baseline of
+    Fig. 11a (step "w/ LUT-based MACs").
+  * ``LutExec``   — every non-linear operator is a PoT-indexed table
+    (Sec. 4.4), exactly what the accelerator executes. jit-traceable.
+
+Model structure follows DeiT with the paper's T=196 token grid (no class
+token; mean-pool head), LN affine weights folded into the downstream MM
+weights exactly as the HLS design folds them into the BRAM ROMs.
+
+Quantization: all activations symmetric signed ``act_bits`` (probs
+unsigned); weights symmetric signed ``weight_bits``; residual stream
+carries 2 guard bits at the patch-embed output scale ``s0`` so all
+residual adds are same-scale integer adds.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from . import numerics, tables
+from .quantize import QuantParams, calibrate_symmetric
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ViTConfig:
+    name: str = "deit-tiny"
+    img_size: int = 224
+    patch: int = 16
+    dim: int = 192
+    depth: int = 12
+    heads: int = 3
+    mlp_ratio: int = 4
+    num_classes: int = 1000
+    act_bits: int = 4
+    weight_bits: int = 4
+
+    @property
+    def tokens(self) -> int:
+        return (self.img_size // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def hidden(self) -> int:
+        return self.dim * self.mlp_ratio
+
+    @property
+    def ops_per_inference(self) -> int:
+        """Op count (2 ops per MAC) — the paper's "OPs/inf" (2.5G tiny)."""
+        t, d, h = self.tokens, self.dim, self.hidden
+        per_block = (
+            2 * t * d * (3 * d)  # QKV Gen
+            + 2 * t * t * d * 2  # QK MatMul + RV MatMul
+            + 2 * t * d * d  # Output Proj
+            + 2 * t * d * h * 2  # MatMul1 + MatMul2
+        )
+        return (
+            self.depth * per_block
+            + 2 * t * self.patch_dim * d
+            + 2 * self.dim * self.num_classes
+        )
+
+
+def deit_tiny(**kw) -> ViTConfig:
+    return replace(ViTConfig(), **kw)
+
+
+def deit_small(**kw) -> ViTConfig:
+    return replace(ViTConfig(name="deit-small", dim=384, heads=6), **kw)
+
+
+def tiny_synth(**kw) -> ViTConfig:
+    """Trainable-on-CPU config for the accuracy-shape experiments."""
+    return replace(
+        ViTConfig(
+            name="tiny-synth",
+            img_size=32,
+            patch=8,
+            dim=64,
+            depth=4,
+            heads=2,
+            mlp_ratio=4,
+            num_classes=10,
+        ),
+        **kw,
+    )
+
+
+@dataclass(frozen=True)
+class LutOptions:
+    """Ablation switches — Fig. 11a ladder / Fig. 11b ablations."""
+
+    inverted_exp: bool = True  # Sec. 4.4.7
+    requant_calib: bool = True  # Sec. 4.4.5 on plain ReQuant tables
+    gelu_calib: bool = True  # Sec. 4.4.5 on the fused GeLU table
+    segmented_recip: bool = True  # Sec. 4.4.6
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng: np.random.Generator, cfg: ViTConfig) -> dict:
+    """Float parameters (numpy f64), trunc-normal-ish init."""
+
+    def w(shape, std=0.02):
+        return rng.normal(0.0, std, size=shape)
+
+    params = {
+        "pe_w": w((cfg.patch_dim, cfg.dim)),
+        "pe_b": np.zeros(cfg.dim),
+        "head_w": w((cfg.dim, cfg.num_classes)),
+        "head_b": np.zeros(cfg.num_classes),
+        "ln_f_g": np.ones(cfg.dim),
+        "ln_f_b": np.zeros(cfg.dim),
+        "blocks": [],
+    }
+    for _ in range(cfg.depth):
+        params["blocks"].append(
+            {
+                "ln1_g": np.ones(cfg.dim),
+                "ln1_b": np.zeros(cfg.dim),
+                "qkv_w": w((cfg.dim, 3 * cfg.dim)),
+                "qkv_b": np.zeros(3 * cfg.dim),
+                "proj_w": w((cfg.dim, cfg.dim)),
+                "proj_b": np.zeros(cfg.dim),
+                "ln2_g": np.ones(cfg.dim),
+                "ln2_b": np.zeros(cfg.dim),
+                "mm1_w": w((cfg.dim, cfg.hidden)),
+                "mm1_b": np.zeros(cfg.hidden),
+                "mm2_w": w((cfg.hidden, cfg.dim)),
+                "mm2_b": np.zeros(cfg.dim),
+            }
+        )
+    return params
+
+
+def patchify(images: np.ndarray, cfg: ViTConfig):
+    """(B, H, W, 3) -> (B, T, patch*patch*3)."""
+    b, h, w, c = images.shape
+    p = cfg.patch
+    assert h == w == cfg.img_size and c == 3
+    g = h // p
+    x = images.reshape(b, g, p, g, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, g * g, p * p * c)
+
+
+# ---------------------------------------------------------------------------
+# float forward (numpy; calibration pass A + accuracy baseline)
+# ---------------------------------------------------------------------------
+
+
+def _ln_f(x, g, b, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / np.sqrt(var + eps) * g + b
+
+
+_erf_vec = np.vectorize(numerics.erf_approx)
+
+
+def _gelu_f(x):
+    # erf via the same fixed-constant approximation as the table generator
+    return 0.5 * x * (1.0 + _erf_vec(x / math.sqrt(2.0)))
+
+
+def _softmax_f(x):
+    m = x.max(-1, keepdims=True)
+    e = np.exp(x - m)
+    return e / e.sum(-1, keepdims=True)
+
+
+def forward_f32(params: dict, tokens: np.ndarray, cfg: ViTConfig, stats: dict | None = None):
+    """Float reference forward over patchified tokens (B, T, P) -> logits.
+
+    If ``stats`` is given, records per-site float ranges used to calibrate
+    the activation quantizers (calibration pass A).
+    """
+
+    def rec(site, arr):
+        if stats is not None:
+            lo, hi = float(arr.min()), float(arr.max())
+            # 99.9th percentile of |x|: outlier-robust activation ranges
+            # (plain max stretches the 4-bit grid over one stray value)
+            p = float(np.percentile(np.abs(arr), 99.9))
+            plo, phi, pp = stats.get(site, (math.inf, -math.inf, 0.0))
+            stats[site] = (min(lo, plo), max(hi, phi), max(p, pp))
+
+    x = tokens @ params["pe_w"] + params["pe_b"]
+    rec("pe_out", x)
+    h, dh = cfg.heads, cfg.head_dim
+    for i, blk in enumerate(params["blocks"]):
+        n = _ln_f(x, blk["ln1_g"], blk["ln1_b"])
+        rec(f"b{i}.ln1_out", n)
+        qkv = n @ blk["qkv_w"] + blk["qkv_b"]
+        rec(f"b{i}.qkv_out", qkv)
+        b, t, _ = qkv.shape
+        qkv = qkv.reshape(b, t, 3, h, dh).transpose(2, 0, 3, 1, 4)  # (3,B,H,T,dh)
+        q, k, v = qkv[0], qkv[1], qkv[2]
+        scores = q @ k.transpose(0, 1, 3, 2) / math.sqrt(dh)
+        probs = _softmax_f(scores)
+        rec(f"b{i}.probs", probs)
+        a = probs @ v  # (B, H, T, dh)
+        a = a.transpose(0, 2, 1, 3).reshape(b, t, cfg.dim)
+        rec(f"b{i}.rv_out", a)
+        o = a @ blk["proj_w"] + blk["proj_b"]
+        rec(f"b{i}.proj_out", o)
+        x = x + o
+        n2 = _ln_f(x, blk["ln2_g"], blk["ln2_b"])
+        rec(f"b{i}.ln2_out", n2)
+        hdn = _gelu_f(n2 @ blk["mm1_w"] + blk["mm1_b"])
+        rec(f"b{i}.gelu_out", hdn)
+        o2 = hdn @ blk["mm2_w"] + blk["mm2_b"]
+        rec(f"b{i}.mm2_out", o2)
+        x = x + o2
+    n = _ln_f(x, params["ln_f_g"], params["ln_f_b"])
+    rec("ln_f_out", n)
+    pooled = n.mean(axis=1)
+    return pooled @ params["head_w"] + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# quantized model container
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class QuantModel:
+    """Integer weights + LUT set + scale metadata for one precision config."""
+
+    cfg: ViTConfig
+    opts: LutOptions
+    input_q: QuantParams
+    s0: float  # residual-stream scale (pe-out activation scale)
+    weights: dict  # int arrays
+    luts: dict  # site -> tables.LutTable | tables.SegmentedTable
+    scalars: dict  # site -> floats/ints (in_scales, guard shifts)
+    act_params: dict  # site -> QuantParams
+
+    def lut_count(self) -> int:
+        n = 0
+        for v in self.luts.values():
+            n += 2 if isinstance(v, tables.SegmentedTable) else 1
+        return n
+
+
+# ---------------------------------------------------------------------------
+# requant strategies
+# ---------------------------------------------------------------------------
+
+
+class AffineCalib:
+    """Exact affine requant; records accumulator ranges for table building."""
+
+    def __init__(self, act_params: dict, scalars: dict):
+        self.act_params = act_params
+        self.scalars = scalars
+        self.ranges: dict[str, tuple[int, int]] = {}
+
+    def obs(self, site, arr):
+        lo, hi = int(arr.min()), int(arr.max())
+        plo, phi = self.ranges.get(site, (2**62, -(2**62)))
+        self.ranges[site] = (min(lo, plo), max(hi, phi))
+
+    @staticmethod
+    def _quant(real, out: QuantParams):
+        q = np.where(
+            real >= 0, np.floor(real / out.scale + 0.5), np.ceil(real / out.scale - 0.5)
+        ).astype(np.int64)
+        return np.clip(q, out.qmin, out.qmax)
+
+    def requant(self, site, acc, in_scale, out: QuantParams):
+        self.obs(site, acc)
+        return self._quant(acc.astype(np.float64) * in_scale, out)
+
+    def gelu(self, site, acc, in_scale, out: QuantParams):
+        self.obs(site, acc)
+        return self._quant(_gelu_f(acc.astype(np.float64) * in_scale), out)
+
+    def layernorm(self, site, x, guard_shift, out: QuantParams):
+        x = x.astype(np.int64)
+        ci = x.shape[-1]
+        s = x.sum(-1, keepdims=True)
+        c = ci * x - s
+        self.obs(site + ".c", np.abs(c))
+        cg = c >> guard_shift
+        v = (cg * cg).sum(-1, keepdims=True)
+        self.obs(site + ".v", v)
+        r = 1.0 / np.sqrt(
+            np.maximum(v, 1).astype(np.float64) * (2.0 ** (2 * guard_shift)) / ci
+        )
+        y = c.astype(np.float64) * r
+        # record the integer product range p = c * r_q for the ReQuant table
+        rs = self.scalars.get(site + ".rsqrt_out_scale")
+        if rs is not None:
+            self.obs(site + ".p", (c * np.round(r / rs)).astype(np.int64))
+        return self._quant(y, out)
+
+    def softmax(self, site, scores, in_scale, out: QuantParams):
+        scores = scores.astype(np.int64)
+        m = scores.max(-1, keepdims=True)
+        d = scores - m
+        self.obs(site + ".d", d)
+        e = np.exp(d.astype(np.float64) * in_scale)
+        e_scale = self.scalars["exp_out_scale"]
+        e_q = np.round(e / e_scale).astype(np.int64)
+        tot = e_q.sum(-1, keepdims=True)
+        self.obs(site + ".tot", tot)
+        p = e / e.sum(-1, keepdims=True)
+        r_scale = self.scalars.get(site + ".recip_out_scale")
+        if r_scale is not None:
+            r_q = np.round(
+                (1.0 / np.maximum(tot * e_scale, 1e-12)) / r_scale
+            ).astype(np.int64)
+            self.obs(site + ".er", e_q * r_q)
+        return self._quant(p, out)
+
+
+class LutExec:
+    """Table-based requant — the accelerator's semantics. Works for numpy
+    and jax.numpy via the xp module handle."""
+
+    def __init__(self, qm: "QuantModel", xp):
+        self.qm = qm
+        self.xp = xp
+
+    def _i32(self, x):
+        return x.astype(np.int32) if self.xp is np else x.astype("int32")
+
+    def _lut(self, x, t: tables.LutTable):
+        xp = self.xp
+        ent = xp.asarray(np.asarray(t.entries, dtype=np.int32))
+        x = self._i32(x)
+        raw = (t.alpha - x) >> t.shift if t.inverted else (x - t.alpha) >> t.shift
+        idx = xp.clip(raw, 0, t.depth - 1)
+        return xp.take(ent, idx)
+
+    def _seg(self, x, s: tables.SegmentedTable):
+        xp = self.xp
+        ratio = s.steep.out_scale / s.flat.out_scale
+        rl2 = int(round(math.log2(ratio)))
+        sv = self._lut(x, s.steep) << rl2
+        fv = self._lut(x, s.flat)
+        return xp.where(self._i32(x) < s.pivot, sv, fv)
+
+    def requant(self, site, acc, in_scale, out):
+        return self._lut(acc, self.qm.luts[site])
+
+    def gelu(self, site, acc, in_scale, out):
+        return self._lut(acc, self.qm.luts[site])
+
+    def layernorm(self, site, x, guard_shift, out):
+        xp = self.xp
+        x = self._i32(x)
+        ci = x.shape[-1]
+        s = xp.sum(x, axis=-1, keepdims=True)
+        c = ci * x - s
+        cg = c >> guard_shift
+        v = xp.sum(cg * cg, axis=-1, keepdims=True)
+        r = self._lut(v, self.qm.luts[site + ".rsqrt"])
+        return self._lut(c * r, self.qm.luts[site + ".rq"])
+
+    def softmax(self, site, scores, in_scale, out):
+        xp = self.xp
+        scores = self._i32(scores)
+        m = xp.max(scores, axis=-1, keepdims=True)
+        e = self._lut(scores - m, self.qm.luts[site + ".exp"])
+        tot = xp.sum(e, axis=-1, keepdims=True)
+        recip = self.qm.luts[site + ".recip"]
+        r = (
+            self._seg(tot, recip)
+            if isinstance(recip, tables.SegmentedTable)
+            else self._lut(tot, recip)
+        )
+        return self._lut(e * r, self.qm.luts[site + ".prob"])
+
+
+# ---------------------------------------------------------------------------
+# the shared integer forward
+# ---------------------------------------------------------------------------
+
+
+def forward_int(qm: QuantModel, x_q, strategy, xp=np):
+    """Integer forward over quantized tokens x_q (B, T, P) -> float logits.
+
+    All linear algebra is plain integer matmul — identical between the
+    strategies; only the requant sites differ.
+    """
+    cfg = qm.cfg
+    W = qm.weights
+    sc = qm.scalars
+    ap = qm.act_params
+
+    def _imm(a, b_op):
+        # exact integer matmul through f64 BLAS: every partial sum here is
+        # far below 2^53, so the double-precision dgemm result is exact and
+        # ~100x faster than numpy's non-BLAS int64 path.
+        return np.rint(a.astype(np.float64) @ b_op.astype(np.float64)).astype(np.int64)
+
+    def mm(x, w, b):
+        if xp is np:
+            return _imm(x, np.asarray(w)) + np.asarray(b, np.int64)
+        import jax.numpy as jnp
+
+        return (
+            jnp.matmul(x.astype(jnp.int32), jnp.asarray(w, jnp.int32),
+                       preferred_element_type=jnp.int32)
+            + jnp.asarray(b, jnp.int32)
+        )
+
+    def dyn_mm(a, b_op):
+        if xp is np:
+            return _imm(a, b_op)
+        import jax.numpy as jnp
+
+        return jnp.matmul(a.astype(jnp.int32), b_op.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+
+    def tr(arr, axes):
+        return arr.transpose(axes) if xp is np else xp.transpose(arr, axes)
+
+    x = strategy.requant("pe", mm(x_q, W["pe_w"], W["pe_b"]), sc["pe.in_scale"], ap["pe_out"])
+    h, dh = cfg.heads, cfg.head_dim
+
+    for i in range(cfg.depth):
+        p = f"b{i}"
+        n = strategy.layernorm(f"{p}.ln1", x, sc[f"{p}.ln1.guard"], ap[f"{p}.ln1_out"])
+        qkv = strategy.requant(
+            f"{p}.qkv", mm(n, W[f"{p}.qkv_w"], W[f"{p}.qkv_b"]),
+            sc[f"{p}.qkv.in_scale"], ap[f"{p}.qkv_out"],
+        )
+        b, t, _ = qkv.shape
+        qkv = tr(qkv.reshape(b, t, 3, h, dh), (2, 0, 3, 1, 4))
+        q, k, v = qkv[0], qkv[1], qkv[2]
+        scores = dyn_mm(q, tr(k, (0, 1, 3, 2)))
+        probs = strategy.softmax(f"{p}.attn", scores, sc[f"{p}.attn.in_scale"], ap[f"{p}.probs"])
+        a = dyn_mm(probs, v)  # (B, H, T, dh)
+        a = tr(a, (0, 2, 1, 3)).reshape(b, t, cfg.dim)
+        a = strategy.requant(f"{p}.rv", a, sc[f"{p}.rv.in_scale"], ap[f"{p}.rv_out"])
+        o = strategy.requant(
+            f"{p}.proj", mm(a, W[f"{p}.proj_w"], W[f"{p}.proj_b"]),
+            sc[f"{p}.proj.in_scale"], ap[f"{p}.res"],
+        )
+        x = x + o  # Residual Add module: same-scale integer add
+        n2 = strategy.layernorm(f"{p}.ln2", x, sc[f"{p}.ln2.guard"], ap[f"{p}.ln2_out"])
+        hdn = strategy.gelu(
+            f"{p}.gelu", mm(n2, W[f"{p}.mm1_w"], W[f"{p}.mm1_b"]),
+            sc[f"{p}.gelu.in_scale"], ap[f"{p}.gelu_out"],
+        )
+        o2 = strategy.requant(
+            f"{p}.mm2", mm(hdn, W[f"{p}.mm2_w"], W[f"{p}.mm2_b"]),
+            sc[f"{p}.mm2.in_scale"], ap[f"{p}.res"],
+        )
+        x = x + o2
+
+    n = strategy.layernorm("ln_f", x, sc["ln_f.guard"], ap["ln_f_out"])
+    pooled = xp.sum(n, axis=1)  # mean-pool: /T folded into logit scale
+    if xp is np:
+        logits_acc = _imm(pooled, np.asarray(W["head_w"]))
+        logits = logits_acc.astype(np.float64) * sc["head.logit_scale"]
+        return logits + W["head_b_f"]
+    import jax.numpy as jnp
+
+    logits_acc = jnp.matmul(
+        pooled.astype(jnp.int32), jnp.asarray(W["head_w"], jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    logits = logits_acc.astype(jnp.float32) * jnp.float32(sc["head.logit_scale"])
+    return logits + jnp.asarray(W["head_b_f"], jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# building the quantized model (calibration passes A + B, table generation)
+# ---------------------------------------------------------------------------
+
+
+def _sym(amax: float, bits: int) -> QuantParams:
+    qmax = (1 << (bits - 1)) - 1
+    return QuantParams(scale=max(amax, 1e-8) / qmax, zero_point=0, bits=bits, signed=True)
+
+
+def _unsigned(amax: float, bits: int) -> QuantParams:
+    qmax = (1 << bits) - 1
+    return QuantParams(scale=max(amax, 1e-8) / qmax, zero_point=0, bits=bits, signed=False)
+
+
+def _quantize_weights(params: dict, cfg: ViTConfig, act_params: dict, scalars: dict) -> dict:
+    """Quantize weights with LN affine folding; fills in_scales; returns ints."""
+    wbits = cfg.weight_bits
+    W: dict = {}
+
+    def fold_ln(gamma, beta, w, b):
+        return gamma[:, None] * w, b + beta @ w
+
+    def qw(name, w, b, in_scale):
+        wq = calibrate_symmetric(w, wbits)
+        W[name + "_w"] = wq.quantize(w)
+        acc_scale = in_scale * wq.scale
+        W[name + "_b"] = np.clip(np.round(b / acc_scale), -(2**30), 2**30).astype(np.int64)
+        return acc_scale
+
+    s_in = act_params["input"].scale
+    scalars["pe.in_scale"] = qw("pe", params["pe_w"], params["pe_b"], s_in)
+
+    for i, blk in enumerate(params["blocks"]):
+        p = f"b{i}"
+        w_qkv, b_qkv = fold_ln(blk["ln1_g"], blk["ln1_b"], blk["qkv_w"], blk["qkv_b"])
+        scalars[f"{p}.qkv.in_scale"] = qw(
+            f"{p}.qkv", w_qkv, b_qkv, act_params[f"{p}.ln1_out"].scale
+        )
+        scalars[f"{p}.proj.in_scale"] = qw(
+            f"{p}.proj", blk["proj_w"], blk["proj_b"], act_params[f"{p}.rv_out"].scale
+        )
+        w1, b1 = fold_ln(blk["ln2_g"], blk["ln2_b"], blk["mm1_w"], blk["mm1_b"])
+        scalars[f"{p}.gelu.in_scale"] = qw(
+            f"{p}.mm1", w1, b1, act_params[f"{p}.ln2_out"].scale
+        )
+        scalars[f"{p}.mm2.in_scale"] = qw(
+            f"{p}.mm2", blk["mm2_w"], blk["mm2_b"], act_params[f"{p}.gelu_out"].scale
+        )
+        sq = act_params[f"{p}.qkv_out"].scale
+        scalars[f"{p}.attn.in_scale"] = sq * sq / math.sqrt(cfg.head_dim)
+        scalars[f"{p}.rv.in_scale"] = act_params[f"{p}.probs"].scale * sq
+
+    wh, bh = fold_ln(params["ln_f_g"], params["ln_f_b"], params["head_w"], params["head_b"])
+    whq = calibrate_symmetric(wh, wbits)
+    W["head_w"] = whq.quantize(wh)
+    W["head_b_f"] = bh.astype(np.float32)
+    scalars["head.w_scale"] = whq.scale
+    return W
+
+
+def _guard_shift(cmax: int, ci: int) -> int:
+    """Smallest g with (cmax>>g)^2 * ci < 2^31 (int32-safe variance acc)."""
+    g = 0
+    while ((cmax >> g) ** 2) * ci >= (1 << 31):
+        g += 1
+    return g
+
+
+def build_quantized(
+    params: dict,
+    cfg: ViTConfig,
+    calib_tokens: np.ndarray,
+    opts: LutOptions = LutOptions(),
+) -> QuantModel:
+    """Post-training quantization + LUT generation (the build-time pipeline).
+
+    calib_tokens: (B, T, P) float patchified calibration batch.
+    """
+    # ---- pass A: float forward, activation ranges ------------------------
+    stats: dict = {}
+    forward_f32(params, calib_tokens, cfg, stats=stats)
+    ab = cfg.act_bits
+
+    act_params: dict = {"input": _sym(float(np.abs(calib_tokens).max()), ab)}
+    for site, (lo, hi, p999) in stats.items():
+        amax = p999  # outlier-robust
+        if site.endswith(".probs"):
+            act_params[site] = _unsigned(min(max(abs(lo), abs(hi)), 1.0), ab)
+        else:
+            act_params[site] = _sym(amax, ab)
+    # residual stream: common scale s0 with 2 guard bits
+    s0 = act_params["pe_out"].scale
+    res_q = QuantParams(scale=s0, zero_point=0, bits=ab + 2, signed=True)
+    for i in range(cfg.depth):
+        act_params[f"b{i}.res"] = res_q
+
+    # ---- weight quantization ---------------------------------------------
+    scalars: dict = {}
+    W = _quantize_weights(params, cfg, act_params, scalars)
+
+    scalars["exp_out_scale"] = 1.0 / ((1 << tables.EXP_OUT_BITS) - 1)
+
+    # LN guard shifts from static worst-case c ranges.
+    for i in range(cfg.depth):
+        span1 = (2 * i + 1) * res_q.qmax if i > 0 else act_params["pe_out"].qmax
+        span2 = (2 * i + 2) * res_q.qmax
+        scalars[f"b{i}.ln1.guard"] = _guard_shift(2 * span1 * cfg.dim, cfg.dim)
+        scalars[f"b{i}.ln2.guard"] = _guard_shift(2 * span2 * cfg.dim, cfg.dim)
+    scalars["ln_f.guard"] = _guard_shift(
+        2 * (2 * cfg.depth + 1) * res_q.qmax * cfg.dim, cfg.dim
+    )
+    # head logit scale: s_lnf_out * w_scale / T (mean pool folded)
+    scalars["head.logit_scale"] = float(
+        act_params["ln_f_out"].scale * scalars["head.w_scale"] / cfg.tokens
+    )
+
+    qm = QuantModel(
+        cfg=cfg,
+        opts=opts,
+        input_q=act_params["input"],
+        s0=s0,
+        weights=W,
+        luts={},
+        scalars=scalars,
+        act_params=act_params,
+    )
+
+    # ---- pass B round 1: affine forward, primary accumulator ranges -------
+    calib = AffineCalib(act_params, scalars)
+    x_q = act_params["input"].quantize(calib_tokens)
+    forward_int(qm, x_q, calib, xp=np)
+    r1 = dict(calib.ranges)
+
+    # derive rsqrt/recip output scales, then round 2 observes the dependent
+    # integer products (p = c*r, er = e*r).
+    ln_sites = [f"b{i}.ln{j}" for i in range(cfg.depth) for j in (1, 2)] + ["ln_f"]
+    for s in ln_sites:
+        guard = scalars[s + ".guard"]
+        in_scale = (2.0 ** (2 * guard)) / cfg.dim
+        vmin, _ = r1[s + ".v"]
+        rs_max = 1.0 / math.sqrt(max(vmin, 1) * in_scale)
+        scalars[s + ".rsqrt_out_scale"] = tables.pot_out_scale(rs_max, tables.RSQRT_OUT_BITS)
+        scalars[s + ".rsqrt_in_scale"] = in_scale
+    for i in range(cfg.depth):
+        s = f"b{i}.attn"
+        tmin, tmax = r1[s + ".tot"]
+        e_scale = scalars["exp_out_scale"]
+        span = max(tmax - max(tmin, 1), 8)
+        pivot = max(tmin, 1) + max(span >> 3, 1)
+        # the finer (flat-segment) scale is the common recip output scale
+        scalars[s + ".recip_out_scale"] = tables.pot_out_scale(
+            1.0 / (pivot * e_scale), tables.RECIP_OUT_BITS
+        )
+
+    calib2 = AffineCalib(act_params, scalars)
+    forward_int(qm, x_q, calib2, xp=np)
+    ranges = calib2.ranges
+
+    # ---- build all tables ---------------------------------------------------
+    def rq_table(site, alpha, beta, in_scale, out):
+        if opts.requant_calib:
+            return tables.joint_calibrate(
+                site, lambda x: x, alpha, beta, in_scale, tables.REQUANT_BITS, out
+            )
+        return tables.requant_table(site, alpha, beta, in_scale, out)
+
+    luts = qm.luts
+    lo, hi = ranges["pe"]
+    luts["pe"] = rq_table("pe", lo, hi, scalars["pe.in_scale"], act_params["pe_out"])
+
+    for i in range(cfg.depth):
+        p = f"b{i}"
+        for ln, out_site in ((f"{p}.ln1", f"{p}.ln1_out"), (f"{p}.ln2", f"{p}.ln2_out")):
+            vmin, vmax = ranges[ln + ".v"]
+            luts[ln + ".rsqrt"] = tables.rsqrt_table(
+                ln + ".rsqrt", max(vmin, 1), max(vmax, 2), scalars[ln + ".rsqrt_in_scale"]
+            )
+            pmin, pmax = ranges[ln + ".p"]
+            luts[ln + ".rq"] = rq_table(
+                ln + ".rq", pmin, pmax, scalars[ln + ".rsqrt_out_scale"], act_params[out_site]
+            )
+        lo, hi = ranges[f"{p}.qkv"]
+        luts[f"{p}.qkv"] = rq_table(
+            f"{p}.qkv", lo, hi, scalars[f"{p}.qkv.in_scale"], act_params[f"{p}.qkv_out"]
+        )
+        # softmax tables
+        a = f"{p}.attn"
+        dmin, _ = ranges[a + ".d"]
+        if opts.inverted_exp:
+            luts[a + ".exp"] = tables.exp_table_inverted(
+                a + ".exp", dmin, 0, scalars[a + ".in_scale"]
+            )
+        else:
+            luts[a + ".exp"] = tables.exp_table_normal(
+                a + ".exp", dmin, 0, scalars[a + ".in_scale"]
+            )
+        tmin, tmax = ranges[a + ".tot"]
+        if opts.segmented_recip:
+            luts[a + ".recip"] = tables.recip_table_segmented(
+                a + ".recip", max(tmin, 1), max(tmax, 16), scalars["exp_out_scale"]
+            )
+            r_fine = luts[a + ".recip"].flat.out_scale
+        else:
+            luts[a + ".recip"] = tables.recip_table_flat(
+                a + ".recip", max(tmin, 1), max(tmax, 16), scalars["exp_out_scale"]
+            )
+            r_fine = luts[a + ".recip"].out_scale
+        ermin, ermax = ranges[a + ".er"]
+        luts[a + ".prob"] = rq_table(
+            a + ".prob",
+            max(ermin, 0),
+            max(ermax, 16),
+            scalars["exp_out_scale"] * r_fine,
+            act_params[f"{p}.probs"],
+        )
+        lo, hi = ranges[f"{p}.rv"]
+        luts[f"{p}.rv"] = rq_table(
+            f"{p}.rv", lo, hi, scalars[f"{p}.rv.in_scale"], act_params[f"{p}.rv_out"]
+        )
+        lo, hi = ranges[f"{p}.proj"]
+        luts[f"{p}.proj"] = rq_table(
+            f"{p}.proj", lo, hi, scalars[f"{p}.proj.in_scale"], act_params[f"{p}.res"]
+        )
+        lo, hi = ranges[f"{p}.gelu"]
+        if opts.gelu_calib:
+            luts[f"{p}.gelu"] = tables.joint_calibrate(
+                f"{p}.gelu", numerics.gelu, lo, hi, scalars[f"{p}.gelu.in_scale"],
+                tables.GELU_BITS, act_params[f"{p}.gelu_out"],
+            )
+        else:
+            luts[f"{p}.gelu"] = tables.gelu_requant_table(
+                f"{p}.gelu", lo, hi, scalars[f"{p}.gelu.in_scale"], act_params[f"{p}.gelu_out"]
+            )
+        lo, hi = ranges[f"{p}.mm2"]
+        luts[f"{p}.mm2"] = rq_table(
+            f"{p}.mm2", lo, hi, scalars[f"{p}.mm2.in_scale"], act_params[f"{p}.res"]
+        )
+
+    vmin, vmax = ranges["ln_f.v"]
+    luts["ln_f.rsqrt"] = tables.rsqrt_table(
+        "ln_f.rsqrt", max(vmin, 1), max(vmax, 2), scalars["ln_f.rsqrt_in_scale"]
+    )
+    pmin, pmax = ranges["ln_f.p"]
+    luts["ln_f.rq"] = rq_table(
+        "ln_f.rq", pmin, pmax, scalars["ln_f.rsqrt_out_scale"], act_params["ln_f_out"]
+    )
+    return qm
+
+
+# ---------------------------------------------------------------------------
+# jnp execution wrappers (AOT entry points)
+# ---------------------------------------------------------------------------
+
+
+def forward_int_jnp(qm: QuantModel, x_q):
+    """jit-traceable LUT-exact forward (the artifact the rust runtime loads)."""
+    import jax.numpy as jnp
+
+    return forward_int(qm, x_q, LutExec(qm, jnp), xp=jnp)
+
+
+def forward_int_np(qm: QuantModel, x_q):
+    """numpy LUT-exact forward (must equal forward_int_jnp exactly)."""
+    return forward_int(qm, x_q, LutExec(qm, np), xp=np)
+
+
+def quantize_input_jnp(qm: QuantModel, x_tokens):
+    import jax.numpy as jnp
+
+    q = qm.input_q
+    scaled = x_tokens / jnp.float32(q.scale)
+    r = jnp.where(scaled >= 0, jnp.floor(scaled + 0.5), jnp.ceil(scaled - 0.5))
+    return jnp.clip(r, q.qmin, q.qmax).astype(jnp.int32)
+
+
+def end_to_end_jnp(qm: QuantModel, x_tokens):
+    """float tokens in, float logits out — the DMA-to-DMA computation."""
+    return forward_int_jnp(qm, quantize_input_jnp(qm, x_tokens))

@@ -1,0 +1,119 @@
+"""Deterministic scalar numerics shared by the table generators.
+
+Every function here is mirrored *verbatim* in ``rust/src/lut/numerics.rs``.
+The python and rust table generators must agree bit-for-bit (checked by the
+golden cross-check test), so:
+
+  * all math is f64,
+  * ``erf`` is our own fixed-constant rational approximation (rust has no
+    libm ``erf`` in std, and we refuse to depend on platform libm parity),
+  * rounding is explicit round-half-away-from-zero (``rne`` differences
+    between numpy and rust ``f64::round`` would break the mirror).
+"""
+
+from __future__ import annotations
+
+import math
+
+# ---------------------------------------------------------------------------
+# scalar helpers
+# ---------------------------------------------------------------------------
+
+
+def round_half_away(x: float) -> float:
+    """Round half away from zero — matches rust ``f64::round``."""
+    return math.floor(x + 0.5) if x >= 0.0 else math.ceil(x - 0.5)
+
+
+def clamp(x: int, lo: int, hi: int) -> int:
+    return lo if x < lo else hi if x > hi else x
+
+
+def erf_approx(x: float) -> float:
+    """Abramowitz & Stegun 7.1.26 (max abs err 1.5e-7), fixed constants.
+
+    Identical constant set in rust — the only transcendental used by the
+    GeLU table generator.
+    """
+    sign = 1.0 if x >= 0.0 else -1.0
+    ax = abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    y = 1.0 - (
+        ((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+        + 0.254829592
+    ) * t * math.exp(-ax * ax)
+    return sign * y
+
+
+def gelu(x: float) -> float:
+    """GeLU via erf (paper Eq. 1)."""
+    return 0.5 * x * (1.0 + erf_approx(x / math.sqrt(2.0)))
+
+
+# ---------------------------------------------------------------------------
+# Power-of-Two index approximation (paper Sec. 4.4.2, Eq. 5/6/7)
+# ---------------------------------------------------------------------------
+
+
+def pot_shift(alpha: int, beta: int, n_bits: int) -> int:
+    """``s_PoT = ceil(log2((beta - alpha) / (2^n - 1)))``, clamped to >= 0.
+
+    Ceiling (not rounding) so the highest datum never overflows the table
+    (paper: "We apply a ceiling instead of rounding to avoid index
+    overflowing"). Computed purely on integers to avoid log2 precision
+    traps: smallest s with ((beta - alpha) >> s) <= 2^n - 1.
+    """
+    span = beta - alpha
+    if span <= 0:
+        return 0
+    limit = (1 << n_bits) - 1
+    s = 0
+    while (span >> s) > limit:
+        s += 1
+    return s
+
+
+def pot_index(x: int, alpha: int, s: int, n_bits: int) -> int:
+    """Eq. 6: ``index = (x - alpha) >> s``, clamped into the table."""
+    return clamp((x - alpha) >> s, 0, (1 << n_bits) - 1)
+
+
+def pot_index_inverted(x: int, beta: int, s: int, n_bits: int) -> int:
+    """Eq. 7 (inverted exp table): ``index = (beta - x) >> s``.
+
+    Anchors the zero point at beta so the softmax-sensitive values near
+    x == max (i.e. x - max == 0) land on exact table entries.
+    """
+    return clamp((beta - x) >> s, 0, (1 << n_bits) - 1)
+
+
+def index_midpoint(alpha: int, i: int, s: int) -> float:
+    """Representative (dequant-domain-free) input value of table bucket i.
+
+    Bucket i covers integer inputs [alpha + (i<<s), alpha + ((i+1)<<s) - 1];
+    we sample the arithmetic midpoint, matching what the HLS tables did.
+    """
+    lo = alpha + (i << s)
+    hi = alpha + ((i + 1) << s) - 1
+    return 0.5 * (lo + hi)
+
+
+def index_midpoint_inverted(beta: int, i: int, s: int) -> float:
+    """Representative input for bucket i of an inverted-index table.
+
+    Inverted tables exist to keep the *anchor* (x == beta, i.e. the softmax
+    max element, Sec. 4.4.7) exact, so each bucket samples its anchor-side
+    endpoint rather than the midpoint: bucket 0 represents exactly beta.
+    """
+    return float(beta - (i << s))
+
+
+# ---------------------------------------------------------------------------
+# output quantization of table entries
+# ---------------------------------------------------------------------------
+
+
+def quantize_entry(y: float, scale: float, zero_point: int, qmin: int, qmax: int) -> int:
+    """Quantize a real table output to an integer entry."""
+    q = int(round_half_away(y / scale)) + zero_point
+    return clamp(q, qmin, qmax)

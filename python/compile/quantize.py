@@ -1,0 +1,96 @@
+"""Quantization scheme of the HG-PIPE dataflow (paper Sec. 2.1, Eq. 4).
+
+Every tensor that crosses a module boundary is a low-bit *integer* tensor
+with an attached affine quantizer ``real = (q - zero_point) * scale``.
+Weights are quantized symmetrically per-tensor; activations are quantized
+by the ReQuant operator, which on the accelerator is a LUT (Sec. 4.4.4) —
+here we keep both the exact affine form (this module) and the LUT form
+(``tables.py``), and the test suite checks the LUT form tracks this one.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import numerics
+
+
+@dataclass(frozen=True)
+class QuantParams:
+    """Affine quantizer: real = (q - zero_point) * scale, q in [qmin, qmax]."""
+
+    scale: float
+    zero_point: int
+    bits: int
+    signed: bool = True
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        q = np.floor(x / self.scale + 0.5).astype(np.int64) + self.zero_point
+        # floor(x+0.5) == round-half-away for x>=0 and round-half-up for x<0;
+        # use true half-away to match numerics.round_half_away:
+        neg = x < 0
+        qn = -np.floor(-x / self.scale + 0.5).astype(np.int64) + self.zero_point
+        q = np.where(neg, qn, q)
+        return np.clip(q, self.qmin, self.qmax).astype(np.int32)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return (q.astype(np.float64) - self.zero_point) * self.scale
+
+
+def calibrate_symmetric(x: np.ndarray, bits: int) -> QuantParams:
+    """Symmetric per-tensor quantizer from observed data (weights)."""
+    amax = float(np.max(np.abs(x)))
+    if amax == 0.0:
+        amax = 1.0
+    qmax = (1 << (bits - 1)) - 1
+    return QuantParams(scale=amax / qmax, zero_point=0, bits=bits, signed=True)
+
+
+def calibrate_affine(x: np.ndarray, bits: int, signed: bool = True) -> QuantParams:
+    """Affine per-tensor quantizer from observed data (activations)."""
+    lo, hi = float(np.min(x)), float(np.max(x))
+    if hi <= lo:
+        hi = lo + 1.0
+    qmin = -(1 << (bits - 1)) if signed else 0
+    qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    scale = (hi - lo) / (qmax - qmin)
+    zp = int(numerics.round_half_away(qmin - lo / scale))
+    zp = int(np.clip(zp, qmin, qmax))
+    return QuantParams(scale=scale, zero_point=zp, bits=bits, signed=signed)
+
+
+def requant_affine(
+    acc: np.ndarray, in_params: QuantParams, out_params: QuantParams
+) -> np.ndarray:
+    """Exact (non-LUT) ReQuant: dequantize with in_params, requantize.
+
+    This is the float-exact reference the 64-entry ReQuant table
+    (Sec. 4.4.4) approximates.
+    """
+    return out_params.quantize(in_params.dequantize(acc))
+
+
+@dataclass(frozen=True)
+class AccQuant:
+    """Quantizer of an integer MM accumulator.
+
+    acc = sum(x_q * w_q) with x affine (scale sx, zp zx) and w symmetric
+    (scale sw). real = sx*sw * (acc - zx * sum(w_q)) — the zx correction is
+    folded into the per-output-channel bias on the accelerator; we fold it
+    the same way, so the accumulator quantizer is pure scale.
+    """
+
+    scale: float
+
+    def dequantize(self, acc: np.ndarray) -> np.ndarray:
+        return acc.astype(np.float64) * self.scale

@@ -1,0 +1,399 @@
+"""LUT table generation — paper Sec. 4.4, mirrored in ``rust/src/lut/``.
+
+The accelerator implements every non-linear operator (GeLU, Exp, Recip,
+Rsqrt, ReQuant) as a small table indexed by a Power-of-Two-shifted integer
+(Eq. 6/7). All tables here operate on *integer* inputs (MM accumulators or
+integer intermediates) whose real value is ``x_int * in_scale`` — the affine
+zero-point corrections are folded into biases upstream, exactly as the HLS
+design does.
+
+Table kinds:
+  * ``build_table``        — generic PoT-indexed table (Sec. 4.4.2/4.4.4)
+  * ``gelu_requant_table`` — GeLU-ReQuant operator fusion (Sec. 4.4.3)
+  * ``joint_calibrate``    — Joint Table Range Calibration (Sec. 4.4.5)
+  * ``SegmentedTable``     — segmented high-dynamic-range Recip (Sec. 4.4.6)
+  * inverted indexing      — Inversed Exponential Table (Sec. 4.4.7, Eq. 7)
+
+The rust generator (``rust/src/lut/``) re-implements these byte-for-byte;
+``tests/test_golden_tables.py`` + ``rust tests/golden_tables.rs`` pin both
+to the same JSON fixtures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from . import numerics
+from .quantize import QuantParams
+
+# Default table geometry (paper Fig. 11c).
+EXP_BITS = 6  # 64 entries
+EXP_OUT_BITS = 8
+GELU_BITS = 6
+RECIP_BITS = 6  # x2 segments
+RECIP_OUT_BITS = 8
+RSQRT_BITS = 6
+RSQRT_OUT_BITS = 12
+REQUANT_BITS = 6
+
+
+@dataclass(frozen=True)
+class LutTable:
+    """A PoT-indexed lookup table.
+
+    real_out = (entries[index] - out_zp) * out_scale, with
+    index = (x - alpha) >> shift          (normal)
+    index = (alpha - x) >> shift          (inverted; alpha stores beta)
+    """
+
+    name: str
+    alpha: int
+    shift: int
+    n_bits: int
+    inverted: bool
+    out_scale: float
+    out_zp: int
+    entries: tuple  # tuple[int, ...] so the dataclass stays hashable
+
+    @property
+    def depth(self) -> int:
+        return 1 << self.n_bits
+
+    def index_of(self, x: np.ndarray) -> np.ndarray:
+        x = x.astype(np.int64)
+        if self.inverted:
+            raw = (self.alpha - x) >> self.shift
+        else:
+            raw = (x - self.alpha) >> self.shift
+        return np.clip(raw, 0, self.depth - 1)
+
+    def lookup(self, x: np.ndarray) -> np.ndarray:
+        """Integer-in integer-out table application."""
+        ent = np.asarray(self.entries, dtype=np.int32)
+        return ent[self.index_of(x)]
+
+    def lookup_real(self, x: np.ndarray) -> np.ndarray:
+        return (self.lookup(x).astype(np.float64) - self.out_zp) * self.out_scale
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["entries"] = list(self.entries)
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "LutTable":
+        d = dict(d)
+        d["entries"] = tuple(int(e) for e in d["entries"])
+        return LutTable(**d)
+
+
+def pot_out_scale(max_abs: float, bits: int, signed: bool = False) -> float:
+    """Power-of-Two output scale so max_abs maps inside the entry range."""
+    qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    if max_abs <= 0.0:
+        return 1.0
+    # smallest power of two scale with max_abs/scale <= qmax
+    k = math.ceil(math.log2(max_abs / qmax))
+    return 2.0**k
+
+
+def build_table(
+    name: str,
+    fn: Callable[[float], float],
+    alpha: int,
+    beta: int,
+    in_scale: float,
+    n_bits: int,
+    out: QuantParams,
+    inverted: bool = False,
+) -> LutTable:
+    """Sample ``fn`` (a real-valued function of the dequantized input) into a
+    PoT-indexed table over integer input range [alpha, beta]."""
+    shift = numerics.pot_shift(alpha, beta, n_bits)
+    depth = 1 << n_bits
+    entries = []
+    for i in range(depth):
+        if inverted:
+            mid = numerics.index_midpoint_inverted(beta, i, shift)
+        else:
+            mid = numerics.index_midpoint(alpha, i, shift)
+        y = fn(mid * in_scale)
+        entries.append(
+            numerics.quantize_entry(y, out.scale, out.zero_point, out.qmin, out.qmax)
+        )
+    return LutTable(
+        name=name,
+        alpha=beta if inverted else alpha,
+        shift=shift,
+        n_bits=n_bits,
+        inverted=inverted,
+        out_scale=out.scale,
+        out_zp=out.zero_point,
+        entries=tuple(entries),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sec. 4.4.4 — ReQuant as a table
+# ---------------------------------------------------------------------------
+
+
+def requant_table(
+    name: str,
+    alpha: int,
+    beta: int,
+    in_scale: float,
+    out: QuantParams,
+    n_bits: int = REQUANT_BITS,
+) -> LutTable:
+    return build_table(name, lambda x: x, alpha, beta, in_scale, n_bits, out)
+
+
+# ---------------------------------------------------------------------------
+# Sec. 4.4.3 — GeLU-ReQuant fusion
+# ---------------------------------------------------------------------------
+
+
+def gelu_requant_table(
+    name: str,
+    alpha: int,
+    beta: int,
+    in_scale: float,
+    out: QuantParams,
+    n_bits: int = GELU_BITS,
+) -> LutTable:
+    return build_table(name, numerics.gelu, alpha, beta, in_scale, n_bits, out)
+
+
+# ---------------------------------------------------------------------------
+# Sec. 4.4.7 — Inversed Exponential table
+# ---------------------------------------------------------------------------
+
+
+def exp_table_inverted(
+    name: str,
+    alpha: int,
+    beta: int,
+    in_scale: float,
+    n_bits: int = EXP_BITS,
+    out_bits: int = EXP_OUT_BITS,
+) -> LutTable:
+    """exp(x) for x <= 0 (softmax post-max-subtract), beta anchored at 0."""
+    out = QuantParams(
+        scale=1.0 / ((1 << out_bits) - 1), zero_point=0, bits=out_bits, signed=False
+    )
+    return build_table(name, math.exp, alpha, beta, in_scale, n_bits, out, inverted=True)
+
+
+def exp_table_normal(
+    name: str,
+    alpha: int,
+    beta: int,
+    in_scale: float,
+    n_bits: int = EXP_BITS,
+    out_bits: int = EXP_OUT_BITS,
+) -> LutTable:
+    """The *non*-inverted exp table — the ablation baseline of Fig. 11b."""
+    out = QuantParams(
+        scale=1.0 / ((1 << out_bits) - 1), zero_point=0, bits=out_bits, signed=False
+    )
+    return build_table(name, math.exp, alpha, beta, in_scale, n_bits, out)
+
+
+# ---------------------------------------------------------------------------
+# Sec. 4.4.5 — Joint Table Range Calibration
+# ---------------------------------------------------------------------------
+
+
+def joint_calibrate(
+    name: str,
+    fn: Callable[[float], float],
+    alpha: int,
+    beta: int,
+    in_scale: float,
+    n_bits: int,
+    out: QuantParams,
+    max_iters: int = 16,
+) -> LutTable:
+    """Shrink [alpha, beta] until the clamp-saturated (repeated) entries at
+    both ends vanish: find the Least/Most Significant Index and recompute
+    the range, iterating to a fixed point (paper Fig. 10c)."""
+    for _ in range(max_iters):
+        table = build_table(name, fn, alpha, beta, in_scale, n_bits, out)
+        ent = table.entries
+        depth = len(ent)
+        # LSI: last index of the saturated run at the low end.
+        lsi = 0
+        while lsi + 1 < depth and ent[lsi + 1] == ent[0]:
+            lsi += 1
+        # MSI: first index of the saturated run at the high end.
+        msi = depth - 1
+        while msi - 1 > 0 and ent[msi - 1] == ent[depth - 1]:
+            msi -= 1
+        if lsi == 0 and msi == depth - 1:
+            return table
+        new_alpha = alpha + (lsi << table.shift)
+        new_beta = alpha + ((msi + 1) << table.shift) - 1
+        if new_alpha >= new_beta or (new_alpha == alpha and new_beta == beta):
+            return table
+        alpha, beta = new_alpha, new_beta
+    return build_table(name, fn, alpha, beta, in_scale, n_bits, out)
+
+
+# ---------------------------------------------------------------------------
+# Sec. 4.4.6 — Segmented Recip for high dynamic range
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SegmentedTable:
+    """Two PoT tables over [alpha, pivot) and [pivot, beta].
+
+    The pivot is the first 1/8 of the span (paper: "empirically divide the
+    input range at the first 1/8 for the steep part"). Each segment owns an
+    independent (PoT) output scale, so the steep part near zero keeps
+    precision.
+    """
+
+    name: str
+    pivot: int
+    steep: LutTable
+    flat: LutTable
+
+    def lookup_real(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x)
+        steep_v = self.steep.lookup_real(x)
+        flat_v = self.flat.lookup_real(x)
+        return np.where(x < self.pivot, steep_v, flat_v)
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "pivot": self.pivot,
+            "steep": self.steep.to_dict(),
+            "flat": self.flat.to_dict(),
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "SegmentedTable":
+        return SegmentedTable(
+            name=d["name"],
+            pivot=int(d["pivot"]),
+            steep=LutTable.from_dict(d["steep"]),
+            flat=LutTable.from_dict(d["flat"]),
+        )
+
+
+def recip_table_segmented(
+    name: str,
+    alpha: int,
+    beta: int,
+    in_scale: float,
+    n_bits: int = RECIP_BITS,
+    out_bits: int = RECIP_OUT_BITS,
+) -> SegmentedTable:
+    alpha = max(alpha, 1)  # reciprocal of a non-positive sum never occurs
+    span = beta - alpha
+    pivot = alpha + max(span >> 3, 1)
+    # Independent PoT output scales per segment.
+    steep_max = 1.0 / (alpha * in_scale)
+    flat_max = 1.0 / (pivot * in_scale)
+    steep_out = QuantParams(
+        scale=pot_out_scale(steep_max, out_bits), zero_point=0, bits=out_bits, signed=False
+    )
+    flat_out = QuantParams(
+        scale=pot_out_scale(flat_max, out_bits), zero_point=0, bits=out_bits, signed=False
+    )
+    steep = build_table(
+        name + ".steep", lambda x: 1.0 / x, alpha, pivot - 1, in_scale, n_bits, steep_out
+    )
+    flat = build_table(
+        name + ".flat", lambda x: 1.0 / x, pivot, beta, in_scale, n_bits, flat_out
+    )
+    return SegmentedTable(name=name, pivot=pivot, steep=steep, flat=flat)
+
+
+def recip_table_flat(
+    name: str,
+    alpha: int,
+    beta: int,
+    in_scale: float,
+    n_bits: int = RECIP_BITS + 1,
+    out_bits: int = RECIP_OUT_BITS,
+) -> LutTable:
+    """Unsegmented Recip baseline (same total depth: 128 entries) — the
+    ablation comparator for Fig. 10d / Fig. 11b."""
+    alpha = max(alpha, 1)
+    out = QuantParams(
+        scale=pot_out_scale(1.0 / (alpha * in_scale), out_bits),
+        zero_point=0,
+        bits=out_bits,
+        signed=False,
+    )
+    return build_table(name, lambda x: 1.0 / x, alpha, beta, in_scale, n_bits, out)
+
+
+# ---------------------------------------------------------------------------
+# Rsqrt (LayerNorm) table
+# ---------------------------------------------------------------------------
+
+
+def rsqrt_table(
+    name: str,
+    alpha: int,
+    beta: int,
+    in_scale: float,
+    n_bits: int = RSQRT_BITS,
+    out_bits: int = RSQRT_OUT_BITS,
+) -> LutTable:
+    alpha = max(alpha, 1)
+    out = QuantParams(
+        scale=pot_out_scale(1.0 / math.sqrt(alpha * in_scale), out_bits),
+        zero_point=0,
+        bits=out_bits,
+        signed=False,
+    )
+    return build_table(
+        name, lambda x: 1.0 / math.sqrt(x) if x > 0 else 0.0, alpha, beta, in_scale, n_bits, out
+    )
+
+
+# ---------------------------------------------------------------------------
+# serialization of a full table set (shared with rust via JSON)
+# ---------------------------------------------------------------------------
+
+
+def dump_tables(tables: dict, path: str) -> None:
+    payload = {}
+    for k, v in tables.items():
+        kind = "segmented" if isinstance(v, SegmentedTable) else "lut"
+        payload[k] = {"kind": kind, "data": v.to_dict()}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
+
+def load_tables(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    out = {}
+    for k, v in payload.items():
+        if v["kind"] == "segmented":
+            out[k] = SegmentedTable.from_dict(v["data"])
+        else:
+            out[k] = LutTable.from_dict(v["data"])
+    return out
+
+
+def mse_of_table(table, xs: np.ndarray, fn: Callable[[float], float], in_scale: float) -> float:
+    """MSE of the table against the real function over integer samples xs."""
+    approx = (
+        table.lookup_real(xs) if isinstance(table, SegmentedTable) else table.lookup_real(xs)
+    )
+    exact = np.array([fn(float(x) * in_scale) for x in xs])
+    return float(np.mean((approx - exact) ** 2))

@@ -1,0 +1,206 @@
+"""Tiny-ViT trainer on a procedural 10-class dataset.
+
+The paper evaluates quantization/LUT ablations on ImageNet (DeiT-tiny
+74.5% fp32). We do not ship ImageNet or the authors' QAT checkpoints, so
+the accuracy-*shape* experiments (Fig. 11a ladder, Fig. 11b ablations) run
+on a small ViT trained here on a procedurally generated dataset: ten
+texture/shape classes with enough intra-class variation that a float
+tiny-ViT reaches high accuracy while the LUT approximations still bite in
+the same qualitative order as the paper reports.
+
+CLI:  python -m compile.train --out ../artifacts/tinyvit_params.npz
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ViTConfig, init_params, patchify, tiny_synth
+
+
+# ---------------------------------------------------------------------------
+# procedural dataset: 10 classes of 32x32 RGB textures
+# ---------------------------------------------------------------------------
+
+
+def synth_images(rng: np.random.Generator, n: int, size: int = 32):
+    """Generate n labelled images. Classes:
+    0 horizontal stripes, 1 vertical stripes, 2 diagonal stripes,
+    3 checkerboard, 4 radial rings, 5 random dots, 6 gradient,
+    7 cross, 8 solid+noise, 9 blobs.
+    """
+    xs = np.zeros((n, size, size, 3), np.float64)
+    ys = rng.integers(0, 10, n)
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float64)
+    for i in range(n):
+        c = ys[i]
+        freq = rng.uniform(0.3, 1.2)
+        phase = rng.uniform(0, 2 * math.pi)
+        amp = rng.uniform(0.6, 1.0)
+        if c == 0:
+            img = np.sin(yy * freq + phase)
+        elif c == 1:
+            img = np.sin(xx * freq + phase)
+        elif c == 2:
+            img = np.sin((xx + yy) * freq * 0.7 + phase)
+        elif c == 3:
+            p = max(int(rng.integers(2, 6)), 1)
+            img = (((yy // p) + (xx // p)) % 2) * 2.0 - 1.0
+        elif c == 4:
+            cy, cx = rng.uniform(10, 22, 2)
+            rr = np.sqrt((yy - cy) ** 2 + (xx - cx) ** 2)
+            img = np.sin(rr * freq + phase)
+        elif c == 5:
+            img = -np.ones((size, size))
+            for _ in range(int(rng.integers(6, 14))):
+                py, px = rng.integers(2, size - 2, 2)
+                img[py - 1 : py + 2, px - 1 : px + 2] = 1.0
+        elif c == 6:
+            ang = rng.uniform(0, 2 * math.pi)
+            img = (np.cos(ang) * xx + np.sin(ang) * yy) / size * 2 - 1
+        elif c == 7:
+            img = -np.ones((size, size))
+            w = int(rng.integers(2, 5))
+            m = size // 2 + int(rng.integers(-4, 5))
+            img[m - w : m + w, :] = 1.0
+            img[:, m - w : m + w] = 1.0
+        elif c == 8:
+            img = np.full((size, size), rng.uniform(-0.5, 0.5))
+        else:
+            img = -np.ones((size, size))
+            for _ in range(3):
+                cy, cx = rng.uniform(4, size - 4, 2)
+                r = rng.uniform(3, 7)
+                img = np.maximum(img, np.where((yy - cy) ** 2 + (xx - cx) ** 2 < r * r, 1.0, -1.0))
+        img = amp * img + rng.normal(0, 0.15, (size, size))
+        # class-dependent colour tint for the channel dimension
+        tint = np.array([0.5 + 0.05 * c, 0.5 - 0.03 * c, 0.5 + 0.02 * ((c * 3) % 7)])
+        xs[i] = 0.5 + 0.45 * img[..., None] * tint[None, None, :]
+    return np.clip(xs, 0.0, 1.0), ys
+
+
+# ---------------------------------------------------------------------------
+# jax float forward (training twin of model.forward_f32)
+# ---------------------------------------------------------------------------
+
+
+def forward_f32_jax(params, tokens, cfg: ViTConfig):
+    def ln(x, g, b, eps=1e-6):
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+    x = tokens @ params["pe_w"] + params["pe_b"]
+    h, dh = cfg.heads, cfg.head_dim
+    for blk in params["blocks"]:
+        n = ln(x, blk["ln1_g"], blk["ln1_b"])
+        qkv = n @ blk["qkv_w"] + blk["qkv_b"]
+        b, t, _ = qkv.shape
+        qkv = jnp.transpose(qkv.reshape(b, t, 3, h, dh), (2, 0, 3, 1, 4))
+        q, k, v = qkv[0], qkv[1], qkv[2]
+        scores = q @ jnp.transpose(k, (0, 1, 3, 2)) / math.sqrt(dh)
+        probs = jax.nn.softmax(scores, axis=-1)
+        a = jnp.transpose(probs @ v, (0, 2, 1, 3)).reshape(b, t, cfg.dim)
+        x = x + (a @ blk["proj_w"] + blk["proj_b"])
+        n2 = ln(x, blk["ln2_g"], blk["ln2_b"])
+        hdn = jax.nn.gelu(n2 @ blk["mm1_w"] + blk["mm1_b"], approximate=False)
+        x = x + (hdn @ blk["mm2_w"] + blk["mm2_b"])
+    n = ln(x, params["ln_f_g"], params["ln_f_b"])
+    return n.mean(axis=1) @ params["head_w"] + params["head_b"]
+
+
+def _to_f32_pytree(params):
+    return jax.tree_util.tree_map(lambda a: jnp.asarray(a, jnp.float32), params)
+
+
+def _to_np_f64(params):
+    return jax.tree_util.tree_map(lambda a: np.asarray(a, np.float64), params)
+
+
+# ---------------------------------------------------------------------------
+# training loop (adam)
+# ---------------------------------------------------------------------------
+
+
+def train(
+    cfg: ViTConfig | None = None,
+    steps: int = 600,
+    batch: int = 64,
+    lr: float = 1e-3,
+    seed: int = 0,
+    eval_n: int = 1000,
+):
+    """Train and return (params_f64_numpy, train_acc, test_acc)."""
+    cfg = cfg or tiny_synth()
+    rng = np.random.default_rng(seed)
+    params = _to_f32_pytree(init_params(rng, cfg))
+
+    def loss_fn(p, toks, ys):
+        logits = forward_f32_jax(p, toks, cfg)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, ys[:, None], axis=1))
+
+    # hand-rolled adam (no optax dependency needed at build time)
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(p, m, v, t, toks, ys):
+        loss, g = jax.value_and_grad(loss_fn)(p, toks, ys)
+        m = jax.tree_util.tree_map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
+        v = jax.tree_util.tree_map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, v, g)
+        mh = jax.tree_util.tree_map(lambda mm: mm / (1 - b1**t), m)
+        vh = jax.tree_util.tree_map(lambda vv: vv / (1 - b2**t), v)
+        p = jax.tree_util.tree_map(
+            lambda pp, mm, vv: pp - lr * mm / (jnp.sqrt(vv) + eps), p, mh, vh
+        )
+        return p, m, v, loss
+
+    losses = []
+    for t in range(1, steps + 1):
+        imgs, ys = synth_images(rng, batch)
+        toks = jnp.asarray(patchify(imgs, cfg), jnp.float32)
+        params, m, v, loss = step(params, m, v, jnp.float32(t), toks, jnp.asarray(ys))
+        losses.append(float(loss))
+        if t % 100 == 0:
+            print(f"step {t:4d}  loss {np.mean(losses[-100:]):.4f}")
+
+    # eval
+    imgs, ys = synth_images(np.random.default_rng(seed + 1), eval_n)
+    toks = jnp.asarray(patchify(imgs, cfg), jnp.float32)
+    acc = float(
+        (jnp.argmax(forward_f32_jax(params, toks, cfg), axis=1) == jnp.asarray(ys)).mean()
+    )
+    print(f"float eval accuracy: {acc:.4f}")
+    return _to_np_f64(params), losses, acc
+
+
+def eval_accuracy(predict_fn, cfg: ViTConfig, n: int = 1000, seed: int = 1) -> float:
+    """Accuracy of an arbitrary tokens->logits callable on the synth set."""
+    imgs, ys = synth_images(np.random.default_rng(seed), n)
+    toks = patchify(imgs, cfg)
+    logits = predict_fn(toks)
+    return float((np.asarray(logits).argmax(axis=1) == ys).mean())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/tinyvit_params.pkl")
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    params, losses, acc = train(steps=args.steps, seed=args.seed)
+    with open(args.out, "wb") as f:
+        pickle.dump({"params": params, "losses": losses, "float_acc": acc}, f)
+    print(f"wrote {args.out} (float acc {acc:.4f})")
+
+
+if __name__ == "__main__":
+    main()

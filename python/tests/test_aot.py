@@ -1,0 +1,129 @@
+"""AOT lowering tests: HLO text round-trips and the golden fixture."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tables
+from compile.aot import block_pallas_fn, golden_fixture, lower_to_file, to_hlo_text
+
+
+@pytest.fixture(scope="module")
+def tiny_qm():
+    cfg = M.tiny_synth()
+    rng = np.random.default_rng(0)
+    params = M.init_params(rng, cfg)
+    toks = M.patchify(rng.uniform(0, 1, (2, 32, 32, 3)), cfg)
+    return cfg, M.build_quantized(params, cfg, toks), toks
+
+
+class TestHloText:
+    def test_simple_fn_lowers_to_hlo_text(self):
+        def fn(x):
+            return (jnp.matmul(x, x) + 1.0,)
+
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 4), jnp.float32))
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "ROOT" in text
+
+    def test_model_lowering_has_int_ops(self, tiny_qm):
+        cfg, qm, _ = tiny_qm
+        lowered = jax.jit(lambda x: (M.end_to_end_jnp(qm, x),)).lower(
+            jax.ShapeDtypeStruct((2, cfg.tokens, cfg.patch_dim), jnp.float32)
+        )
+        text = to_hlo_text(lowered)
+        assert "s32" in text  # integer dataflow survived lowering
+        assert "f32" in text  # dequantized logits
+
+    def test_lower_to_file(self, tiny_qm, tmp_path):
+        cfg, qm, _ = tiny_qm
+        p = tmp_path / "m.hlo.txt"
+        info = lower_to_file(
+            lambda x: (M.end_to_end_jnp(qm, x),),
+            [jax.ShapeDtypeStruct((1, cfg.tokens, cfg.patch_dim), jnp.float32)],
+            str(p),
+        )
+        assert p.exists() and info["bytes"] > 1000
+
+    def test_block_pallas_lowers(self, tiny_qm):
+        cfg, qm, _ = tiny_qm
+        fn, spec = block_pallas_fn(qm, 0)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+
+
+class TestGoldenFixture:
+    def test_fixture_is_deterministic(self):
+        a = golden_fixture()
+        b = golden_fixture()
+        assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+    def test_fixture_covers_all_table_kinds(self):
+        fx = golden_fixture()
+        assert set(fx) == {
+            "requant",
+            "requant_calibrated",
+            "gelu",
+            "exp_inverted",
+            "recip_segmented",
+            "rsqrt",
+        }
+
+    def test_fixture_tables_reload(self):
+        fx = golden_fixture()
+        t = tables.LutTable.from_dict(fx["requant"]["table"])
+        assert t.depth == 64
+        s = tables.SegmentedTable.from_dict(fx["recip_segmented"]["table"])
+        assert s.pivot > 0
+
+    def test_in_scales_are_exact_binary(self):
+        # cross-language determinism requires exactly-representable scales
+        fx = golden_fixture()
+        for case in fx.values():
+            sc = case["spec"]["in_scale"]
+            # must be a power of two times a small integer
+            m, e = np.frexp(sc)
+            assert m in (0.5, 0.75), f"in_scale {sc} not a simple binary fraction"
+
+
+class TestArtifactsOnDisk:
+    """Validate whatever `make artifacts` produced (skip when absent)."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    def _need(self, name):
+        p = os.path.join(self.ART, name)
+        if not os.path.exists(p):
+            pytest.skip(f"{name} not built yet (run `make artifacts`)")
+        return p
+
+    def test_manifest_lists_existing_files(self):
+        p = self._need("manifest.json")
+        with open(p) as f:
+            manifest = json.load(f)
+        for name, info in manifest["artifacts"].items():
+            assert os.path.exists(os.path.join(self.ART, info["path"])), name
+
+    def test_golden_tables_json(self):
+        p = self._need("golden_tables.json")
+        with open(p) as f:
+            fx = json.load(f)
+        fresh = golden_fixture()
+        assert json.dumps(fx, sort_keys=True) == json.dumps(fresh, sort_keys=True)
+
+    def test_accuracy_ladder_shape(self):
+        p = self._need("accuracy_ladder.json")
+        with open(p) as f:
+            acc = json.load(f)
+        for prec in ("a4w4", "a3w3"):
+            ladder = acc[prec]["ladder"]
+            assert ladder["fp32"] >= ladder["+segmented_recip"] - 0.02
+            # the full pipeline must beat the uncalibrated PoT baseline
+            assert ladder["+segmented_recip"] >= ladder["pot_lut"] - 0.05

@@ -1,0 +1,266 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Integers admit no tolerance: every comparison is exact equality.
+Hypothesis sweeps shapes, tilings, value ranges, and table geometries.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import tables
+from compile.kernels import (
+    attention_head,
+    layernorm_tiled,
+    lut_apply_tiled,
+    matmul_os,
+    ref,
+    seg_apply_tiled,
+)
+from compile.quantize import QuantParams
+
+OUT4 = QuantParams(scale=0.125, zero_point=0, bits=4, signed=True)
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# matmul_os
+# ---------------------------------------------------------------------------
+
+
+class TestMatmulOS:
+    @pytest.mark.parametrize(
+        "t,ci,co,tp,cip,cop",
+        [
+            (196, 192, 64, 2, 6, 4),  # QKV-Gen-like (Table 1 row)
+            (196, 64, 196, 2, 4, 28),  # QK-MatMul-like
+            (196, 192, 768, 2, 12, 24),  # MatMul1-like
+            (4, 8, 8, 1, 8, 8),  # degenerate single tile
+            (8, 16, 16, 8, 16, 16),  # whole-tensor tiles
+        ],
+    )
+    def test_table1_shapes_exact(self, t, ci, co, tp, cip, cop):
+        r = _rng(t + ci + co)
+        x = r.integers(-7, 8, (t, ci)).astype(np.int32)
+        w = r.integers(-7, 8, (ci, co)).astype(np.int32)
+        b = r.integers(-1000, 1000, co).astype(np.int32)
+        got = matmul_os(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), tp=tp, cip=cip, cop=cop)
+        want = ref.matmul_acc(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(
+        ti=st.integers(1, 6),
+        cii=st.integers(1, 4),
+        coi=st.integers(1, 4),
+        tp=st.sampled_from([1, 2, 4]),
+        cip=st.sampled_from([1, 2, 8]),
+        cop=st.sampled_from([1, 4]),
+        amax=st.sampled_from([1, 7, 127]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_hypothesis_shape_sweep(self, ti, cii, coi, tp, cip, cop, amax, seed):
+        t, ci, co = ti * tp, cii * cip, coi * cop
+        r = _rng(seed)
+        x = r.integers(-amax, amax + 1, (t, ci)).astype(np.int32)
+        w = r.integers(-amax, amax + 1, (ci, co)).astype(np.int32)
+        got = matmul_os(jnp.asarray(x), jnp.asarray(w), tp=tp, cip=cip, cop=cop)
+        want = ref.matmul_acc(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_bias_default_zero(self):
+        x = jnp.ones((4, 4), jnp.int32)
+        w = jnp.ones((4, 4), jnp.int32)
+        got = matmul_os(x, w, tp=2, cip=2, cop=2)
+        np.testing.assert_array_equal(np.asarray(got), np.full((4, 4), 4, np.int32))
+
+    def test_rejects_nondividing_tiles(self):
+        x = jnp.ones((5, 4), jnp.int32)
+        w = jnp.ones((4, 4), jnp.int32)
+        with pytest.raises(AssertionError):
+            matmul_os(x, w, tp=2, cip=2, cop=2)
+
+
+# ---------------------------------------------------------------------------
+# lut_ops
+# ---------------------------------------------------------------------------
+
+
+def _mk_lut(alpha, beta, in_scale=0.01, bits=6, inverted=False):
+    if inverted:
+        t = tables.exp_table_inverted("e", alpha, beta, in_scale, n_bits=bits)
+    else:
+        t = tables.requant_table("r", alpha, beta, in_scale, OUT4, n_bits=bits)
+    return ref.lut_params(t)
+
+
+class TestLutApply:
+    @given(
+        tt=st.integers(1, 8),
+        c=st.integers(1, 64),
+        tp=st.sampled_from([1, 2]),
+        alpha=st.integers(-10000, 0),
+        span=st.integers(64, 100000),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_hypothesis_vs_ref(self, tt, c, tp, alpha, span, seed):
+        t = tt * tp
+        lut = _mk_lut(alpha, alpha + span)
+        r = _rng(seed)
+        x = r.integers(alpha - span, alpha + 2 * span, (t, c)).astype(np.int32)
+        got = lut_apply_tiled(jnp.asarray(x), lut, tp=tp)
+        want = ref.lut_apply(jnp.asarray(x), lut)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_inverted_lut(self):
+        lut = _mk_lut(-5000, 0, in_scale=0.001, inverted=True)
+        x = _rng(3).integers(-6000, 1, (8, 16)).astype(np.int32)
+        got = lut_apply_tiled(jnp.asarray(x), lut, tp=2)
+        want = ref.lut_apply(jnp.asarray(x), lut)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_out_of_range_clamps(self):
+        lut = _mk_lut(0, 630)
+        x = np.array([[-(2**31), 2**31 - 1]], np.int32)
+        got = np.asarray(lut_apply_tiled(jnp.asarray(x), lut, tp=1))
+        ent = np.asarray(lut[4])
+        assert got[0, 0] == ent[0] and got[0, 1] == ent[-1]
+
+
+class TestSegApply:
+    @given(
+        tt=st.integers(1, 8),
+        c=st.integers(1, 8),
+        alpha=st.integers(1, 500),
+        span=st.integers(128, 100000),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_hypothesis_vs_ref(self, tt, c, alpha, span, seed):
+        seg_t = tables.recip_table_segmented("r", alpha, alpha + span, 1.0 / 255)
+        seg = ref.seg_params(seg_t)
+        r = _rng(seed)
+        x = r.integers(max(alpha, 1), alpha + span, (tt * 2, c)).astype(np.int32)
+        got = seg_apply_tiled(jnp.asarray(x), seg, tp=2)
+        want = ref.seg_apply(jnp.asarray(x), seg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_pivot_boundary(self):
+        seg_t = tables.recip_table_segmented("r", 100, 10000, 0.01)
+        seg = ref.seg_params(seg_t)
+        x = np.array([[seg_t.pivot - 1, seg_t.pivot, seg_t.pivot + 1]], np.int32)
+        got = seg_apply_tiled(jnp.asarray(x), seg, tp=1)
+        want = ref.seg_apply(jnp.asarray(x), seg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+def _ln_tables(ci, guard, amax=16):
+    vmax = ((2 * ci * amax) >> guard) ** 2 * ci
+    rs = tables.rsqrt_table("rs", 1, max(vmax, 2), (2.0 ** (2 * guard)) / ci)
+    pmax = 2 * ci * amax * 4096
+    rq = tables.requant_table("rq", -pmax, pmax, rs.out_scale, OUT4)
+    return ref.lut_params(rs), ref.lut_params(rq)
+
+
+class TestLayerNorm:
+    @given(
+        tt=st.integers(1, 6),
+        ci=st.sampled_from([16, 64, 192]),
+        amax=st.sampled_from([3, 7, 15]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_vs_ref(self, tt, ci, amax, seed):
+        guard = 0 if ci * amax * 2 < 46341 // ci else 2
+        rs, rq = _ln_tables(ci, guard, amax)
+        r = _rng(seed)
+        x = r.integers(-amax, amax + 1, (tt * 2, ci)).astype(np.int32)
+        got = layernorm_tiled(jnp.asarray(x), guard, rs, rq, tp=2)
+        want = ref.layernorm_int(jnp.asarray(x), guard, rs, rq)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_constant_token_is_centered(self):
+        # a constant token has zero variance -> c == 0 -> output constant
+        rs, rq = _ln_tables(16, 0)
+        x = np.full((2, 16), 5, np.int32)
+        got = np.asarray(layernorm_tiled(jnp.asarray(x), 0, rs, rq, tp=2))
+        assert (got == got[0, 0]).all()
+
+
+# ---------------------------------------------------------------------------
+# fused attention head
+# ---------------------------------------------------------------------------
+
+
+def _attn_tables(t, dh, amax=7):
+    import math
+
+    smax = amax * amax * dh
+    in_scale = 1.0 / max(smax, 1)
+    exp_t = tables.exp_table_inverted("e", -2 * smax, 0, in_scale)
+    recip_t = tables.recip_table_segmented("rc", 1, t * 255, 1.0 / 255)
+    r_fine = recip_t.flat.out_scale
+    # er integer value corresponding to prob == 1.0 bounds the table range
+    er_scale = (1.0 / 255) * r_fine
+    prob_out = QuantParams(scale=1.0 / 15, zero_point=0, bits=4, signed=False)
+    prob_t = tables.requant_table("p", 0, int(1.0 / er_scale) + 1, er_scale, prob_out)
+    return ref.lut_params(exp_t), ref.seg_params(recip_t), ref.lut_params(prob_t)
+
+
+class TestAttentionHead:
+    @given(
+        tt=st.sampled_from([4, 8, 16]),
+        dh=st.sampled_from([8, 32, 64]),
+        amax=st.sampled_from([3, 7]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_hypothesis_vs_ref(self, tt, dh, amax, seed):
+        e, s, p = _attn_tables(tt, dh, amax)
+        r = _rng(seed)
+        q = r.integers(-amax, amax + 1, (tt, dh)).astype(np.int32)
+        k = r.integers(-amax, amax + 1, (tt, dh)).astype(np.int32)
+        v = r.integers(-amax, amax + 1, (tt, dh)).astype(np.int32)
+        got = attention_head(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), e, s, p, tp=2)
+        want = ref.attention_head_int(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), e, s, p)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_uniform_scores_give_uniform_probs(self):
+        # all-equal q/k -> equal scores -> softmax uniform -> RV = mean-ish
+        e, s, p = _attn_tables(8, 8)
+        q = np.ones((8, 8), np.int32)
+        k = np.ones((8, 8), np.int32)
+        v = _rng(1).integers(-7, 8, (8, 8)).astype(np.int32)
+        got = np.asarray(attention_head(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), e, s, p, tp=2))
+        # every output token identical (identical attention rows)
+        assert (got == got[0]).all()
+
+    def test_softmax_keeps_peaky_argmax(self):
+        # rows with one dominant score: the integer softmax must keep the
+        # winner (flat rows legitimately tie under 4-bit prob quantization)
+        e, s, p = _attn_tables(8, 8)
+        r = _rng(2)
+        scores = r.integers(-100, 100, (8, 8)).astype(np.int32)
+        winners = r.integers(0, 8, 8)
+        scores[np.arange(8), winners] += 300  # ~0.77 in real units: decisive
+        got = np.asarray(ref.softmax_int(jnp.asarray(scores), e, s, p))
+        assert (got.argmax(-1) == winners).all()
+
+    def test_softmax_flat_rows_are_uniform(self):
+        e, s, p = _attn_tables(8, 8)
+        scores = np.zeros((4, 8), np.int32)
+        got = np.asarray(ref.softmax_int(jnp.asarray(scores), e, s, p))
+        assert (got == got[0, 0]).all()
+        # ~1/8 at scale 1/15 -> quantized value 2
+        assert got[0, 0] in (1, 2)

@@ -1,0 +1,126 @@
+"""Unit tests for the deterministic scalar numerics (mirrored in rust)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import numerics
+
+
+class TestRoundHalfAway:
+    @pytest.mark.parametrize(
+        "x,want",
+        [(0.5, 1.0), (-0.5, -1.0), (1.5, 2.0), (-1.5, -2.0), (2.4, 2.0), (-2.4, -2.0), (0.0, 0.0)],
+    )
+    def test_cases(self, x, want):
+        assert numerics.round_half_away(x) == want
+
+    @given(st.floats(-1e9, 1e9))
+    def test_matches_numpy_half_away(self, x):
+        want = math.floor(x + 0.5) if x >= 0 else math.ceil(x - 0.5)
+        assert numerics.round_half_away(x) == want
+
+
+class TestErf:
+    def test_endpoints(self):
+        assert abs(numerics.erf_approx(0.0)) < 1e-8
+        assert abs(numerics.erf_approx(3.0) - 0.99997791) < 1e-5
+        assert numerics.erf_approx(-2.0) == -numerics.erf_approx(2.0)
+
+    @given(st.floats(-5, 5))
+    @settings(max_examples=200)
+    def test_against_math_erf(self, x):
+        assert abs(numerics.erf_approx(x) - math.erf(x)) < 1.6e-7
+
+    def test_gelu_known_values(self):
+        assert abs(numerics.gelu(0.0)) < 1e-12
+        assert abs(numerics.gelu(1.0) - 0.8413447) < 1e-5
+        assert abs(numerics.gelu(-1.0) - (-0.1586553)) < 1e-5
+        # GeLU(x) -> x for large x, -> 0 for very negative x
+        assert abs(numerics.gelu(10.0) - 10.0) < 1e-6
+        assert abs(numerics.gelu(-10.0)) < 1e-6
+
+
+class TestPotShift:
+    def test_exact_fit(self):
+        # span 63 over 64 entries -> shift 0
+        assert numerics.pot_shift(0, 63, 6) == 0
+        # span 64 needs shift 1
+        assert numerics.pot_shift(0, 64, 6) == 1
+        assert numerics.pot_shift(0, 127, 6) == 1
+        assert numerics.pot_shift(0, 128, 6) == 2
+
+    def test_ceiling_never_overflows(self):
+        # paper: ceiling (not rounding) so the max datum never overflows
+        for beta in [63, 64, 100, 1000, 12345, 10**9]:
+            s = numerics.pot_shift(0, beta, 6)
+            assert (beta - 0) >> s <= 63
+
+    @given(st.integers(-(2**30), 2**30), st.integers(1, 2**30), st.integers(2, 12))
+    @settings(max_examples=300)
+    def test_property_minimal_and_safe(self, alpha, span, n):
+        beta = alpha + span
+        s = numerics.pot_shift(alpha, beta, n)
+        limit = (1 << n) - 1
+        assert (beta - alpha) >> s <= limit  # safe
+        if s > 0:  # minimal
+            assert (beta - alpha) >> (s - 1) > limit
+
+    def test_degenerate_span(self):
+        assert numerics.pot_shift(5, 5, 6) == 0
+        assert numerics.pot_shift(5, 4, 6) == 0
+
+
+class TestPotIndex:
+    @given(st.integers(-(2**30), 2**30), st.integers(1, 2**20), st.integers(2, 10),
+           st.integers(-(2**31), 2**31 - 1))
+    @settings(max_examples=300)
+    def test_index_in_range(self, alpha, span, n, x):
+        beta = alpha + span
+        s = numerics.pot_shift(alpha, beta, n)
+        idx = numerics.pot_index(x, alpha, s, n)
+        assert 0 <= idx <= (1 << n) - 1
+
+    def test_inverted_anchors_beta(self):
+        # x == beta must land on index 0 (the sensitive anchor, Sec 4.4.7)
+        s = numerics.pot_shift(-5000, 0, 6)
+        assert numerics.pot_index_inverted(0, 0, s, 6) == 0
+        assert numerics.pot_index_inverted(-1 << s, 0, s, 6) == 1
+
+    def test_normal_anchors_alpha(self):
+        s = numerics.pot_shift(-5000, 0, 6)
+        assert numerics.pot_index(-5000, -5000, s, 6) == 0
+
+
+class TestMidpoints:
+    def test_midpoint_bucket0(self):
+        # bucket 0 with shift 2 covers [alpha, alpha+3]
+        assert numerics.index_midpoint(100, 0, 2) == 101.5
+
+    def test_inverted_rep_is_anchor_side(self):
+        # bucket 0 of an inverted table represents exactly beta (the anchor)
+        assert numerics.index_midpoint_inverted(0, 0, 2) == 0.0
+        assert numerics.index_midpoint_inverted(0, 1, 2) == -4.0
+
+    @given(st.integers(-1000, 1000), st.integers(0, 63), st.integers(0, 10))
+    def test_midpoint_inside_bucket(self, alpha, i, s):
+        m = numerics.index_midpoint(alpha, i, s)
+        assert alpha + (i << s) <= m <= alpha + ((i + 1) << s) - 1 + 0.5
+
+
+class TestQuantizeEntry:
+    def test_clamps(self):
+        assert numerics.quantize_entry(100.0, 1.0, 0, -8, 7) == 7
+        assert numerics.quantize_entry(-100.0, 1.0, 0, -8, 7) == -8
+
+    def test_rounds_half_away(self):
+        assert numerics.quantize_entry(0.5, 1.0, 0, -8, 7) == 1
+        assert numerics.quantize_entry(-0.5, 1.0, 0, -8, 7) == -1
+
+    @given(st.floats(-100, 100), st.sampled_from([0.25, 0.5, 1.0, 2.0]))
+    def test_in_bounds(self, y, scale):
+        q = numerics.quantize_entry(y, scale, 0, -8, 7)
+        assert -8 <= q <= 7

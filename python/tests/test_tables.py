@@ -1,0 +1,191 @@
+"""Tests for the LUT table generators (paper Sec. 4.4)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import numerics, tables
+from compile.quantize import QuantParams
+
+OUT4 = QuantParams(scale=0.125, zero_point=0, bits=4, signed=True)
+OUT8U = QuantParams(scale=1.0 / 255, zero_point=0, bits=8, signed=False)
+
+
+class TestBuildTable:
+    def test_requant_is_monotone(self):
+        t = tables.requant_table("rq", -1000, 1000, 0.01, OUT4)
+        ent = np.asarray(t.entries)
+        assert (np.diff(ent) >= 0).all()
+        assert t.depth == 64
+
+    def test_identity_tracks_function(self):
+        t = tables.requant_table("rq", -1000, 1000, 0.01, OUT4)
+        xs = np.arange(-1000, 1001, 7)
+        approx = t.lookup_real(xs)
+        exact = np.clip(xs * 0.01, OUT4.qmin * 0.125, OUT4.qmax * 0.125)
+        # max error: half an input bucket * slope + half output LSB
+        bucket = (1 << t.shift) * 0.01
+        assert np.abs(approx - exact).max() <= bucket / 2 + 0.125
+
+    def test_lookup_matches_index_arithmetic(self):
+        t = tables.requant_table("rq", -500, 500, 0.02, OUT4)
+        xs = np.array([-500, -499, 0, 499, 500, -10**6, 10**6])
+        idx = t.index_of(xs)
+        assert (idx >= 0).all() and (idx < 64).all()
+        assert idx[0] == 0
+        assert idx[-1] == 63  # clamp above
+        assert idx[-2] == 0  # clamp below
+
+    @given(st.integers(-(2**20), 2**20), st.integers(64, 2**20))
+    @settings(max_examples=100)
+    def test_no_index_overflow_property(self, alpha, span):
+        t = tables.requant_table("rq", alpha, alpha + span, 0.01, OUT4)
+        xs = np.array([alpha, alpha + span, alpha + span // 2])
+        assert (t.index_of(xs) < t.depth).all()
+
+
+class TestGeluFusion:
+    def test_fused_curve_shape(self):
+        # gelu(x) ~ 0 for x<<0, ~x for x>>0 — the fused table must show both
+        t = tables.gelu_requant_table("g", -800, 800, 0.0078125, OUT4)
+        lo = t.lookup_real(np.array([-800]))[0]
+        hi = t.lookup_real(np.array([790]))[0]
+        assert abs(lo) <= 0.125  # saturated near zero
+        assert hi > 0.5
+
+    def test_fused_vs_compose(self):
+        # fused table == quantize(gelu(dequant(x))) within one bucket error
+        t = tables.gelu_requant_table("g", -800, 800, 0.0078125, OUT4)
+        xs = np.arange(-800, 801, 13)
+        fused = t.lookup(xs)
+        exact = np.clip(
+            np.round(np.vectorize(numerics.gelu)(xs * 0.0078125) / 0.125),
+            OUT4.qmin,
+            OUT4.qmax,
+        )
+        assert np.abs(fused - exact).max() <= 1  # one output LSB
+
+
+class TestInvertedExp:
+    def test_beta_anchor_is_exact(self):
+        # exp(0) = 1 must map to the top entry (the softmax max element)
+        t = tables.exp_table_inverted("e", -5000, 0, 0.001)
+        v = t.lookup_real(np.array([0]))[0]
+        assert abs(v - 1.0) < 2.0 / 255
+
+    def test_normal_exp_misses_anchor(self):
+        # the non-inverted table anchors alpha: the value at x=0 lands in the
+        # top bucket whose midpoint underestimates exp(0) (the Fig 11b bug)
+        tn = tables.exp_table_normal("e", -5000, 0, 0.001)
+        ti = tables.exp_table_inverted("e", -5000, 0, 0.001)
+        err_n = abs(tn.lookup_real(np.array([0]))[0] - 1.0)
+        err_i = abs(ti.lookup_real(np.array([0]))[0] - 1.0)
+        assert err_i <= err_n
+
+    def test_monotone_decreasing_in_x(self):
+        t = tables.exp_table_inverted("e", -3000, 0, 0.002)
+        xs = np.arange(-3000, 1, 50)
+        vals = t.lookup_real(xs)
+        assert (np.diff(vals) >= 0).all()  # increasing toward x=0
+
+
+class TestJointCalibration:
+    def test_removes_saturated_entries(self):
+        # huge range + hard clamp -> many repeated end entries pre-calibration
+        raw = tables.requant_table("r", -100000, 100000, 0.001, OUT4)
+        ent = np.asarray(raw.entries)
+        sat_raw = (ent == ent[0]).sum() + (ent == ent[-1]).sum()
+        cal = tables.joint_calibrate("r", lambda x: x, -100000, 100000, 0.001, 6, OUT4)
+        ent_c = np.asarray(cal.entries)
+        sat_cal = (ent_c == ent_c[0]).sum() + (ent_c == ent_c[-1]).sum()
+        assert sat_cal < sat_raw
+
+    def test_idempotent_at_fixed_point(self):
+        # re-running calibration from a calibrated range changes nothing
+        t1 = tables.joint_calibrate("r", lambda x: x, -500, 500, 0.001, 6, OUT4)
+        beta1 = t1.alpha + ((t1.depth) << t1.shift) - 1
+        t2 = tables.joint_calibrate("r", lambda x: x, t1.alpha, beta1, 0.001, 6, OUT4)
+        assert abs(t2.alpha - t1.alpha) <= (1 << t1.shift)
+        assert t2.shift <= t1.shift
+
+    def test_shrunk_range_clamps_consistently(self):
+        # values outside the calibrated range clamp to the end entries,
+        # which for a monotone fn equal the uncalibrated saturated values
+        cal = tables.joint_calibrate("r", lambda x: x, -100000, 100000, 0.001, 6, OUT4)
+        xs = np.array([-100000, 100000])
+        vals = cal.lookup(xs)
+        assert vals[0] == cal.entries[0] and vals[1] == cal.entries[-1]
+
+    def test_calibrated_reduces_mse(self):
+        xs = np.arange(-3000, 3000, 7)
+        raw = tables.requant_table("r", -100000, 100000, 0.001, OUT4)
+        cal = tables.joint_calibrate("r", lambda x: x, -100000, 100000, 0.001, 6, OUT4)
+        f = lambda x: max(min(x, OUT4.qmax * 0.125), OUT4.qmin * 0.125)
+        mse_raw = tables.mse_of_table(raw, xs, f, 0.001)
+        mse_cal = tables.mse_of_table(cal, xs, f, 0.001)
+        assert mse_cal <= mse_raw
+
+
+class TestSegmentedRecip:
+    def test_paper_mse_improvement(self):
+        # Fig 10d: segmentation reduces MSE by ~10x on a high-dynamic-range
+        # reciprocal (paper: 0.032 -> 0.0034 on their distribution)
+        alpha, beta, in_scale = 200, 40000, 1.0 / 255
+        rng = np.random.default_rng(0)
+        # softmax-sum-like distribution: mass concentrated at the low end
+        xs = np.clip((rng.lognormal(7.0, 1.0, 20000)).astype(np.int64), alpha, beta)
+        seg = tables.recip_table_segmented("r", alpha, beta, in_scale)
+        flat = tables.recip_table_flat("r", alpha, beta, in_scale)
+        f = lambda x: 1.0 / x
+        mse_seg = tables.mse_of_table(seg, xs, f, in_scale)
+        mse_flat = tables.mse_of_table(flat, xs, f, in_scale)
+        assert mse_seg < mse_flat
+        assert mse_flat / max(mse_seg, 1e-12) > 3.0  # qualitative 'much better'
+
+    def test_pivot_at_first_eighth(self):
+        seg = tables.recip_table_segmented("r", 1000, 9000, 0.01)
+        assert seg.pivot == 1000 + (8000 >> 3)
+
+    def test_segments_cover_range_continuously(self):
+        seg = tables.recip_table_segmented("r", 100, 10000, 0.01)
+        xs = np.arange(100, 10001, 3)
+        vals = seg.lookup_real(xs)
+        exact = 1.0 / (xs * 0.01)
+        rel = np.abs(vals - exact) / exact
+        assert np.median(rel) < 0.2
+
+    def test_scale_relation_is_pot(self):
+        seg = tables.recip_table_segmented("r", 200, 40000, 1.0 / 255)
+        ratio = seg.steep.out_scale / seg.flat.out_scale
+        assert ratio >= 1.0
+        assert abs(math.log2(ratio) - round(math.log2(ratio))) < 1e-12
+
+
+class TestRsqrt:
+    def test_tracks_function(self):
+        t = tables.rsqrt_table("rs", 50, 100000, 0.0625)
+        xs = np.arange(50, 100001, 97)
+        vals = t.lookup_real(xs)
+        exact = 1.0 / np.sqrt(xs * 0.0625)
+        # steep near alpha: compare medians rather than worst case
+        rel = np.abs(vals - exact) / exact
+        assert np.median(rel) < 0.15
+
+    def test_entries_fit_bits(self):
+        t = tables.rsqrt_table("rs", 50, 100000, 0.0625)
+        ent = np.asarray(t.entries)
+        assert (ent >= 0).all() and (ent < (1 << 12)).all()
+
+
+class TestSerialization:
+    def test_roundtrip(self, tmp_path):
+        t = tables.requant_table("rq", -100, 100, 0.5, OUT4)
+        s = tables.recip_table_segmented("rc", 10, 1000, 0.01)
+        p = tmp_path / "t.json"
+        tables.dump_tables({"rq": t, "rc": s}, str(p))
+        loaded = tables.load_tables(str(p))
+        assert loaded["rq"] == t
+        assert loaded["rc"].steep == s.steep and loaded["rc"].pivot == s.pivot

@@ -1,0 +1,51 @@
+//! Coordinator benchmarks: batching-policy microbench + end-to-end
+//! serving throughput on the AOT tiny-ViT (skips if artifacts missing).
+
+use std::time::Duration;
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::batcher::BatchPolicy;
+use hgpipe::coordinator::ModelServer;
+use hgpipe::util::bench::{bench, black_box};
+use hgpipe::util::prng::Prng;
+
+fn main() {
+    println!("=== coordinator benches ===\n");
+
+    // pure policy micro-bench (the per-request decision cost)
+    let policy = BatchPolicy::new(vec![1, 8], Duration::from_millis(2));
+    let r = bench("batch policy decide() x1000", Duration::from_millis(300), || {
+        for q in 0..1000usize {
+            black_box(policy.decide(q % 17, Duration::from_micros((q % 3000) as u64)));
+        }
+    });
+    println!("{r}");
+
+    // end-to-end serving throughput on the real artifact
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing — run `make artifacts` for the serving bench)");
+        return;
+    }
+    let manifest = Manifest::load(dir).expect("manifest");
+    let server = ModelServer::start(&manifest, "tiny-synth", 2).expect("server");
+    let n_tok = server.tokens_per_image();
+    let mut rng = Prng::new(3);
+    let images: Vec<Vec<f32>> =
+        (0..64).map(|_| (0..n_tok).map(|_| rng.f64() as f32).collect()).collect();
+
+    // warm up (compile already done at start; prime caches)
+    server.infer_all(images[..16].to_vec()).unwrap();
+
+    let r = bench("serve 64 tiny-synth images (batched)", Duration::from_secs(5), || {
+        black_box(server.infer_all(images.clone()).unwrap());
+    });
+    println!("{r}");
+    println!("    => {:.0} img/s through the full coordinator", r.throughput(64.0));
+    println!("{}", server.metrics.lock().unwrap().summary());
+
+    // coordinator overhead: exec time vs wall time share
+    let m = server.metrics.lock().unwrap();
+    let exec_share = m.exec_ms_total / 1e3 / (m.count() as f64 / m.throughput().unwrap_or(1.0));
+    println!("    => PJRT-execute share of wall time ~ {:.0}%", 100.0 * exec_share.min(1.0));
+}

@@ -1,0 +1,76 @@
+//! Bench + regeneration of Figure 11 (LUT optimization techniques):
+//! the DSP ladder (11a), the resource-reduction table (11c), the
+//! segmented-recip MSE experiment (10d companion), and table-generation
+//! throughput.
+
+use std::time::Duration;
+
+use hgpipe::arch::dsp::dsp_ladder;
+use hgpipe::arch::parallelism::design_network;
+use hgpipe::lut::cost::fig11c;
+use hgpipe::lut::{generate, OutQuant};
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== Figure 11a: DSP ladder ===");
+    let d = design_network(&ViTConfig::deit_tiny(), Precision::A4W3, 2);
+    for s in dsp_ladder(&d) {
+        println!(
+            "  {:<42} {:>7} DSPs   (paper {})",
+            s.name,
+            s.dsps,
+            s.paper_dsps.map(|p| p.to_string()).unwrap_or_default()
+        );
+    }
+
+    println!("\n=== Figure 11c: resource reduction ===");
+    println!(
+        "{:<10} {:>6} {:>5} {:>20} {:>14} {:>16}",
+        "function", "depth", "bits", "LUT-6 naive->table", "paper table", "DSP naive->table"
+    );
+    for r in fig11c() {
+        println!(
+            "{:<10} {:>6} {:>5} {:>13} -> {:<4} {:>14} {:>10} -> {}",
+            r.function, r.table_depth, r.table_bits, r.naive.lut6, r.table.lut6,
+            r.paper_table_lut6, r.naive.dsp, r.table.dsp
+        );
+    }
+
+    println!("\n=== Figure 10d companion: segmented recip MSE ===");
+    let (a, b, s) = (200i64, 40_000i64, 1.0 / 255.0);
+    let seg = generate::recip_table_segmented("r", a, b, s);
+    let flat = generate::recip_table_flat("r", a, b, s);
+    let xs: Vec<i64> = (0..20_000)
+        .map(|i| {
+            let u = (i as f64 + 0.5) / 20_000.0;
+            ((a as f64) * (1.0 / u).powf(1.4)).min(b as f64) as i64
+        })
+        .collect();
+    let f = |x: f64| 1.0 / x;
+    println!(
+        "  flat MSE {:.6}  segmented MSE {:.6}  ({:.1}x; paper 0.032 -> 0.0034)",
+        flat.mse(&xs, f, s),
+        seg.mse(&xs, f, s),
+        flat.mse(&xs, f, s) / seg.mse(&xs, f, s)
+    );
+
+    println!("\n--- table generation throughput ---");
+    let out = OutQuant::symmetric(0.125, 4);
+    let r = bench("requant_table (64 entries)", Duration::from_millis(300), || {
+        black_box(generate::requant_table("rq", -1000, 2000, 0.03125, out));
+    });
+    println!("{r}");
+    let r = bench("gelu_requant_table (erf per entry)", Duration::from_millis(300), || {
+        black_box(generate::gelu_requant_table("g", -800, 800, 0.0078125, out));
+    });
+    println!("{r}");
+    let r = bench("joint_calibrate (iterative)", Duration::from_millis(300), || {
+        black_box(generate::joint_calibrate("jc", |x| x, -100_000, 100_000, 0.001, 6, out));
+    });
+    println!("{r}");
+    let r = bench("recip_table_segmented", Duration::from_millis(300), || {
+        black_box(generate::recip_table_segmented("rs", 200, 40_000, 1.0 / 255.0));
+    });
+    println!("{r}");
+}

@@ -1,0 +1,42 @@
+//! Bench + regeneration of Figure 12 (cycle-accurate timing diagram) —
+//! also the simulator's end-to-end throughput benchmark.
+
+use std::time::Duration;
+
+use hgpipe::arch::parallelism::design_network;
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::sim::{self, builder::Paradigm, SimConfig};
+use hgpipe::util::bench::bench;
+
+fn main() {
+    println!("=== Figure 12: timing diagram (DeiT-tiny, hybrid paradigm) ===\n");
+    let cfg = ViTConfig::deit_tiny();
+    let d = design_network(&cfg, Precision::A4W3, 2);
+    let sim_cfg = SimConfig::matched(&d, &cfg);
+    let pipeline = sim::build_vit(&d, &cfg, Paradigm::Hybrid, sim_cfg);
+
+    let r = sim::run(&pipeline, 3, 5_000_000);
+    let s = sim::trace::summarize(&r, 425e6).expect("completes");
+    println!("{}", sim::trace::render_gantt(&r, 100));
+    println!("stable II {} (paper 57,624) | image1 {} cycles (paper 824,843)", s.stable_ii, s.first_image_cycles);
+    println!("latency {:.3} ms (paper 0.136) | ideal {:.0} img/s (paper 7,353)", s.latency_ms, s.ideal_fps);
+
+    println!("\n--- simulator throughput (before/after the §Perf pass) ---");
+    let cycles = r.cycles as f64;
+    let res = bench("cycle-stepped reference (run)", Duration::from_secs(3), || {
+        let rep = sim::run(&pipeline, 3, 5_000_000);
+        assert_eq!(rep.stop, sim::StopReason::Completed);
+    });
+    println!("{res}");
+    println!("    => {:.1} M simulated cycles/s", cycles / res.mean.as_secs_f64() / 1e6);
+    let fast = bench("event-driven (run_fast)", Duration::from_secs(3), || {
+        let rep = sim::run_fast(&pipeline, 3, 5_000_000);
+        assert_eq!(rep.stop, sim::StopReason::Completed);
+    });
+    println!("{fast}");
+    println!(
+        "    => {:.1} M simulated cycles/s  ({:.0}x speedup)",
+        cycles / fast.mean.as_secs_f64() / 1e6,
+        res.mean.as_secs_f64() / fast.mean.as_secs_f64()
+    );
+}

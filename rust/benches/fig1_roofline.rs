@@ -1,0 +1,41 @@
+//! Bench + regeneration of Figure 1 (roofline model).
+//!
+//! Prints the same series the paper plots (design point -> achievable
+//! TOP/s) and times the model evaluation.
+
+use std::time::Duration;
+
+use hgpipe::arch::parallelism::design_network;
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::platform::Fpga;
+use hgpipe::roofline::fig1;
+use hgpipe::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== Figure 1: roofline model (VCK190, DeiT-tiny) ===\n");
+    let cfg = ViTConfig::deit_tiny();
+    let design = design_network(&cfg, Precision::A4W4, 2);
+    let fpga = Fpga::vck190();
+
+    let points = fig1(&design, &cfg, &fpga);
+    println!(
+        "{:<34} {:>10} {:>12} {:>14} {:>12}",
+        "design point", "ops/byte", "roof TOP/s", "achiev. TOP/s", "paper TOP/s"
+    );
+    for p in &points {
+        println!(
+            "{:<34} {:>10.1} {:>12.2} {:>14.2} {:>12.1}",
+            p.label,
+            p.intensity,
+            p.compute_roof / 1e12,
+            p.achievable / 1e12,
+            p.paper_tops
+        );
+    }
+
+    println!("\n--- timing ---");
+    let r = bench("fig1 roofline evaluation", Duration::from_millis(300), || {
+        black_box(fig1(&design, &cfg, &fpga));
+    });
+    println!("{r}");
+}

@@ -1,0 +1,51 @@
+//! Simulator engine throughput across paradigms and network sizes — the
+//! L3 hot-path benchmark driving the §Perf optimization pass.
+
+use std::time::Duration;
+
+use hgpipe::arch::parallelism::design_network;
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::sim::{self, builder::Paradigm, SimConfig};
+use hgpipe::util::bench::bench;
+
+fn main() {
+    println!("=== simulator engine throughput ===\n");
+    for (cfg, label) in
+        [(ViTConfig::tiny_synth(), "tiny-synth"), (ViTConfig::deit_tiny(), "deit-tiny")]
+    {
+        let d = design_network(&cfg, Precision::A4W3, 2);
+        let sim_cfg = SimConfig::matched(&d, &cfg);
+        for (par, pl) in
+            [(Paradigm::Hybrid, "hybrid"), (Paradigm::CoarseGrained, "coarse")]
+        {
+            let pipeline = sim::build_vit(&d, &cfg, par, sim_cfg);
+            let probe = sim::run_fast(&pipeline, 3, 500_000_000);
+            let cycles = probe.cycles as f64;
+            for (engine, ename) in [
+                (sim::run as fn(&sim::Pipeline, u64, u64) -> sim::SimReport, "run"),
+                (sim::run_fast as fn(&sim::Pipeline, u64, u64) -> sim::SimReport, "run_fast"),
+            ] {
+                let r = bench(
+                    &format!("{label}/{pl}/{ename}: 3 images ({:.2}M cycles)", cycles / 1e6),
+                    Duration::from_secs(2),
+                    || {
+                        let rep = engine(&pipeline, 3, 500_000_000);
+                        assert!(matches!(rep.stop, sim::StopReason::Completed));
+                    },
+                );
+                println!("{r}\n    => {:>8.1} Mcycles/s", cycles / r.mean.as_secs_f64() / 1e6);
+            }
+        }
+    }
+
+    // deadlock detection cost: the fine-grained paradigm wedges early
+    println!("\n--- deadlock detection ---");
+    let cfg = ViTConfig::deit_tiny();
+    let d = design_network(&cfg, Precision::A4W3, 2);
+    let pipeline = sim::build_vit(&d, &cfg, Paradigm::FineGrained, SimConfig::matched(&d, &cfg));
+    let r = bench("fine-grained deadlock detection", Duration::from_secs(1), || {
+        let rep = sim::run(&pipeline, 1, 500_000_000);
+        assert!(matches!(rep.stop, sim::StopReason::Deadlock { .. }));
+    });
+    println!("{r}");
+}

@@ -1,0 +1,50 @@
+//! Bench + regeneration of Table 1 (parallelism design).
+
+use std::time::Duration;
+
+use hgpipe::arch::parallelism::{design_network, design_table1};
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== Table 1: parallelism design on DeiT-tiny ===\n");
+    let d = design_table1();
+    println!(
+        "{:<16} {:>9} {:>11} {:>11} {:>7} {:>5} {:>7} {:>7}",
+        "module", "T/TP=TT", "CI/CIP=CIT", "CO/COP=COT", "MOPs", "P", "II", "eta"
+    );
+    for m in &d.modules {
+        println!(
+            "{:<16} {:>3}/{}={:<4} {:>4}/{:<2}={:<4} {:>9} {:>7.2} {:>5} {:>7} {:>7}",
+            m.spec.name,
+            m.spec.t,
+            m.tp,
+            m.tt,
+            m.spec.ci,
+            m.cip,
+            m.cit,
+            if m.spec.is_mm() { format!("{}/{}={}", m.spec.co, m.cop, m.cot) } else { "-".into() },
+            m.mops(),
+            m.p,
+            m.ii,
+            if m.spec.is_mm() { format!("{:.1}%", m.eta * 100.0) } else { "-".into() },
+        );
+    }
+    println!("\naccelerator II = {} (paper: 57624)", d.accelerator_ii());
+
+    println!("\n--- timing ---");
+    let cfg_t = ViTConfig::deit_tiny();
+    let cfg_s = ViTConfig::deit_small();
+    let r1 = bench("design_table1 (hand layout, derived columns)", Duration::from_millis(200), || {
+        black_box(design_table1());
+    });
+    println!("{r1}");
+    let r2 = bench("auto designer, deit-tiny (289 modules)", Duration::from_millis(400), || {
+        black_box(design_network(&cfg_t, Precision::A4W3, 2));
+    });
+    println!("{r2}");
+    let r3 = bench("auto designer, deit-small", Duration::from_millis(400), || {
+        black_box(design_network(&cfg_s, Precision::A3W3, 2));
+    });
+    println!("{r3}");
+}

@@ -1,0 +1,50 @@
+//! Bench + regeneration of Table 2 (cross-accelerator comparison).
+
+use std::time::Duration;
+
+use hgpipe::metrics::{deploy, table2};
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::platform::Fpga;
+use hgpipe::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== Table 2: comparison with prior art ===\n");
+    println!(
+        "{:<24} {:<8} {:>5} {:<11} {:<7} {:>7} {:>8} {:>7} {:>6} {:>6} {:>6} {:>9} {:>8} {:>7}",
+        "accelerator", "device", "MHz", "network", "prec", "FPS", "GOPs", "kLUT", "DSP", "BRAM",
+        "W", "GOPs/kLUT", "GOPs/DSPn", "GOPs/W"
+    );
+    for r in table2() {
+        println!(
+            "{:<24} {:<8} {:>5.0} {:<11} {:<7} {:>7.0} {:>8.0} {:>7} {:>6} {:>6} {:>6.1} {:>9.2} {:>8.3} {:>7.1}",
+            r.name,
+            r.platform,
+            r.freq_mhz,
+            r.network,
+            r.precision,
+            r.fps,
+            r.gops,
+            if r.luts_k.is_nan() { "-".into() } else { format!("{:.0}", r.luts_k) },
+            r.dsps,
+            if r.brams.is_nan() { "-".into() } else { format!("{:.0}", r.brams) },
+            r.power_w,
+            if r.luts_k.is_nan() { f64::NAN } else { r.gops_per_klut() },
+            r.gops_per_dsp_norm(),
+            r.gops_per_w(),
+        );
+    }
+
+    // headline claims
+    let ours = deploy(&ViTConfig::deit_tiny(), Precision::A3W3, &Fpga::vck190(), 425e6);
+    let zcu = deploy(&ViTConfig::deit_tiny(), Precision::A4W4, &Fpga::zcu102(), 375e6);
+    println!("\nheadline ratios (ours vs paper):");
+    println!("  vs V100 GPU        : {:.2}x  (paper 2.81x)", ours.fps / 2529.0);
+    println!("  GOPs/kLUT vs AutoViTAcc: {:.2}x  (paper 2.52x)", zcu.gops_per_klut() / 7.35);
+    println!("  GOPs/W vs SSR      : {:.2}x  (paper 1.55x)", ours.gops_per_w() / 246.15);
+
+    println!("\n--- timing ---");
+    let r = bench("full table2 assembly (4 deployments)", Duration::from_secs(2), || {
+        black_box(table2());
+    });
+    println!("{r}");
+}

@@ -1,0 +1,10 @@
+//! The parallelism designer (paper Sec. 4.3): choose TP/CIP/COP per
+//! module so the pipeline is balanced (every II <= the non-linear
+//! bottleneck's II) and BRAM layout is efficient (Sec. 4.3.2), then
+//! account resources (MAC units, DSPs, BRAMs, LUTs).
+
+pub mod bram;
+pub mod dsp;
+pub mod parallelism;
+
+pub use parallelism::{design_network, design_table1, Design, ModuleDesign};

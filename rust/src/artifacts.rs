@@ -1,0 +1,104 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub model: String,
+    pub precision: String,
+}
+
+impl ArtifactInfo {
+    pub fn batch(&self) -> usize {
+        self.input_shape.first().copied().unwrap_or(1)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::new();
+        for (name, info) in arts {
+            let shape = |key: &str| -> Vec<usize> {
+                info.get(key)
+                    .and_then(|s| s.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|x| x as usize).collect())
+                    .unwrap_or_default()
+            };
+            artifacts.push(ArtifactInfo {
+                name: name.clone(),
+                path: dir.join(info.get("path").and_then(|p| p.as_str()).unwrap_or(name)),
+                input_shape: shape("input"),
+                output_shape: shape("output"),
+                model: info.get("model").and_then(|m| m.as_str()).unwrap_or("?").to_string(),
+                precision: info.get("precision").and_then(|m| m.as_str()).unwrap_or("?").to_string(),
+            });
+        }
+        artifacts.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All batch variants of a model, smallest batch first.
+    pub fn variants(&self, model: &str) -> Vec<&ArtifactInfo> {
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && !a.name.contains("block"))
+            .collect();
+        v.sort_by_key(|a| a.batch());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": {
+                "m_b1": {"path": "m1.hlo.txt", "input": [1, 4, 8], "output": [1, 2], "model": "m", "precision": "a4w4"},
+                "m_b8": {"path": "m8.hlo.txt", "input": [8, 4, 8], "output": [8, 2], "model": "m", "precision": "a4w4"}
+            }, "models": {}}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("hgpipe_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.find("m_b1").unwrap().batch(), 1);
+        let v = m.variants("m");
+        assert_eq!(v.len(), 2);
+        assert!(v[0].batch() < v[1].batch());
+    }
+}

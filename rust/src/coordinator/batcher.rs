@@ -1,0 +1,99 @@
+//! Dynamic batching policy — pure logic, unit-testable without PJRT.
+//!
+//! The AOT pipeline emits one executable per batch size (e.g. {1, 8});
+//! the batcher picks which variant to dispatch given the queue depth and
+//! how long the head request has waited. Mirrors the paper's serving
+//! setup where the accelerator pipeline is fed back-to-back images and
+//! the host aggregates them (Sec. 5.1's PYNQ measurement loop).
+
+use std::time::Duration;
+
+/// Batching policy parameters.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Available executable batch sizes, ascending (e.g. [1, 8]).
+    pub variants: Vec<usize>,
+    /// Max time the head-of-line request may wait for peers.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(mut variants: Vec<usize>, max_wait: Duration) -> Self {
+        variants.sort_unstable();
+        variants.dedup();
+        assert!(!variants.is_empty(), "need at least one batch variant");
+        Self { variants, max_wait }
+    }
+
+    pub fn largest(&self) -> usize {
+        *self.variants.last().unwrap()
+    }
+
+    /// Decide the batch size to dispatch now, or None to keep waiting.
+    ///
+    /// * a full largest-variant batch dispatches immediately;
+    /// * once the head request has waited `max_wait`, dispatch the largest
+    ///   variant the queue can fill — or, if the queue is smaller than
+    ///   every variant, the smallest variant (the executor pads the
+    ///   missing lanes; better than starving the head request).
+    pub fn decide(&self, queued: usize, head_waited: Duration) -> Option<usize> {
+        if queued == 0 {
+            return None;
+        }
+        let largest = self.largest();
+        if queued >= largest {
+            return Some(largest);
+        }
+        if head_waited >= self.max_wait {
+            let fit = self
+                .variants
+                .iter()
+                .rev()
+                .find(|&&v| v <= queued)
+                .copied()
+                .unwrap_or(self.variants[0]);
+            return Some(fit);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![8, 1], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn variants_sorted_deduped() {
+        let p = BatchPolicy::new(vec![8, 1, 8], Duration::ZERO);
+        assert_eq!(p.variants, vec![1, 8]);
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        assert_eq!(policy().decide(8, Duration::ZERO), Some(8));
+        assert_eq!(policy().decide(20, Duration::ZERO), Some(8));
+    }
+
+    #[test]
+    fn partial_batch_waits_until_deadline() {
+        let p = policy();
+        assert_eq!(p.decide(3, Duration::from_micros(100)), None);
+        assert_eq!(p.decide(3, Duration::from_millis(3)), Some(1));
+    }
+
+    #[test]
+    fn empty_queue_never_dispatches() {
+        assert_eq!(policy().decide(0, Duration::from_secs(1)), None);
+    }
+
+    #[test]
+    fn picks_largest_variant_fitting_queue() {
+        let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(1));
+        assert_eq!(p.decide(5, Duration::from_millis(2)), Some(4));
+        assert_eq!(p.decide(2, Duration::from_millis(2)), Some(1));
+    }
+}

@@ -1,0 +1,94 @@
+//! Serving metrics: latency percentiles, throughput, batch histogram.
+
+use std::time::Duration;
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub latencies_us: Vec<u64>,
+    pub batch_hist: std::collections::BTreeMap<usize, u64>,
+    pub exec_ms_total: f64,
+    pub queue_ms_total: f64,
+    pub started: Option<std::time::Instant>,
+    pub finished: Option<std::time::Instant>,
+}
+
+impl ServeMetrics {
+    pub fn record(&mut self, latency: Duration, batch: usize, exec_ms: f64, queue_ms: f64) {
+        self.latencies_us.push(latency.as_micros() as u64);
+        *self.batch_hist.entry(batch).or_default() += 1;
+        self.exec_ms_total += exec_ms;
+        self.queue_ms_total += queue_ms;
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        Some(Duration::from_micros(v[idx]))
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        let (s, f) = (self.started?, self.finished?);
+        let secs = f.duration_since(s).as_secs_f64();
+        if secs > 0.0 {
+            Some(self.count() as f64 / secs)
+        } else {
+            None
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        let total: u64 = self.batch_hist.iter().map(|(b, n)| *b as u64 * n).sum();
+        let dispatches: u64 = self.batch_hist.values().sum();
+        if dispatches == 0 {
+            0.0
+        } else {
+            total as f64 / dispatches as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} throughput={:.1}/s p50={:?} p95={:?} p99={:?} mean_batch={:.2} exec={:.0}ms queue={:.0}ms",
+            self.count(),
+            self.throughput().unwrap_or(0.0),
+            self.percentile(0.50).unwrap_or_default(),
+            self.percentile(0.95).unwrap_or_default(),
+            self.percentile(0.99).unwrap_or_default(),
+            self.mean_batch(),
+            self.exec_ms_total,
+            self.queue_ms_total,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = ServeMetrics::default();
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i * 10), 1, 0.1, 0.0);
+        }
+        assert!(m.percentile(0.5).unwrap() <= m.percentile(0.95).unwrap());
+        assert!(m.percentile(0.95).unwrap() <= m.percentile(0.99).unwrap());
+    }
+
+    #[test]
+    fn mean_batch_weighted() {
+        let mut m = ServeMetrics::default();
+        m.record(Duration::ZERO, 8, 0.0, 0.0);
+        m.record(Duration::ZERO, 8, 0.0, 0.0);
+        m.record(Duration::ZERO, 1, 0.0, 0.0);
+        assert!((m.mean_batch() - 17.0 / 3.0).abs() < 1e-9);
+    }
+}

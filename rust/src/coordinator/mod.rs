@@ -1,0 +1,265 @@
+//! L3 serving coordinator: request queue → dynamic batcher → PJRT
+//! executor, with per-request latency accounting. Thread-based (this
+//! offline environment has no tokio); the executor thread plays the role
+//! of the accelerator's DMA feeder, the AOT executable plays the
+//! fully-pipelined fabric.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::artifacts::Manifest;
+use crate::runtime::{Engine, Executable};
+use batcher::BatchPolicy;
+use metrics::ServeMetrics;
+
+/// One inference request: a patchified image (flat T*P f32 tokens).
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: Sender<Response>,
+}
+
+/// The reply: logits + timing.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    pub latency: std::time::Duration,
+}
+
+/// A serving endpoint for one model (all its batch variants).
+pub struct ModelServer {
+    name: String,
+    queue_tx: Sender<Request>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Mutex<ServeMetrics>>,
+    stop: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    tokens_per_image: usize,
+    num_classes: usize,
+}
+
+impl ModelServer {
+    /// Spin up the executor thread for a model's batch variants.
+    ///
+    /// The PJRT client and executables are created *inside* the executor
+    /// thread: the `xla` crate's handles are not `Send` (Rc-based), so the
+    /// thread owns the whole runtime — which also mirrors the hardware:
+    /// one fabric, one feeder.
+    pub fn start(manifest: &Manifest, model: &str, policy_wait_ms: u64) -> crate::Result<Self> {
+        let variants: Vec<crate::artifacts::ArtifactInfo> =
+            manifest.variants(model).into_iter().cloned().collect();
+        anyhow::ensure!(!variants.is_empty(), "no artifacts for model '{model}'");
+        let tokens_per_image: usize = variants[0].input_shape[1..].iter().product();
+        let num_classes = *variants[0].output_shape.last().unwrap();
+
+        let (tx, rx) = channel::<Request>();
+        let (init_tx, init_rx) = channel::<Result<f64, String>>();
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let m2 = metrics.clone();
+        let s2 = stop.clone();
+        let wait = std::time::Duration::from_millis(policy_wait_ms);
+        let worker = std::thread::spawn(move || {
+            // compile all variants up front (the paper's bitstream load)
+            let init = (|| -> crate::Result<(Vec<(usize, Arc<Executable>)>, f64)> {
+                let engine = Engine::cpu()?;
+                let mut executables = Vec::new();
+                let mut compile_ms = 0.0;
+                for v in &variants {
+                    let e = engine.load(v)?;
+                    compile_ms += e.compile_ms;
+                    executables.push((v.batch(), e));
+                }
+                Ok((executables, compile_ms))
+            })();
+            match init {
+                Err(e) => {
+                    let _ = init_tx.send(Err(format!("{e:#}")));
+                }
+                Ok((executables, compile_ms)) => {
+                    let _ = init_tx.send(Ok(compile_ms));
+                    let policy =
+                        BatchPolicy::new(executables.iter().map(|(b, _)| *b).collect(), wait);
+                    executor_loop(rx, executables, policy, tokens_per_image, num_classes, m2, s2);
+                }
+            }
+        });
+        match init_rx.recv() {
+            Ok(Ok(_compile_ms)) => {}
+            Ok(Err(e)) => return Err(anyhow::anyhow!("model '{model}' failed to load: {e}")),
+            Err(_) => return Err(anyhow::anyhow!("executor thread died during init")),
+        }
+
+        Ok(Self {
+            name: model.to_string(),
+            queue_tx: tx,
+            next_id: AtomicU64::new(0),
+            metrics,
+            stop,
+            worker: Some(worker),
+            tokens_per_image,
+            num_classes,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn tokens_per_image(&self) -> usize {
+        self.tokens_per_image
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Submit one image; returns the reply channel.
+    pub fn submit(&self, tokens: Vec<f32>) -> crate::Result<Receiver<Response>> {
+        anyhow::ensure!(
+            tokens.len() == self.tokens_per_image,
+            "expected {} token values, got {}",
+            self.tokens_per_image,
+            tokens.len()
+        );
+        let (tx, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tokens,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        self.queue_tx.send(req).map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Submit a set of images and wait for all replies (offline driver).
+    pub fn infer_all(&self, images: Vec<Vec<f32>>) -> crate::Result<Vec<Response>> {
+        let rxs: Vec<_> = images.into_iter().map(|i| self.submit(i)).collect::<Result<_, _>>()?;
+        rxs.into_iter().map(|rx| rx.recv().map_err(|e| anyhow::anyhow!("reply lost: {e}"))).collect()
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the executor by closing the queue
+        let (tx, _rx) = channel();
+        let _ = std::mem::replace(&mut self.queue_tx, tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn executor_loop(
+    rx: Receiver<Request>,
+    executables: Vec<(usize, Arc<Executable>)>,
+    policy: BatchPolicy,
+    tokens_per_image: usize,
+    num_classes: usize,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // top up the pending queue (non-blocking drain, short block if empty)
+        if pending.is_empty() {
+            match rx.recv_timeout(std::time::Duration::from_millis(5)) {
+                Ok(r) => pending.push(r),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        while let Ok(r) = rx.try_recv() {
+            pending.push(r);
+        }
+
+        let head_waited = pending[0].enqueued.elapsed();
+        let Some(batch) = policy.decide(pending.len(), head_waited) else {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+            continue;
+        };
+        let (_, exe) = executables
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .expect("policy only returns available variants");
+
+        // the queue may be smaller than the chosen variant (head-of-line
+        // timeout with a sparse queue): pad the missing lanes with zeros
+        // and discard their outputs
+        let take = batch.min(pending.len());
+        let reqs: Vec<Request> = pending.drain(..take).collect();
+        let mut input = vec![0.0f32; batch * tokens_per_image];
+        for (i, r) in reqs.iter().enumerate() {
+            input[i * tokens_per_image..(i + 1) * tokens_per_image].copy_from_slice(&r.tokens);
+        }
+        let queue_ms =
+            reqs.iter().map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3).sum::<f64>() / batch as f64;
+        let t0 = Instant::now();
+        let out = match exe.run_f32(&input) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("executor error: {e}");
+                continue;
+            }
+        };
+        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        {
+            let mut m = metrics.lock().unwrap();
+            if m.started.is_none() {
+                m.started = Some(t0);
+            }
+            m.finished = Some(Instant::now());
+            for r in &reqs {
+                m.record(r.enqueued.elapsed(), batch, exec_ms / batch as f64, queue_ms);
+            }
+        }
+        for (i, r) in reqs.into_iter().enumerate() {
+            let logits = out[i * num_classes..(i + 1) * num_classes].to_vec();
+            let argmax = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            let _ = r.reply.send(Response {
+                id: r.id,
+                logits,
+                argmax,
+                latency: r.enqueued.elapsed(),
+            });
+        }
+    }
+}
+
+/// Route requests across several models (the vLLM-style front door).
+pub struct Router {
+    servers: Vec<ModelServer>,
+}
+
+impl Router {
+    pub fn new(servers: Vec<ModelServer>) -> Self {
+        Self { servers }
+    }
+
+    pub fn server(&self, model: &str) -> Option<&ModelServer> {
+        self.servers.iter().find(|s| s.name() == model)
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.servers.iter().map(|s| s.name()).collect()
+    }
+}

@@ -1,0 +1,42 @@
+//! # HG-PIPE — hybrid-grained pipelined ViT acceleration, reproduced
+//!
+//! This crate is the Layer-3 (rust) side of a three-layer reproduction of
+//! *HG-PIPE: Vision Transformer Acceleration with Hybrid-Grained Pipeline*
+//! (Guo et al., 2024). The paper's system is an FPGA accelerator; since the
+//! hardware itself is the contribution, this crate contains:
+//!
+//! * [`model`] — the ViT workload IR (modules, shapes, op counts),
+//! * [`quant`] / [`lut`] — the paper's quantization + LUT approximation
+//!   stack (Sec. 4.4), bit-exact mirror of the python table generators,
+//! * [`platform`] — FPGA/GPU device resource models (ZCU102, VCK190, V100),
+//! * [`arch`] — the parallelism designer (Table 1: TP/CIP/COP, II, BRAM η),
+//! * [`sim`] — a cycle-accurate simulator of the hybrid-grained pipeline
+//!   (deep buffers + deep FIFOs + decentralized FSM stages, Sec. 4.2),
+//! * [`paradigms`] — temporal / coarse / fine / hybrid baselines (Fig. 2),
+//! * [`roofline`] — the Fig. 1 roofline model,
+//! * [`metrics`] / [`report`] — Table 2 & figure regeneration,
+//! * [`runtime`] — PJRT execution of the AOT-compiled quantized ViT
+//!   (`artifacts/*.hlo.txt`, produced by `python/compile/aot.py`),
+//! * [`coordinator`] — the serving loop: request router, dynamic batcher,
+//!   pipelined execution with per-stage metrics.
+//!
+//! Python never runs on the request path: `make artifacts` runs once, and
+//! the `hgpipe` binary is self-contained afterwards.
+
+pub mod arch;
+pub mod artifacts;
+pub mod coordinator;
+pub mod lut;
+pub mod metrics;
+pub mod model;
+pub mod paradigms;
+pub mod platform;
+pub mod quant;
+pub mod report;
+pub mod roofline;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,282 @@
+//! Table generators — byte-for-byte mirror of `python/compile/tables.py`.
+//!
+//! The golden cross-check (`tests/golden_tables.rs`) regenerates the
+//! fixture cases emitted by `python -m compile.aot` and compares: alpha /
+//! shift / pivot / scales must match exactly, entries within ±1 LSB
+//! (libm `exp`/`sqrt` may differ by an ulp across languages).
+
+use super::numerics;
+use super::table::{LutTable, OutQuant, SegmentedTable};
+
+/// Default table geometry (paper Fig. 11c).
+pub const EXP_BITS: u32 = 6;
+pub const EXP_OUT_BITS: u32 = 8;
+pub const GELU_BITS: u32 = 6;
+pub const RECIP_BITS: u32 = 6;
+pub const RECIP_OUT_BITS: u32 = 8;
+pub const RSQRT_BITS: u32 = 6;
+pub const RSQRT_OUT_BITS: u32 = 12;
+pub const REQUANT_BITS: u32 = 6;
+
+/// Power-of-two output scale so `max_abs` maps inside the entry range.
+pub fn pot_out_scale(max_abs: f64, bits: u32, signed: bool) -> f64 {
+    let qmax = if signed { (1i64 << (bits - 1)) - 1 } else { (1i64 << bits) - 1 } as f64;
+    if max_abs <= 0.0 {
+        return 1.0;
+    }
+    2f64.powi((max_abs / qmax).log2().ceil() as i32)
+}
+
+/// Sample `f` (real-valued over the dequantized input) into a PoT table.
+pub fn build_table<F: Fn(f64) -> f64>(
+    name: &str,
+    f: F,
+    alpha: i64,
+    beta: i64,
+    in_scale: f64,
+    n_bits: u32,
+    out: OutQuant,
+    inverted: bool,
+) -> LutTable {
+    let shift = numerics::pot_shift(alpha, beta, n_bits);
+    let depth = 1i64 << n_bits;
+    let mut entries = Vec::with_capacity(depth as usize);
+    for i in 0..depth {
+        let mid = if inverted {
+            numerics::index_midpoint_inverted(beta, i, shift)
+        } else {
+            numerics::index_midpoint(alpha, i, shift)
+        };
+        let y = f(mid * in_scale);
+        entries.push(numerics::quantize_entry(y, out.scale, out.zero_point, out.qmin(), out.qmax()));
+    }
+    LutTable {
+        name: name.to_string(),
+        alpha: if inverted { beta } else { alpha },
+        shift,
+        n_bits,
+        inverted,
+        out_scale: out.scale,
+        out_zp: out.zero_point,
+        entries,
+    }
+}
+
+/// Sec. 4.4.4 — ReQuant as a table.
+pub fn requant_table(name: &str, alpha: i64, beta: i64, in_scale: f64, out: OutQuant) -> LutTable {
+    build_table(name, |x| x, alpha, beta, in_scale, REQUANT_BITS, out, false)
+}
+
+/// Sec. 4.4.3 — fused GeLU-ReQuant table.
+pub fn gelu_requant_table(
+    name: &str,
+    alpha: i64,
+    beta: i64,
+    in_scale: f64,
+    out: OutQuant,
+) -> LutTable {
+    build_table(name, numerics::gelu, alpha, beta, in_scale, GELU_BITS, out, false)
+}
+
+/// Sec. 4.4.7 — Inversed Exponential table (beta anchored at 0).
+pub fn exp_table_inverted(name: &str, alpha: i64, beta: i64, in_scale: f64) -> LutTable {
+    let out = OutQuant::unsigned(1.0 / ((1i64 << EXP_OUT_BITS) - 1) as f64, EXP_OUT_BITS);
+    build_table(name, f64::exp, alpha, beta, in_scale, EXP_BITS, out, true)
+}
+
+/// The non-inverted exp table — the Fig. 11b ablation baseline.
+pub fn exp_table_normal(name: &str, alpha: i64, beta: i64, in_scale: f64) -> LutTable {
+    let out = OutQuant::unsigned(1.0 / ((1i64 << EXP_OUT_BITS) - 1) as f64, EXP_OUT_BITS);
+    build_table(name, f64::exp, alpha, beta, in_scale, EXP_BITS, out, false)
+}
+
+/// Sec. 4.4.5 — Joint Table Range Calibration: iteratively shrink
+/// `[alpha, beta]` past the clamp-saturated runs at both ends.
+pub fn joint_calibrate<F: Fn(f64) -> f64 + Copy>(
+    name: &str,
+    f: F,
+    mut alpha: i64,
+    mut beta: i64,
+    in_scale: f64,
+    n_bits: u32,
+    out: OutQuant,
+) -> LutTable {
+    for _ in 0..16 {
+        let table = build_table(name, f, alpha, beta, in_scale, n_bits, out, false);
+        let ent = &table.entries;
+        let depth = ent.len();
+        let mut lsi = 0usize;
+        while lsi + 1 < depth && ent[lsi + 1] == ent[0] {
+            lsi += 1;
+        }
+        let mut msi = depth - 1;
+        while msi > 1 && ent[msi - 1] == ent[depth - 1] {
+            msi -= 1;
+        }
+        if lsi == 0 && msi == depth - 1 {
+            return table;
+        }
+        let new_alpha = alpha + ((lsi as i64) << table.shift);
+        let new_beta = alpha + (((msi + 1) as i64) << table.shift) - 1;
+        if new_alpha >= new_beta || (new_alpha == alpha && new_beta == beta) {
+            return table;
+        }
+        alpha = new_alpha;
+        beta = new_beta;
+    }
+    build_table(name, f, alpha, beta, in_scale, n_bits, out, false)
+}
+
+/// Sec. 4.4.6 — segmented Recip: pivot at the first 1/8 of the span,
+/// independent PoT output scale per segment.
+pub fn recip_table_segmented(name: &str, alpha: i64, beta: i64, in_scale: f64) -> SegmentedTable {
+    let alpha = alpha.max(1);
+    let span = beta - alpha;
+    let pivot = alpha + (span >> 3).max(1);
+    let steep_out =
+        OutQuant::unsigned(pot_out_scale(1.0 / (alpha as f64 * in_scale), RECIP_OUT_BITS, false), RECIP_OUT_BITS);
+    let flat_out =
+        OutQuant::unsigned(pot_out_scale(1.0 / (pivot as f64 * in_scale), RECIP_OUT_BITS, false), RECIP_OUT_BITS);
+    let steep = build_table(
+        &format!("{name}.steep"),
+        |x| 1.0 / x,
+        alpha,
+        pivot - 1,
+        in_scale,
+        RECIP_BITS,
+        steep_out,
+        false,
+    );
+    let flat = build_table(
+        &format!("{name}.flat"),
+        |x| 1.0 / x,
+        pivot,
+        beta,
+        in_scale,
+        RECIP_BITS,
+        flat_out,
+        false,
+    );
+    SegmentedTable { name: name.to_string(), pivot, steep, flat }
+}
+
+/// Unsegmented Recip baseline (same total depth: 128 entries).
+pub fn recip_table_flat(name: &str, alpha: i64, beta: i64, in_scale: f64) -> LutTable {
+    let alpha = alpha.max(1);
+    let out = OutQuant::unsigned(
+        pot_out_scale(1.0 / (alpha as f64 * in_scale), RECIP_OUT_BITS, false),
+        RECIP_OUT_BITS,
+    );
+    build_table(name, |x| 1.0 / x, alpha, beta, in_scale, RECIP_BITS + 1, out, false)
+}
+
+/// Rsqrt table (LayerNorm).
+pub fn rsqrt_table(name: &str, alpha: i64, beta: i64, in_scale: f64) -> LutTable {
+    let alpha = alpha.max(1);
+    let out = OutQuant::unsigned(
+        pot_out_scale(1.0 / (alpha as f64 * in_scale).sqrt(), RSQRT_OUT_BITS, false),
+        RSQRT_OUT_BITS,
+    );
+    build_table(
+        name,
+        |x| if x > 0.0 { 1.0 / x.sqrt() } else { 0.0 },
+        alpha,
+        beta,
+        in_scale,
+        RSQRT_BITS,
+        out,
+        false,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out4() -> OutQuant {
+        OutQuant::symmetric(0.125, 4)
+    }
+
+    #[test]
+    fn requant_is_monotone_64_deep() {
+        let t = requant_table("rq", -1000, 1000, 0.01, out4());
+        assert_eq!(t.depth(), 64);
+        assert!(t.entries.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn inverted_exp_anchor_exact() {
+        let t = exp_table_inverted("e", -5000, 0, 0.001);
+        assert!((t.lookup_real(0) - 1.0).abs() < 2.0 / 255.0);
+    }
+
+    #[test]
+    fn exp_monotone_toward_anchor() {
+        let t = exp_table_inverted("e", -3000, 0, 0.002);
+        let mut prev = -1.0;
+        for x in (-3000..=0).step_by(50) {
+            let v = t.lookup_real(x);
+            assert!(v >= prev - 1e-12);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn joint_calibration_removes_saturation() {
+        let raw = requant_table("r", -100_000, 100_000, 0.001, out4());
+        let sat = |e: &Vec<i64>| {
+            e.iter().filter(|&&v| v == e[0]).count() + e.iter().filter(|&&v| v == e[e.len() - 1]).count()
+        };
+        let cal = joint_calibrate("r", |x| x, -100_000, 100_000, 0.001, 6, out4());
+        assert!(sat(&cal.entries) < sat(&raw.entries));
+    }
+
+    #[test]
+    fn segmented_recip_beats_flat_on_skewed_inputs() {
+        // Fig 10d: MSE drops by ~10x with the 2-segment table
+        let (a, b, s) = (200i64, 40_000i64, 1.0 / 255.0);
+        let seg = recip_table_segmented("r", a, b, s);
+        let flat = recip_table_flat("r", a, b, s);
+        // log-normal-ish skew toward the steep region
+        let xs: Vec<i64> = (0..5000)
+            .map(|i| {
+                let u = (i as f64 + 0.5) / 5000.0;
+                (200.0 * (1.0 / u).powf(1.4)).min(40_000.0) as i64
+            })
+            .collect();
+        let f = |x: f64| 1.0 / x;
+        let m_seg = seg.mse(&xs, f, s);
+        let m_flat = flat.mse(&xs, f, s);
+        assert!(m_seg < m_flat, "seg {m_seg} !< flat {m_flat}");
+        assert!(m_flat / m_seg.max(1e-15) > 3.0);
+    }
+
+    #[test]
+    fn segmented_pivot_at_first_eighth() {
+        let seg = recip_table_segmented("r", 1000, 9000, 0.01);
+        assert_eq!(seg.pivot, 1000 + (8000 >> 3));
+    }
+
+    #[test]
+    fn rsqrt_tracks_function() {
+        let t = rsqrt_table("rs", 50, 100_000, 0.0625);
+        let mut rels: Vec<f64> = (50..100_000)
+            .step_by(97)
+            .map(|x| {
+                let exact = 1.0 / ((x as f64) * 0.0625).sqrt();
+                (t.lookup_real(x) - exact).abs() / exact
+            })
+            .collect();
+        rels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(rels[rels.len() / 2] < 0.15);
+    }
+
+    #[test]
+    fn pot_out_scale_is_power_of_two() {
+        for m in [0.3, 1.0, 77.7, 4000.0] {
+            let s = pot_out_scale(m, 8, false);
+            assert_eq!(s.log2().fract(), 0.0);
+            assert!(m / s <= 255.0);
+        }
+    }
+}

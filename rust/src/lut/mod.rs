@@ -1,0 +1,60 @@
+//! LUT-based non-linear operator processing (paper Sec. 4.4).
+//!
+//! * [`numerics`] — deterministic scalar math (python twin: `numerics.py`),
+//! * [`table`] — the PoT-indexed table types + shared JSON wire format,
+//! * [`generate`] — table generators (python twin: `tables.py`),
+//! * [`cost`] — the Fig. 11c FPGA resource cost model.
+
+pub mod cost;
+pub mod generate;
+pub mod numerics;
+pub mod table;
+
+pub use table::{AnyTable, LutTable, OutQuant, SegmentedTable};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Load a table set serialized by `python/compile/tables.dump_tables`.
+pub fn load_tables(path: &Path) -> crate::Result<BTreeMap<String, AnyTable>> {
+    let data = std::fs::read_to_string(path)?;
+    let v = Json::parse(&data).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("table file is not an object"))?;
+    let mut out = BTreeMap::new();
+    for (k, t) in obj {
+        out.insert(
+            k.clone(),
+            AnyTable::from_json(t).map_err(|e| anyhow::anyhow!("table '{k}': {e}"))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Serialize a table set in the shared wire format.
+pub fn dump_tables(tables: &BTreeMap<String, AnyTable>, path: &Path) -> crate::Result<()> {
+    let obj = Json::Obj(tables.iter().map(|(k, v)| (k.clone(), v.to_json())).collect());
+    std::fs::write(path, obj.to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dump_load_roundtrip() {
+        let t = generate::requant_table("rq", -100, 100, 0.5, OutQuant::symmetric(0.125, 4));
+        let s = generate::recip_table_segmented("rc", 10, 1000, 0.01);
+        let mut map = BTreeMap::new();
+        map.insert("rq".to_string(), AnyTable::Lut(t));
+        map.insert("rc".to_string(), AnyTable::Segmented(s));
+        let dir = std::env::temp_dir().join("hgpipe_lut_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        dump_tables(&map, &p).unwrap();
+        let back = load_tables(&p).unwrap();
+        assert_eq!(back, map);
+    }
+}

@@ -1,0 +1,149 @@
+//! Deterministic scalar numerics — verbatim mirror of
+//! `python/compile/numerics.py`. The golden cross-check test
+//! (`tests/golden_tables.rs`) pins both generators to the same JSON
+//! fixture, so any change here must be made in the python twin too.
+
+/// Round half away from zero (matches `f64::round`, and the python twin).
+#[inline]
+pub fn round_half_away(x: f64) -> f64 {
+    x.round()
+}
+
+/// Clamp an integer into `[lo, hi]`.
+#[inline]
+pub fn clamp_i64(x: i64, lo: i64, hi: i64) -> i64 {
+    x.max(lo).min(hi)
+}
+
+/// Abramowitz & Stegun 7.1.26 erf approximation (max abs err 1.5e-7).
+///
+/// Fixed constants, identical to the python twin — rust std has no `erf`
+/// and we refuse to depend on platform libm parity for table contents.
+pub fn erf_approx(x: f64) -> f64 {
+    let sign = if x >= 0.0 { 1.0 } else { -1.0 };
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * ax);
+    let poly =
+        ((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t + 0.254829592;
+    sign * (1.0 - poly * t * (-ax * ax).exp())
+}
+
+/// GeLU via erf (paper Eq. 1).
+pub fn gelu(x: f64) -> f64 {
+    0.5 * x * (1.0 + erf_approx(x / std::f64::consts::SQRT_2))
+}
+
+/// `s_PoT`: smallest shift with `(beta - alpha) >> s <= 2^n - 1`
+/// (integer-domain equivalent of `ceil(log2(span / (2^n - 1)))`, clamped
+/// to >= 0; ceiling so the max datum never overflows — paper Sec. 4.4.2).
+pub fn pot_shift(alpha: i64, beta: i64, n_bits: u32) -> u32 {
+    let span = beta - alpha;
+    if span <= 0 {
+        return 0;
+    }
+    let limit = (1i64 << n_bits) - 1;
+    let mut s = 0u32;
+    while (span >> s) > limit {
+        s += 1;
+    }
+    s
+}
+
+/// Eq. 6: `index = (x - alpha) >> s`, clamped into the table.
+#[inline]
+pub fn pot_index(x: i64, alpha: i64, s: u32, n_bits: u32) -> i64 {
+    clamp_i64((x - alpha) >> s, 0, (1i64 << n_bits) - 1)
+}
+
+/// Eq. 7 (inverted table): `index = (beta - x) >> s` — anchors the zero
+/// point at `beta` so the softmax max element is exact (Sec. 4.4.7).
+#[inline]
+pub fn pot_index_inverted(x: i64, beta: i64, s: u32, n_bits: u32) -> i64 {
+    clamp_i64((beta - x) >> s, 0, (1i64 << n_bits) - 1)
+}
+
+/// Representative input of bucket `i` (arithmetic midpoint of the bucket).
+pub fn index_midpoint(alpha: i64, i: i64, s: u32) -> f64 {
+    let lo = alpha + (i << s);
+    let hi = alpha + ((i + 1) << s) - 1;
+    0.5 * (lo + hi) as f64
+}
+
+/// Representative input of bucket `i` of an inverted table: the
+/// anchor-side endpoint, so bucket 0 represents exactly `beta`.
+pub fn index_midpoint_inverted(beta: i64, i: i64, s: u32) -> f64 {
+    (beta - (i << s)) as f64
+}
+
+/// Quantize a real table output to an integer entry (half-away rounding).
+pub fn quantize_entry(y: f64, scale: f64, zero_point: i64, qmin: i64, qmax: i64) -> i64 {
+    let q = round_half_away(y / scale) as i64 + zero_point;
+    clamp_i64(q, qmin, qmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_away_matches_python() {
+        assert_eq!(round_half_away(0.5), 1.0);
+        assert_eq!(round_half_away(-0.5), -1.0);
+        assert_eq!(round_half_away(2.4), 2.0);
+        assert_eq!(round_half_away(-2.4), -2.0);
+    }
+
+    #[test]
+    fn erf_endpoints() {
+        assert!(erf_approx(0.0).abs() < 1e-8);
+        assert!((erf_approx(3.0) - 0.99997791).abs() < 1e-5);
+        assert_eq!(erf_approx(-2.0), -erf_approx(2.0));
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert!(gelu(0.0).abs() < 1e-12);
+        assert!((gelu(1.0) - 0.8413447).abs() < 1e-5);
+        assert!((gelu(-10.0)).abs() < 1e-6);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pot_shift_minimal_and_safe() {
+        assert_eq!(pot_shift(0, 63, 6), 0);
+        assert_eq!(pot_shift(0, 64, 6), 1);
+        assert_eq!(pot_shift(0, 127, 6), 1);
+        assert_eq!(pot_shift(0, 128, 6), 2);
+        for beta in [63i64, 64, 100, 1000, 12345, 1 << 30] {
+            let s = pot_shift(0, beta, 6);
+            assert!(beta >> s <= 63);
+            if s > 0 {
+                assert!(beta >> (s - 1) > 63);
+            }
+        }
+    }
+
+    #[test]
+    fn inverted_index_anchors_beta() {
+        let s = pot_shift(-5000, 0, 6);
+        assert_eq!(pot_index_inverted(0, 0, s, 6), 0);
+        assert_eq!(pot_index_inverted(-(1 << s), 0, s, 6), 1);
+    }
+
+    #[test]
+    fn indices_always_in_range() {
+        let s = pot_shift(-1000, 4000, 6);
+        for x in [-1_000_000i64, -1000, 0, 4000, 1_000_000] {
+            let i = pot_index(x, -1000, s, 6);
+            assert!((0..64).contains(&i));
+        }
+    }
+
+    #[test]
+    fn quantize_entry_clamps_and_rounds() {
+        assert_eq!(quantize_entry(100.0, 1.0, 0, -8, 7), 7);
+        assert_eq!(quantize_entry(-100.0, 1.0, 0, -8, 7), -8);
+        assert_eq!(quantize_entry(0.5, 1.0, 0, -8, 7), 1);
+        assert_eq!(quantize_entry(-0.5, 1.0, 0, -8, 7), -1);
+    }
+}

@@ -1,0 +1,307 @@
+//! The PoT-indexed lookup table — rust twin of `tables.LutTable` /
+//! `tables.SegmentedTable`, sharing the JSON wire format with python.
+
+use super::numerics;
+use crate::util::json::Json;
+
+/// Affine output quantizer of a table entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutQuant {
+    pub scale: f64,
+    pub zero_point: i64,
+    pub bits: u32,
+    pub signed: bool,
+}
+
+impl OutQuant {
+    pub fn symmetric(scale: f64, bits: u32) -> Self {
+        Self { scale, zero_point: 0, bits, signed: true }
+    }
+
+    pub fn unsigned(scale: f64, bits: u32) -> Self {
+        Self { scale, zero_point: 0, bits, signed: false }
+    }
+
+    pub fn qmin(&self) -> i64 {
+        if self.signed { -(1i64 << (self.bits - 1)) } else { 0 }
+    }
+
+    pub fn qmax(&self) -> i64 {
+        if self.signed { (1i64 << (self.bits - 1)) - 1 } else { (1i64 << self.bits) - 1 }
+    }
+}
+
+/// A PoT-indexed lookup table (paper Sec. 4.4.2 / 4.4.7).
+///
+/// `real_out = (entries[index] - out_zp) * out_scale` with
+/// `index = (x - alpha) >> shift` (normal) or `(alpha - x) >> shift`
+/// (inverted; `alpha` stores beta).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LutTable {
+    pub name: String,
+    pub alpha: i64,
+    pub shift: u32,
+    pub n_bits: u32,
+    pub inverted: bool,
+    pub out_scale: f64,
+    pub out_zp: i64,
+    pub entries: Vec<i64>,
+}
+
+impl LutTable {
+    pub fn depth(&self) -> usize {
+        1usize << self.n_bits
+    }
+
+    /// Integer-in integer-out table application.
+    #[inline]
+    pub fn lookup(&self, x: i64) -> i64 {
+        let raw = if self.inverted {
+            (self.alpha - x) >> self.shift
+        } else {
+            (x - self.alpha) >> self.shift
+        };
+        let idx = numerics::clamp_i64(raw, 0, (1i64 << self.n_bits) - 1);
+        self.entries[idx as usize]
+    }
+
+    pub fn lookup_real(&self, x: i64) -> f64 {
+        (self.lookup(x) - self.out_zp) as f64 * self.out_scale
+    }
+
+    /// Mean squared error against `f(x * in_scale)` over integer samples.
+    pub fn mse<F: Fn(f64) -> f64>(&self, xs: &[i64], f: F, in_scale: f64) -> f64 {
+        let mut acc = 0.0;
+        for &x in xs {
+            let d = self.lookup_real(x) - f(x as f64 * in_scale);
+            acc += d * d;
+        }
+        acc / xs.len() as f64
+    }
+}
+
+/// Two PoT tables over `[alpha, pivot)` / `[pivot, beta]` with independent
+/// PoT output scales — the segmented Recip of Sec. 4.4.6.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentedTable {
+    pub name: String,
+    pub pivot: i64,
+    pub steep: LutTable,
+    pub flat: LutTable,
+}
+
+impl SegmentedTable {
+    pub fn lookup_real(&self, x: i64) -> f64 {
+        if x < self.pivot { self.steep.lookup_real(x) } else { self.flat.lookup_real(x) }
+    }
+
+    /// log2(steep_scale / flat_scale) — the left-shift applied to steep
+    /// entries to express them in the common (finer) flat scale.
+    pub fn ratio_log2(&self) -> u32 {
+        let r = self.steep.out_scale / self.flat.out_scale;
+        let l = r.log2().round();
+        debug_assert!((r - 2f64.powf(l)).abs() < 1e-12);
+        l as u32
+    }
+
+    /// Integer lookup in the common (flat) output scale.
+    pub fn lookup_common(&self, x: i64) -> i64 {
+        if x < self.pivot {
+            self.steep.lookup(x) << self.ratio_log2()
+        } else {
+            self.flat.lookup(x)
+        }
+    }
+
+    pub fn mse<F: Fn(f64) -> f64>(&self, xs: &[i64], f: F, in_scale: f64) -> f64 {
+        let mut acc = 0.0;
+        for &x in xs {
+            let d = self.lookup_real(x) - f(x as f64 * in_scale);
+            acc += d * d;
+        }
+        acc / xs.len() as f64
+    }
+}
+
+/// Either table kind, as serialized by `tables.dump_tables`
+/// (`{"kind": "lut"|"segmented", "data": {...}}`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnyTable {
+    Lut(LutTable),
+    Segmented(SegmentedTable),
+}
+
+// ---------------------------------------------------------------------------
+// JSON wire format (shared with python/compile/tables.py)
+// ---------------------------------------------------------------------------
+
+impl LutTable {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("alpha", self.alpha.into()),
+            ("shift", (self.shift as i64).into()),
+            ("n_bits", (self.n_bits as i64).into()),
+            ("inverted", self.inverted.into()),
+            ("out_scale", self.out_scale.into()),
+            ("out_zp", self.out_zp.into()),
+            ("entries", Json::Arr(self.entries.iter().map(|&e| e.into()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        Ok(LutTable {
+            name: v.req("name")?.as_str().ok_or("name not str")?.to_string(),
+            alpha: v.req("alpha")?.as_i64().ok_or("alpha")?,
+            shift: v.req("shift")?.as_i64().ok_or("shift")? as u32,
+            n_bits: v.req("n_bits")?.as_i64().ok_or("n_bits")? as u32,
+            inverted: v.req("inverted")?.as_bool().ok_or("inverted")?,
+            out_scale: v.req("out_scale")?.as_f64().ok_or("out_scale")?,
+            out_zp: v.req("out_zp")?.as_i64().ok_or("out_zp")?,
+            entries: v
+                .req("entries")?
+                .as_arr()
+                .ok_or("entries")?
+                .iter()
+                .map(|e| e.as_i64().ok_or_else(|| "entry".to_string()))
+                .collect::<Result<_, _>>()?,
+        })
+    }
+}
+
+impl SegmentedTable {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("pivot", self.pivot.into()),
+            ("steep", self.steep.to_json()),
+            ("flat", self.flat.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        Ok(SegmentedTable {
+            name: v.req("name")?.as_str().ok_or("name")?.to_string(),
+            pivot: v.req("pivot")?.as_i64().ok_or("pivot")?,
+            steep: LutTable::from_json(v.req("steep")?)?,
+            flat: LutTable::from_json(v.req("flat")?)?,
+        })
+    }
+}
+
+impl AnyTable {
+    pub fn to_json(&self) -> Json {
+        match self {
+            AnyTable::Lut(t) => Json::obj(vec![("kind", "lut".into()), ("data", t.to_json())]),
+            AnyTable::Segmented(s) => {
+                Json::obj(vec![("kind", "segmented".into()), ("data", s.to_json())])
+            }
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let data = v.req("data")?;
+        match v.req("kind")?.as_str() {
+            Some("lut") => Ok(AnyTable::Lut(LutTable::from_json(data)?)),
+            Some("segmented") => Ok(AnyTable::Segmented(SegmentedTable::from_json(data)?)),
+            other => Err(format!("unknown table kind {other:?}")),
+        }
+    }
+}
+
+impl AnyTable {
+    pub fn entry_count(&self) -> usize {
+        match self {
+            AnyTable::Lut(t) => t.depth(),
+            AnyTable::Segmented(s) => s.steep.depth() + s.flat.depth(),
+        }
+    }
+
+    pub fn entry_bits(&self) -> u32 {
+        match self {
+            AnyTable::Lut(t) => bits_needed(&t.entries),
+            AnyTable::Segmented(s) => bits_needed(&s.steep.entries).max(bits_needed(&s.flat.entries)),
+        }
+    }
+}
+
+fn bits_needed(entries: &[i64]) -> u32 {
+    let lo = entries.iter().copied().min().unwrap_or(0);
+    let hi = entries.iter().copied().max().unwrap_or(0);
+    let unsigned = lo >= 0;
+    let mag = hi.max(-lo).max(1) as u64;
+    let b = 64 - mag.leading_zeros();
+    if unsigned { b } else { b + 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(entries: Vec<i64>, inverted: bool) -> LutTable {
+        LutTable {
+            name: "t".into(),
+            alpha: 0,
+            shift: 2,
+            n_bits: 2,
+            inverted,
+            out_scale: 0.5,
+            out_zp: 0,
+            entries,
+        }
+    }
+
+    #[test]
+    fn lookup_normal_and_clamped() {
+        let t = mk(vec![10, 20, 30, 40], false);
+        assert_eq!(t.lookup(0), 10);
+        assert_eq!(t.lookup(4), 20);
+        assert_eq!(t.lookup(15), 40);
+        assert_eq!(t.lookup(-100), 10);
+        assert_eq!(t.lookup(100), 40);
+    }
+
+    #[test]
+    fn lookup_inverted() {
+        let mut t = mk(vec![10, 20, 30, 40], true);
+        t.alpha = 0; // beta anchor
+        assert_eq!(t.lookup(0), 10); // x == beta -> index 0
+        assert_eq!(t.lookup(-4), 20);
+        assert_eq!(t.lookup(-100), 40);
+    }
+
+    #[test]
+    fn lookup_real_applies_out_scale() {
+        let t = mk(vec![1, 2, 3, 4], false);
+        assert_eq!(t.lookup_real(0), 0.5);
+    }
+
+    #[test]
+    fn segmented_selects_by_pivot() {
+        let steep = LutTable { out_scale: 1.0, ..mk(vec![100, 90, 80, 70], false) };
+        let mut flat = mk(vec![5, 4, 3, 2], false);
+        flat.alpha = 16;
+        flat.out_scale = 0.25;
+        let s = SegmentedTable { name: "s".into(), pivot: 16, steep, flat };
+        assert_eq!(s.lookup_real(0), 100.0);
+        assert_eq!(s.lookup_real(16), 1.25);
+        assert_eq!(s.ratio_log2(), 2);
+        assert_eq!(s.lookup_common(0), 400);
+    }
+
+    #[test]
+    fn bits_needed_counts_sign() {
+        assert_eq!(bits_needed(&[0, 255]), 8);
+        assert_eq!(bits_needed(&[-8, 7]), 5); // mag 8 -> 4 bits + sign
+        assert_eq!(bits_needed(&[0, 4095]), 12);
+    }
+
+    #[test]
+    fn json_roundtrip_matches_python_format() {
+        let t = mk(vec![1, 2, 3, 4], false);
+        let js = AnyTable::Lut(t.clone()).to_json().to_string_compact();
+        assert!(js.contains("\"kind\":\"lut\""));
+        let back = AnyTable::from_json(&Json::parse(&js).unwrap()).unwrap();
+        assert_eq!(back, AnyTable::Lut(t));
+    }
+}

@@ -1,0 +1,358 @@
+//! `hgpipe` — the HG-PIPE leader binary.
+//!
+//! Subcommands (hand-rolled parser; clap is not vendored offline):
+//!   report <id>|all      regenerate a paper table/figure
+//!   design               parallelism design for a network
+//!   simulate             cycle-accurate pipeline simulation
+//!   fifo-search          minimal deadlock-free deep-FIFO depth
+//!   serve                serve synthetic requests through the AOT model
+//!   eval                 accuracy of an AOT model on the eval batch
+//!   artifacts            list the AOT artifact manifest
+
+use std::path::PathBuf;
+
+use hgpipe::arch::parallelism::design_network;
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::ModelServer;
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::sim::{self, builder::Paradigm, SimConfig};
+use hgpipe::util::prng::Prng;
+use hgpipe::{report, Result};
+
+struct Args {
+    cmd: String,
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().unwrap_or_else(|| "help".into());
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            if let Some(name) = rest[i].strip_prefix("--") {
+                let val = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    i += 1;
+                    rest[i].clone()
+                } else {
+                    "true".into()
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                positional.push(rest[i].clone());
+            }
+            i += 1;
+        }
+        Self { cmd, positional, flags }
+    }
+
+    fn flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn network(&self) -> ViTConfig {
+        let name = self.flag("network", "deit-tiny");
+        ViTConfig::by_name(&name).unwrap_or_else(|| {
+            eprintln!("unknown network '{name}' (deit-tiny | deit-small | tiny-synth)");
+            std::process::exit(2);
+        })
+    }
+
+    fn precision(&self) -> Precision {
+        let p = self.flag("precision", "a4w3");
+        Precision::parse(&p).unwrap_or_else(|| {
+            eprintln!("unknown precision '{p}' (a8w8 | a4w4 | a4w3 | a3w3)");
+            std::process::exit(2);
+        })
+    }
+
+    fn artifacts_dir(&self) -> PathBuf {
+        PathBuf::from(self.flag("artifacts", "artifacts"))
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "report" => cmd_report(args),
+        "design" => cmd_design(args),
+        "simulate" => cmd_simulate(args),
+        "fifo-search" => cmd_fifo_search(args),
+        "serve" => cmd_serve(args),
+        "eval" => cmd_eval(args),
+        "artifacts" => cmd_artifacts(args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = "\
+hgpipe — HG-PIPE hybrid-grained pipelined ViT acceleration (reproduction)
+
+USAGE: hgpipe <command> [flags]
+
+COMMANDS:
+  report <id>|all          regenerate a paper table/figure
+                           (fig1 fig2c tab1 fig9a fig9b fig10a-d fig11a-c fig12 tab2)
+  design                   parallelism design  [--network N] [--precision P]
+  simulate                 cycle-accurate sim  [--network N] [--precision P]
+                           [--paradigm hybrid|coarse|fine] [--images N] [--gantt]
+  fifo-search              minimal deadlock-free deep-FIFO depth [--network N]
+  serve                    serve synthetic requests through the AOT model
+                           [--model deit-tiny] [--requests N] [--rate R/s]
+                           [--artifacts DIR]
+  eval                     eval-batch accuracy of an AOT model
+                           [--model tiny-synth] [--artifacts DIR]
+  artifacts                list the artifact manifest [--artifacts DIR]
+";
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let dir = args.artifacts_dir();
+    let ids: Vec<&str> = match args.positional.first().map(|s| s.as_str()) {
+        None | Some("all") => report::ALL.to_vec(),
+        Some(one) => vec![one],
+    };
+    for id in ids {
+        match report::render(id, &dir) {
+            Some(text) => println!("{text}"),
+            None => anyhow::bail!("unknown report id '{id}'"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_design(args: &Args) -> Result<()> {
+    let cfg = args.network();
+    let d = design_network(&cfg, args.precision(), 2);
+    println!(
+        "network {}  precision {}  target II {}",
+        cfg.name,
+        d.precision.label(),
+        d.target_ii
+    );
+    println!(
+        "{:<22} {:>5} {:>5} {:>5} {:>8} {:>9} {:>6}",
+        "module (block 0)", "CIP", "COP", "P", "II", "MOPs", "eta"
+    );
+    for m in d
+        .modules
+        .iter()
+        .filter(|m| m.spec.name.starts_with("b0.") || !m.spec.name.contains('.'))
+    {
+        println!(
+            "{:<22} {:>5} {:>5} {:>5} {:>8} {:>9.2} {:>6}",
+            m.spec.name,
+            m.cip,
+            m.cop,
+            m.p,
+            m.ii,
+            m.mops(),
+            if m.spec.is_mm() { format!("{:.0}%", m.eta * 100.0) } else { "-".into() }
+        );
+    }
+    println!(
+        "\ntotal MAC units {}   weight BRAMs {}   accelerator II {}",
+        d.total_macs(),
+        d.total_brams(),
+        d.accelerator_ii()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = args.network();
+    let d = design_network(&cfg, args.precision(), 2);
+    let paradigm = match args.flag("paradigm", "hybrid").as_str() {
+        "hybrid" => Paradigm::Hybrid,
+        "coarse" => Paradigm::CoarseGrained,
+        "fine" => Paradigm::FineGrained,
+        other => anyhow::bail!("unknown paradigm '{other}'"),
+    };
+    let images: u64 = args.flag("images", "3").parse()?;
+    let sim_cfg = SimConfig::matched(&d, &cfg);
+    let p = sim::build_vit(&d, &cfg, paradigm, sim_cfg);
+    let t0 = std::time::Instant::now();
+    let r = sim::run_fast(&p, images, 2_000_000_000);
+    println!(
+        "simulated {} stages / {} channels for {} cycles in {:?} ({:.1} Mcycle/s)",
+        r.stage_specs.len(),
+        r.channel_names.len(),
+        r.cycles,
+        t0.elapsed(),
+        r.cycles as f64 / t0.elapsed().as_secs_f64() / 1e6,
+    );
+    match &r.stop {
+        sim::StopReason::Completed => {
+            let s = sim::trace::summarize(&r, 425e6).unwrap();
+            println!(
+                "stable II {}   first-image {} cycles   latency {:.3} ms   ideal {:.0} img/s",
+                s.stable_ii, s.first_image_cycles, s.latency_ms, s.ideal_fps
+            );
+        }
+        sim::StopReason::Deadlock { cycle, waiting } => {
+            println!("DEADLOCK at cycle {cycle}; {} stages waiting:", waiting.len());
+            for w in waiting.iter().take(8) {
+                println!("  {w}");
+            }
+        }
+        sim::StopReason::Budget => println!("cycle budget exhausted"),
+    }
+    if args.flags.contains_key("gantt") {
+        println!("{}", sim::trace::render_gantt(&r, 100));
+    }
+    Ok(())
+}
+
+fn cmd_fifo_search(args: &Args) -> Result<()> {
+    let cfg = args.network();
+    let d = design_network(&cfg, args.precision(), 2);
+    let depth = sim::deadlock::min_deep_fifo_depth(&d, &cfg, 2);
+    println!(
+        "network {}: minimal deadlock-free deep-FIFO depth = {} groups = {} tokens\n\
+         (paper sizes deep FIFOs at 512 tokens — a power-of-two with margin)",
+        cfg.name,
+        depth,
+        depth * 2,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.artifacts_dir();
+    let model = args.flag("model", "deit-tiny");
+    let requests: usize = args.flag("requests", "64").parse()?;
+    let rate: f64 = args.flag("rate", "0").parse()?; // 0 = closed loop
+    let manifest = Manifest::load(&dir)?;
+    let server = ModelServer::start(&manifest, &model, 2)?;
+    println!(
+        "serving '{}' ({} token values/img, {} classes)",
+        model,
+        server.tokens_per_image(),
+        server.num_classes()
+    );
+
+    let mut rng = Prng::new(7);
+    let n_tok = server.tokens_per_image();
+    let mk_image = |rng: &mut Prng| -> Vec<f32> { (0..n_tok).map(|_| rng.f64() as f32).collect() };
+
+    if rate > 0.0 {
+        // open-loop Poisson arrivals
+        let mut rxs = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            rxs.push(server.submit(mk_image(&mut rng))?);
+            let gap = rng.exp(1.0 / rate);
+            std::thread::sleep(std::time::Duration::from_secs_f64(gap));
+        }
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+    } else {
+        let images: Vec<Vec<f32>> = (0..requests).map(|_| mk_image(&mut rng)).collect();
+        let t0 = std::time::Instant::now();
+        let responses = server.infer_all(images)?;
+        let dt = t0.elapsed();
+        println!(
+            "{} inferences in {:?} = {:.1} img/s",
+            responses.len(),
+            dt,
+            responses.len() as f64 / dt.as_secs_f64()
+        );
+    }
+    println!("{}", server.metrics.lock().unwrap().summary());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dir = args.artifacts_dir();
+    let model = args.flag("model", "tiny-synth");
+    let manifest = Manifest::load(&dir)?;
+    let (tokens, labels, shape) = load_eval_set(&dir)?;
+    let server = ModelServer::start(&manifest, &model, 1)?;
+    anyhow::ensure!(
+        server.tokens_per_image() == shape[1] * shape[2],
+        "eval set shape {:?} does not match model '{}'",
+        shape,
+        model
+    );
+    let per = shape[1] * shape[2];
+    let images: Vec<Vec<f32>> = tokens.chunks(per).map(|c| c.to_vec()).collect();
+    let t0 = std::time::Instant::now();
+    let responses = server.infer_all(images)?;
+    let correct =
+        responses.iter().zip(&labels).filter(|(r, &l)| r.argmax == l as usize).count();
+    println!(
+        "eval '{}': {}/{} correct = {:.2}% in {:?} ({:.1} img/s)",
+        model,
+        correct,
+        labels.len(),
+        100.0 * correct as f64 / labels.len() as f64,
+        t0.elapsed(),
+        labels.len() as f64 / t0.elapsed().as_secs_f64(),
+    );
+    Ok(())
+}
+
+/// Load the aot-emitted eval batch (raw little-endian f32 + u8).
+fn load_eval_set(dir: &std::path::Path) -> Result<(Vec<f32>, Vec<u8>, [usize; 3])> {
+    let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let v = hgpipe::util::json::Json::parse(&manifest_text)
+        .map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+    let es = v
+        .get("eval_set")
+        .ok_or_else(|| anyhow::anyhow!("manifest has no eval_set — re-run `make artifacts`"))?;
+    let sh: Vec<usize> = es
+        .req("shape")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as usize)
+        .collect();
+    let tok_name = es.req("tokens").map_err(|e| anyhow::anyhow!(e))?.as_str().unwrap().to_string();
+    let lab_name = es.req("labels").map_err(|e| anyhow::anyhow!(e))?.as_str().unwrap().to_string();
+    let tokens_raw = std::fs::read(dir.join(tok_name))?;
+    let labels = std::fs::read(dir.join(lab_name))?;
+    let tokens: Vec<f32> = tokens_raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    anyhow::ensure!(tokens.len() == sh[0] * sh[1] * sh[2], "eval token size mismatch");
+    Ok((tokens, labels, [sh[0], sh[1], sh[2]]))
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts_dir())?;
+    println!("{:<28} {:<12} {:<8} {:<18} {:<12}", "artifact", "model", "prec", "input", "output");
+    for a in &manifest.artifacts {
+        println!(
+            "{:<28} {:<12} {:<8} {:<18} {:<12}",
+            a.name,
+            a.model,
+            a.precision,
+            format!("{:?}", a.input_shape),
+            format!("{:?}", a.output_shape)
+        );
+    }
+    Ok(())
+}

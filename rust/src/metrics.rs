@@ -1,0 +1,269 @@
+//! Table 2 assembly: throughput / resource / power metrics for HG-PIPE
+//! deployments and the prior-art comparators.
+//!
+//! Our rows are **computed**: the parallelism design fixes the stable II
+//! (validated cycle-accurately by `sim`), the LUT/DSP/BRAM models decide
+//! how much of the design fits a platform (scaling parallelism by powers
+//! of two exactly like the paper halves/quarters the deployment on
+//! LUT-starved devices), and a calibrated linear power model gives W.
+//! Prior-art rows are the numbers those papers report (documented
+//! constants), used only as comparison targets.
+
+use crate::arch::dsp::{dsp_ladder, inventory};
+use crate::arch::parallelism::{design_network, Design};
+use crate::lut::cost::{self, lut_mac_cost};
+use crate::model::{Precision, ViTConfig};
+use crate::paradigms::{activation_buffer_brams, ParadigmKind};
+use crate::platform::Fpga;
+
+/// Empirical control/interconnect overhead on top of datapath LUTs
+/// (FSMs, AXI-Stream handshakes, routing margin) — calibrated so the
+/// full DeiT-tiny A3W3 deployment lands at the paper's 669k LUTs.
+pub const CONTROL_OVERHEAD: f64 = 2.2;
+/// Usable fraction of a device's LUTs before timing collapses.
+pub const FIT_FRAC: f64 = 0.95;
+/// Measured-to-ideal throughput ratio (the paper reports 7118/7353 =
+/// 96.8% on the VCK190; host-side feeding overhead).
+pub const MEASURED_RATIO: f64 = 0.968;
+
+/// One Table-2 column.
+#[derive(Debug, Clone)]
+pub struct AcceleratorRow {
+    pub name: String,
+    pub paradigm: &'static str,
+    pub platform: String,
+    pub freq_mhz: f64,
+    pub network: String,
+    pub gops_per_inf: f64,
+    pub precision: String,
+    pub fps: f64,
+    pub gops: f64,
+    pub luts_k: f64,
+    pub dsps: u64,
+    pub brams: f64,
+    pub power_w: f64,
+    pub is_ours: bool,
+    /// Parallelism/partition scale applied to fit the device (1 = full).
+    pub scale: u64,
+}
+
+impl AcceleratorRow {
+    pub fn gops_per_klut(&self) -> f64 {
+        self.gops / self.luts_k
+    }
+
+    /// Normalized GOPs/DSP (Table 2 footnote 7: 1 DSP = 32 LUTs).
+    pub fn gops_per_dsp_norm(&self) -> f64 {
+        self.gops / (self.dsps as f64 + self.luts_k * 1000.0 / 32.0)
+    }
+
+    pub fn gops_per_w(&self) -> f64 {
+        self.gops / self.power_w
+    }
+}
+
+/// Datapath LUT demand of a design (MAC units + non-linear tables).
+pub fn datapath_luts(design: &Design) -> u64 {
+    let inv = inventory(design);
+    let mac_bits = design.precision.act_bits.max(design.precision.weight_bits);
+    let macs = inv.mac_units * lut_mac_cost(mac_bits);
+    let tables = inv.exp * cost::table_cost(64, 8, 24).lut6
+        + inv.recip * cost::segmented_cost(64, 8, 16).lut6
+        + inv.rsqrt * cost::table_cost(64, 12, 22).lut6
+        + inv.gelu * cost::table_cost(64, 3, 24).lut6
+        + inv.requant * cost::table_cost(64, design.precision.act_bits, 0).lut6;
+    macs + tables
+}
+
+/// Linear power model calibrated on the paper's four measured deployments.
+pub fn power_model(luts: f64, freq_hz: f64) -> f64 {
+    10.0 + luts * freq_hz * 1.3e-13
+}
+
+/// Deploy a network design onto a platform: scale parallelism by powers
+/// of two until the LUT demand fits, exactly as the paper halves the
+/// VCK190 A4W4 deployment and quarters the ZCU102 one (footnote 3).
+pub fn deploy(cfg: &ViTConfig, prec: Precision, fpga: &Fpga, freq_hz: f64) -> AcceleratorRow {
+    let design = design_network(cfg, prec, 2);
+    let full_luts = datapath_luts(&design) as f64 * CONTROL_OVERHEAD;
+    let budget = fpga.luts as f64 * FIT_FRAC;
+    let mut scale = 1u64;
+    while full_luts / scale as f64 > budget {
+        scale *= 2;
+        assert!(scale <= 64, "design cannot fit {} at any scale", fpga.name);
+    }
+    let luts = full_luts / scale as f64;
+    let ii = design.accelerator_ii() * scale;
+    let fps = freq_hz / ii as f64 * MEASURED_RATIO;
+    let ops_g = cfg.ops_per_inference() as f64 / 1e9;
+
+    // DSPs: the post-LUT-optimization residual multipliers (Fig. 11a step
+    // 3), scaled with the deployed parallelism fraction
+    let dsps = dsp_ladder(&design).last().unwrap().dsps / scale;
+
+    // BRAMs: frozen weights + hybrid activation buffers, scaled
+    let weight_brams = design.total_brams();
+    let act_brams = activation_buffer_brams(&design, cfg, ParadigmKind::HybridGrained);
+    let brams = (weight_brams + act_brams) as f64 / scale as f64;
+
+    let power = power_model(luts, freq_hz);
+    AcceleratorRow {
+        name: format!("HG-PIPE ({})", fpga.name),
+        paradigm: "Hybrid-Grained Pipeline",
+        platform: fpga.name.clone(),
+        freq_mhz: freq_hz / 1e6,
+        network: cfg.name.clone(),
+        gops_per_inf: ops_g,
+        precision: prec.label(),
+        fps,
+        gops: fps * ops_g,
+        luts_k: luts / 1e3,
+        dsps,
+        brams,
+        power_w: power,
+        is_ours: true,
+        scale,
+    }
+}
+
+/// The paper's Table 2 prior-art comparators (reported constants).
+pub fn prior_art() -> Vec<AcceleratorRow> {
+    let row = |name: &str,
+               paradigm: &'static str,
+               platform: &str,
+               freq: f64,
+               network: &str,
+               ops_g: f64,
+               precision: &str,
+               fps: f64,
+               gops: f64,
+               luts_k: f64,
+               dsps: u64,
+               brams: f64,
+               power_w: f64| AcceleratorRow {
+        name: name.into(),
+        paradigm,
+        platform: platform.into(),
+        freq_mhz: freq,
+        network: network.into(),
+        gops_per_inf: ops_g,
+        precision: precision.into(),
+        fps,
+        gops,
+        luts_k,
+        dsps,
+        brams,
+        power_w,
+        is_ours: false,
+        scale: 1,
+    };
+    vec![
+        row("Deit GPU baseline", "GPU", "V100", 1455.0, "deit-tiny", 2.5, "fp32", 2529.0, 6322.5, f64::NAN, 0, f64::NAN, 250.0),
+        row("TCAS-I 2023", "GeMM", "ZCU102", 300.0, "vit-tiny", 2.5, "A8W8", 245.0, 762.7, 114.0, 1268, 648.0, 29.6),
+        row("AutoViTAcc (FPL22)", "GeMM", "ZCU102", 150.0, "deit-small", 9.2, "A4W4+A4W3", 155.8, 1418.4, 193.0, 1549, f64::NAN, 10.34),
+        row("HeatViT (HPCA23)", "GeMM", "ZCU102", 150.0, "deit-tiny", 2.5, "A8W8", 183.4, 366.8, 137.6, 1968, 355.5, 9.45),
+        row("SSR (FPGA24)", "Coarse-Grained Pipeline", "VCK190", 250.0, "deit-tiny", 2.5, "A8W8", 4545.0, 11362.5, 619.0, 14405, 1456.0, 46.0),
+    ]
+}
+
+/// Assemble the full Table 2: prior art + our four deployments.
+pub fn table2() -> Vec<AcceleratorRow> {
+    let mut rows = prior_art();
+    let tiny = ViTConfig::deit_tiny();
+    let small = ViTConfig::deit_small();
+    rows.push(deploy(&tiny, Precision::A4W4, &Fpga::zcu102(), 375e6));
+    rows.push(deploy(&tiny, Precision::A4W4, &Fpga::vck190(), 425e6));
+    rows.push(deploy(&tiny, Precision::A3W3, &Fpga::vck190(), 425e6));
+    rows.push(deploy(&small, Precision::A3W3, &Fpga::vck190(), 350e6));
+    rows
+}
+
+/// GOPs of a design's MM modules that the `sim` stable II implies
+/// (cross-check between the analytical FPS and the simulator).
+pub fn tops_at_ii(cfg: &ViTConfig, ii: u64, freq_hz: f64) -> f64 {
+    cfg.ops_per_inference() as f64 * freq_hz / ii as f64 / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vck190_a3w3_matches_paper_7118_fps() {
+        let r = deploy(&ViTConfig::deit_tiny(), Precision::A3W3, &Fpga::vck190(), 425e6);
+        assert_eq!(r.scale, 1, "full design must fit at 3 bits");
+        assert!((r.fps - 7118.0).abs() / 7118.0 < 0.05, "fps {}", r.fps);
+        assert!((r.gops / 1000.0 - 17.8).abs() < 1.5, "gops {}", r.gops);
+    }
+
+    #[test]
+    fn vck190_a4w4_halves_to_match_paper_3629_fps() {
+        let r = deploy(&ViTConfig::deit_tiny(), Precision::A4W4, &Fpga::vck190(), 425e6);
+        assert_eq!(r.scale, 2, "4-bit MACs force a half-parallelism deployment");
+        assert!((r.fps - 3629.0).abs() / 3629.0 < 0.05, "fps {}", r.fps);
+    }
+
+    #[test]
+    fn zcu102_quarters_to_match_paper_1579_fps() {
+        let r = deploy(&ViTConfig::deit_tiny(), Precision::A4W4, &Fpga::zcu102(), 375e6);
+        assert_eq!(r.scale, 4, "ZCU102 runs the network in 4 parts (footnote 3)");
+        assert!((r.fps - 1579.0).abs() / 1579.0 < 0.05, "fps {}", r.fps);
+    }
+
+    #[test]
+    fn deit_small_matches_paper_1490_fps() {
+        let r = deploy(&ViTConfig::deit_small(), Precision::A3W3, &Fpga::vck190(), 350e6);
+        assert!((r.fps - 1490.0).abs() / 1490.0 < 0.10, "fps {} (scale {})", r.fps, r.scale);
+    }
+
+    #[test]
+    fn beats_v100_by_about_2_8x() {
+        let r = deploy(&ViTConfig::deit_tiny(), Precision::A3W3, &Fpga::vck190(), 425e6);
+        let ratio = r.fps / 2529.0;
+        assert!((2.5..3.2).contains(&ratio), "vs GPU ratio {ratio}");
+    }
+
+    #[test]
+    fn lut_efficiency_beats_autovitacc_2_5x() {
+        // paper: 18.55 GOPs/kLUT on ZCU102 = 2.52x AutoViTAcc's 7.35
+        let r = deploy(&ViTConfig::deit_tiny(), Precision::A4W4, &Fpga::zcu102(), 375e6);
+        let ratio = r.gops_per_klut() / 7.35;
+        assert!(ratio > 2.0, "ratio {ratio} (ours {})", r.gops_per_klut());
+    }
+
+    #[test]
+    fn power_efficiency_beats_ssr() {
+        // paper: 381 GOPs/W vs SSR 246.15
+        let r = deploy(&ViTConfig::deit_tiny(), Precision::A3W3, &Fpga::vck190(), 425e6);
+        assert!(r.gops_per_w() > 246.15, "{}", r.gops_per_w());
+    }
+
+    #[test]
+    fn table2_has_9_rows() {
+        assert_eq!(table2().len(), 9);
+    }
+
+    #[test]
+    fn power_model_near_paper_measurements() {
+        // (luts, freq, paper W): the four measured deployments
+        for (luts, f, w) in [
+            (669e3, 425e6, 46.7),
+            (514e3, 425e6, 43.4),
+            (212.7e3, 375e6, 21.9),
+            (869e3, 350e6, 48.1),
+        ] {
+            let p = power_model(luts, f);
+            assert!((p - w).abs() / w < 0.25, "P({luts},{f}) = {p} vs paper {w}");
+        }
+    }
+
+    #[test]
+    fn dsp_count_magnitude_matches_paper() {
+        let r = deploy(&ViTConfig::deit_tiny(), Precision::A3W3, &Fpga::vck190(), 425e6);
+        // paper: 312 DSPs on the full VCK190 deployment; our inventory
+        // counts only the surviving datapath multipliers (LN normalize +
+        // softmax probability product) — tens, not thousands; the paper's
+        // extra ~240 are DMA/addressing infrastructure we don't model
+        assert!((40..800).contains(&r.dsps), "dsps {}", r.dsps);
+    }
+}

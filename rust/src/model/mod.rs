@@ -1,0 +1,303 @@
+//! ViT workload IR: network configurations, per-module shapes, op counts.
+//!
+//! This mirrors `python/compile/model.ViTConfig` and expands a network
+//! into the *module list* the accelerator instantiates (Table 1): every
+//! block becomes LayerNorm / StMM / DyMM / Softmax / GeLU / Residual
+//! modules with concrete (T, CI, CO) shapes.
+
+
+
+/// Network architecture configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ViTConfig {
+    pub name: String,
+    pub img_size: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp_ratio: usize,
+    pub num_classes: usize,
+}
+
+impl ViTConfig {
+    pub fn deit_tiny() -> Self {
+        Self {
+            name: "deit-tiny".into(),
+            img_size: 224,
+            patch: 16,
+            dim: 192,
+            depth: 12,
+            heads: 3,
+            mlp_ratio: 4,
+            num_classes: 1000,
+        }
+    }
+
+    pub fn deit_small() -> Self {
+        Self { name: "deit-small".into(), dim: 384, heads: 6, ..Self::deit_tiny() }
+    }
+
+    pub fn tiny_synth() -> Self {
+        Self {
+            name: "tiny-synth".into(),
+            img_size: 32,
+            patch: 8,
+            dim: 64,
+            depth: 4,
+            heads: 2,
+            mlp_ratio: 4,
+            num_classes: 10,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "deit-tiny" => Some(Self::deit_tiny()),
+            "deit-small" => Some(Self::deit_small()),
+            "tiny-synth" => Some(Self::tiny_synth()),
+            _ => None,
+        }
+    }
+
+    pub fn tokens(&self) -> usize {
+        (self.img_size / self.patch).pow(2)
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch * 3
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.dim * self.mlp_ratio
+    }
+
+    /// Total op count per inference (2 ops per MAC) — paper "OPs/inf".
+    pub fn ops_per_inference(&self) -> u64 {
+        let (t, d, h) = (self.tokens() as u64, self.dim as u64, self.hidden() as u64);
+        let per_block = 2 * t * d * (3 * d)   // QKV Gen
+            + 2 * t * t * d * 2               // QK + RV
+            + 2 * t * d * d                   // Output Proj
+            + 2 * t * d * h * 2; // MatMul1 + MatMul2
+        self.depth as u64 * per_block
+            + 2 * t * (self.patch_dim() as u64) * d
+            + 2 * d * self.num_classes as u64
+    }
+
+    /// Parameter count.
+    pub fn param_count(&self) -> u64 {
+        let d = self.dim as u64;
+        let h = self.hidden() as u64;
+        let per_block = d * 3 * d + 3 * d   // qkv
+            + d * d + d                      // proj
+            + d * h + h + h * d + d          // mlp
+            + 4 * d; // ln gammas/betas
+        self.depth as u64 * per_block
+            + (self.patch_dim() as u64) * d + d
+            + d * self.num_classes as u64 + self.num_classes as u64
+            + 2 * d
+    }
+
+    /// Expand into the accelerator's module list (all blocks).
+    pub fn modules(&self) -> Vec<ModuleSpec> {
+        let mut v = Vec::new();
+        let t = self.tokens();
+        let d = self.dim;
+        let dh = self.head_dim();
+        let hid = self.hidden();
+        v.push(ModuleSpec::st_mm("PatchEmbed", t, self.patch_dim(), d, 1));
+        for blk in 0..self.depth {
+            let p = |n: &str| format!("b{blk}.{n}");
+            v.push(ModuleSpec::elementwise(&p("LayerNorm1"), t, d, 3));
+            // one QKV Gen instance per head per projection (9 for 3 heads)
+            for inst in 0..(3 * self.heads) {
+                v.push(ModuleSpec::st_mm(&p(&format!("QKVGen{inst}")), t, d, dh, 1));
+            }
+            for hh in 0..self.heads {
+                v.push(ModuleSpec::dy_mm(&p(&format!("QKMatMul{hh}")), t, dh, t));
+            }
+            v.push(ModuleSpec::softmax(&p("Softmax"), t, t));
+            for hh in 0..self.heads {
+                v.push(ModuleSpec::dy_mm(&p(&format!("RVMatMul{hh}")), t, t, dh));
+            }
+            v.push(ModuleSpec::st_mm(&p("OutputProj"), t, d, d, 1));
+            v.push(ModuleSpec::residual(&p("ResidualAdd1"), t, d));
+            v.push(ModuleSpec::elementwise(&p("LayerNorm2"), t, d, 3));
+            v.push(ModuleSpec::st_mm(&p("MatMul1"), t, d, hid, 1));
+            v.push(ModuleSpec::gelu(&p("GeLU"), t, hid));
+            v.push(ModuleSpec::st_mm(&p("MatMul2"), t, hid, d, 1));
+            v.push(ModuleSpec::residual(&p("ResidualAdd2"), t, d));
+        }
+        v.push(ModuleSpec::elementwise("LayerNormF", t, d, 3));
+        v.push(ModuleSpec::st_mm("Head", 1, d, self.num_classes, 1));
+        v
+    }
+}
+
+/// Operator class of a pipeline module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModuleKind {
+    /// MM with static (ROM-frozen) weights.
+    StMM,
+    /// MM with dynamic weights streamed from a deep buffer (QK^T, R*V).
+    DyMM,
+    /// LayerNorm (3 passes) or other elementwise reduction.
+    Elementwise,
+    /// Softmax (3 passes + exp/recip tables).
+    Softmax,
+    /// GeLU (fused GeLU-ReQuant table).
+    Gelu,
+    /// Residual add.
+    Residual,
+}
+
+/// One accelerator module with concrete shapes (a Table 1 row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub kind: ModuleKind,
+    /// Tokens processed per image.
+    pub t: usize,
+    /// Input channels.
+    pub ci: usize,
+    /// Output channels (MM only; elementwise: co == ci).
+    pub co: usize,
+    /// Passes over the data per token (LayerNorm/Softmax: 3).
+    pub passes: usize,
+}
+
+impl ModuleSpec {
+    pub fn st_mm(name: &str, t: usize, ci: usize, co: usize, _inst: usize) -> Self {
+        Self { name: name.into(), kind: ModuleKind::StMM, t, ci, co, passes: 1 }
+    }
+
+    pub fn dy_mm(name: &str, t: usize, ci: usize, co: usize) -> Self {
+        Self { name: name.into(), kind: ModuleKind::DyMM, t, ci, co, passes: 1 }
+    }
+
+    pub fn elementwise(name: &str, t: usize, ci: usize, passes: usize) -> Self {
+        Self { name: name.into(), kind: ModuleKind::Elementwise, t, ci, co: ci, passes }
+    }
+
+    pub fn softmax(name: &str, t: usize, ci: usize) -> Self {
+        Self { name: name.into(), kind: ModuleKind::Softmax, t, ci, co: ci, passes: 3 }
+    }
+
+    pub fn gelu(name: &str, t: usize, ci: usize) -> Self {
+        Self { name: name.into(), kind: ModuleKind::Gelu, t, ci, co: ci, passes: 1 }
+    }
+
+    pub fn residual(name: &str, t: usize, ci: usize) -> Self {
+        Self { name: name.into(), kind: ModuleKind::Residual, t, ci, co: ci, passes: 1 }
+    }
+
+    pub fn is_mm(&self) -> bool {
+        matches!(self.kind, ModuleKind::StMM | ModuleKind::DyMM)
+    }
+
+    /// MACs per image for MMs; elementwise ops for the rest (paper MOPs).
+    pub fn ops(&self) -> u64 {
+        if self.is_mm() {
+            (self.t * self.ci * self.co) as u64
+        } else {
+            (self.t * self.ci * self.passes.max(1)) as u64
+        }
+    }
+
+    /// Static weight bits stored on chip (StMM only).
+    pub fn weight_count(&self) -> u64 {
+        if self.kind == ModuleKind::StMM { (self.ci * self.co) as u64 } else { 0 }
+    }
+}
+
+/// Quantization precision of a deployment (paper "A4W4" notation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Precision {
+    pub act_bits: u32,
+    pub weight_bits: u32,
+}
+
+impl Precision {
+    pub const A8W8: Self = Self { act_bits: 8, weight_bits: 8 };
+    pub const A4W4: Self = Self { act_bits: 4, weight_bits: 4 };
+    /// Table-1 configuration: 4-bit activations, 3-bit static weights.
+    pub const A4W3: Self = Self { act_bits: 4, weight_bits: 3 };
+    pub const A3W3: Self = Self { act_bits: 3, weight_bits: 3 };
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "a8w8" => Some(Self::A8W8),
+            "a4w4" => Some(Self::A4W4),
+            "a4w3" => Some(Self::A4W3),
+            "a3w3" => Some(Self::A3W3),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("A{}W{}", self.act_bits, self.weight_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deit_tiny_matches_paper() {
+        let c = ViTConfig::deit_tiny();
+        assert_eq!(c.tokens(), 196);
+        assert_eq!(c.head_dim(), 64);
+        assert_eq!(c.hidden(), 768);
+        // Table 2: 2.5 GOPs, 5.5 M params
+        let ops = c.ops_per_inference();
+        assert!((2_300_000_000..2_700_000_000).contains(&ops), "{ops}");
+        let p = c.param_count();
+        assert!((5_200_000..5_800_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn deit_small_matches_paper() {
+        let c = ViTConfig::deit_small();
+        let ops = c.ops_per_inference();
+        assert!((8_500_000_000..10_000_000_000).contains(&ops), "{ops}");
+        let p = c.param_count();
+        assert!((21_000_000..23_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn module_expansion_counts() {
+        let c = ViTConfig::deit_tiny();
+        let mods = c.modules();
+        // per block: 2 LN + 9 QKV + 3 QK + 1 SM + 3 RV + proj + 2 res +
+        // mm1 + gelu + mm2 = 24; + PE + LNf + Head
+        assert_eq!(mods.len(), 12 * 24 + 3);
+        // paper MOPs check (Table 1): QKV Gen instance = 2.41 M MACs
+        let qkv = mods.iter().find(|m| m.name == "b0.QKVGen0").unwrap();
+        assert_eq!(qkv.ops(), 196 * 192 * 64);
+        let mm1 = mods.iter().find(|m| m.name == "b0.MatMul1").unwrap();
+        assert_eq!(mm1.ops(), 196 * 192 * 768); // 28.9 M
+    }
+
+    #[test]
+    fn total_mops_consistent_with_ops_per_inference() {
+        let c = ViTConfig::deit_tiny();
+        let mm_macs: u64 = c.modules().iter().filter(|m| m.is_mm()).map(|m| m.ops()).sum();
+        let diff = (2 * mm_macs) as i64 - c.ops_per_inference() as i64;
+        // ops_per_inference uses dim*classes for the pooled head; module
+        // expansion matches within the head contribution
+        assert!(diff.abs() < 1_000_000, "{diff}");
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        assert_eq!(Precision::parse("a4w4"), Some(Precision::A4W4));
+        assert_eq!(Precision::parse("A3W3"), Some(Precision::A3W3));
+        assert_eq!(Precision::A4W3.label(), "A4W3");
+        assert_eq!(Precision::parse("a2w2"), None);
+    }
+}

@@ -1,0 +1,229 @@
+//! Architecture-paradigm models (Fig. 2): temporal (GeMM), coarse-grained
+//! pipeline, fine-grained pipeline, hybrid-grained pipeline — buffer
+//! cost, off-chip traffic, throughput and latency characteristics.
+
+use crate::arch::parallelism::Design;
+use crate::model::{Precision, ViTConfig};
+use crate::platform::{BRAM_DEPTH, BRAM_WIDTH};
+
+/// Paradigm identifiers (superset of `sim::Paradigm`: includes temporal,
+/// which has no pipeline to simulate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParadigmKind {
+    Temporal,
+    CoarseGrained,
+    FineGrained,
+    HybridGrained,
+}
+
+impl ParadigmKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ParadigmKind::Temporal => "Temporal (GeMM)",
+            ParadigmKind::CoarseGrained => "Coarse-grained pipeline",
+            ParadigmKind::FineGrained => "Fine-grained pipeline",
+            ParadigmKind::HybridGrained => "Hybrid-grained pipeline",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// activation buffer accounting (Fig. 3 challenge 1b / Fig. 7b)
+// ---------------------------------------------------------------------------
+
+/// BRAMs for a buffer holding `tokens` tokens of `channels` values at
+/// `bits` each, banked for one-token-wide access.
+pub fn tensor_buffer_brams(tokens: u64, channels: u64, bits: u64) -> u64 {
+    let width_banks = (channels * bits).div_ceil(BRAM_WIDTH);
+    let depth_banks = tokens.div_ceil(BRAM_DEPTH);
+    width_banks * depth_banks
+}
+
+/// Residual-path buffer accounting for one attention block (the paper's
+/// Fig. 7b: "the residual buffer cost is significantly reduced by 83.3%
+/// compared to traditional PIPO implementation").
+#[derive(Debug, Clone)]
+pub struct ResidualBufferReport {
+    /// Pipeline stages the residual must cross in the MHA block.
+    pub pipo_stages: u64,
+    /// Tensor-buffers (1 image of residual each) in the coarse PIPO
+    /// scheme: stages x 2 (ping + pong).
+    pub coarse_tensor_buffers: u64,
+    /// Tensor-buffers in the hybrid deep-FIFO scheme.
+    pub hybrid_tensor_buffers: u64,
+    pub brams_per_tensor: u64,
+    pub coarse_brams: u64,
+    pub hybrid_brams: u64,
+    pub saving: f64,
+}
+
+pub fn residual_buffer_report(cfg: &ViTConfig, prec: Precision) -> ResidualBufferReport {
+    // the residual skips LN, QKV Gen, QK MatMul, Softmax, RV MatMul and
+    // Output Proj: 6 stages (paper: "6 PIPO stages (168 BRAMs)")
+    let pipo_stages = 6;
+    let coarse_tensor_buffers = pipo_stages * 2;
+    // hybrid: one deep FIFO sized ~1 image on the MHA residual plus the
+    // equally-sized Q-branch FIFO
+    let hybrid_tensor_buffers = 2;
+    let brams_per_tensor =
+        tensor_buffer_brams(cfg.tokens() as u64, cfg.dim as u64, prec.act_bits as u64);
+    let coarse_brams = coarse_tensor_buffers * brams_per_tensor;
+    let hybrid_brams = hybrid_tensor_buffers * brams_per_tensor;
+    ResidualBufferReport {
+        pipo_stages,
+        coarse_tensor_buffers,
+        hybrid_tensor_buffers,
+        brams_per_tensor,
+        coarse_brams,
+        hybrid_brams,
+        saving: 1.0 - hybrid_brams as f64 / coarse_brams as f64,
+    }
+}
+
+/// Whole-network activation-buffer BRAMs per paradigm.
+pub fn activation_buffer_brams(design: &Design, cfg: &ViTConfig, kind: ParadigmKind) -> u64 {
+    let t = cfg.tokens() as u64;
+    let a = design.precision.act_bits as u64;
+    let mut total = 0u64;
+    for m in &design.modules {
+        let out_ch = if m.spec.is_mm() { m.spec.co as u64 } else { m.spec.ci as u64 };
+        match kind {
+            ParadigmKind::CoarseGrained => {
+                // every inter-stage tensor double-buffered
+                total += 2 * tensor_buffer_brams(t, out_ch, a);
+            }
+            ParadigmKind::Temporal => {}
+            ParadigmKind::FineGrained | ParadigmKind::HybridGrained => {
+                // small FIFOs: a few groups — count 1 BRAM each
+                total += 1;
+            }
+        }
+    }
+    match kind {
+        ParadigmKind::Temporal => {
+            // one global double-buffered scratch the size of the largest tensor
+            let max_ch = design
+                .modules
+                .iter()
+                .map(|m| if m.spec.is_mm() { m.spec.co as u64 } else { m.spec.ci as u64 })
+                .max()
+                .unwrap_or(0);
+            2 * tensor_buffer_brams(t, max_ch, a)
+        }
+        ParadigmKind::HybridGrained => {
+            // plus per-layer: 2 deep FIFOs + double-banked K/V buffers
+            let dh = cfg.head_dim() as u64;
+            let per_layer = 2 * tensor_buffer_brams(512, cfg.dim as u64, a)
+                + 2 * 2 * cfg.heads as u64 * tensor_buffer_brams(t, dh, a);
+            total + cfg.depth as u64 * per_layer
+        }
+        _ => total,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// off-chip traffic models (roofline inputs, Fig. 1)
+// ---------------------------------------------------------------------------
+
+/// Temporal traffic when every tensor streams exactly once (a perfectly
+/// fused temporal engine — the optimistic end of the GeMM spectrum, used
+/// for the "GeMM + LUT MACs" roofline point).
+pub fn temporal_traffic_once(design: &Design, cfg: &ViTConfig) -> u64 {
+    let a_bits = design.precision.act_bits as u64;
+    let w_bits = design.precision.weight_bits as u64;
+    let t = cfg.tokens() as u64;
+    let io = (t * cfg.patch_dim() as u64 * 8 + cfg.num_classes as u64 * 32) / 8;
+    let mut bytes = io;
+    for m in &design.modules {
+        let (tm, ci, co) = (m.spec.t as u64, m.spec.ci as u64, m.spec.co as u64);
+        if m.spec.is_mm() {
+            bytes += (tm * ci * a_bits + ci * co * w_bits + tm * co * a_bits) / 8;
+        } else {
+            bytes += 2 * tm * ci * a_bits / 8;
+        }
+    }
+    bytes
+}
+
+/// Bytes moved to/from DRAM per inference.
+pub fn offchip_traffic_bytes(design: &Design, cfg: &ViTConfig, kind: ParadigmKind) -> u64 {
+    let a_bits = design.precision.act_bits as u64;
+    let w_bits = design.precision.weight_bits as u64;
+    let t = cfg.tokens() as u64;
+    let io = (t * cfg.patch_dim() as u64 * 8 + cfg.num_classes as u64 * 32) / 8;
+    match kind {
+        ParadigmKind::Temporal => {
+            // every operator's inputs and outputs round-trip; tiled GeMM
+            // re-reads the stationary operand T/TILE times
+            const TILE: u64 = 64;
+            let mut bytes = io;
+            for m in &design.modules {
+                let (tm, ci, co) = (m.spec.t as u64, m.spec.ci as u64, m.spec.co as u64);
+                if m.spec.is_mm() {
+                    let reread = tm.div_ceil(TILE).max(1);
+                    bytes += (tm * ci * a_bits + ci * co * w_bits * reread + tm * co * a_bits) / 8;
+                } else {
+                    bytes += 2 * tm * ci * a_bits / 8;
+                }
+            }
+            bytes
+        }
+        ParadigmKind::CoarseGrained | ParadigmKind::FineGrained => {
+            // activations stay on chip; weights stream from DRAM each
+            // inference (they do not all fit next to double-buffered tensors)
+            let weights: u64 = design.modules.iter().map(|m| m.spec.weight_count()).sum();
+            io + weights * w_bits / 8
+        }
+        ParadigmKind::HybridGrained => io, // weights frozen on chip
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::parallelism::design_network;
+
+    fn setup() -> (Design, ViTConfig) {
+        let cfg = ViTConfig::deit_tiny();
+        (design_network(&cfg, Precision::A4W4, 2), cfg)
+    }
+
+    #[test]
+    fn residual_saving_is_83_percent() {
+        let cfg = ViTConfig::deit_tiny();
+        let r = residual_buffer_report(&cfg, Precision::A4W4);
+        assert!((r.saving - 0.8333).abs() < 0.001, "saving {}", r.saving);
+        assert_eq!(r.coarse_tensor_buffers, 12);
+        assert_eq!(r.hybrid_tensor_buffers, 2);
+    }
+
+    #[test]
+    fn residual_tensor_brams_near_paper_14() {
+        // paper: "buffering one residual tensor consumes 14 BRAMs"
+        let cfg = ViTConfig::deit_tiny();
+        let r = residual_buffer_report(&cfg, Precision::A4W4);
+        assert!((8..=16).contains(&r.brams_per_tensor), "brams/tensor {}", r.brams_per_tensor);
+    }
+
+    #[test]
+    fn coarse_buffers_dwarf_hybrid_and_temporal() {
+        let (d, cfg) = setup();
+        let coarse = activation_buffer_brams(&d, &cfg, ParadigmKind::CoarseGrained);
+        let hybrid = activation_buffer_brams(&d, &cfg, ParadigmKind::HybridGrained);
+        let temporal = activation_buffer_brams(&d, &cfg, ParadigmKind::Temporal);
+        assert!(coarse > hybrid, "coarse {coarse} !> hybrid {hybrid}");
+        assert!(temporal < coarse, "temporal {temporal} !< coarse {coarse}");
+    }
+
+    #[test]
+    fn traffic_ordering_matches_fig1() {
+        // temporal >> coarse/fine (weights only) >> hybrid (I/O only)
+        let (d, cfg) = setup();
+        let t = offchip_traffic_bytes(&d, &cfg, ParadigmKind::Temporal);
+        let c = offchip_traffic_bytes(&d, &cfg, ParadigmKind::CoarseGrained);
+        let h = offchip_traffic_bytes(&d, &cfg, ParadigmKind::HybridGrained);
+        assert!(t > 4 * c, "temporal {t} vs coarse {c}");
+        assert!(c > 2 * h, "coarse {c} vs hybrid {h}");
+        assert!(h < 1_000_000, "{h}");
+    }
+}

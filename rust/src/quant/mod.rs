@@ -1,0 +1,75 @@
+//! Fixed-point / Power-of-Two quantization primitives (paper Sec. 2.1,
+//! Eq. 4) — the rust-side mirror of `python/compile/quantize.py`, used by
+//! the resource models and the report generators.
+
+
+
+/// Affine quantizer: `real = (q - zero_point) * scale`, `q in [qmin, qmax]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f64,
+    pub zero_point: i64,
+    pub bits: u32,
+    pub signed: bool,
+}
+
+impl QuantParams {
+    pub fn symmetric(amax: f64, bits: u32) -> Self {
+        let qmax = ((1i64 << (bits - 1)) - 1) as f64;
+        Self { scale: amax.max(1e-8) / qmax, zero_point: 0, bits, signed: true }
+    }
+
+    pub fn qmin(&self) -> i64 {
+        if self.signed { -(1i64 << (self.bits - 1)) } else { 0 }
+    }
+
+    pub fn qmax(&self) -> i64 {
+        if self.signed { (1i64 << (self.bits - 1)) - 1 } else { (1i64 << self.bits) - 1 }
+    }
+
+    /// ReQuant (Eq. 4): round-half-away, clamp.
+    pub fn quantize(&self, x: f64) -> i64 {
+        let q = (x / self.scale).round() as i64 + self.zero_point;
+        q.max(self.qmin()).min(self.qmax())
+    }
+
+    pub fn dequantize(&self, q: i64) -> f64 {
+        (q - self.zero_point) as f64 * self.scale
+    }
+}
+
+/// Nearest power-of-two estimate of a scaling factor (PoT quantization,
+/// Sec. 4.4.2 — ceiling variant so indices never overflow).
+pub fn pot_ceil(x: f64) -> f64 {
+    2f64.powi(x.log2().ceil() as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_covers_range() {
+        let q = QuantParams::symmetric(1.0, 4);
+        assert_eq!(q.quantize(1.0), 7);
+        assert_eq!(q.quantize(-1.0), -7);
+        assert_eq!(q.quantize(100.0), 7); // clamp
+        assert_eq!(q.qmin(), -8);
+    }
+
+    #[test]
+    fn quantize_dequantize_within_half_lsb() {
+        let q = QuantParams::symmetric(2.0, 8);
+        for x in [-1.9, -0.3, 0.0, 0.7, 1.99] {
+            let r = q.dequantize(q.quantize(x));
+            assert!((r - x).abs() <= q.scale / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn pot_ceil_is_upper_power_of_two() {
+        assert_eq!(pot_ceil(3.0), 4.0);
+        assert_eq!(pot_ceil(4.0), 4.0);
+        assert_eq!(pot_ceil(0.3), 0.5);
+    }
+}

@@ -1,0 +1,369 @@
+//! Build simulatable pipelines from a network design, in any of the
+//! paper's paradigms (Fig. 2): the hybrid-grained pipeline (ours), the
+//! coarse-grained baseline (all-PIPO), and the fine-grained attempt
+//! (small FIFOs only — deadlocks on ViT, reproducing "ViT Compatibility
+//! ✗" of Fig. 2c).
+
+use super::channel::ChannelKind;
+use super::engine::Pipeline;
+use super::stage::StageSpec;
+use crate::arch::parallelism::Design;
+use crate::model::ViTConfig;
+
+/// Pipeline paradigm to construct (Fig. 2a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Paradigm {
+    /// Deep buffers on K/V + deep FIFOs on residual/Q (the paper).
+    Hybrid,
+    /// Whole-tensor PIPO buffers everywhere.
+    CoarseGrained,
+    /// Streaming FIFOs only, sized for CNN-style locality.
+    FineGrained,
+}
+
+/// Simulator construction parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Token-group capacity of the deep FIFOs (residual + Q branches).
+    /// The paper's "typical depth of deep FIFOs is 512" (tokens) = 256
+    /// groups at TP=2.
+    pub deep_fifo_cap: u64,
+    /// Capacity of ordinary inter-stage FIFOs (HLS stream depth).
+    pub small_fifo_cap: u64,
+    /// Cycles between DMA input group arrivals (match the pipeline II).
+    pub source_interval: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { deep_fifo_cap: 256, small_fifo_cap: 4, source_interval: 588 }
+    }
+}
+
+impl SimConfig {
+    /// Match the DMA input rate to the design's balance target so the
+    /// source is never the bottleneck nor idle (the paper streams input
+    /// tiles at the pipeline's pace).
+    pub fn matched(design: &Design, cfg: &ViTConfig) -> Self {
+        let tt = (cfg.tokens() as u64).div_ceil(2);
+        Self { source_interval: design.target_ii / tt, ..Self::default() }
+    }
+}
+
+/// Build the full-network pipeline for a design.
+pub fn build_vit(
+    design: &Design,
+    cfg: &ViTConfig,
+    paradigm: Paradigm,
+    sim: SimConfig,
+) -> Pipeline {
+    let mut p = Pipeline::default();
+    let tt = (cfg.tokens() as u64).div_ceil(2); // TP = 2 throughout
+
+    let cost = |name: &str| -> u64 {
+        let m = design
+            .find(name)
+            .unwrap_or_else(|| panic!("module '{name}' missing from design"));
+        m.ii / m.tt.max(1)
+    };
+
+    // channel constructors per paradigm
+    let stream = |p: &mut Pipeline, name: String| -> usize {
+        match paradigm {
+            Paradigm::CoarseGrained => p.add_channel(name, ChannelKind::Pipo { groups_per_image: tt }),
+            _ => p.add_channel(name, ChannelKind::Fifo { cap: sim.small_fifo_cap }),
+        }
+    };
+    let deep_fifo = |p: &mut Pipeline, name: String| -> usize {
+        match paradigm {
+            Paradigm::CoarseGrained => p.add_channel(name, ChannelKind::Pipo { groups_per_image: tt }),
+            Paradigm::Hybrid => p.add_channel(name, ChannelKind::Fifo { cap: sim.deep_fifo_cap }),
+            Paradigm::FineGrained => p.add_channel(name, ChannelKind::Fifo { cap: sim.small_fifo_cap }),
+        }
+    };
+    // K/V deep buffers are double-banked (Fig. 6: Image2's K/V tokens load
+    // while Image1's are being consumed; the buffers "refresh" with no gap)
+    // — single-banked buffers would serialize fill and drain and double
+    // the stable II.
+    let tensor_buf = |p: &mut Pipeline, name: String| -> usize {
+        p.add_channel(name, ChannelKind::Pipo { groups_per_image: tt })
+    };
+
+    // ---- DMA source + PatchEmbed -----------------------------------------
+    let pe_in = stream(&mut p, "pe_in".into());
+    p.add_stage(StageSpec {
+        name: "DMA-in".into(),
+        block: "DMA".into(),
+        cost: sim.source_interval,
+        firings_per_image: tt,
+        inputs: vec![],
+        outputs: vec![pe_in],
+        is_source: true,
+    });
+
+    // every block boundary carries (main stream, residual stream)
+    let mut ln_in = stream(&mut p, "b0.x".into());
+    let mut res_in = deep_fifo(&mut p, "b0.res".into());
+    p.add_stage(StageSpec {
+        name: "PatchEmbed".into(),
+        block: "PatchEmbed".into(),
+        cost: cost("PatchEmbed"),
+        firings_per_image: tt,
+        inputs: vec![pe_in],
+        outputs: vec![ln_in, res_in],
+        is_source: false,
+    });
+
+    for blk in 0..cfg.depth {
+        let b = |n: &str| format!("b{blk}.{n}");
+        let mha = format!("MHA{blk}");
+        let mlp = format!("MLP{blk}");
+
+        // ---- MHA ----------------------------------------------------------
+        let qkv_in = stream(&mut p, b("qkv_in"));
+        p.add_stage(StageSpec {
+            name: b("LayerNorm1"),
+            block: mha.clone(),
+            cost: cost(&b("LayerNorm1")),
+            firings_per_image: tt,
+            inputs: vec![ln_in],
+            outputs: vec![qkv_in],
+            is_source: false,
+        });
+
+        let q = deep_fifo(&mut p, b("q"));
+        let k_buf = tensor_buf(&mut p, b("k_buf"));
+        let v_tr = stream(&mut p, b("v_tr"));
+        p.add_stage(StageSpec {
+            name: b("QKVGen"),
+            block: mha.clone(),
+            cost: cost(&b("QKVGen0")),
+            firings_per_image: tt,
+            inputs: vec![qkv_in],
+            outputs: vec![q, k_buf, v_tr],
+            is_source: false,
+        });
+
+        // Transpose Module (Sec. 4.2): re-orders V into row-wise access
+        let v_buf = tensor_buf(&mut p, b("v_buf"));
+        p.add_stage(StageSpec {
+            name: b("Transpose"),
+            block: mha.clone(),
+            cost: 1,
+            firings_per_image: tt,
+            inputs: vec![v_tr],
+            outputs: vec![v_buf],
+            is_source: false,
+        });
+
+        let scores = stream(&mut p, b("scores"));
+        p.add_stage(StageSpec {
+            name: b("QKMatMul"),
+            block: mha.clone(),
+            cost: cost(&b("QKMatMul0")),
+            firings_per_image: tt,
+            inputs: vec![q, k_buf],
+            outputs: vec![scores],
+            is_source: false,
+        });
+
+        let probs = stream(&mut p, b("probs"));
+        p.add_stage(StageSpec {
+            name: b("Softmax"),
+            block: mha.clone(),
+            cost: cost(&b("Softmax")),
+            firings_per_image: tt,
+            inputs: vec![scores],
+            outputs: vec![probs],
+            is_source: false,
+        });
+
+        let attn = stream(&mut p, b("attn"));
+        p.add_stage(StageSpec {
+            name: b("RVMatMul"),
+            block: mha.clone(),
+            cost: cost(&b("RVMatMul0")),
+            firings_per_image: tt,
+            inputs: vec![probs, v_buf],
+            outputs: vec![attn],
+            is_source: false,
+        });
+
+        let proj_out = stream(&mut p, b("proj_out"));
+        p.add_stage(StageSpec {
+            name: b("OutputProj"),
+            block: mha.clone(),
+            cost: cost(&b("OutputProj")),
+            firings_per_image: tt,
+            inputs: vec![attn],
+            outputs: vec![proj_out],
+            is_source: false,
+        });
+
+        let ln2_in = stream(&mut p, b("ln2_in"));
+        let res2 = deep_fifo(&mut p, b("res2"));
+        p.add_stage(StageSpec {
+            name: b("ResidualAdd1"),
+            block: mha.clone(),
+            cost: cost(&b("ResidualAdd1")),
+            firings_per_image: tt,
+            inputs: vec![res_in, proj_out],
+            outputs: vec![ln2_in, res2],
+            is_source: false,
+        });
+
+        // ---- MLP ----------------------------------------------------------
+        let mm1_in = stream(&mut p, b("mm1_in"));
+        p.add_stage(StageSpec {
+            name: b("LayerNorm2"),
+            block: mlp.clone(),
+            cost: cost(&b("LayerNorm2")),
+            firings_per_image: tt,
+            inputs: vec![ln2_in],
+            outputs: vec![mm1_in],
+            is_source: false,
+        });
+
+        let gelu_in = stream(&mut p, b("gelu_in"));
+        p.add_stage(StageSpec {
+            name: b("MatMul1"),
+            block: mlp.clone(),
+            cost: cost(&b("MatMul1")),
+            firings_per_image: tt,
+            inputs: vec![mm1_in],
+            outputs: vec![gelu_in],
+            is_source: false,
+        });
+
+        let mm2_in = stream(&mut p, b("mm2_in"));
+        p.add_stage(StageSpec {
+            name: b("GeLU"),
+            block: mlp.clone(),
+            cost: cost(&b("GeLU")),
+            firings_per_image: tt,
+            inputs: vec![gelu_in],
+            outputs: vec![mm2_in],
+            is_source: false,
+        });
+
+        let mlp_out = stream(&mut p, b("mlp_out"));
+        p.add_stage(StageSpec {
+            name: b("MatMul2"),
+            block: mlp.clone(),
+            cost: cost(&b("MatMul2")),
+            firings_per_image: tt,
+            inputs: vec![mm2_in],
+            outputs: vec![mlp_out],
+            is_source: false,
+        });
+
+        let next_ln = stream(&mut p, format!("b{}.x", blk + 1));
+        let next_res = deep_fifo(&mut p, format!("b{}.res", blk + 1));
+        p.add_stage(StageSpec {
+            name: b("ResidualAdd2"),
+            block: mlp.clone(),
+            cost: cost(&b("ResidualAdd2")),
+            firings_per_image: tt,
+            inputs: vec![res2, mlp_out],
+            outputs: vec![next_ln, next_res],
+            is_source: false,
+        });
+
+        ln_in = next_ln;
+        res_in = next_res;
+    }
+
+    // ---- final LN + pooled head -------------------------------------------
+    // the residual stream of the would-be next block is unused: absorb it
+    // with a zero-cost drain so the last ResidualAdd2 is never blocked.
+    let head_buf = tensor_buf(&mut p, "head_buf".into());
+    p.add_stage(StageSpec {
+        name: "LayerNormF".into(),
+        block: "Head".into(),
+        cost: cost("LayerNormF"),
+        firings_per_image: tt,
+        inputs: vec![ln_in],
+        outputs: vec![head_buf],
+        is_source: false,
+    });
+    p.add_stage(StageSpec {
+        name: "ResDrain".into(),
+        block: "Head".into(),
+        cost: 1,
+        firings_per_image: tt,
+        inputs: vec![res_in],
+        outputs: vec![],
+        is_source: false,
+    });
+
+    // head emits ONE group per image — always a plain FIFO, never PIPO
+    let head_out = p.add_channel("head_out", ChannelKind::Fifo { cap: sim.small_fifo_cap });
+    p.add_stage(StageSpec {
+        name: "Head".into(),
+        block: "Head".into(),
+        cost: cost("Head"),
+        firings_per_image: 1,
+        inputs: vec![head_buf],
+        outputs: vec![head_out],
+        is_source: false,
+    });
+
+    let sink = p.add_stage(StageSpec {
+        name: "DMA-out".into(),
+        block: "DMA".into(),
+        cost: 1,
+        firings_per_image: 1,
+        inputs: vec![head_out],
+        outputs: vec![],
+        is_source: false,
+    });
+    p.sink = sink;
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::parallelism::design_network;
+    use crate::model::Precision;
+    use crate::sim::engine::{run, StopReason};
+
+    fn tiny() -> (Design, ViTConfig) {
+        let cfg = ViTConfig::tiny_synth();
+        (design_network(&cfg, Precision::A4W4, 2), cfg)
+    }
+
+    #[test]
+    fn hybrid_tiny_completes() {
+        let (d, cfg) = tiny();
+        let p = build_vit(&d, &cfg, Paradigm::Hybrid, SimConfig::default());
+        let r = run(&p, 3, 50_000_000);
+        assert_eq!(r.stop, StopReason::Completed, "{:?}", r.stop);
+        assert!(r.stable_ii().is_some());
+    }
+
+    #[test]
+    fn coarse_tiny_completes_with_higher_latency() {
+        let (d, cfg) = tiny();
+        let sim = SimConfig::default();
+        let h = run(&build_vit(&d, &cfg, Paradigm::Hybrid, sim), 3, 50_000_000);
+        let c = run(&build_vit(&d, &cfg, Paradigm::CoarseGrained, sim), 3, 100_000_000);
+        assert_eq!(c.stop, StopReason::Completed, "{:?}", c.stop);
+        assert!(
+            c.first_image_latency().unwrap() > h.first_image_latency().unwrap(),
+            "coarse {} !> hybrid {}",
+            c.first_image_latency().unwrap(),
+            h.first_image_latency().unwrap()
+        );
+    }
+
+    #[test]
+    fn fine_grained_deadlocks_on_vit() {
+        // Fig 2c: "ViT Compatibility: X" — without deep FIFOs the global
+        // attention dependency wedges the pipeline
+        let (d, cfg) = tiny();
+        let p = build_vit(&d, &cfg, Paradigm::FineGrained, SimConfig::default());
+        let r = run(&p, 1, 50_000_000);
+        assert!(matches!(r.stop, StopReason::Deadlock { .. }), "{:?}", r.stop);
+    }
+}

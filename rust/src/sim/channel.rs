@@ -1,0 +1,201 @@
+//! Inter-stage channels of the hybrid-grained pipeline (Sec. 4.2):
+//! FIFOs (fine-grained, tile/token-group granularity), deep buffers
+//! (coarse-grained whole-tensor stores for K/V), and PIPO buffers (the
+//! coarse-grained baseline paradigm).
+//!
+//! The simulator tracks *token groups* (TP tokens each) as its flow unit;
+//! data values are irrelevant to the cycle behaviour.
+
+/// Channel semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelKind {
+    /// First-in first-out, `cap` groups. Fine-grained streaming.
+    Fifo { cap: u64 },
+    /// Whole-tensor store: the reader may only start once all
+    /// `groups_per_image` groups of the current image are present; reads
+    /// are non-destructive (the DyMM re-reads the tensor COT times); the
+    /// writer may not write the *next* image until the reader releases.
+    DeepBuffer { groups_per_image: u64 },
+    /// Ping-pong pair of whole-tensor buffers (coarse-grained baseline):
+    /// writer fills one bank while the reader drains the other.
+    Pipo { groups_per_image: u64 },
+}
+
+/// Runtime state of a channel.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub name: String,
+    pub kind: ChannelKind,
+    /// Groups currently enqueued (FIFO) or written of the filling image.
+    pub occupancy: u64,
+    /// DeepBuffer/Pipo: image id currently readable (None until first fill).
+    pub readable_image: Option<u64>,
+    /// DeepBuffer/Pipo: image id currently being written.
+    pub writing_image: u64,
+    /// Pipo: banks filled and not yet released (0..=2).
+    pub full_banks: u64,
+    /// High-water mark of FIFO occupancy (buffer sizing evidence).
+    pub max_occupancy: u64,
+    /// Total groups pushed through (throughput accounting).
+    pub pushed: u64,
+}
+
+impl Channel {
+    pub fn new(name: impl Into<String>, kind: ChannelKind) -> Self {
+        Self {
+            name: name.into(),
+            kind,
+            occupancy: 0,
+            readable_image: None,
+            writing_image: 0,
+            full_banks: 0,
+            max_occupancy: 0,
+            pushed: 0,
+        }
+    }
+
+    /// Can the producer push one group (of its current image)?
+    pub fn can_push(&self) -> bool {
+        match self.kind {
+            ChannelKind::Fifo { cap } => self.occupancy < cap,
+            ChannelKind::DeepBuffer { groups_per_image } => {
+                // single physical buffer: writable while filling; once the
+                // image is complete the writer must wait for release
+                self.readable_image.is_none() && self.occupancy < groups_per_image
+            }
+            ChannelKind::Pipo { groups_per_image } => {
+                self.full_banks < 2 && self.occupancy < groups_per_image
+            }
+        }
+    }
+
+    pub fn push(&mut self) {
+        debug_assert!(self.can_push(), "{}: push on full channel", self.name);
+        self.occupancy += 1;
+        self.pushed += 1;
+        self.max_occupancy = self.max_occupancy.max(self.occupancy);
+        match self.kind {
+            ChannelKind::DeepBuffer { groups_per_image } => {
+                if self.occupancy == groups_per_image {
+                    self.readable_image = Some(self.writing_image);
+                    self.writing_image += 1;
+                }
+            }
+            ChannelKind::Pipo { groups_per_image } => {
+                if self.occupancy == groups_per_image {
+                    self.full_banks += 1;
+                    if self.readable_image.is_none() {
+                        self.readable_image = Some(self.writing_image);
+                    }
+                    self.writing_image += 1;
+                    if self.full_banks < 2 {
+                        self.occupancy = 0; // start filling the other bank
+                    }
+                }
+            }
+            ChannelKind::Fifo { .. } => {}
+        }
+    }
+
+    /// Can the consumer take its next unit? For FIFOs: one group queued.
+    /// For DeepBuffer/Pipo: the image `img` is fully resident.
+    pub fn can_consume(&self, img: u64) -> bool {
+        match self.kind {
+            ChannelKind::Fifo { .. } => self.occupancy > 0,
+            ChannelKind::DeepBuffer { .. } | ChannelKind::Pipo { .. } => {
+                self.readable_image == Some(img)
+            }
+        }
+    }
+
+    /// Consume for one firing: pops a group from a FIFO; no-op for buffers
+    /// (non-destructive reads).
+    pub fn consume(&mut self, img: u64) {
+        match self.kind {
+            ChannelKind::Fifo { .. } => {
+                debug_assert!(self.occupancy > 0, "{}: pop on empty fifo", self.name);
+                self.occupancy -= 1;
+            }
+            _ => debug_assert!(self.readable_image == Some(img)),
+        }
+    }
+
+    /// Reader finished the image held in a DeepBuffer / one Pipo bank.
+    pub fn release(&mut self, img: u64) {
+        match self.kind {
+            ChannelKind::DeepBuffer { .. } => {
+                debug_assert_eq!(self.readable_image, Some(img), "{}", self.name);
+                self.readable_image = None;
+                self.occupancy = 0;
+            }
+            ChannelKind::Pipo { groups_per_image } => {
+                debug_assert_eq!(self.readable_image, Some(img), "{}", self.name);
+                self.full_banks -= 1;
+                self.readable_image = if self.full_banks > 0 { Some(img + 1) } else { None };
+                if self.full_banks == 1 && self.occupancy == groups_per_image {
+                    // the bank just released becomes writable
+                    self.occupancy = 0;
+                }
+            }
+            ChannelKind::Fifo { .. } => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_push_pop_capacity() {
+        let mut c = Channel::new("f", ChannelKind::Fifo { cap: 2 });
+        assert!(c.can_push());
+        c.push();
+        c.push();
+        assert!(!c.can_push());
+        assert!(c.can_consume(0));
+        c.consume(0);
+        assert!(c.can_push());
+        assert_eq!(c.max_occupancy, 2);
+    }
+
+    #[test]
+    fn deep_buffer_requires_full_image() {
+        let mut c = Channel::new("k", ChannelKind::DeepBuffer { groups_per_image: 3 });
+        c.push();
+        c.push();
+        assert!(!c.can_consume(0), "not full yet");
+        c.push();
+        assert!(c.can_consume(0));
+        assert!(!c.can_push(), "single-buffered: next image blocked");
+        c.release(0);
+        assert!(c.can_push());
+        assert!(!c.can_consume(1));
+    }
+
+    #[test]
+    fn deep_buffer_reads_are_non_destructive() {
+        let mut c = Channel::new("k", ChannelKind::DeepBuffer { groups_per_image: 2 });
+        c.push();
+        c.push();
+        for _ in 0..10 {
+            assert!(c.can_consume(0));
+            c.consume(0);
+        }
+    }
+
+    #[test]
+    fn pipo_double_buffers() {
+        let mut c = Channel::new("p", ChannelKind::Pipo { groups_per_image: 2 });
+        c.push();
+        c.push(); // bank 0 full -> readable img 0
+        assert!(c.can_consume(0));
+        assert!(c.can_push(), "second bank writable");
+        c.push();
+        c.push(); // bank 1 full
+        assert!(!c.can_push(), "both banks full");
+        c.release(0);
+        assert!(c.can_consume(1), "bank 1 readable after release");
+        assert!(c.can_push(), "released bank writable again");
+    }
+}

@@ -1,0 +1,65 @@
+//! Deep-FIFO depth search (paper Sec. 4.2: "We carried out simulation
+//! experiments to identify the shallowest depth that avoids deadlocks,
+//! and the typical depth of deep FIFOs is 512").
+
+use super::builder::{build_vit, Paradigm, SimConfig};
+use super::engine::{run_fast, StopReason};
+#[cfg(test)]
+use super::engine::run;
+use crate::arch::parallelism::Design;
+use crate::model::ViTConfig;
+
+/// Binary-search the minimal deep-FIFO capacity (in token groups) that
+/// completes `images` images without deadlock.
+pub fn min_deep_fifo_depth(design: &Design, cfg: &ViTConfig, images: u64) -> u64 {
+    let base = SimConfig::matched(design, cfg);
+    let ok = |cap: u64| -> bool {
+        let sim = SimConfig { deep_fifo_cap: cap, ..base };
+        let p = build_vit(design, cfg, Paradigm::Hybrid, sim);
+        matches!(run_fast(&p, images, 500_000_000).stop, StopReason::Completed)
+    };
+    let tt = (cfg.tokens() as u64).div_ceil(2);
+    let mut hi = 2 * tt; // one image's groups + margin always suffices
+    while !ok(hi) {
+        hi *= 2;
+        assert!(hi < 1 << 20, "no feasible deep-FIFO depth found");
+    }
+    let mut lo = 0u64; // known-bad (a 0-cap FIFO cannot exist)
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if mid == 0 || !ok(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::parallelism::design_network;
+    use crate::model::Precision;
+
+    #[test]
+    fn min_depth_is_about_one_image() {
+        // the residual/Q streams must hold roughly a whole image's tokens
+        // while the K/V dependency blocks the attention path
+        let cfg = ViTConfig::tiny_synth();
+        let d = design_network(&cfg, Precision::A4W4, 2);
+        let tt = (cfg.tokens() as u64).div_ceil(2);
+        let depth = min_deep_fifo_depth(&d, &cfg, 2);
+        assert!(depth >= tt / 2, "depth {depth} suspiciously small (tt={tt})");
+        assert!(depth <= 2 * tt, "depth {depth} suspiciously large (tt={tt})");
+        // and the found depth indeed completes while depth-1 deadlocks
+        let base = SimConfig::matched(&d, &cfg);
+        let bad = build_vit(
+            &d,
+            &cfg,
+            Paradigm::Hybrid,
+            SimConfig { deep_fifo_cap: depth - 1, ..base },
+        );
+        assert!(matches!(run(&bad, 2, 500_000_000).stop, StopReason::Deadlock { .. }));
+    }
+}

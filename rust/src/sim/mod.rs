@@ -1,0 +1,13 @@
+//! Cycle-accurate simulator of the hybrid-grained pipeline (Sec. 4.1/4.2):
+//! decentralized per-stage FSMs, AXI-Stream handshakes, FIFO / deep-buffer
+//! / PIPO channels, deadlock detection and the Fig. 12 timing evidence.
+
+pub mod builder;
+pub mod channel;
+pub mod deadlock;
+pub mod engine;
+pub mod stage;
+pub mod trace;
+
+pub use builder::{build_vit, Paradigm, SimConfig};
+pub use engine::{run, run_fast, Pipeline, SimReport, StopReason};

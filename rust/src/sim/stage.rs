@@ -1,0 +1,101 @@
+//! Pipeline stages: decentralized FSMs with AXI-Stream-like handshakes
+//! (paper Sec. 4.1 — "each stage is controlled by its own FSM ...
+//! modules are completely decoupled").
+//!
+//! The simulation unit is one *firing* = processing TP tokens (one token
+//! group). A module's Table-1 initiation interval decomposes as
+//! `II = firings_per_image * cost_per_firing`.
+
+/// Static description of a stage.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    /// Network block this stage belongs to (timing-diagram grouping),
+    /// e.g. "PatchEmbed", "MHA3", "MLP7", "Head".
+    pub block: String,
+    /// Cycles per firing (II / TT).
+    pub cost: u64,
+    /// Firings per image (TT; 1 for whole-image stages like Head).
+    pub firings_per_image: u64,
+    /// Input channel ids (all must be ready to fire).
+    pub inputs: Vec<usize>,
+    /// Output channel ids (all must have space to fire; one group pushed
+    /// to each on completion).
+    pub outputs: Vec<usize>,
+    /// Source stages generate groups with no inputs (the DMA loader).
+    pub is_source: bool,
+}
+
+impl StageSpec {
+    pub fn ii(&self) -> u64 {
+        self.cost * self.firings_per_image
+    }
+}
+
+/// Mutable FSM state.
+#[derive(Debug, Clone, Default)]
+pub struct StageState {
+    /// Image currently being processed.
+    pub image: u64,
+    /// Firings completed within the current image.
+    pub fired: u64,
+    /// Remaining busy cycles of the current firing (0 = idle).
+    pub busy: u64,
+    /// Total busy cycles (utilization accounting).
+    pub busy_cycles: u64,
+    /// Total firings across all images.
+    pub total_firings: u64,
+    /// Per-image (first_start_cycle, last_end_cycle).
+    pub image_spans: Vec<(u64, u64)>,
+    /// Stall cycles attributed to inputs-not-ready vs outputs-full.
+    pub stall_in: u64,
+    pub stall_out: u64,
+}
+
+impl StageState {
+    pub fn record_start(&mut self, cycle: u64) {
+        let img = self.image as usize;
+        while self.image_spans.len() <= img {
+            self.image_spans.push((u64::MAX, 0));
+        }
+        let e = &mut self.image_spans[img];
+        e.0 = e.0.min(cycle);
+    }
+
+    pub fn record_end(&mut self, cycle: u64) {
+        let img = self.image as usize;
+        while self.image_spans.len() <= img {
+            self.image_spans.push((u64::MAX, 0));
+        }
+        self.image_spans[img].1 = cycle;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ii_decomposition() {
+        let s = StageSpec {
+            name: "Softmax".into(),
+            block: "MHA0".into(),
+            cost: 588,
+            firings_per_image: 98,
+            inputs: vec![],
+            outputs: vec![],
+            is_source: false,
+        };
+        assert_eq!(s.ii(), 57_624); // Table 1 / Fig 12 stable II
+    }
+
+    #[test]
+    fn spans_track_min_start_max_end() {
+        let mut st = StageState::default();
+        st.record_start(100);
+        st.record_end(150);
+        st.record_start(90);
+        st.record_end(200);
+        assert_eq!(st.image_spans[0], (90, 200));
+    }
+}

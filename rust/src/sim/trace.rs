@@ -1,0 +1,122 @@
+//! Timing-diagram extraction (Fig. 12): per network block and per image,
+//! the first-start / last-end cycles, plus the headline numbers the paper
+//! reports (stable II, first-image total cycles, latency, ideal FPS).
+
+use super::engine::SimReport;
+
+/// One block x image span.
+#[derive(Debug, Clone)]
+pub struct BlockSpan {
+    pub block: String,
+    pub image: u64,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Aggregate stage spans into block spans (min start / max end).
+pub fn block_spans(report: &SimReport) -> Vec<BlockSpan> {
+    use std::collections::BTreeMap;
+    let mut agg: BTreeMap<(String, u64), (u64, u64)> = BTreeMap::new();
+    for (spec, st) in report.stage_specs.iter().zip(&report.stage_states) {
+        for (img, &(s, e)) in st.image_spans.iter().enumerate() {
+            if s == u64::MAX {
+                continue;
+            }
+            let key = (spec.block.clone(), img as u64);
+            let entry = agg.entry(key).or_insert((u64::MAX, 0));
+            entry.0 = entry.0.min(s);
+            entry.1 = entry.1.max(e);
+        }
+    }
+    agg.into_iter()
+        .map(|((block, image), (start, end))| BlockSpan { block, image, start, end })
+        .collect()
+}
+
+/// The Fig. 12 headline numbers.
+#[derive(Debug, Clone)]
+pub struct TimingSummary {
+    pub stable_ii: u64,
+    pub first_image_cycles: u64,
+    pub freq_hz: f64,
+    pub latency_ms: f64,
+    pub ideal_fps: f64,
+}
+
+pub fn summarize(report: &SimReport, freq_hz: f64) -> Option<TimingSummary> {
+    let stable_ii = report.stable_ii()?;
+    let first = report.first_image_latency()?;
+    Some(TimingSummary {
+        stable_ii,
+        first_image_cycles: first,
+        freq_hz,
+        latency_ms: stable_ii as f64 / freq_hz * 1e3,
+        ideal_fps: freq_hz / stable_ii as f64,
+    })
+}
+
+/// Render an ASCII Gantt chart of the block spans (one row per block,
+/// one column per `cycles_per_col` cycles; images as distinct glyphs).
+pub fn render_gantt(report: &SimReport, width: usize) -> String {
+    let spans = block_spans(report);
+    if spans.is_empty() {
+        return "(no spans)".into();
+    }
+    let max_cycle = spans.iter().map(|s| s.end).max().unwrap().max(1);
+    let per_col = max_cycle.div_ceil(width as u64).max(1);
+    // preserve first-appearance block order
+    let mut blocks: Vec<String> = Vec::new();
+    for s in &spans {
+        if !blocks.contains(&s.block) {
+            blocks.push(s.block.clone());
+        }
+    }
+    let glyphs = ['1', '2', '3', '4', '5', '6', '7', '8', '9'];
+    let mut out = String::new();
+    out.push_str(&format!("cycles 0..{max_cycle} ({per_col}/col)\n"));
+    for b in &blocks {
+        let mut row = vec![' '; width];
+        for s in spans.iter().filter(|s| &s.block == b) {
+            let g = glyphs[(s.image as usize) % glyphs.len()];
+            let c0 = (s.start / per_col) as usize;
+            let c1 = ((s.end / per_col) as usize).min(width - 1);
+            for c in row.iter_mut().take(c1 + 1).skip(c0) {
+                *c = g;
+            }
+        }
+        out.push_str(&format!("{:>12} |{}|\n", b, row.iter().collect::<String>()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::parallelism::design_network;
+    use crate::model::{Precision, ViTConfig};
+    use crate::sim::builder::{build_vit, Paradigm, SimConfig};
+    use crate::sim::engine::run;
+
+    #[test]
+    fn spans_cover_all_blocks() {
+        let cfg = ViTConfig::tiny_synth();
+        let d = design_network(&cfg, Precision::A4W4, 2);
+        let p = build_vit(&d, &cfg, Paradigm::Hybrid, SimConfig::matched(&d, &cfg));
+        let r = run(&p, 2, 50_000_000);
+        let spans = block_spans(&r);
+        let blocks: std::collections::BTreeSet<_> = spans.iter().map(|s| s.block.clone()).collect();
+        // DMA + PatchEmbed + 4x(MHA, MLP) + Head
+        assert_eq!(blocks.len(), 2 + 2 * cfg.depth + 1);
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let cfg = ViTConfig::tiny_synth();
+        let d = design_network(&cfg, Precision::A4W4, 2);
+        let p = build_vit(&d, &cfg, Paradigm::Hybrid, SimConfig::matched(&d, &cfg));
+        let r = run(&p, 2, 50_000_000);
+        let g = render_gantt(&r, 80);
+        assert!(g.contains("MHA0"));
+        assert!(g.contains('1') && g.contains('2'));
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal benchmark harness (criterion is not vendored in this offline
+//! environment): warmup + timed iterations + robust summary statistics.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<42} {:>10} iters  mean {:>12?}  median {:>12?}  p95 {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.p95
+        )
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` after a warmup, returning stats.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let target_iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(5.0, 10_000.0) as u64;
+
+    let mut samples = Vec::with_capacity(target_iters as usize);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters: target_iters,
+        mean,
+        median: samples[samples.len() / 2],
+        p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min: samples[0],
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+}

@@ -1,0 +1,126 @@
+//! Golden cross-check: the rust table generators must reproduce the
+//! python-emitted fixture (`artifacts/golden_tables.json`) — alpha /
+//! shift / pivot / scales exactly, entries within ±1 LSB (libm exp/sqrt
+//! may differ by an ulp across languages).
+
+use std::path::Path;
+
+use hgpipe::lut::{generate, LutTable, OutQuant, SegmentedTable};
+use hgpipe::util::json::Json;
+
+fn fixture() -> Option<Json> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden_tables.json");
+    let text = std::fs::read_to_string(p).ok()?;
+    Some(Json::parse(&text).expect("fixture parses"))
+}
+
+fn assert_tables_match(ours: &LutTable, golden: &LutTable, case: &str) {
+    assert_eq!(ours.alpha, golden.alpha, "{case}: alpha");
+    assert_eq!(ours.shift, golden.shift, "{case}: shift");
+    assert_eq!(ours.n_bits, golden.n_bits, "{case}: n_bits");
+    assert_eq!(ours.inverted, golden.inverted, "{case}: inverted");
+    assert_eq!(ours.out_scale, golden.out_scale, "{case}: out_scale (exact f64)");
+    assert_eq!(ours.out_zp, golden.out_zp, "{case}: out_zp");
+    assert_eq!(ours.entries.len(), golden.entries.len(), "{case}: depth");
+    for (i, (a, b)) in ours.entries.iter().zip(&golden.entries).enumerate() {
+        assert!(
+            (a - b).abs() <= 1,
+            "{case}: entry {i} differs by more than 1 LSB: ours {a}, python {b}"
+        );
+    }
+}
+
+fn golden_lut(fx: &Json, case: &str) -> LutTable {
+    LutTable::from_json(fx.get(case).unwrap().get("table").unwrap()).unwrap()
+}
+
+#[test]
+fn requant_matches_python() {
+    let Some(fx) = fixture() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let golden = golden_lut(&fx, "requant");
+    let ours =
+        generate::requant_table("rq", -1000, 2000, 0.03125, OutQuant::symmetric(0.125, 4));
+    assert_tables_match(&ours, &golden, "requant");
+}
+
+#[test]
+fn requant_calibrated_matches_python() {
+    let Some(fx) = fixture() else { return };
+    let golden = golden_lut(&fx, "requant_calibrated");
+    let ours = generate::joint_calibrate(
+        "rq_cal",
+        |x| x,
+        -4000,
+        4000,
+        0.03125,
+        6,
+        OutQuant::symmetric(0.125, 4),
+    );
+    assert_tables_match(&ours, &golden, "requant_calibrated");
+}
+
+#[test]
+fn gelu_matches_python() {
+    let Some(fx) = fixture() else { return };
+    let golden = golden_lut(&fx, "gelu");
+    let ours =
+        generate::gelu_requant_table("gelu", -800, 800, 0.0078125, OutQuant::symmetric(0.125, 4));
+    assert_tables_match(&ours, &golden, "gelu");
+}
+
+#[test]
+fn exp_inverted_matches_python() {
+    let Some(fx) = fixture() else { return };
+    let golden = golden_lut(&fx, "exp_inverted");
+    let ours = generate::exp_table_inverted("exp", -5000, 0, 0.001953125);
+    assert_tables_match(&ours, &golden, "exp_inverted");
+    assert!(ours.inverted);
+}
+
+#[test]
+fn recip_segmented_matches_python() {
+    let Some(fx) = fixture() else { return };
+    let golden =
+        SegmentedTable::from_json(fx.get("recip_segmented").unwrap().get("table").unwrap())
+            .unwrap();
+    let ours = generate::recip_table_segmented("recip", 200, 40000, 0.00390625);
+    assert_eq!(ours.pivot, golden.pivot, "pivot");
+    assert_tables_match(&ours.steep, &golden.steep, "recip.steep");
+    assert_tables_match(&ours.flat, &golden.flat, "recip.flat");
+}
+
+#[test]
+fn rsqrt_matches_python() {
+    let Some(fx) = fixture() else { return };
+    let golden = golden_lut(&fx, "rsqrt");
+    let ours = generate::rsqrt_table("rsqrt", 50, 100000, 0.0625);
+    assert_tables_match(&ours, &golden, "rsqrt");
+}
+
+#[test]
+fn full_deit_table_set_loads() {
+    // the complete 159-table DeiT-tiny set emitted by the build must load
+    // and be structurally sane
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tables_deit_tiny_a4w4.json");
+    if !p.exists() {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    }
+    let tables = hgpipe::lut::load_tables(&p).unwrap();
+    assert!(tables.len() > 100, "{}", tables.len());
+    // every attention block carries an inverted exp table and a segmented
+    // recip table
+    for i in 0..12 {
+        match tables.get(&format!("b{i}.attn.exp")) {
+            Some(hgpipe::lut::AnyTable::Lut(t)) => assert!(t.inverted, "b{i} exp inverted"),
+            other => panic!("b{i}.attn.exp wrong kind: {other:?}"),
+        }
+        assert!(
+            matches!(tables.get(&format!("b{i}.attn.recip")), Some(hgpipe::lut::AnyTable::Segmented(_))),
+            "b{i}.attn.recip must be segmented"
+        );
+    }
+}

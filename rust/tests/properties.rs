@@ -1,0 +1,203 @@
+//! Property-based tests (hand-rolled driver; proptest is not vendored in
+//! this offline environment) over the coordinator-side invariants the
+//! system prompt calls out: routing/batching decisions, channel state
+//! machines, simulator conservation laws, LUT index safety, JSON codec.
+
+use hgpipe::coordinator::batcher::BatchPolicy;
+use hgpipe::lut::{generate, numerics, OutQuant};
+use hgpipe::sim::channel::{Channel, ChannelKind};
+use hgpipe::sim::engine::{run, Pipeline, StopReason};
+use hgpipe::sim::stage::StageSpec;
+use hgpipe::util::json::Json;
+use hgpipe::util::prng::{for_all_seeds, Prng};
+use std::time::Duration;
+
+#[test]
+fn prop_batcher_never_exceeds_queue_or_variants() {
+    for_all_seeds(300, |rng| {
+        let mut variants: Vec<usize> =
+            (0..rng.range_i64(1, 4)).map(|_| rng.range_i64(1, 32) as usize).collect();
+        variants.sort_unstable();
+        variants.dedup();
+        let policy = BatchPolicy::new(variants.clone(), Duration::from_millis(2));
+        let queued = rng.range_i64(0, 100) as usize;
+        let waited = Duration::from_micros(rng.range_i64(0, 5000) as u64);
+        if let Some(b) = policy.decide(queued, waited) {
+            assert!(variants.contains(&b), "batch {b} not a variant {variants:?}");
+            // a dispatch larger than the queue is only allowed as the
+            // padded-smallest-variant escape hatch for a starving head
+            if b > queued {
+                assert_eq!(b, variants[0], "oversized dispatch must be the smallest variant");
+                assert!(queued < variants[0]);
+            }
+        } else {
+            // only legitimate reasons to wait: empty queue, or a partial
+            // batch whose head hasn't timed out
+            assert!(queued == 0 || (queued < policy.largest() && waited < Duration::from_millis(2)));
+        }
+    });
+}
+
+#[test]
+fn prop_head_of_line_always_progresses_after_deadline() {
+    for_all_seeds(200, |rng| {
+        let variants: Vec<usize> = vec![rng.range_i64(1, 8) as usize, 16];
+        let policy = BatchPolicy::new(variants, Duration::from_millis(1));
+        let queued = rng.range_i64(1, 15) as usize;
+        let b = policy.decide(queued, Duration::from_millis(5));
+        assert!(b.is_some(), "head request starved at queue depth {queued}");
+    });
+}
+
+#[test]
+fn prop_fifo_occupancy_bounded_and_conserved() {
+    for_all_seeds(200, |rng| {
+        let cap = rng.range_i64(1, 16) as u64;
+        let mut c = Channel::new("f", ChannelKind::Fifo { cap });
+        let mut pushed = 0u64;
+        let mut popped = 0u64;
+        for _ in 0..200 {
+            if rng.f64() < 0.55 && c.can_push() {
+                c.push();
+                pushed += 1;
+            } else if c.can_consume(0) {
+                c.consume(0);
+                popped += 1;
+            }
+            assert!(c.occupancy <= cap);
+            assert_eq!(c.occupancy, pushed - popped, "conservation");
+        }
+        assert!(c.max_occupancy <= cap);
+    });
+}
+
+#[test]
+fn prop_pipo_reader_never_sees_partial_image() {
+    for_all_seeds(200, |rng| {
+        let gpi = rng.range_i64(1, 8) as u64;
+        let mut c = Channel::new("p", ChannelKind::Pipo { groups_per_image: gpi });
+        let mut written = 0u64;
+        let mut released = 0u64;
+        for _ in 0..300 {
+            if rng.f64() < 0.6 && c.can_push() {
+                c.push();
+                written += 1;
+            } else if let Some(img) = c.readable_image {
+                // readable => that image must be fully written
+                assert!(written >= (img + 1) * gpi, "partial image readable");
+                if rng.f64() < 0.5 {
+                    c.release(img);
+                    released += 1;
+                }
+            }
+        }
+        assert!(released * gpi <= written);
+    });
+}
+
+#[test]
+fn prop_linear_pipelines_always_complete_and_conserve_groups() {
+    for_all_seeds(60, |rng| {
+        // random linear pipeline: 2-5 stages, random costs/caps
+        let n_stages = rng.range_i64(2, 5) as usize;
+        let firings = rng.range_i64(1, 6) as u64;
+        let images = rng.range_i64(1, 3) as u64;
+        let mut p = Pipeline::default();
+        let mut prev: Option<usize> = None;
+        for s in 0..n_stages {
+            let out = if s + 1 < n_stages {
+                Some(p.add_channel(format!("c{s}"), ChannelKind::Fifo {
+                    cap: rng.range_i64(1, 6) as u64,
+                }))
+            } else {
+                None
+            };
+            let idx = p.add_stage(StageSpec {
+                name: format!("s{s}"),
+                block: format!("s{s}"),
+                cost: rng.range_i64(1, 9) as u64,
+                firings_per_image: firings,
+                inputs: prev.into_iter().collect(),
+                outputs: out.into_iter().collect(),
+                is_source: s == 0,
+            });
+            if out.is_none() {
+                p.sink = idx;
+            }
+            prev = out;
+        }
+        let r = run(&p, images, 10_000_000);
+        assert_eq!(r.stop, StopReason::Completed, "linear pipeline wedged");
+        // conservation: every stage fired exactly firings * images times
+        for st in &r.stage_states {
+            assert_eq!(st.total_firings, firings * images);
+        }
+    });
+}
+
+#[test]
+fn prop_lut_lookup_always_in_table() {
+    for_all_seeds(300, |rng| {
+        let alpha = rng.range_i64(-1_000_000, 1_000_000);
+        let span = rng.range_i64(1, 2_000_000);
+        let t = generate::requant_table(
+            "t",
+            alpha,
+            alpha + span,
+            0.01,
+            OutQuant::symmetric(0.125, 4),
+        );
+        for _ in 0..50 {
+            let x = rng.range_i64(i64::MIN / 4, i64::MAX / 4);
+            let v = t.lookup(x);
+            assert!(t.entries.contains(&v));
+            assert!((-8..=7).contains(&v));
+        }
+    });
+}
+
+#[test]
+fn prop_pot_shift_index_safety() {
+    for_all_seeds(500, |rng| {
+        let alpha = rng.range_i64(-(1 << 40), 1 << 40);
+        let span = rng.range_i64(1, 1 << 40);
+        let n = rng.range_i64(2, 12) as u32;
+        let s = numerics::pot_shift(alpha, alpha + span, n);
+        // every in-range input maps into the table without clamping need
+        let raw_max = span >> s;
+        assert!(raw_max <= (1 << n) - 1, "overflow: span {span} shift {s} bits {n}");
+        if s > 0 {
+            assert!(span >> (s - 1) > (1 << n) - 1, "shift not minimal");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    for_all_seeds(200, |rng| {
+        let v = random_json(rng, 3);
+        let s = v.to_string_compact();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("parse back failed: {e}\n{s}"));
+        assert_eq!(v, back);
+        let pretty = v.to_string_pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    });
+}
+
+fn random_json(rng: &mut Prng, depth: usize) -> Json {
+    match if depth == 0 { rng.range_i64(0, 3) } else { rng.range_i64(0, 5) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::Num((rng.range_i64(-1 << 50, 1 << 50)) as f64),
+        3 => {
+            let n = rng.range_i64(0, 12) as usize;
+            Json::Str((0..n).map(|_| *rng.pick(&['a', '"', '\\', '\n', 'é', 'z'])).collect())
+        }
+        4 => Json::Arr((0..rng.range_i64(0, 4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.range_i64(0, 4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}

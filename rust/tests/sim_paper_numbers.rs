@@ -1,0 +1,98 @@
+//! Integration: the cycle-accurate simulator must reproduce the paper's
+//! headline timing numbers on the full DeiT-tiny network (Sec. 5.2 /
+//! Fig. 12), and the paradigm comparisons of Fig. 2c.
+
+use hgpipe::arch::parallelism::{design_network, design_table1};
+use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::sim::{self, builder::Paradigm, SimConfig, StopReason};
+
+fn deit_hybrid_report(images: u64) -> sim::SimReport {
+    let cfg = ViTConfig::deit_tiny();
+    let d = design_network(&cfg, Precision::A4W3, 2);
+    let p = sim::build_vit(&d, &cfg, Paradigm::Hybrid, SimConfig::matched(&d, &cfg));
+    sim::run(&p, images, 50_000_000)
+}
+
+#[test]
+fn stable_ii_is_exactly_57624() {
+    let r = deit_hybrid_report(3);
+    assert_eq!(r.stop, StopReason::Completed);
+    assert_eq!(r.stable_ii(), Some(57_624)); // paper Fig. 12
+}
+
+#[test]
+fn first_image_within_2_percent_of_paper() {
+    let r = deit_hybrid_report(1);
+    let first = r.first_image_latency().unwrap() as f64;
+    let paper = 824_843.0;
+    assert!(
+        (first - paper).abs() / paper < 0.02,
+        "first image {first} vs paper {paper}"
+    );
+}
+
+#[test]
+fn ideal_fps_matches_paper_7353() {
+    let r = deit_hybrid_report(3);
+    let s = sim::trace::summarize(&r, 425e6).unwrap();
+    assert!((s.ideal_fps - 7353.0).abs() / 7353.0 < 0.01, "fps {}", s.ideal_fps);
+    assert!((s.latency_ms - 0.136).abs() < 0.002, "latency {}", s.latency_ms);
+}
+
+#[test]
+fn table1_design_and_simulated_ii_agree() {
+    // the analytical Table-1 II and the simulated steady state must agree
+    let d = design_table1();
+    let r = deit_hybrid_report(3);
+    assert_eq!(d.accelerator_ii(), r.stable_ii().unwrap());
+}
+
+#[test]
+fn coarse_grained_latency_exceeds_hybrid() {
+    let cfg = ViTConfig::deit_tiny();
+    let d = design_network(&cfg, Precision::A4W3, 2);
+    let sim_cfg = SimConfig::matched(&d, &cfg);
+    let h = sim::run(&sim::build_vit(&d, &cfg, Paradigm::Hybrid, sim_cfg), 2, 100_000_000);
+    let c = sim::run(&sim::build_vit(&d, &cfg, Paradigm::CoarseGrained, sim_cfg), 2, 200_000_000);
+    assert_eq!(c.stop, StopReason::Completed);
+    let (hl, cl) = (h.first_image_latency().unwrap(), c.first_image_latency().unwrap());
+    // Fig 2c: coarse latency "Mid" vs hybrid "Low" — whole-tensor
+    // handoffs serialize each block
+    assert!(cl > 2 * hl, "coarse {cl} vs hybrid {hl}");
+}
+
+#[test]
+fn fine_grained_deadlocks_on_deit() {
+    let cfg = ViTConfig::deit_tiny();
+    let d = design_network(&cfg, Precision::A4W3, 2);
+    let p = sim::build_vit(&d, &cfg, Paradigm::FineGrained, SimConfig::matched(&d, &cfg));
+    let r = sim::run(&p, 1, 100_000_000);
+    assert!(matches!(r.stop, StopReason::Deadlock { .. }), "{:?}", r.stop);
+}
+
+#[test]
+fn deep_fifo_highwater_supports_512_token_sizing() {
+    // the deep FIFOs' observed high-water mark must be close to one
+    // image's groups (98 at TP=2) — the paper's 512-token (256-group)
+    // sizing is a power-of-two with margin above it
+    let r = deit_hybrid_report(3);
+    let max_res = r
+        .channel_names
+        .iter()
+        .zip(&r.channel_max_occupancy)
+        .filter(|(n, _)| n.ends_with(".res") || n.ends_with(".res2") || n.ends_with(".q"))
+        .map(|(_, &m)| m)
+        .max()
+        .unwrap();
+    assert!((90..=256).contains(&max_res), "deep-FIFO high water {max_res}");
+}
+
+#[test]
+fn throughput_scales_with_more_images() {
+    let r5 = deit_hybrid_report(5);
+    let done = &r5.image_done;
+    // after the fill, every image takes exactly one stable II
+    for w in done.windows(2).skip(1) {
+        assert_eq!(w[1] - w[0], 57_624, "{done:?}");
+    }
+}
