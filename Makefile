@@ -1,0 +1,30 @@
+# Build entry points for the HG-PIPE reproduction.
+#
+# `make artifacts` is the target the rust tests and doc comments
+# reference: the python AOT pipeline (train / calibrate / quantize) emits
+# HLO text, LUT tables, interpreter bundles, and the eval batch into
+# rust/artifacts/. The committed golden fixture under
+# rust/artifacts/golden/ is never touched by it — regenerate that with
+# `make golden` (and commit bundle + logits together: they are a matched
+# set).
+
+ARTIFACTS := rust/artifacts
+
+.PHONY: build test test-rust test-python artifacts golden
+
+build:
+	cargo build --release
+
+test: test-rust test-python
+
+test-rust: build
+	cargo test -q
+
+test-python:
+	cd python && python -m pytest tests -q
+
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)
+
+golden:
+	cd python && python -m compile.export --out ../$(ARTIFACTS)/golden

@@ -37,12 +37,11 @@ fn main() -> hgpipe::Result<()> {
     );
 
     // ---- 3. serve ----------------------------------------------------------
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("[serve]  artifacts/ missing — run `make artifacts` for the PJRT demo");
+    let Some(dir) = Manifest::discover() else {
+        println!("[serve]  no artifacts found — run `make artifacts` for the serving demo");
         return Ok(());
-    }
-    let manifest = Manifest::load(dir)?;
+    };
+    let manifest = Manifest::load(&dir)?;
     let model = "tiny-synth"; // small and fast; use deit-tiny for the full net
     let server = ModelServer::start(&manifest, model, 2)?;
     let mut rng = Prng::new(1);

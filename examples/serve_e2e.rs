@@ -18,13 +18,13 @@ fn main() -> hgpipe::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(24);
-    let dir = std::path::Path::new("artifacts");
-    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
-    let manifest = Manifest::load(dir)?;
+    let dir = Manifest::discover()
+        .ok_or_else(|| anyhow::anyhow!("no artifacts found — run `make artifacts` first"))?;
+    let manifest = Manifest::load(&dir)?;
 
     // ---- phase 1: accuracy on the real eval batch (tiny-ViT) --------------
     println!("=== phase 1: tiny-ViT accuracy (real trained model, 512 eval images) ===");
-    let (tokens, labels, shape) = load_eval_set(dir)?;
+    let (tokens, labels, shape) = load_eval_set(&dir)?;
     let tiny = ModelServer::start(&manifest, "tiny-synth", 2)?;
     let per = shape[1] * shape[2];
     let images: Vec<Vec<f32>> = tokens.chunks(per).map(|c| c.to_vec()).collect();
@@ -44,6 +44,10 @@ fn main() -> hgpipe::Result<()> {
 
     // ---- phase 2: DeiT-tiny latency/throughput (full paper network) -------
     println!("\n=== phase 2: DeiT-tiny serving ({deit_requests} requests, batch variants 1+8) ===");
+    if manifest.bundle_for("deit-tiny").is_none() && manifest.variants("deit-tiny").is_empty() {
+        println!("(no deit-tiny artifacts — run a full `make artifacts` for phases 2-3)");
+        return Ok(());
+    }
     let deit = ModelServer::start(&manifest, "deit-tiny", 4)?;
     let mut rng = Prng::new(11);
     let n_tok = deit.tokens_per_image();

@@ -38,6 +38,7 @@ from jax._src.lib import xla_client as xc
 
 from . import model as M
 from . import tables
+from .export import export_bundle, golden_fixture
 from .kernels import ref
 from .quantize import QuantParams
 
@@ -178,41 +179,6 @@ def measure_accuracy(params, cfg, calib_toks, eval_toks, eval_ys) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# golden table fixture (rust cross-check)
-# ---------------------------------------------------------------------------
-
-
-def golden_fixture() -> dict:
-    """Deterministic table-generation cases. in_scales are exact binary
-    fractions so both languages see identical f64 inputs; entries may vary
-    by ±1 LSB where libm exp/sqrt differ by an ulp."""
-    out_q = QuantParams(scale=0.125, zero_point=0, bits=4, signed=True)
-    out_q8 = QuantParams(scale=0.0078125, zero_point=0, bits=8, signed=False)
-    cases = {}
-
-    t = tables.requant_table("rq", -1000, 2000, 0.03125, out_q)
-    cases["requant"] = {"spec": {"alpha": -1000, "beta": 2000, "in_scale": 0.03125,
-                                 "out": {"scale": 0.125, "bits": 4, "signed": True}},
-                        "table": t.to_dict()}
-    t = tables.joint_calibrate("rq_cal", lambda x: x, -4000, 4000, 0.03125, 6, out_q)
-    cases["requant_calibrated"] = {"spec": {"alpha": -4000, "beta": 4000, "in_scale": 0.03125},
-                                   "table": t.to_dict()}
-    t = tables.gelu_requant_table("gelu", -800, 800, 0.0078125, out_q)
-    cases["gelu"] = {"spec": {"alpha": -800, "beta": 800, "in_scale": 0.0078125},
-                     "table": t.to_dict()}
-    t = tables.exp_table_inverted("exp", -5000, 0, 0.001953125)
-    cases["exp_inverted"] = {"spec": {"alpha": -5000, "beta": 0, "in_scale": 0.001953125},
-                             "table": t.to_dict()}
-    s = tables.recip_table_segmented("recip", 200, 40000, 0.00390625)
-    cases["recip_segmented"] = {"spec": {"alpha": 200, "beta": 40000, "in_scale": 0.00390625},
-                                "table": s.to_dict()}
-    t = tables.rsqrt_table("rsqrt", 50, 100000, 0.0625)
-    cases["rsqrt"] = {"spec": {"alpha": 50, "beta": 100000, "in_scale": 0.0625},
-                      "table": t.to_dict()}
-    return cases
-
-
-# ---------------------------------------------------------------------------
 # main build
 # ---------------------------------------------------------------------------
 
@@ -297,6 +263,10 @@ def main():
         "model": "tiny-synth", "precision": "a4w4",
     }
     dump_qm_tables(qm_t, os.path.join(outdir, "tables_tinyvit_a4w4.json"))
+    # interpreter-backend bundle (the default rust execution path)
+    manifest["bundles"] = {
+        "tinyvit_bundle": export_bundle(qm_t, os.path.join(outdir, "tinyvit_bundle.json"))
+    }
 
     if args.quick:
         with open(os.path.join(outdir, "manifest.json"), "w") as f:
@@ -313,6 +283,9 @@ def main():
     qm_d = M.build_quantized(dparams, dcfg, dtoks)
     print(f"deit-tiny a4w4 calibration: {time.time()-t0:.1f}s, {qm_d.lut_count()} luts")
     dump_qm_tables(qm_d, os.path.join(outdir, "tables_deit_tiny_a4w4.json"))
+    manifest["bundles"]["deit_tiny_bundle"] = export_bundle(
+        qm_d, os.path.join(outdir, "deit_tiny_bundle.json")
+    )
 
     for batch in (1, 8):
         info = lower_to_file(

@@ -1,0 +1,247 @@
+"""Export a QuantModel as a self-contained *bundle* for the rust
+interpreter backend (``rust/src/runtime/interpreter.rs``).
+
+The PJRT path ships opaque HLO text; the interpreter instead executes the
+integer dataflow directly from the quantized weights + LUT set, so the
+bundle is plain JSON: integer weight/bias tensors (row-major flat lists),
+the LUT tables in the same ``{"kind", "data"}`` wire format as
+``tables.dump_tables``, the LayerNorm guard shifts, and the three floats
+the head needs (input scale, logit scale, float bias). Python's
+``json.dump`` emits shortest-round-trip reprs and rust's ``str::parse``
+is correctly rounded, so every f64 crosses the boundary bit-exactly.
+
+The *golden fixture* (``emit_golden``) freezes a fixed-seed tiny-synth
+model, an eval batch, and the numpy-reference logits
+(``model.forward_int_np``) into ``rust/artifacts/`` so ``cargo test``
+asserts bit-exact interpreter agreement without ``make artifacts`` or a
+jax install.
+
+CLI:  python -m compile.export --out ../rust/artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+
+import numpy as np
+
+from . import model as M
+from . import tables
+from .quantize import QuantParams
+
+BUNDLE_FORMAT = "hgpipe-bundle-v1"
+
+# batch variants the serving batcher dispatches (mirrors the PJRT
+# per-batch executables; the interpreter handles any batch, these are the
+# sizes the BatchPolicy chooses between)
+BUNDLE_BATCHES = [1, 8]
+
+
+def _ints(arr) -> list:
+    return [int(v) for v in np.asarray(arr).reshape(-1)]
+
+
+def bundle_dict(qm: M.QuantModel) -> dict:
+    """QuantModel -> JSON-serializable bundle."""
+    cfg = qm.cfg
+    W, sc = qm.weights, qm.scalars
+
+    weights = {"pe_w": _ints(W["pe_w"]), "pe_b": _ints(W["pe_b"])}
+    guards = {}
+    for i in range(cfg.depth):
+        p = f"b{i}"
+        for nm in ("qkv", "proj", "mm1", "mm2"):
+            weights[f"{p}.{nm}_w"] = _ints(W[f"{p}.{nm}_w"])
+            weights[f"{p}.{nm}_b"] = _ints(W[f"{p}.{nm}_b"])
+        guards[f"{p}.ln1"] = int(sc[f"{p}.ln1.guard"])
+        guards[f"{p}.ln2"] = int(sc[f"{p}.ln2.guard"])
+    guards["ln_f"] = int(sc["ln_f.guard"])
+    weights["head_w"] = _ints(W["head_w"])
+
+    luts = {}
+    for k, v in qm.luts.items():
+        kind = "segmented" if isinstance(v, tables.SegmentedTable) else "lut"
+        luts[k] = {"kind": kind, "data": v.to_dict()}
+
+    return {
+        "format": BUNDLE_FORMAT,
+        "model": cfg.name,
+        "precision": f"a{cfg.act_bits}w{cfg.weight_bits}",
+        "cfg": {
+            "tokens": cfg.tokens,
+            "patch_dim": cfg.patch_dim,
+            "dim": cfg.dim,
+            "depth": cfg.depth,
+            "heads": cfg.heads,
+            "hidden": cfg.hidden,
+            "num_classes": cfg.num_classes,
+        },
+        "input": {
+            "scale": float(qm.input_q.scale),
+            "qmin": int(qm.input_q.qmin),
+            "qmax": int(qm.input_q.qmax),
+        },
+        "head": {
+            "logit_scale": float(sc["head.logit_scale"]),
+            # float32 biases, widened exactly to f64 for JSON
+            "bias": [float(b) for b in W["head_b_f"]],
+        },
+        "guards": guards,
+        "weights": weights,
+        "luts": luts,
+    }
+
+
+def export_bundle(qm: M.QuantModel, path: str) -> dict:
+    """Write the bundle and return its manifest entry."""
+    d = bundle_dict(qm)
+    with open(path, "w") as f:
+        json.dump(d, f, sort_keys=True)
+    cfg = qm.cfg
+    return {
+        "path": os.path.basename(path),
+        "model": cfg.name,
+        "precision": d["precision"],
+        "input": [cfg.tokens, cfg.patch_dim],
+        "output": [cfg.num_classes],
+        "batches": BUNDLE_BATCHES,
+    }
+
+
+# ---------------------------------------------------------------------------
+# golden table fixture (rust lut::generate cross-check)
+# ---------------------------------------------------------------------------
+
+
+def golden_fixture() -> dict:
+    """Deterministic table-generation cases. in_scales are exact binary
+    fractions so both languages see identical f64 inputs; entries may vary
+    by ±1 LSB where libm exp/sqrt differ by an ulp."""
+    out_q = QuantParams(scale=0.125, zero_point=0, bits=4, signed=True)
+    cases = {}
+
+    t = tables.requant_table("rq", -1000, 2000, 0.03125, out_q)
+    cases["requant"] = {"spec": {"alpha": -1000, "beta": 2000, "in_scale": 0.03125,
+                                 "out": {"scale": 0.125, "bits": 4, "signed": True}},
+                        "table": t.to_dict()}
+    t = tables.joint_calibrate("rq_cal", lambda x: x, -4000, 4000, 0.03125, 6, out_q)
+    cases["requant_calibrated"] = {"spec": {"alpha": -4000, "beta": 4000, "in_scale": 0.03125},
+                                   "table": t.to_dict()}
+    t = tables.gelu_requant_table("gelu", -800, 800, 0.0078125, out_q)
+    cases["gelu"] = {"spec": {"alpha": -800, "beta": 800, "in_scale": 0.0078125},
+                     "table": t.to_dict()}
+    t = tables.exp_table_inverted("exp", -5000, 0, 0.001953125)
+    cases["exp_inverted"] = {"spec": {"alpha": -5000, "beta": 0, "in_scale": 0.001953125},
+                             "table": t.to_dict()}
+    s = tables.recip_table_segmented("recip", 200, 40000, 0.00390625)
+    cases["recip_segmented"] = {"spec": {"alpha": 200, "beta": 40000, "in_scale": 0.00390625},
+                                "table": s.to_dict()}
+    t = tables.rsqrt_table("rsqrt", 50, 100000, 0.0625)
+    cases["rsqrt"] = {"spec": {"alpha": 50, "beta": 100000, "in_scale": 0.0625},
+                      "table": t.to_dict()}
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# golden fixture for the rust interpreter tests (committed to the repo)
+# ---------------------------------------------------------------------------
+
+
+def golden_model(train_steps: int = 400, params_cache: str | None = None):
+    """The frozen tiny-synth QuantModel behind the golden fixture."""
+    from .train import synth_images, train
+
+    cfg = M.tiny_synth()
+    float_acc = None
+    if params_cache and os.path.exists(params_cache):
+        with open(params_cache, "rb") as f:
+            blob = pickle.load(f)
+        params, float_acc = blob["params"], blob.get("float_acc")
+    elif train_steps > 0:
+        params, _, float_acc = train(cfg, steps=train_steps)
+        if params_cache:
+            os.makedirs(os.path.dirname(params_cache) or ".", exist_ok=True)
+            with open(params_cache, "wb") as f:
+                pickle.dump({"params": params, "float_acc": float_acc}, f)
+    else:
+        # untrained fallback: still a valid bit-exactness fixture
+        params = M.init_params(np.random.default_rng(42), cfg)
+    calib_imgs, _ = synth_images(np.random.default_rng(42), 64)
+    calib_toks = M.patchify(calib_imgs, cfg)
+    qm = M.build_quantized(params, cfg, calib_toks)
+    return qm, float_acc
+
+
+def emit_golden(outdir: str, qm: M.QuantModel, eval_n: int = 64,
+                float_acc: float | None = None) -> dict:
+    """Write bundle + eval batch + reference logits into ``outdir``.
+
+    The reference logits come from ``forward_int_np`` — the numpy LUT-exact
+    path the interpreter mirrors — computed over the *float32* tokens the
+    rust side will read back from ``golden_tokens.bin``.
+    """
+    from .train import synth_images
+
+    os.makedirs(outdir, exist_ok=True)
+    cfg = qm.cfg
+    eval_imgs, eval_ys = synth_images(np.random.default_rng(7), eval_n)
+    toks32 = M.patchify(eval_imgs, cfg).astype("<f4")
+    # quantize from the f32 values (widened to f64) — exactly what the
+    # interpreter sees after reading the .bin back
+    x_q = qm.input_q.quantize(toks32.astype(np.float64))
+    logits = np.asarray(M.forward_int_np(qm, x_q), dtype="<f8")
+    acc = float((logits.argmax(1) == eval_ys).mean())
+
+    with open(os.path.join(outdir, "golden_tokens.bin"), "wb") as f:
+        f.write(toks32.tobytes())
+    with open(os.path.join(outdir, "golden_logits.bin"), "wb") as f:
+        f.write(logits.tobytes())
+    with open(os.path.join(outdir, "golden_labels.bin"), "wb") as f:
+        f.write(eval_ys[:eval_n].astype("u1").tobytes())
+
+    with open(os.path.join(outdir, "golden_tables.json"), "w") as f:
+        json.dump(golden_fixture(), f, indent=1, sort_keys=True)
+
+    entry = export_bundle(qm, os.path.join(outdir, "tinyvit_bundle.json"))
+    manifest = {
+        "artifacts": {},
+        "bundles": {"tinyvit_bundle": entry},
+        "eval_set": {
+            "tokens": "golden_tokens.bin",
+            "labels": "golden_labels.bin",
+            "count": eval_n,
+            "shape": [eval_n, cfg.tokens, cfg.patch_dim],
+        },
+        "golden": {
+            "tokens": "golden_tokens.bin",
+            "logits": "golden_logits.bin",
+            "labels": "golden_labels.bin",
+            "count": eval_n,
+            "quant_acc": acc,
+            "float_acc": float_acc,
+        },
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../rust/artifacts/golden")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--eval-n", type=int, default=64)
+    ap.add_argument("--params-cache", default=None)
+    args = ap.parse_args()
+    qm, float_acc = golden_model(args.train_steps, args.params_cache)
+    m = emit_golden(args.out, qm, eval_n=args.eval_n, float_acc=float_acc)
+    g = m["golden"]
+    print(f"golden fixture in {args.out}: {g['count']} images, "
+          f"quantized acc {g['quant_acc']:.4f} (float {float_acc})")
+
+
+if __name__ == "__main__":
+    main()

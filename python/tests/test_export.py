@@ -1,0 +1,63 @@
+"""Tests for the interpreter-bundle exporter (compile/export.py)."""
+
+import json
+import struct
+
+import numpy as np
+import pytest
+
+from compile import export, model as M
+
+
+@pytest.fixture(scope="module")
+def qm():
+    # untrained fixed-seed model: bundle structure and bit-exactness of the
+    # emission pipeline do not depend on trained weights
+    qm, _ = export.golden_model(train_steps=0)
+    return qm
+
+
+def test_bundle_has_full_weight_and_lut_set(qm):
+    d = export.bundle_dict(qm)
+    cfg = qm.cfg
+    assert d["format"] == export.BUNDLE_FORMAT
+    assert d["model"] == "tiny-synth"
+    w = d["weights"]
+    assert len(w["pe_w"]) == cfg.patch_dim * cfg.dim
+    assert len(w["head_w"]) == cfg.dim * cfg.num_classes
+    for i in range(cfg.depth):
+        assert len(w[f"b{i}.qkv_w"]) == cfg.dim * 3 * cfg.dim
+        assert len(w[f"b{i}.mm1_w"]) == cfg.dim * cfg.hidden
+        assert len(w[f"b{i}.mm2_b"]) == cfg.dim
+        for lut in ("ln1.rsqrt", "ln1.rq", "qkv", "attn.exp", "attn.recip",
+                    "attn.prob", "rv", "proj", "ln2.rsqrt", "ln2.rq", "gelu", "mm2"):
+            assert f"b{i}.{lut}" in d["luts"], f"b{i}.{lut}"
+    assert "pe" in d["luts"] and "ln_f.rsqrt" in d["luts"] and "ln_f.rq" in d["luts"]
+    assert len(d["head"]["bias"]) == cfg.num_classes
+    assert {"ln_f", "b0.ln1", "b0.ln2"} <= set(d["guards"])
+
+
+def test_bundle_floats_survive_json_roundtrip(qm):
+    d = export.bundle_dict(qm)
+    back = json.loads(json.dumps(d))
+    assert back["input"]["scale"] == d["input"]["scale"]
+    assert back["head"]["logit_scale"] == d["head"]["logit_scale"]
+    assert back["head"]["bias"] == d["head"]["bias"]
+
+
+def test_emit_golden_is_self_consistent(qm, tmp_path):
+    """The emitted logits must equal a fresh forward over the emitted
+    f32 tokens — the exact contract the rust interpreter test relies on."""
+    m = export.emit_golden(str(tmp_path), qm, eval_n=4)
+    cfg = qm.cfg
+    per = cfg.tokens * cfg.patch_dim
+    raw = (tmp_path / "golden_tokens.bin").read_bytes()
+    toks = np.array(struct.unpack(f"<{4 * per}f", raw), dtype=np.float64)
+    toks = toks.reshape(4, cfg.tokens, cfg.patch_dim)
+    x_q = qm.input_q.quantize(toks)
+    logits = np.asarray(M.forward_int_np(qm, x_q), dtype="<f8")
+    assert (tmp_path / "golden_logits.bin").read_bytes() == logits.tobytes()
+    entry = m["bundles"]["tinyvit_bundle"]
+    assert entry["batches"] == export.BUNDLE_BATCHES
+    assert entry["input"] == [cfg.tokens, cfg.patch_dim]
+    assert m["eval_set"]["shape"] == [4, cfg.tokens, cfg.patch_dim]

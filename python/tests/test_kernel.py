@@ -7,6 +7,8 @@ Hypothesis sweeps shapes, tilings, value ranges, and table geometries.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

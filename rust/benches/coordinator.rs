@@ -22,12 +22,11 @@ fn main() {
     println!("{r}");
 
     // end-to-end serving throughput on the real artifact
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("(artifacts missing — run `make artifacts` for the serving bench)");
+    let Some(dir) = Manifest::discover() else {
+        println!("(no artifacts found — run `make artifacts` for the serving bench)");
         return;
-    }
-    let manifest = Manifest::load(dir).expect("manifest");
+    };
+    let manifest = Manifest::load(&dir).expect("manifest");
     let server = ModelServer::start(&manifest, "tiny-synth", 2).expect("server");
     let n_tok = server.tokens_per_image();
     let mut rng = Prng::new(3);

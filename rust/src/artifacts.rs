@@ -22,44 +22,98 @@ impl ArtifactInfo {
     }
 }
 
+/// One interpreter-backend model bundle (weights + LUTs as JSON,
+/// exported by `python -m compile.export`).
+#[derive(Debug, Clone)]
+pub struct BundleInfo {
+    pub name: String,
+    pub path: PathBuf,
+    pub model: String,
+    pub precision: String,
+    /// Per-image token shape `[tokens, patch_dim]`.
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    /// Batch variants the dynamic batcher may dispatch.
+    pub batches: Vec<usize>,
+}
+
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub dir: PathBuf,
     pub artifacts: Vec<ArtifactInfo>,
+    pub bundles: Vec<BundleInfo>,
+}
+
+/// Extract a usize array field (`"input": [16, 192]`), empty if absent.
+fn usize_arr(info: &Json, key: &str) -> Vec<usize> {
+    info.get(key)
+        .and_then(|s| s.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|x| x as usize).collect())
+        .unwrap_or_default()
+}
+
+fn str_field(info: &Json, key: &str) -> String {
+    info.get(key).and_then(|m| m.as_str()).unwrap_or("?").to_string()
 }
 
 impl Manifest {
+    /// Search the conventional artifact locations relative to the cwd: a
+    /// full `make artifacts` output first, then the committed golden
+    /// fixture — from either the workspace root or the rust/ package dir.
+    pub fn discover() -> Option<PathBuf> {
+        ["artifacts", "rust/artifacts", "artifacts/golden", "rust/artifacts/golden"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|d| d.join("manifest.json").exists())
+    }
+
     pub fn load(dir: &Path) -> crate::Result<Self> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
-        let arts = v
-            .get("artifacts")
-            .and_then(|a| a.as_obj())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
         let mut artifacts = Vec::new();
-        for (name, info) in arts {
-            let shape = |key: &str| -> Vec<usize> {
-                info.get(key)
-                    .and_then(|s| s.as_arr())
-                    .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|x| x as usize).collect())
-                    .unwrap_or_default()
-            };
-            artifacts.push(ArtifactInfo {
-                name: name.clone(),
-                path: dir.join(info.get("path").and_then(|p| p.as_str()).unwrap_or(name)),
-                input_shape: shape("input"),
-                output_shape: shape("output"),
-                model: info.get("model").and_then(|m| m.as_str()).unwrap_or("?").to_string(),
-                precision: info.get("precision").and_then(|m| m.as_str()).unwrap_or("?").to_string(),
-            });
+        if let Some(arts) = v.get("artifacts").and_then(|a| a.as_obj()) {
+            for (name, info) in arts {
+                artifacts.push(ArtifactInfo {
+                    name: name.clone(),
+                    path: dir.join(info.get("path").and_then(|p| p.as_str()).unwrap_or(name)),
+                    input_shape: usize_arr(info, "input"),
+                    output_shape: usize_arr(info, "output"),
+                    model: str_field(info, "model"),
+                    precision: str_field(info, "precision"),
+                });
+            }
         }
         artifacts.sort_by(|a, b| a.name.cmp(&b.name));
-        Ok(Self { dir: dir.to_path_buf(), artifacts })
+        let mut bundles = Vec::new();
+        if let Some(bs) = v.get("bundles").and_then(|b| b.as_obj()) {
+            for (name, info) in bs {
+                bundles.push(BundleInfo {
+                    name: name.clone(),
+                    path: dir.join(info.get("path").and_then(|p| p.as_str()).unwrap_or(name)),
+                    model: str_field(info, "model"),
+                    precision: str_field(info, "precision"),
+                    input_shape: usize_arr(info, "input"),
+                    num_classes: usize_arr(info, "output").first().copied().unwrap_or(0),
+                    batches: usize_arr(info, "batches"),
+                });
+            }
+        }
+        bundles.sort_by(|a, b| a.name.cmp(&b.name));
+        anyhow::ensure!(
+            !artifacts.is_empty() || !bundles.is_empty(),
+            "manifest has neither 'artifacts' nor 'bundles'"
+        );
+        Ok(Self { dir: dir.to_path_buf(), artifacts, bundles })
     }
 
     pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
         self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The interpreter bundle serving `model`, if any.
+    pub fn bundle_for(&self, model: &str) -> Option<&BundleInfo> {
+        self.bundles.iter().find(|b| b.model == model)
     }
 
     /// All batch variants of a model, smallest batch first.
@@ -88,6 +142,34 @@ mod tests {
             }, "models": {}}"#,
         )
         .unwrap();
+    }
+
+    #[test]
+    fn bundles_only_manifest_loads() {
+        let dir = std::env::temp_dir().join("hgpipe_manifest_bundle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"bundles": {"tv": {"path": "tv.json", "model": "tiny-synth",
+                "precision": "a4w4", "input": [16, 192], "output": [10],
+                "batches": [1, 8]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.is_empty());
+        let b = m.bundle_for("tiny-synth").unwrap();
+        assert_eq!(b.input_shape, vec![16, 192]);
+        assert_eq!(b.num_classes, 10);
+        assert_eq!(b.batches, vec![1, 8]);
+        assert!(m.bundle_for("no-such").is_none());
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        let dir = std::env::temp_dir().join("hgpipe_manifest_empty_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"models": {}}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
     }
 
     #[test]

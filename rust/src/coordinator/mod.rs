@@ -1,8 +1,12 @@
-//! L3 serving coordinator: request queue → dynamic batcher → PJRT
+//! L3 serving coordinator: request queue → dynamic batcher → backend
 //! executor, with per-request latency accounting. Thread-based (this
 //! offline environment has no tokio); the executor thread plays the role
-//! of the accelerator's DMA feeder, the AOT executable plays the
-//! fully-pipelined fabric.
+//! of the accelerator's DMA feeder, the backend (interpreter or PJRT)
+//! plays the fully-pipelined fabric.
+//!
+//! The coordinator is generic over the execution backend via
+//! [`crate::runtime::BackendKind`]: `ModelServer::start` uses the default
+//! (pure-rust interpreter); `start_with_backend` selects explicitly.
 
 pub mod batcher;
 pub mod metrics;
@@ -13,7 +17,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::artifacts::Manifest;
-use crate::runtime::{Engine, Executable};
+use crate::runtime::{self, BackendKind, Executor};
 use batcher::BatchPolicy;
 use metrics::ServeMetrics;
 
@@ -44,59 +48,69 @@ pub struct ModelServer {
     worker: Option<std::thread::JoinHandle<()>>,
     tokens_per_image: usize,
     num_classes: usize,
+    compile_ms: f64,
 }
 
 impl ModelServer {
-    /// Spin up the executor thread for a model's batch variants.
-    ///
-    /// The PJRT client and executables are created *inside* the executor
-    /// thread: the `xla` crate's handles are not `Send` (Rc-based), so the
-    /// thread owns the whole runtime — which also mirrors the hardware:
-    /// one fabric, one feeder.
+    /// Spin up the executor thread on the default backend (the pure-rust
+    /// interpreter).
     pub fn start(manifest: &Manifest, model: &str, policy_wait_ms: u64) -> crate::Result<Self> {
-        let variants: Vec<crate::artifacts::ArtifactInfo> =
-            manifest.variants(model).into_iter().cloned().collect();
-        anyhow::ensure!(!variants.is_empty(), "no artifacts for model '{model}'");
-        let tokens_per_image: usize = variants[0].input_shape[1..].iter().product();
-        let num_classes = *variants[0].output_shape.last().unwrap();
+        Self::start_with_backend(manifest, model, policy_wait_ms, BackendKind::default())
+    }
 
+    /// Spin up the executor thread for a model's batch variants on the
+    /// chosen backend.
+    ///
+    /// The backend's executors are created *inside* the executor thread:
+    /// the PJRT `xla` handles are not `Send` (Rc-based), so the thread
+    /// owns the whole runtime — which also mirrors the hardware: one
+    /// fabric, one feeder.
+    pub fn start_with_backend(
+        manifest: &Manifest,
+        model: &str,
+        policy_wait_ms: u64,
+        backend: BackendKind,
+    ) -> crate::Result<Self> {
+        let manifest = manifest.clone();
+        let model_name = model.to_string();
         let (tx, rx) = channel::<Request>();
-        let (init_tx, init_rx) = channel::<Result<f64, String>>();
+        let (init_tx, init_rx) = channel::<Result<(usize, usize, f64), String>>();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let stop = Arc::new(AtomicBool::new(false));
         let m2 = metrics.clone();
         let s2 = stop.clone();
         let wait = std::time::Duration::from_millis(policy_wait_ms);
         let worker = std::thread::spawn(move || {
-            // compile all variants up front (the paper's bitstream load)
-            let init = (|| -> crate::Result<(Vec<(usize, Arc<Executable>)>, f64)> {
-                let engine = Engine::cpu()?;
-                let mut executables = Vec::new();
-                let mut compile_ms = 0.0;
-                for v in &variants {
-                    let e = engine.load(v)?;
-                    compile_ms += e.compile_ms;
-                    executables.push((v.batch(), e));
-                }
-                Ok((executables, compile_ms))
-            })();
-            match init {
+            // load/compile all variants up front (the paper's bitstream load)
+            match runtime::load_model(backend, &manifest, &model_name) {
                 Err(e) => {
                     let _ = init_tx.send(Err(format!("{e:#}")));
                 }
-                Ok((executables, compile_ms)) => {
-                    let _ = init_tx.send(Ok(compile_ms));
+                Ok(loaded) => {
+                    let _ = init_tx.send(Ok((
+                        loaded.tokens_per_image,
+                        loaded.num_classes,
+                        loaded.compile_ms,
+                    )));
                     let policy =
-                        BatchPolicy::new(executables.iter().map(|(b, _)| *b).collect(), wait);
-                    executor_loop(rx, executables, policy, tokens_per_image, num_classes, m2, s2);
+                        BatchPolicy::new(loaded.executors.iter().map(|e| e.batch()).collect(), wait);
+                    executor_loop(
+                        rx,
+                        loaded.executors,
+                        policy,
+                        loaded.tokens_per_image,
+                        loaded.num_classes,
+                        m2,
+                        s2,
+                    );
                 }
             }
         });
-        match init_rx.recv() {
-            Ok(Ok(_compile_ms)) => {}
+        let (tokens_per_image, num_classes, compile_ms) = match init_rx.recv() {
+            Ok(Ok(shape)) => shape,
             Ok(Err(e)) => return Err(anyhow::anyhow!("model '{model}' failed to load: {e}")),
             Err(_) => return Err(anyhow::anyhow!("executor thread died during init")),
-        }
+        };
 
         Ok(Self {
             name: model.to_string(),
@@ -107,6 +121,7 @@ impl ModelServer {
             worker: Some(worker),
             tokens_per_image,
             num_classes,
+            compile_ms,
         })
     }
 
@@ -120,6 +135,12 @@ impl ModelServer {
 
     pub fn num_classes(&self) -> usize {
         self.num_classes
+    }
+
+    /// Backend load/compile time for all batch variants (the "bitstream
+    /// load" the paper amortizes once per deployment).
+    pub fn compile_ms(&self) -> f64 {
+        self.compile_ms
     }
 
     /// Submit one image; returns the reply channel.
@@ -162,7 +183,7 @@ impl Drop for ModelServer {
 
 fn executor_loop(
     rx: Receiver<Request>,
-    executables: Vec<(usize, Arc<Executable>)>,
+    executables: Vec<Box<dyn Executor>>,
     policy: BatchPolicy,
     tokens_per_image: usize,
     num_classes: usize,
@@ -191,9 +212,9 @@ fn executor_loop(
             std::thread::sleep(std::time::Duration::from_micros(100));
             continue;
         };
-        let (_, exe) = executables
+        let exe = executables
             .iter()
-            .find(|(b, _)| *b == batch)
+            .find(|e| e.batch() == batch)
             .expect("policy only returns available variants");
 
         // the queue may be smaller than the chosen variant (head-of-line
@@ -205,8 +226,12 @@ fn executor_loop(
         for (i, r) in reqs.iter().enumerate() {
             input[i * tokens_per_image..(i + 1) * tokens_per_image].copy_from_slice(&r.tokens);
         }
-        let queue_ms =
-            reqs.iter().map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3).sum::<f64>() / batch as f64;
+        // per-image attribution divides by the number of REAL images in
+        // the dispatch, not the variant width: zero-padded lanes are
+        // serving overhead, and dividing by `batch` understated both the
+        // queue wait and the execution cost whenever lanes were padded
+        let queue_ms = reqs.iter().map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3).sum::<f64>()
+            / reqs.len() as f64;
         let t0 = Instant::now();
         let out = match exe.run_f32(&input) {
             Ok(o) => o,
@@ -216,6 +241,7 @@ fn executor_loop(
             }
         };
         let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let per_image_exec_ms = exec_ms / reqs.len() as f64;
 
         {
             let mut m = metrics.lock().unwrap();
@@ -224,7 +250,7 @@ fn executor_loop(
             }
             m.finished = Some(Instant::now());
             for r in &reqs {
-                m.record(r.enqueued.elapsed(), batch, exec_ms / batch as f64, queue_ms);
+                m.record(r.enqueued.elapsed(), batch, per_image_exec_ms, queue_ms);
             }
         }
         for (i, r) in reqs.into_iter().enumerate() {

@@ -15,13 +15,22 @@
 //! * [`paradigms`] — temporal / coarse / fine / hybrid baselines (Fig. 2),
 //! * [`roofline`] — the Fig. 1 roofline model,
 //! * [`metrics`] / [`report`] — Table 2 & figure regeneration,
-//! * [`runtime`] — PJRT execution of the AOT-compiled quantized ViT
-//!   (`artifacts/*.hlo.txt`, produced by `python/compile/aot.py`),
+//! * [`runtime`] — pluggable execution backends for the quantized ViT,
 //! * [`coordinator`] — the serving loop: request router, dynamic batcher,
-//!   pipelined execution with per-stage metrics.
+//!   pipelined execution with per-stage metrics, generic over the backend.
 //!
-//! Python never runs on the request path: `make artifacts` runs once, and
-//! the `hgpipe` binary is self-contained afterwards.
+//! ## Execution backend matrix
+//!
+//! | backend | build | model source | notes |
+//! |---|---|---|---|
+//! | `runtime::interpreter` | default | weight/LUT bundle JSON (`python -m compile.export`) | pure rust, zero native deps; bit-exact with the python integer reference; the committed golden fixture in `rust/artifacts/` makes `cargo test` self-contained |
+//! | `runtime::pjrt` | `--features pjrt` | HLO text (`python/compile/aot.py`, via `make artifacts`) | XLA CPU client; the `xla` dependency resolves to the in-repo stub (`rust/xla-stub`) which type-checks the integration — swap in a real binding to execute |
+//!
+//! Python never runs on the request path: the build pipeline (`make
+//! artifacts` for the full set, `make golden` for the interpreter
+//! fixture) runs once, and the `hgpipe` binary is self-contained
+//! afterwards — `hgpipe serve`/`eval` work out of a clean checkout on the
+//! interpreter backend.
 
 pub mod arch;
 pub mod artifacts;

@@ -15,6 +15,7 @@ use hgpipe::arch::parallelism::design_network;
 use hgpipe::artifacts::Manifest;
 use hgpipe::coordinator::ModelServer;
 use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::runtime::BackendKind;
 use hgpipe::sim::{self, builder::Paradigm, SimConfig};
 use hgpipe::util::prng::Prng;
 use hgpipe::{report, Result};
@@ -71,7 +72,14 @@ impl Args {
     }
 
     fn artifacts_dir(&self) -> PathBuf {
-        PathBuf::from(self.flag("artifacts", "artifacts"))
+        if let Some(dir) = self.flags.get("artifacts") {
+            return PathBuf::from(dir);
+        }
+        Manifest::discover().unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    fn backend(&self) -> Result<BackendKind> {
+        BackendKind::parse(&self.flag("backend", "interpreter"))
     }
 }
 
@@ -119,12 +127,16 @@ COMMANDS:
   simulate                 cycle-accurate sim  [--network N] [--precision P]
                            [--paradigm hybrid|coarse|fine] [--images N] [--gantt]
   fifo-search              minimal deadlock-free deep-FIFO depth [--network N]
-  serve                    serve synthetic requests through the AOT model
-                           [--model deit-tiny] [--requests N] [--rate R/s]
-                           [--artifacts DIR]
-  eval                     eval-batch accuracy of an AOT model
+  serve                    serve synthetic requests through the quantized model
+                           [--model tiny-synth] [--requests N] [--rate R/s]
+                           [--artifacts DIR] [--backend interpreter|pjrt]
+  eval                     eval-batch accuracy of a quantized model
                            [--model tiny-synth] [--artifacts DIR]
+                           [--backend interpreter|pjrt]
   artifacts                list the artifact manifest [--artifacts DIR]
+
+The default backend is the pure-rust interpreter (runs from the bundle
+JSON in the artifacts dir); `--backend pjrt` needs `--features pjrt`.
 ";
 
 fn cmd_report(args: &Args) -> Result<()> {
@@ -240,16 +252,19 @@ fn cmd_fifo_search(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
-    let model = args.flag("model", "deit-tiny");
+    let model = args.flag("model", "tiny-synth");
+    let backend = args.backend()?;
     let requests: usize = args.flag("requests", "64").parse()?;
     let rate: f64 = args.flag("rate", "0").parse()?; // 0 = closed loop
     let manifest = Manifest::load(&dir)?;
-    let server = ModelServer::start(&manifest, &model, 2)?;
+    let server = ModelServer::start_with_backend(&manifest, &model, 2, backend)?;
     println!(
-        "serving '{}' ({} token values/img, {} classes)",
+        "serving '{}' on {} backend ({} token values/img, {} classes, loaded in {:.0} ms)",
         model,
+        backend.label(),
         server.tokens_per_image(),
-        server.num_classes()
+        server.num_classes(),
+        server.compile_ms()
     );
 
     let mut rng = Prng::new(7);
@@ -286,9 +301,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
     let model = args.flag("model", "tiny-synth");
+    let backend = args.backend()?;
     let manifest = Manifest::load(&dir)?;
     let (tokens, labels, shape) = load_eval_set(&dir)?;
-    let server = ModelServer::start(&manifest, &model, 1)?;
+    let server = ModelServer::start_with_backend(&manifest, &model, 1, backend)?;
     anyhow::ensure!(
         server.tokens_per_image() == shape[1] * shape[2],
         "eval set shape {:?} does not match model '{}'",
@@ -343,7 +359,7 @@ fn load_eval_set(dir: &std::path::Path) -> Result<(Vec<f32>, Vec<u8>, [usize; 3]
 
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts_dir())?;
-    println!("{:<28} {:<12} {:<8} {:<18} {:<12}", "artifact", "model", "prec", "input", "output");
+    println!("{:<28} {:<12} {:<8} {:<18} {:<12}", "artifact (pjrt)", "model", "prec", "input", "output");
     for a in &manifest.artifacts {
         println!(
             "{:<28} {:<12} {:<8} {:<18} {:<12}",
@@ -352,6 +368,20 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
             a.precision,
             format!("{:?}", a.input_shape),
             format!("{:?}", a.output_shape)
+        );
+    }
+    println!(
+        "\n{:<28} {:<12} {:<8} {:<18} {:<12}",
+        "bundle (interpreter)", "model", "prec", "tokens/img", "batches"
+    );
+    for b in &manifest.bundles {
+        println!(
+            "{:<28} {:<12} {:<8} {:<18} {:<12}",
+            b.name,
+            b.model,
+            b.precision,
+            format!("{:?}", b.input_shape),
+            format!("{:?}", b.batches)
         );
     }
     Ok(())

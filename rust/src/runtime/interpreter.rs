@@ -1,0 +1,592 @@
+//! Pure-rust interpreter backend: execute the quantized ViT directly
+//! from its weight/LUT *bundle* (`python -m compile.export`).
+//!
+//! This is the default execution engine — no XLA, no HLO, no native
+//! libraries. It mirrors, **bit-exactly**, the integer semantics of
+//! `python/compile/kernels/ref.py` / `model.LutExec` (the accelerator's
+//! canonical dataflow): i64 output-stationary matmul accumulation,
+//! PoT-indexed LUT non-linears, three-pass integer LayerNorm, inverted-Exp
+//! + segmented-Recip Softmax. Where the numpy reference narrows to int32
+//! (`LutExec._i32`: every LUT input, attention scores, the residual
+//! stream), this interpreter performs the same wrapping cast, so even
+//! out-of-range corner cases agree with the python oracle; the golden
+//! fixture in `rust/artifacts/` pins that equality logit-for-logit.
+//!
+//! Throughput is modest (a few images/s on the tiny-synth model in debug
+//! builds) — the point is a dependency-free, provably-correct serving
+//! path; the PJRT backend and future native kernels are the fast paths.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::artifacts::{BundleInfo, Manifest};
+use crate::lut::{AnyTable, LutTable, SegmentedTable};
+use crate::runtime::{ExecStats, Executor, LoadedModel};
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// integer LUT application — the rust twin of model.LutExec._lut / _seg
+// ---------------------------------------------------------------------------
+
+/// `LutExec._lut`: int32-domain PoT-indexed lookup.
+#[inline]
+fn lut_i32(t: &LutTable, x: i32) -> i32 {
+    let alpha = t.alpha as i32;
+    let diff = if t.inverted { alpha.wrapping_sub(x) } else { x.wrapping_sub(alpha) };
+    let raw = diff >> t.shift;
+    let hi = (1i32 << t.n_bits) - 1;
+    t.entries[raw.clamp(0, hi) as usize] as i32
+}
+
+/// `LutExec._seg`: segmented lookup in the common (flat) output scale.
+#[inline]
+fn seg_i32(s: &SegmentedTable, x: i32) -> i32 {
+    if x < s.pivot as i32 {
+        lut_i32(&s.steep, x).wrapping_shl(s.ratio_log2())
+    } else {
+        lut_i32(&s.flat, x)
+    }
+}
+
+#[inline]
+fn any_i32(t: &AnyTable, x: i32) -> i32 {
+    match t {
+        AnyTable::Lut(l) => lut_i32(l, x),
+        AnyTable::Segmented(s) => seg_i32(s, x),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the model bundle
+// ---------------------------------------------------------------------------
+
+/// One encoder block's integer parameters + tables.
+struct BlockParams {
+    qkv_w: Vec<i32>,
+    qkv_b: Vec<i64>,
+    proj_w: Vec<i32>,
+    proj_b: Vec<i64>,
+    mm1_w: Vec<i32>,
+    mm1_b: Vec<i64>,
+    mm2_w: Vec<i32>,
+    mm2_b: Vec<i64>,
+    ln1_guard: u32,
+    ln2_guard: u32,
+    ln1_rsqrt: LutTable,
+    ln1_rq: LutTable,
+    qkv_rq: LutTable,
+    exp: LutTable,
+    recip: AnyTable,
+    prob: LutTable,
+    rv_rq: LutTable,
+    proj_rq: LutTable,
+    ln2_rsqrt: LutTable,
+    ln2_rq: LutTable,
+    gelu: LutTable,
+    mm2_rq: LutTable,
+}
+
+/// A fully-loaded quantized ViT, ready to execute.
+pub struct QuantViT {
+    pub model: String,
+    pub precision: String,
+    pub tokens: usize,
+    pub patch_dim: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub hidden: usize,
+    pub num_classes: usize,
+    in_scale: f64,
+    in_qmin: i64,
+    in_qmax: i64,
+    logit_scale: f64,
+    /// Head bias: float32 values widened to f64 (numpy adds them in f64).
+    head_bias: Vec<f64>,
+    pe_w: Vec<i32>,
+    pe_b: Vec<i64>,
+    pe_rq: LutTable,
+    blocks: Vec<BlockParams>,
+    ln_f_guard: u32,
+    ln_f_rsqrt: LutTable,
+    ln_f_rq: LutTable,
+    head_w: Vec<i32>,
+}
+
+fn ints_i32(v: &Json, key: &str, expect: usize) -> crate::Result<Vec<i32>> {
+    let arr = v
+        .req(key)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bundle '{key}' is not an array"))?;
+    anyhow::ensure!(arr.len() == expect, "bundle '{key}': {} values, expected {expect}", arr.len());
+    arr.iter()
+        .map(|x| x.as_i64().map(|v| v as i32).ok_or_else(|| anyhow::anyhow!("bad int in '{key}'")))
+        .collect()
+}
+
+fn ints_i64(v: &Json, key: &str, expect: usize) -> crate::Result<Vec<i64>> {
+    let arr = v
+        .req(key)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bundle '{key}' is not an array"))?;
+    anyhow::ensure!(arr.len() == expect, "bundle '{key}': {} values, expected {expect}", arr.len());
+    arr.iter()
+        .map(|x| x.as_i64().ok_or_else(|| anyhow::anyhow!("bad int in '{key}'")))
+        .collect()
+}
+
+fn usize_field(v: &Json, key: &str) -> crate::Result<usize> {
+    v.req(key)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .as_i64()
+        .map(|x| x as usize)
+        .ok_or_else(|| anyhow::anyhow!("bundle '{key}' is not an integer"))
+}
+
+impl QuantViT {
+    /// Parse a bundle JSON written by `compile/export.py`.
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("bundle {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("bundle parse: {e}"))?;
+        let format = v.get("format").and_then(|f| f.as_str()).unwrap_or("?");
+        anyhow::ensure!(format == "hgpipe-bundle-v1", "unsupported bundle format '{format}'");
+
+        let cfg = v.req("cfg").map_err(|e| anyhow::anyhow!(e))?;
+        let tokens = usize_field(cfg, "tokens")?;
+        let patch_dim = usize_field(cfg, "patch_dim")?;
+        let dim = usize_field(cfg, "dim")?;
+        let depth = usize_field(cfg, "depth")?;
+        let heads = usize_field(cfg, "heads")?;
+        let hidden = usize_field(cfg, "hidden")?;
+        let num_classes = usize_field(cfg, "num_classes")?;
+        anyhow::ensure!(heads > 0 && dim % heads == 0, "dim {dim} not divisible by heads {heads}");
+
+        let input = v.req("input").map_err(|e| anyhow::anyhow!(e))?;
+        let head = v.req("head").map_err(|e| anyhow::anyhow!(e))?;
+        let weights = v.req("weights").map_err(|e| anyhow::anyhow!(e))?;
+        let guards = v.req("guards").map_err(|e| anyhow::anyhow!(e))?;
+        let luts = v
+            .req("luts")
+            .map_err(|e| anyhow::anyhow!(e))?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("bundle 'luts' is not an object"))?;
+
+        // validate at load time what lut_i32 will index at run time, so a
+        // malformed bundle is a load error, not an executor-thread panic
+        fn check(t: &LutTable) -> crate::Result<()> {
+            let depth = 1usize << t.n_bits;
+            anyhow::ensure!(
+                t.entries.len() == depth,
+                "lut '{}': {} entries, expected {depth}",
+                t.name,
+                t.entries.len()
+            );
+            anyhow::ensure!(t.shift < 32, "lut '{}': shift {} out of i32 range", t.name, t.shift);
+            Ok(())
+        }
+        let table = |name: &str| -> crate::Result<AnyTable> {
+            let t = luts.get(name).ok_or_else(|| anyhow::anyhow!("bundle missing lut '{name}'"))?;
+            let t = AnyTable::from_json(t).map_err(|e| anyhow::anyhow!("lut '{name}': {e}"))?;
+            match &t {
+                AnyTable::Lut(l) => check(l)?,
+                AnyTable::Segmented(s) => {
+                    check(&s.steep)?;
+                    check(&s.flat)?;
+                }
+            }
+            Ok(t)
+        };
+        let plain = |name: &str| -> crate::Result<LutTable> {
+            match table(name)? {
+                AnyTable::Lut(t) => Ok(t),
+                AnyTable::Segmented(_) => anyhow::bail!("lut '{name}': expected plain table"),
+            }
+        };
+        let guard = |name: &str| -> crate::Result<u32> {
+            guards
+                .get(name)
+                .and_then(|g| g.as_i64())
+                .map(|g| g as u32)
+                .ok_or_else(|| anyhow::anyhow!("bundle missing guard '{name}'"))
+        };
+
+        let mut blocks = Vec::with_capacity(depth);
+        for i in 0..depth {
+            let p = |n: &str| format!("b{i}.{n}");
+            blocks.push(BlockParams {
+                qkv_w: ints_i32(weights, &p("qkv_w"), dim * 3 * dim)?,
+                qkv_b: ints_i64(weights, &p("qkv_b"), 3 * dim)?,
+                proj_w: ints_i32(weights, &p("proj_w"), dim * dim)?,
+                proj_b: ints_i64(weights, &p("proj_b"), dim)?,
+                mm1_w: ints_i32(weights, &p("mm1_w"), dim * hidden)?,
+                mm1_b: ints_i64(weights, &p("mm1_b"), hidden)?,
+                mm2_w: ints_i32(weights, &p("mm2_w"), hidden * dim)?,
+                mm2_b: ints_i64(weights, &p("mm2_b"), dim)?,
+                ln1_guard: guard(&p("ln1"))?,
+                ln2_guard: guard(&p("ln2"))?,
+                ln1_rsqrt: plain(&p("ln1.rsqrt"))?,
+                ln1_rq: plain(&p("ln1.rq"))?,
+                qkv_rq: plain(&p("qkv"))?,
+                exp: plain(&p("attn.exp"))?,
+                recip: table(&p("attn.recip"))?,
+                prob: plain(&p("attn.prob"))?,
+                rv_rq: plain(&p("rv"))?,
+                proj_rq: plain(&p("proj"))?,
+                ln2_rsqrt: plain(&p("ln2.rsqrt"))?,
+                ln2_rq: plain(&p("ln2.rq"))?,
+                gelu: plain(&p("gelu"))?,
+                mm2_rq: plain(&p("mm2"))?,
+            });
+        }
+
+        let bias_f64 = head
+            .req("bias")
+            .map_err(|e| anyhow::anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("head bias not an array"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("bad head bias")))
+            .collect::<crate::Result<Vec<f64>>>()?;
+        anyhow::ensure!(bias_f64.len() == num_classes, "head bias length mismatch");
+
+        Ok(Self {
+            model: v.get("model").and_then(|m| m.as_str()).unwrap_or("?").to_string(),
+            precision: v.get("precision").and_then(|m| m.as_str()).unwrap_or("?").to_string(),
+            tokens,
+            patch_dim,
+            dim,
+            depth,
+            heads,
+            hidden,
+            num_classes,
+            in_scale: input
+                .req("scale")
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("input scale"))?,
+            in_qmin: input
+                .req("qmin")
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_i64()
+                .ok_or_else(|| anyhow::anyhow!("input qmin"))?,
+            in_qmax: input
+                .req("qmax")
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_i64()
+                .ok_or_else(|| anyhow::anyhow!("input qmax"))?,
+            logit_scale: head
+                .req("logit_scale")
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("logit scale"))?,
+            head_bias: bias_f64,
+            pe_w: ints_i32(weights, "pe_w", patch_dim * dim)?,
+            pe_b: ints_i64(weights, "pe_b", dim)?,
+            pe_rq: plain("pe")?,
+            blocks,
+            ln_f_guard: guard("ln_f")?,
+            ln_f_rsqrt: plain("ln_f.rsqrt")?,
+            ln_f_rq: plain("ln_f.rq")?,
+            head_w: ints_i32(weights, "head_w", dim * num_classes)?,
+        })
+    }
+
+    pub fn tokens_per_image(&self) -> usize {
+        self.tokens * self.patch_dim
+    }
+
+    /// Input quantization — `QuantParams.quantize` (round half away from
+    /// zero, computed in f64 exactly as numpy does over the f32 tokens).
+    #[inline]
+    fn quantize_in(&self, x: f32) -> i32 {
+        let xf = x as f64;
+        let q = if xf < 0.0 {
+            -((-xf / self.in_scale + 0.5).floor())
+        } else {
+            (xf / self.in_scale + 0.5).floor()
+        };
+        (q as i64).clamp(self.in_qmin, self.in_qmax) as i32
+    }
+
+    /// Exact i64 output-stationary matmul + bias: `acc = x @ w + b`,
+    /// x (t, ci) i32 row-major, w (ci, co) i32 row-major.
+    fn matmul_bias(x: &[i32], t: usize, ci: usize, w: &[i32], co: usize, bias: &[i64]) -> Vec<i64> {
+        let mut out = vec![0i64; t * co];
+        for r in 0..t {
+            let orow = &mut out[r * co..(r + 1) * co];
+            orow.copy_from_slice(bias);
+            for k in 0..ci {
+                let xv = x[r * ci + k] as i64;
+                if xv != 0 {
+                    let wrow = &w[k * co..(k + 1) * co];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xv * wv as i64;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Integer LayerNorm (`LutExec.layernorm`): three passes per token.
+    fn layernorm(&self, x: &[i32], guard: u32, rsqrt: &LutTable, rq: &LutTable) -> Vec<i32> {
+        let d = self.dim;
+        let mut out = Vec::with_capacity(x.len());
+        let mut c = vec![0i64; d];
+        for row in x.chunks_exact(d) {
+            let s: i64 = row.iter().map(|&v| v as i64).sum();
+            let mut v: i64 = 0;
+            for (cj, &xv) in c.iter_mut().zip(row) {
+                // numpy: `ci * x` runs in int32 (wrapping) before the
+                // int64 subtraction widens it
+                *cj = (d as i32).wrapping_mul(xv) as i64 - s;
+                let cg = *cj >> guard;
+                v += cg * cg;
+            }
+            let r = lut_i32(rsqrt, v as i32) as i64;
+            for &cj in &c {
+                out.push(lut_i32(rq, (cj * r) as i32));
+            }
+        }
+        out
+    }
+
+    /// Integer Softmax over one score row (`LutExec.softmax`): max-
+    /// subtract, inverted Exp LUT, (segmented) Recip, prob ReQuant.
+    fn softmax_row(&self, blk: &BlockParams, scores: &[i64], probs: &mut [i32]) {
+        let sc: Vec<i32> = scores.iter().map(|&a| a as i32).collect();
+        let m = *sc.iter().max().unwrap();
+        let mut tot: i64 = 0;
+        let mut e = vec![0i32; sc.len()];
+        for (ev, &s) in e.iter_mut().zip(&sc) {
+            *ev = lut_i32(&blk.exp, s.wrapping_sub(m));
+            tot += *ev as i64;
+        }
+        let r = any_i32(&blk.recip, tot as i32);
+        for (p, &ev) in probs.iter_mut().zip(&e) {
+            *p = lut_i32(&blk.prob, ev.wrapping_mul(r));
+        }
+    }
+
+    /// Full integer forward for one image: f32 tokens (T*P) -> f64 logits.
+    ///
+    /// Bit-exact with `model.forward_int_np` over the same f32 tokens.
+    pub fn forward_image(&self, tokens: &[f32]) -> crate::Result<Vec<f64>> {
+        anyhow::ensure!(
+            tokens.len() == self.tokens_per_image(),
+            "expected {} token values, got {}",
+            self.tokens_per_image(),
+            tokens.len()
+        );
+        let (t, d, h) = (self.tokens, self.dim, self.heads);
+        let dh = d / h;
+
+        let xq: Vec<i32> = tokens.iter().map(|&x| self.quantize_in(x)).collect();
+        let acc = Self::matmul_bias(&xq, t, self.patch_dim, &self.pe_w, d, &self.pe_b);
+        // residual stream: int32, common scale s0 (+2 guard bits)
+        let mut x: Vec<i32> = acc.iter().map(|&a| lut_i32(&self.pe_rq, a as i32)).collect();
+
+        for blk in &self.blocks {
+            // ---- MHA ----
+            let n = self.layernorm(&x, blk.ln1_guard, &blk.ln1_rsqrt, &blk.ln1_rq);
+            let acc = Self::matmul_bias(&n, t, d, &blk.qkv_w, 3 * d, &blk.qkv_b);
+            let qkv: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.qkv_rq, a as i32)).collect();
+
+            let mut a_q = vec![0i32; t * d];
+            let mut scores = vec![0i64; t];
+            let mut probs = vec![0i32; t * t];
+            for hh in 0..h {
+                let (qof, kof, vof) = (hh * dh, d + hh * dh, 2 * d + hh * dh);
+                // DyMM 1: scores = Q @ K^T, then row-wise softmax
+                for t1 in 0..t {
+                    let q = &qkv[t1 * 3 * d + qof..t1 * 3 * d + qof + dh];
+                    for t2 in 0..t {
+                        let k = &qkv[t2 * 3 * d + kof..t2 * 3 * d + kof + dh];
+                        scores[t2] = q.iter().zip(k).map(|(&a, &b)| a as i64 * b as i64).sum();
+                    }
+                    self.softmax_row(blk, &scores, &mut probs[t1 * t..(t1 + 1) * t]);
+                }
+                // DyMM 2: R @ V, requantized into the head's output slice
+                for t1 in 0..t {
+                    for c in 0..dh {
+                        let mut s: i64 = 0;
+                        for t2 in 0..t {
+                            s += probs[t1 * t + t2] as i64
+                                * qkv[t2 * 3 * d + vof + c] as i64;
+                        }
+                        a_q[t1 * d + hh * dh + c] = lut_i32(&blk.rv_rq, s as i32);
+                    }
+                }
+            }
+            let acc = Self::matmul_bias(&a_q, t, d, &blk.proj_w, d, &blk.proj_b);
+            for (xv, &a) in x.iter_mut().zip(&acc) {
+                *xv = xv.wrapping_add(lut_i32(&blk.proj_rq, a as i32));
+            }
+
+            // ---- MLP ----
+            let n2 = self.layernorm(&x, blk.ln2_guard, &blk.ln2_rsqrt, &blk.ln2_rq);
+            let acc = Self::matmul_bias(&n2, t, d, &blk.mm1_w, self.hidden, &blk.mm1_b);
+            let hdn: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.gelu, a as i32)).collect();
+            let acc = Self::matmul_bias(&hdn, t, self.hidden, &blk.mm2_w, d, &blk.mm2_b);
+            for (xv, &a) in x.iter_mut().zip(&acc) {
+                *xv = xv.wrapping_add(lut_i32(&blk.mm2_rq, a as i32));
+            }
+        }
+
+        // ---- final LN + mean-pool head (the /T fold lives in logit_scale)
+        let n = self.layernorm(&x, self.ln_f_guard, &self.ln_f_rsqrt, &self.ln_f_rq);
+        let mut pooled = vec![0i64; d];
+        for row in n.chunks_exact(d) {
+            for (p, &v) in pooled.iter_mut().zip(row) {
+                *p += v as i64;
+            }
+        }
+        let mut logits = Vec::with_capacity(self.num_classes);
+        for k in 0..self.num_classes {
+            let mut s: i64 = 0;
+            for (c, &p) in pooled.iter().enumerate() {
+                s += p * self.head_w[c * self.num_classes + k] as i64;
+            }
+            logits.push(s as f64 * self.logit_scale + self.head_bias[k]);
+        }
+        Ok(logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor adapter (one per batch variant, sharing the loaded model)
+// ---------------------------------------------------------------------------
+
+/// A batch-size view over a shared [`QuantViT`].
+pub struct InterpreterExecutor {
+    net: Arc<QuantViT>,
+    batch: usize,
+    load_ms: f64,
+    stats: Mutex<ExecStats>,
+}
+
+impl Executor for InterpreterExecutor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run_f32(&self, input: &[f32]) -> crate::Result<Vec<f32>> {
+        let per = self.net.tokens_per_image();
+        anyhow::ensure!(
+            input.len() == self.batch * per,
+            "input length {} != batch {} x {}",
+            input.len(),
+            self.batch,
+            per
+        );
+        let t0 = Instant::now();
+        let mut out = Vec::with_capacity(self.batch * self.net.num_classes);
+        for lane in input.chunks_exact(per) {
+            out.extend(self.net.forward_image(lane)?.iter().map(|&l| l as f32));
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.total_ms += ms;
+        Ok(out)
+    }
+
+    fn compile_ms(&self) -> f64 {
+        self.load_ms
+    }
+
+    fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// Load a model's bundle and wrap it in one executor per batch variant.
+pub fn load_model(manifest: &Manifest, model: &str) -> crate::Result<LoadedModel> {
+    let info: &BundleInfo = manifest
+        .bundle_for(model)
+        .ok_or_else(|| anyhow::anyhow!("no interpreter bundle for model '{model}' in manifest"))?;
+    let t0 = Instant::now();
+    let net = Arc::new(QuantViT::load(&info.path)?);
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(
+        net.model == model,
+        "bundle model '{}' != requested '{model}'",
+        net.model
+    );
+    let batches = if info.batches.is_empty() { vec![1] } else { info.batches.clone() };
+    let executors: Vec<Box<dyn Executor>> = batches
+        .iter()
+        .map(|&b| {
+            Box::new(InterpreterExecutor {
+                net: net.clone(),
+                batch: b,
+                load_ms,
+                stats: Mutex::new(ExecStats::default()),
+            }) as Box<dyn Executor>
+        })
+        .collect();
+    Ok(LoadedModel {
+        executors,
+        tokens_per_image: net.tokens_per_image(),
+        num_classes: net.num_classes,
+        compile_ms: load_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_lut(alpha: i64, shift: u32, n_bits: u32, inverted: bool, entries: Vec<i64>) -> LutTable {
+        LutTable {
+            name: "t".into(),
+            alpha,
+            shift,
+            n_bits,
+            inverted,
+            out_scale: 1.0,
+            out_zp: 0,
+            entries,
+        }
+    }
+
+    #[test]
+    fn lut_i32_matches_table_lookup_in_range() {
+        let t = mk_lut(-8, 2, 2, false, vec![10, 20, 30, 40]);
+        for x in -20i64..20 {
+            assert_eq!(lut_i32(&t, x as i32) as i64, t.lookup(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn lut_i32_inverted_matches() {
+        let t = mk_lut(0, 1, 2, true, vec![1, 2, 3, 4]);
+        for x in -20i64..5 {
+            assert_eq!(lut_i32(&t, x as i32) as i64, t.lookup(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn lut_i32_wraps_like_numpy_int32() {
+        // an accumulator past i32::MAX wraps negative before indexing,
+        // exactly as numpy's astype(int32) does in LutExec._lut
+        let t = mk_lut(0, 4, 2, false, vec![7, 8, 9, 10]);
+        let big: i64 = (1i64 << 31) + 5; // wraps to i32::MIN + 5
+        let wrapped = big as i32;
+        assert!(wrapped < 0);
+        assert_eq!(lut_i32(&t, wrapped), 7); // clamps to index 0
+    }
+
+    #[test]
+    fn seg_i32_selects_by_pivot_and_shifts() {
+        let steep = LutTable { out_scale: 1.0, ..mk_lut(0, 2, 2, false, vec![100, 90, 80, 70]) };
+        let flat = LutTable { out_scale: 0.25, alpha: 16, ..mk_lut(0, 2, 2, false, vec![5, 4, 3, 2]) };
+        let s = SegmentedTable { name: "s".into(), pivot: 16, steep, flat };
+        assert_eq!(seg_i32(&s, 0), 400); // 100 << 2
+        assert_eq!(seg_i32(&s, 16), 5);
+    }
+}

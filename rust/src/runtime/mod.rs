@@ -1,112 +1,103 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt` (emitted by the python AOT
-//! pipeline) onto the CPU PJRT client and execute them from the serving
-//! hot path. Python is never involved at request time.
+//! Pluggable execution backends for the AOT-quantized ViT.
 //!
-//! Interchange is HLO **text** — jax >= 0.5 emits protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! The serving stack ([`crate::coordinator`]) is generic over *how* a
+//! model executes; this module defines the contract and the two engines:
+//!
+//! * [`interpreter`] — the default: a pure-rust integer interpreter that
+//!   runs the quantized dataflow directly from a weight/LUT *bundle*
+//!   (`python -m compile.export`), bit-exact with the python reference
+//!   (`python/compile/kernels/ref.py` semantics). No native deps, no
+//!   `make artifacts` prerequisite beyond the bundle JSON.
+//! * [`pjrt`] (feature `pjrt`) — the XLA path: load `artifacts/*.hlo.txt`
+//!   emitted by `python/compile/aot.py` onto a PJRT CPU client. Interchange
+//!   is HLO **text** — jax >= 0.5 emits protos with 64-bit instruction ids
+//!   that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!   Default builds never see the `xla` crate.
+//!
+//! Both backends expose batch-variant [`Executor`]s behind one trait, so
+//! the dynamic batcher and the metrics pipeline are backend-agnostic.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
-use std::time::Instant;
+pub mod interpreter;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use crate::artifacts::ArtifactInfo;
+use crate::artifacts::Manifest;
 
-/// A compiled, ready-to-run computation.
-pub struct Executable {
-    pub info: ArtifactInfo,
-    exe: xla::PjRtLoadedExecutable,
-    pub compile_ms: f64,
-    /// Cumulative execution statistics (guarded; executions are serialized
-    /// per executable by the PJRT CPU client anyway).
-    stats: Mutex<ExecStats>,
-}
-
+/// Cumulative execution statistics for one executor.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ExecStats {
     pub executions: u64,
     pub total_ms: f64,
 }
 
-impl Executable {
-    /// Run the computation on a flat f32 input of the artifact's shape.
-    /// Returns the flat f32 output.
-    pub fn run_f32(&self, input: &[f32]) -> crate::Result<Vec<f32>> {
-        let expected: usize = self.info.input_shape.iter().product();
-        anyhow::ensure!(
-            input.len() == expected,
-            "input length {} != shape {:?}",
-            input.len(),
-            self.info.input_shape
-        );
-        let dims: Vec<i64> = self.info.input_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input).reshape(&dims)?;
-        let t0 = Instant::now();
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
-        {
-            let mut s = self.stats.lock().unwrap();
-            s.executions += 1;
-            s.total_ms += ms;
+/// Which execution engine runs the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-rust integer interpreter over a weight/LUT bundle.
+    #[default]
+    Interpreter,
+    /// PJRT CPU client executing AOT-compiled HLO text.
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI flag value. Naming `pjrt` without the feature is a
+    /// distinct, actionable error.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "interpreter" | "int" => Ok(Self::Interpreter),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Ok(Self::Pjrt),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => anyhow::bail!(
+                "backend 'pjrt' is not compiled in — rebuild with `--features pjrt`"
+            ),
+            other => anyhow::bail!("unknown backend '{other}' (interpreter | pjrt)"),
         }
-        // python lowers with return_tuple=True: unwrap the 1-tuple
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
     }
 
-    pub fn stats(&self) -> ExecStats {
-        *self.stats.lock().unwrap()
-    }
-}
-
-/// The PJRT engine: one CPU client + a compile cache.
-pub struct Engine {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
-}
-
-impl Engine {
-    pub fn cpu() -> crate::Result<Self> {
-        Ok(Self { client: xla::PjRtClient::cpu()?, cache: Mutex::new(HashMap::new()) })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an artifact (cached by name).
-    pub fn load(&self, info: &ArtifactInfo) -> crate::Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(&info.name) {
-            return Ok(e.clone());
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Interpreter => "interpreter",
+            #[cfg(feature = "pjrt")]
+            Self::Pjrt => "pjrt",
         }
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            info.path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let executable = std::sync::Arc::new(Executable {
-            info: info.clone(),
-            exe,
-            compile_ms,
-            stats: Mutex::new(ExecStats::default()),
-        });
-        self.cache.lock().unwrap().insert(info.name.clone(), executable.clone());
-        Ok(executable)
     }
 }
 
-/// Load an HLO text file directly (no manifest) — used by tests.
-pub fn load_hlo_text(engine: &Engine, path: &Path, input_shape: Vec<usize>, output_shape: Vec<usize>) -> crate::Result<std::sync::Arc<Executable>> {
-    let info = ArtifactInfo {
-        name: path.display().to_string(),
-        path: path.to_path_buf(),
-        input_shape,
-        output_shape,
-        model: "adhoc".into(),
-        precision: "?".into(),
-    };
-    engine.load(&info)
+/// A ready-to-run batch variant of a model: float tokens in, float
+/// logits out, shapes fixed at load time.
+///
+/// Deliberately NOT `Send`: the PJRT client's handles are `Rc`-based, so
+/// the owning thread (the coordinator's executor thread) constructs and
+/// drives its executors locally — which also mirrors the hardware: one
+/// fabric, one feeder.
+pub trait Executor {
+    /// Batch size this variant was compiled/configured for.
+    fn batch(&self) -> usize;
+    /// Run on a flat f32 input of `batch * tokens_per_image` values;
+    /// returns `batch * num_classes` logits.
+    fn run_f32(&self, input: &[f32]) -> crate::Result<Vec<f32>>;
+    /// One-time load/compile cost attributed to this variant.
+    fn compile_ms(&self) -> f64;
+    fn stats(&self) -> ExecStats;
+}
+
+/// A loaded model: all batch-variant executors plus shape metadata.
+pub struct LoadedModel {
+    pub executors: Vec<Box<dyn Executor>>,
+    pub tokens_per_image: usize,
+    pub num_classes: usize,
+    /// Total load/compile time across variants (the "bitstream load").
+    pub compile_ms: f64,
+}
+
+/// Load a model's batch variants on the chosen backend.
+pub fn load_model(kind: BackendKind, manifest: &Manifest, model: &str) -> crate::Result<LoadedModel> {
+    match kind {
+        BackendKind::Interpreter => interpreter::load_model(manifest, model),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => pjrt::load_model(manifest, model),
+    }
 }

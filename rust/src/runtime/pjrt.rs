@@ -1,0 +1,150 @@
+//! PJRT backend: load `artifacts/*.hlo.txt` (emitted by the python AOT
+//! pipeline) onto the CPU PJRT client and execute them from the serving
+//! hot path. Python is never involved at request time.
+//!
+//! Compiled only with `--features pjrt`. The feature resolves the `xla`
+//! dependency from the in-repo stub crate by default (type-checks the
+//! integration, errors at runtime); point it at a real binding to run.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::artifacts::{ArtifactInfo, Manifest};
+use crate::runtime::{ExecStats, Executor, LoadedModel};
+
+/// A compiled, ready-to-run computation.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_ms: f64,
+    /// Cumulative execution statistics (guarded; executions are serialized
+    /// per executable by the PJRT CPU client anyway).
+    stats: Mutex<ExecStats>,
+}
+
+impl Executable {
+    /// Run the computation on a flat f32 input of the artifact's shape.
+    /// Returns the flat f32 output.
+    pub fn run_f32(&self, input: &[f32]) -> crate::Result<Vec<f32>> {
+        let expected: usize = self.info.input_shape.iter().product();
+        anyhow::ensure!(
+            input.len() == expected,
+            "input length {} != shape {:?}",
+            input.len(),
+            self.info.input_shape
+        );
+        let dims: Vec<i64> = self.info.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.executions += 1;
+            s.total_ms += ms;
+        }
+        // python lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// The PJRT engine: one CPU client + a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> crate::Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()?, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by name).
+    pub fn load(&self, info: &ArtifactInfo) -> crate::Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&info.name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            info.path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let executable = std::sync::Arc::new(Executable {
+            info: info.clone(),
+            exe,
+            compile_ms,
+            stats: Mutex::new(ExecStats::default()),
+        });
+        self.cache.lock().unwrap().insert(info.name.clone(), executable.clone());
+        Ok(executable)
+    }
+}
+
+/// Load an HLO text file directly (no manifest) — used by tests.
+pub fn load_hlo_text(
+    engine: &Engine,
+    path: &Path,
+    input_shape: Vec<usize>,
+    output_shape: Vec<usize>,
+) -> crate::Result<std::sync::Arc<Executable>> {
+    let info = ArtifactInfo {
+        name: path.display().to_string(),
+        path: path.to_path_buf(),
+        input_shape,
+        output_shape,
+        model: "adhoc".into(),
+        precision: "?".into(),
+    };
+    engine.load(&info)
+}
+
+/// [`Executor`] adapter around a compiled artifact.
+struct PjrtExecutor(std::sync::Arc<Executable>);
+
+impl Executor for PjrtExecutor {
+    fn batch(&self) -> usize {
+        self.0.info.batch()
+    }
+
+    fn run_f32(&self, input: &[f32]) -> crate::Result<Vec<f32>> {
+        self.0.run_f32(input)
+    }
+
+    fn compile_ms(&self) -> f64 {
+        self.0.compile_ms
+    }
+
+    fn stats(&self) -> ExecStats {
+        self.0.stats()
+    }
+}
+
+/// Compile all HLO batch variants of `model` (the paper's bitstream load).
+pub fn load_model(manifest: &Manifest, model: &str) -> crate::Result<LoadedModel> {
+    let variants: Vec<ArtifactInfo> = manifest.variants(model).into_iter().cloned().collect();
+    anyhow::ensure!(!variants.is_empty(), "no HLO artifacts for model '{model}'");
+    let tokens_per_image: usize = variants[0].input_shape[1..].iter().product();
+    let num_classes = *variants[0].output_shape.last().unwrap();
+    let engine = Engine::cpu()?;
+    let mut executors: Vec<Box<dyn Executor>> = Vec::new();
+    let mut compile_ms = 0.0;
+    for v in &variants {
+        let e = engine.load(v)?;
+        compile_ms += e.compile_ms;
+        executors.push(Box::new(PjrtExecutor(e)));
+    }
+    Ok(LoadedModel { executors, tokens_per_image, num_classes, compile_ms })
+}

@@ -44,9 +44,14 @@ impl SimConfig {
     /// Match the DMA input rate to the design's balance target so the
     /// source is never the bottleneck nor idle (the paper streams input
     /// tiles at the pipeline's pace).
+    ///
+    /// Clamped to >= 1: when `target_ii < tt` (small networks / deep
+    /// token tiling) the integer division would truncate to a zero-cost
+    /// source stage, which the engine treats as never-firing — the sim
+    /// would spin until the cycle budget instead of completing.
     pub fn matched(design: &Design, cfg: &ViTConfig) -> Self {
         let tt = (cfg.tokens() as u64).div_ceil(2);
-        Self { source_interval: design.target_ii / tt, ..Self::default() }
+        Self { source_interval: (design.target_ii / tt).max(1), ..Self::default() }
     }
 }
 
@@ -331,6 +336,20 @@ mod tests {
     fn tiny() -> (Design, ViTConfig) {
         let cfg = ViTConfig::tiny_synth();
         (design_network(&cfg, Precision::A4W4, 2), cfg)
+    }
+
+    #[test]
+    fn matched_clamps_source_interval_to_one() {
+        // regression: target_ii < tt used to truncate to a zero-cost DMA
+        // source, which starts a firing every cycle but never completes
+        // one — sim::run spun until the cycle budget
+        let (mut d, cfg) = tiny();
+        let tt = (cfg.tokens() as u64).div_ceil(2);
+        d.target_ii = tt - 1; // forces target_ii / tt == 0
+        let sim = SimConfig::matched(&d, &cfg);
+        assert_eq!(sim.source_interval, 1);
+        let r = run(&build_vit(&d, &cfg, Paradigm::Hybrid, sim), 1, 50_000_000);
+        assert_eq!(r.stop, StopReason::Completed, "{:?}", r.stop);
     }
 
     #[test]

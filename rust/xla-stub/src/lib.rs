@@ -1,0 +1,155 @@
+//! Offline stub of the `xla` PJRT binding.
+//!
+//! The real crate links `xla_extension` (a multi-GB native bundle that is
+//! not vendorable offline). This stub reproduces exactly the API surface
+//! `hgpipe`'s `runtime::pjrt` module uses, so `--features pjrt` still
+//! *type-checks* the whole PJRT integration; every entry point that would
+//! need the native library returns [`Error::Unavailable`] at runtime.
+//! Swap the `xla` path dependency in `rust/Cargo.toml` for a real binding
+//! to execute HLO artifacts.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: either "native XLA not linked" or a local usage error.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable,
+    Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable => write!(
+                f,
+                "xla stub: native xla_extension is not linked in this build \
+                 (the `pjrt` feature resolves the in-repo stub crate)"
+            ),
+            Error::Msg(m) => write!(f, "xla stub: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can carry (subset hgpipe uses).
+pub trait NativeType: Copy {
+    fn to_le_bytes_vec(xs: &[Self]) -> Vec<u8>;
+    fn from_le_bytes_vec(raw: &[u8]) -> Vec<Self>;
+}
+
+macro_rules! native {
+    ($t:ty) => {
+        impl NativeType for $t {
+            fn to_le_bytes_vec(xs: &[Self]) -> Vec<u8> {
+                xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+            }
+            fn from_le_bytes_vec(raw: &[u8]) -> Vec<Self> {
+                raw.chunks_exact(std::mem::size_of::<Self>())
+                    .map(|c| Self::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            }
+        }
+    };
+}
+
+native!(f32);
+native!(f64);
+native!(i32);
+native!(i64);
+
+/// Host-side tensor literal. Fully functional in the stub (it is pure
+/// host data); only device transfer / execution is unavailable.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<u8>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(xs: &[T]) -> Literal {
+        Literal { data: T::to_le_bytes_vec(xs), dims: vec![xs.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let cur: i64 = self.dims.iter().product();
+        if n != cur {
+            return Err(Error::Msg(format!("reshape {:?} -> {:?}", self.dims, dims)));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(T::from_le_bytes_vec(&self.data))
+    }
+}
+
+/// Parsed HLO module (stub: the text is retained but never compiled).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::Msg(e.to_string()))?;
+        Ok(Self { _text: text })
+    }
+}
+
+pub struct XlaComputation {
+    _p: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _p: () }
+    }
+}
+
+/// Device buffer handle (never constructible in the stub).
+pub struct PjRtBuffer {
+    _p: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _p: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct PjRtClient {
+    _p: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no native PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+}
