@@ -10,10 +10,21 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test test-rust test-python artifacts golden
+.PHONY: build test test-rust test-python artifacts golden bench-json bench-json-smoke
 
 build:
 	cargo build --release
+
+# Interpreter fabric throughput report (scalar baseline vs lane pool,
+# per-op breakdown) -> BENCH_interpreter.json at the repo root. The path
+# is absolute because cargo runs bench binaries with cwd = the package
+# dir (rust/), not the invocation dir. The smoke variant is what CI runs
+# on every push.
+bench-json:
+	cargo bench --bench interpreter -- --json $(CURDIR)/BENCH_interpreter.json
+
+bench-json-smoke:
+	cargo bench --bench interpreter -- --json $(CURDIR)/BENCH_interpreter.json --smoke
 
 test: test-rust test-python
 

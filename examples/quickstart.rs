@@ -46,7 +46,7 @@ fn main() -> hgpipe::Result<()> {
     let server = ModelServer::start(&manifest, model, 2)?;
     let mut rng = Prng::new(1);
     let image: Vec<f32> = (0..server.tokens_per_image()).map(|_| rng.f64() as f32).collect();
-    let reply = server.submit(image)?.recv()?;
+    let reply = server.submit(image)?.recv()??;
     println!(
         "[serve]  '{}' classified one image as class {} in {:?}",
         model, reply.argmax, reply.latency

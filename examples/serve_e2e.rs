@@ -67,7 +67,7 @@ fn main() -> hgpipe::Result<()> {
     // batch-1 vs batch-8 must agree numerically on identical input
     println!("\n=== phase 3: batch-variant consistency ===");
     let probe: Vec<f32> = (0..n_tok).map(|_| rng.f64() as f32).collect();
-    let single = deit.submit(probe.clone())?.recv()?;
+    let single = deit.submit(probe.clone())?.recv()??;
     let mut batch: Vec<Vec<f32>> = vec![probe; 8];
     for extra in batch.iter_mut().skip(1) {
         for v in extra.iter_mut() {

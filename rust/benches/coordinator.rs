@@ -28,23 +28,26 @@ fn main() {
     };
     let manifest = Manifest::load(&dir).expect("manifest");
     let server = ModelServer::start(&manifest, "tiny-synth", 2).expect("server");
+    let backend = server.backend().label();
     let n_tok = server.tokens_per_image();
     let mut rng = Prng::new(3);
     let images: Vec<Vec<f32>> =
         (0..64).map(|_| (0..n_tok).map(|_| rng.f64() as f32).collect()).collect();
+    let n_images = images.len();
 
-    // warm up (compile already done at start; prime caches)
+    // warm up (load already done at start; prime caches)
     server.infer_all(images[..16].to_vec()).unwrap();
 
-    let r = bench("serve 64 tiny-synth images (batched)", Duration::from_secs(5), || {
+    let name = format!("serve {n_images} tiny-synth images ({backend})");
+    let r = bench(&name, Duration::from_secs(5), || {
         black_box(server.infer_all(images.clone()).unwrap());
     });
     println!("{r}");
-    println!("    => {:.0} img/s through the full coordinator", r.throughput(64.0));
+    println!("    => {:.0} img/s through the full coordinator", r.throughput(n_images as f64));
     println!("{}", server.metrics.lock().unwrap().summary());
 
     // coordinator overhead: exec time vs wall time share
     let m = server.metrics.lock().unwrap();
     let exec_share = m.exec_ms_total / 1e3 / (m.count() as f64 / m.throughput().unwrap_or(1.0));
-    println!("    => PJRT-execute share of wall time ~ {:.0}%", 100.0 * exec_share.min(1.0));
+    println!("    => {backend}-execute share of wall time ~ {:.0}%", 100.0 * exec_share.min(1.0));
 }

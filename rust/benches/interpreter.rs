@@ -1,0 +1,188 @@
+//! Interpreter fabric throughput bench: pre-fabric scalar kernels vs the
+//! blocked + lane-pooled fabric, with a per-op time breakdown.
+//!
+//! Run directly (`cargo bench --bench interpreter`) for a human summary,
+//! or via `make bench-json` to also emit `BENCH_interpreter.json` — the
+//! machine-readable perf trajectory tracked from PR 2 onward. Flags
+//! (after `--`):
+//!
+//!   --json PATH   write the JSON report to PATH
+//!   --smoke       tiny workload + short budget (CI smoke mode)
+//!   --lanes N     pool width (default: HGPIPE_LANES, else
+//!                 max(4, available parallelism))
+//!
+//! The bench self-validates before timing: the fabric path must be
+//! logit-for-logit bit-identical to the naive baseline on its own input.
+
+use std::time::Duration;
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::runtime::fabric::LanePool;
+use hgpipe::runtime::interpreter::{self, OpProfile, QuantViT};
+use hgpipe::util::bench::{bench, black_box};
+use hgpipe::util::prng::Prng;
+
+struct Opts {
+    json: Option<String>,
+    smoke: bool,
+    lanes: usize,
+}
+
+fn parse_opts() -> Opts {
+    let mut json = None;
+    let mut smoke = false;
+    let mut lanes = None;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" if i + 1 < argv.len() => {
+                json = Some(argv[i + 1].clone());
+                i += 1;
+            }
+            "--smoke" => smoke = true,
+            "--lanes" if i + 1 < argv.len() => {
+                lanes = argv[i + 1].parse().ok();
+                i += 1;
+            }
+            "--bench" => {} // appended by `cargo bench`
+            _ => {}
+        }
+        i += 1;
+    }
+    let lanes = lanes.unwrap_or_else(|| {
+        std::env::var("HGPIPE_LANES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| {
+                4usize.max(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+            })
+    });
+    Opts { json, smoke, lanes: lanes.max(1) }
+}
+
+fn main() {
+    let opts = parse_opts();
+    println!("=== interpreter fabric bench ({} lanes) ===\n", opts.lanes);
+
+    // the golden fixture is committed, so not finding it is an error (a
+    // silent skip would surface later as a confusing missing-JSON failure)
+    let Some(dir) = Manifest::discover() else {
+        eprintln!("error: no artifacts found — the committed golden fixture should be \
+                   discoverable from the package or repo root");
+        std::process::exit(2);
+    };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let Some(info) = manifest.bundle_for("tiny-synth") else {
+        eprintln!("error: no tiny-synth bundle in {}", dir.display());
+        std::process::exit(2);
+    };
+    let net = QuantViT::load(&info.path).expect("bundle loads");
+    let per = net.tokens_per_image();
+
+    let n_images: usize = if opts.smoke { 16 } else { 64 };
+    let budget = Duration::from_millis(if opts.smoke { 200 } else { 2000 });
+    let mut rng = Prng::new(17);
+    let flat: Vec<f32> = (0..n_images * per).map(|_| rng.f64() as f32).collect();
+
+    // self-check: fabric output must be bit-identical to the baseline
+    let want = net.forward_image_naive(&flat[..per]).unwrap();
+    for lanes in [1usize, opts.lanes] {
+        let got = net.forward_image_pooled(&flat[..per], &LanePool::new(lanes)).unwrap();
+        assert_eq!(
+            want.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            "fabric logits diverged from the naive baseline at {lanes} lanes"
+        );
+    }
+
+    // 1. scalar baseline: the pre-fabric kernels, fully serial
+    let r_naive = bench("scalar naive forward (pre-fabric kernels)", budget, || {
+        for img in flat.chunks_exact(per) {
+            black_box(net.forward_image_naive(img).unwrap());
+        }
+    });
+    println!("{r_naive}");
+    let naive_ips = n_images as f64 / r_naive.mean.as_secs_f64();
+
+    // 2. fabric, serial: blocked GEMM + hoisted scratch, one lane
+    let r_serial = bench("fabric forward, 1 lane (blocked GEMM)", budget, || {
+        for img in flat.chunks_exact(per) {
+            black_box(net.forward_image(img).unwrap());
+        }
+    });
+    println!("{r_serial}");
+    let serial_ips = n_images as f64 / r_serial.mean.as_secs_f64();
+
+    // 3. fabric, pooled: through the real executor at its widest batch
+    // variant (batch-lane grain, exactly what the coordinator dispatches)
+    let loaded =
+        interpreter::load_model_with_lanes(&manifest, "tiny-synth", opts.lanes).expect("load");
+    let exe = loaded.executors.iter().max_by_key(|e| e.batch()).expect("an executor");
+    let batch = exe.batch();
+    let rounds = n_images / batch;
+    assert!(rounds > 0, "image count {n_images} smaller than batch {batch}");
+    let name = format!("fabric run_f32, {} lanes, batch {batch}", opts.lanes);
+    let r_pooled = bench(&name, budget, || {
+        for c in 0..rounds {
+            black_box(exe.run_f32(&flat[c * batch * per..(c + 1) * batch * per]).unwrap());
+        }
+    });
+    println!("{r_pooled}");
+    let pooled_ips = (rounds * batch) as f64 / r_pooled.mean.as_secs_f64();
+
+    // per-op breakdown (serial, so attribution is not interleaved)
+    let prof_images = n_images.min(8);
+    let mut prof = OpProfile::default();
+    for img in flat.chunks_exact(per).take(prof_images) {
+        let (_, p) = net.forward_profiled(img, &LanePool::serial()).unwrap();
+        prof.merge(&p);
+    }
+    let scale = 1.0 / prof_images as f64;
+    let total = prof.total_ms().max(1e-12);
+
+    println!("\n    scalar naive     {naive_ips:8.1} img/s");
+    println!("    fabric 1 lane    {serial_ips:8.1} img/s   ({:.2}x)", serial_ips / naive_ips);
+    println!(
+        "    fabric {} lanes   {pooled_ips:8.1} img/s   ({:.2}x vs naive, {:.2}x vs 1 lane)",
+        opts.lanes,
+        pooled_ips / naive_ips,
+        pooled_ips / serial_ips
+    );
+    println!(
+        "    per-op (1 lane): gemm {:.0}%  attention {:.0}%  layernorm {:.0}%  requant {:.0}%",
+        100.0 * prof.gemm_ms / total,
+        100.0 * prof.attention_ms / total,
+        100.0 * prof.layernorm_ms / total,
+        100.0 * prof.requant_ms / total,
+    );
+
+    if let Some(path) = &opts.json {
+        let json = format!(
+            "{{\n  \"model\": \"tiny-synth\",\n  \"smoke\": {},\n  \"images\": {},\n  \
+             \"lanes\": {},\n  \"batch\": {},\n  \"scalar_naive_img_s\": {:.3},\n  \
+             \"fabric_serial_img_s\": {:.3},\n  \"fabric_pooled_img_s\": {:.3},\n  \
+             \"speedup_pooled_vs_naive\": {:.3},\n  \"speedup_pooled_vs_serial\": {:.3},\n  \
+             \"per_op_ms_per_image\": {{\n    \"quantize\": {:.4},\n    \"gemm\": {:.4},\n    \
+             \"layernorm\": {:.4},\n    \"attention\": {:.4},\n    \"requant\": {:.4},\n    \
+             \"head\": {:.4}\n  }}\n}}\n",
+            opts.smoke,
+            n_images,
+            opts.lanes,
+            batch,
+            naive_ips,
+            serial_ips,
+            pooled_ips,
+            pooled_ips / naive_ips,
+            pooled_ips / serial_ips,
+            prof.quantize_ms * scale,
+            prof.gemm_ms * scale,
+            prof.layernorm_ms * scale,
+            prof.attention_ms * scale,
+            prof.requant_ms * scale,
+            prof.head_ms * scale,
+        );
+        std::fs::write(path, &json).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}

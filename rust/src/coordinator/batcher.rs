@@ -29,6 +29,15 @@ impl BatchPolicy {
         *self.variants.last().unwrap()
     }
 
+    /// Time remaining before the head-of-line request exhausts
+    /// `max_wait` (zero once the deadline has passed). The executor
+    /// blocks in `recv_timeout` for exactly this long when
+    /// [`Self::decide`] returns `None` on a non-empty queue, instead of
+    /// spinning in short sleeps.
+    pub fn residual_wait(&self, head_waited: Duration) -> Duration {
+        self.max_wait.saturating_sub(head_waited)
+    }
+
     /// Decide the batch size to dispatch now, or None to keep waiting.
     ///
     /// * a full largest-variant batch dispatches immediately;
@@ -95,5 +104,41 @@ mod tests {
         let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(1));
         assert_eq!(p.decide(5, Duration::from_millis(2)), Some(4));
         assert_eq!(p.decide(2, Duration::from_millis(2)), Some(1));
+    }
+
+    #[test]
+    fn deadline_boundary_is_inclusive() {
+        // exactly max_wait dispatches; one nanosecond under keeps waiting
+        let p = policy();
+        let deadline = p.max_wait;
+        assert_eq!(p.decide(3, deadline), Some(1));
+        assert_eq!(p.decide(3, deadline - Duration::from_nanos(1)), None);
+    }
+
+    #[test]
+    fn residual_wait_complements_head_wait() {
+        let p = policy(); // max_wait = 2ms
+        assert_eq!(p.residual_wait(Duration::ZERO), p.max_wait);
+        let waited = Duration::from_micros(700);
+        assert_eq!(p.residual_wait(waited) + waited, p.max_wait);
+        // at or past the deadline the residual saturates to zero, so the
+        // executor's recv_timeout returns immediately and decide() fires
+        assert_eq!(p.residual_wait(p.max_wait), Duration::ZERO);
+        assert_eq!(p.residual_wait(p.max_wait + Duration::from_secs(1)), Duration::ZERO);
+    }
+
+    #[test]
+    fn whenever_decide_waits_residual_is_positive() {
+        // invariant the executor loop relies on: a None decision on a
+        // non-empty queue always leaves a positive residual to block on
+        let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(3));
+        for q in 1..20usize {
+            for us in [0u64, 1, 500, 2999, 3000, 3001, 10_000] {
+                let waited = Duration::from_micros(us);
+                if p.decide(q, waited).is_none() {
+                    assert!(p.residual_wait(waited) > Duration::ZERO, "q={q} us={us}");
+                }
+            }
+        }
     }
 }

@@ -8,6 +8,9 @@ pub struct ServeMetrics {
     pub batch_hist: std::collections::BTreeMap<usize, u64>,
     pub exec_ms_total: f64,
     pub queue_ms_total: f64,
+    /// Requests answered with an error: dispatch failures plus requests
+    /// still queued/pending when the server shut down.
+    pub failed: u64,
     pub started: Option<std::time::Instant>,
     pub finished: Option<std::time::Instant>,
 }
@@ -56,8 +59,9 @@ impl ServeMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} throughput={:.1}/s p50={:?} p95={:?} p99={:?} mean_batch={:.2} exec={:.0}ms queue={:.0}ms",
+            "requests={} failed={} throughput={:.1}/s p50={:?} p95={:?} p99={:?} mean_batch={:.2} exec={:.0}ms queue={:.0}ms",
             self.count(),
+            self.failed,
             self.throughput().unwrap_or(0.0),
             self.percentile(0.50).unwrap_or_default(),
             self.percentile(0.95).unwrap_or_default(),

@@ -7,6 +7,13 @@
 //! The coordinator is generic over the execution backend via
 //! [`crate::runtime::BackendKind`]: `ModelServer::start` uses the default
 //! (pure-rust interpreter); `start_with_backend` selects explicitly.
+//!
+//! Delivery guarantee: every accepted request receives exactly one reply
+//! — `Ok(Response)` on success, an explicit `Err` if its dispatch failed
+//! or the server shut down first (counted in [`ServeMetrics::failed`]).
+//! While a partial batch waits out the batching deadline the executor
+//! blocks in `recv_timeout` for the residual head-of-line wait rather
+//! than spinning.
 
 pub mod batcher;
 pub mod metrics;
@@ -22,11 +29,16 @@ use batcher::BatchPolicy;
 use metrics::ServeMetrics;
 
 /// One inference request: a patchified image (flat T*P f32 tokens).
+///
+/// The reply channel carries a `Result`: the executor answers *every*
+/// drained request, with logits on success or an explicit error when the
+/// dispatch failed or the server shut down first — a client blocked on
+/// `recv` never waits on a silently-dropped sender.
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<f32>,
     pub enqueued: Instant,
-    pub reply: Sender<Response>,
+    pub reply: Sender<crate::Result<Response>>,
 }
 
 /// The reply: logits + timing.
@@ -41,6 +53,7 @@ pub struct Response {
 /// A serving endpoint for one model (all its batch variants).
 pub struct ModelServer {
     name: String,
+    backend: BackendKind,
     queue_tx: Sender<Request>,
     next_id: AtomicU64,
     pub metrics: Arc<Mutex<ServeMetrics>>,
@@ -114,6 +127,7 @@ impl ModelServer {
 
         Ok(Self {
             name: model.to_string(),
+            backend,
             queue_tx: tx,
             next_id: AtomicU64::new(0),
             metrics,
@@ -127,6 +141,11 @@ impl ModelServer {
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The execution backend this server was started on.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     pub fn tokens_per_image(&self) -> usize {
@@ -143,8 +162,10 @@ impl ModelServer {
         self.compile_ms
     }
 
-    /// Submit one image; returns the reply channel.
-    pub fn submit(&self, tokens: Vec<f32>) -> crate::Result<Receiver<Response>> {
+    /// Submit one image; returns the reply channel. The reply is always
+    /// delivered: `Ok(Response)` with the logits, or `Err` if the
+    /// dispatch failed or the server shut down before the request ran.
+    pub fn submit(&self, tokens: Vec<f32>) -> crate::Result<Receiver<crate::Result<Response>>> {
         anyhow::ensure!(
             tokens.len() == self.tokens_per_image,
             "expected {} token values, got {}",
@@ -165,14 +186,18 @@ impl ModelServer {
     /// Submit a set of images and wait for all replies (offline driver).
     pub fn infer_all(&self, images: Vec<Vec<f32>>) -> crate::Result<Vec<Response>> {
         let rxs: Vec<_> = images.into_iter().map(|i| self.submit(i)).collect::<Result<_, _>>()?;
-        rxs.into_iter().map(|rx| rx.recv().map_err(|e| anyhow::anyhow!("reply lost: {e}"))).collect()
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|e| anyhow::anyhow!("reply lost: {e}"))?)
+            .collect()
     }
 }
 
 impl Drop for ModelServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // unblock the executor by closing the queue
+        // unblock the executor by closing the queue; the loop's shutdown
+        // drain then fails every queued + pending request explicitly
+        // (clients blocked on `recv` get an error, not a dropped sender)
         let (tx, _rx) = channel();
         let _ = std::mem::replace(&mut self.queue_tx, tx);
         if let Some(w) = self.worker.take() {
@@ -191,16 +216,16 @@ fn executor_loop(
     stop: Arc<AtomicBool>,
 ) {
     let mut pending: Vec<Request> = Vec::new();
-    loop {
+    'serve: loop {
         if stop.load(Ordering::SeqCst) {
-            return;
+            break 'serve;
         }
         // top up the pending queue (non-blocking drain, short block if empty)
         if pending.is_empty() {
             match rx.recv_timeout(std::time::Duration::from_millis(5)) {
                 Ok(r) => pending.push(r),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'serve,
             }
         }
         while let Ok(r) = rx.try_recv() {
@@ -209,7 +234,15 @@ fn executor_loop(
 
         let head_waited = pending[0].enqueued.elapsed();
         let Some(batch) = policy.decide(pending.len(), head_waited) else {
-            std::thread::sleep(std::time::Duration::from_micros(100));
+            // a partial batch is waiting out `max_wait`: block for exactly
+            // the residual head-of-line deadline instead of burning a core
+            // in a sleep/poll spin — a new arrival wakes us early (it may
+            // complete a batch), the timeout lands us past the deadline
+            match rx.recv_timeout(policy.residual_wait(head_waited)) {
+                Ok(r) => pending.push(r),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+            }
             continue;
         };
         let exe = executables
@@ -236,7 +269,17 @@ fn executor_loop(
         let out = match exe.run_f32(&input) {
             Ok(o) => o,
             Err(e) => {
-                eprintln!("executor error: {e}");
+                // answer every drained request with the error instead of
+                // dropping their senders (which left clients hanging on
+                // `recv` until an opaque "reply lost")
+                let msg = format!("{e:#}");
+                metrics.lock().unwrap().failed += reqs.len() as u64;
+                for r in reqs {
+                    let _ = r.reply.send(Err(anyhow::anyhow!(
+                        "executor error running request {}: {msg}",
+                        r.id
+                    )));
+                }
                 continue;
             }
         };
@@ -261,12 +304,27 @@ fn executor_loop(
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .map(|(j, _)| j)
                 .unwrap_or(0);
-            let _ = r.reply.send(Response {
+            let _ = r.reply.send(Ok(Response {
                 id: r.id,
                 logits,
                 argmax,
                 latency: r.enqueued.elapsed(),
-            });
+            }));
+        }
+    }
+
+    // shutdown drain: whatever is still queued or pending will never run;
+    // fail each request deterministically so no client hangs on `recv`
+    while let Ok(r) = rx.try_recv() {
+        pending.push(r);
+    }
+    if !pending.is_empty() {
+        metrics.lock().unwrap().failed += pending.len() as u64;
+        for r in pending {
+            let _ = r.reply.send(Err(anyhow::anyhow!(
+                "server shut down before request {} was executed",
+                r.id
+            )));
         }
     }
 }

@@ -130,14 +130,32 @@ COMMANDS:
   serve                    serve synthetic requests through the quantized model
                            [--model tiny-synth] [--requests N] [--rate R/s]
                            [--artifacts DIR] [--backend interpreter|pjrt]
+                           [--lanes N]
   eval                     eval-batch accuracy of a quantized model
                            [--model tiny-synth] [--artifacts DIR]
-                           [--backend interpreter|pjrt]
+                           [--backend interpreter|pjrt] [--lanes N]
   artifacts                list the artifact manifest [--artifacts DIR]
 
 The default backend is the pure-rust interpreter (runs from the bundle
 JSON in the artifacts dir); `--backend pjrt` needs `--features pjrt`.
+`--lanes N` (equivalently the HGPIPE_LANES env var) sets the interpreter
+fabric's worker-lane count; the default is the machine's available
+parallelism, and results are bit-identical at every lane count.
 ";
+
+/// `--lanes N` is sugar for HGPIPE_LANES=N (the interpreter fabric reads
+/// the env var when the executor thread loads the model). Must run
+/// before the server spawns its executor thread.
+fn apply_lanes_flag(args: &Args) -> Result<()> {
+    if let Some(lanes) = args.flags.get("lanes") {
+        let n: usize = lanes
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--lanes expects a positive integer, got '{lanes}'"))?;
+        anyhow::ensure!(n >= 1, "--lanes must be at least 1");
+        std::env::set_var("HGPIPE_LANES", lanes);
+    }
+    Ok(())
+}
 
 fn cmd_report(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
@@ -254,6 +272,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
     let model = args.flag("model", "tiny-synth");
     let backend = args.backend()?;
+    apply_lanes_flag(args)?;
     let requests: usize = args.flag("requests", "64").parse()?;
     let rate: f64 = args.flag("rate", "0").parse()?; // 0 = closed loop
     let manifest = Manifest::load(&dir)?;
@@ -302,6 +321,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
     let model = args.flag("model", "tiny-synth");
     let backend = args.backend()?;
+    apply_lanes_flag(args)?;
     let manifest = Manifest::load(&dir)?;
     let (tokens, labels, shape) = load_eval_set(&dir)?;
     let server = ModelServer::start_with_backend(&manifest, &model, 1, backend)?;

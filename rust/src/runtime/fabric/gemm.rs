@@ -1,0 +1,243 @@
+//! Cache-blocked integer GEMM over a load-time-packed weight matrix.
+//!
+//! The interpreter's hot loop is `acc = x @ W + b` with `x: (t, ci) i32`,
+//! `W: (ci, co) i32` and exact i64 accumulation. The naive row-major walk
+//! touches `W` with stride `co` per k step; [`PackedGemm`] instead
+//! re-packs `W` once at bundle load into column *panels* of width
+//! [`TILE_CO`], so the kernel streams each panel linearly (the k loop
+//! advances by one contiguous `nbe`-wide row) while a [`TILE_CO`]-wide
+//! i64 output tile stays register/L1-resident — the classic
+//! output-stationary blocking, here in integer arithmetic.
+//!
+//! Bit-exactness: for every output element the packed kernel adds exactly
+//! the terms `x[r,k] * W[k,c]` for `k = 0..ci` in ascending k, the same
+//! order as the naive triple loop — and two's-complement i64 addition is
+//! associative anyway — so results are identical to the scalar reference
+//! on every input, including wrap-around corner cases.
+//!
+//! The zero skip (`x[r,k] == 0` contributes nothing) is kept from the
+//! naive kernel: quantized activations — GELU outputs especially — are
+//! sparse, and skipping a zero row of the panel is free.
+
+use super::LanePool;
+
+/// Output-column panel width. 64 i64 accumulators = one 512-byte hot
+/// tile; panels of `ci x 64` i32 weights stay well inside L2 for every
+/// layer of the networks this repo serves (max `ci` = 768 for deit-tiny's
+/// MLP, a 192 KiB panel).
+pub const TILE_CO: usize = 64;
+
+/// A weight matrix packed for the blocked kernel, plus its bias row.
+///
+/// The naive reference kernel ([`Self::matmul_naive`]) — the
+/// differential-testing oracle and the scalar baseline the interpreter
+/// bench measures speedups against — needs the original row-major
+/// layout; that copy is reconstructed lazily on first use so serving
+/// paths (which never call the oracle) pay no memory for it.
+#[derive(Debug)]
+pub struct PackedGemm {
+    ci: usize,
+    co: usize,
+    /// Column-panel-major: for each panel `cb` (width `nbe`), `ci`
+    /// contiguous rows of `nbe` weights each.
+    panels: Vec<i32>,
+    /// Row-major `(ci, co)` weights, unpacked on first oracle use.
+    raw: std::sync::OnceLock<Vec<i32>>,
+    bias: Vec<i64>,
+}
+
+impl PackedGemm {
+    /// Pack a row-major `(ci, co)` weight matrix into column panels.
+    pub fn pack(raw: Vec<i32>, ci: usize, co: usize, bias: Vec<i64>) -> Self {
+        assert_eq!(raw.len(), ci * co, "weight shape mismatch");
+        assert_eq!(bias.len(), co, "bias shape mismatch");
+        let mut panels = Vec::with_capacity(ci * co);
+        let mut cb = 0;
+        while cb < co {
+            let nbe = TILE_CO.min(co - cb);
+            for k in 0..ci {
+                panels.extend_from_slice(&raw[k * co + cb..k * co + cb + nbe]);
+            }
+            cb += nbe;
+        }
+        Self { ci, co, panels, raw: std::sync::OnceLock::new(), bias }
+    }
+
+    pub fn ci(&self) -> usize {
+        self.ci
+    }
+
+    pub fn co(&self) -> usize {
+        self.co
+    }
+
+    /// The row-major weights, reconstructed from the panels once on
+    /// first call (exact inverse of [`Self::pack`]'s layout transform).
+    pub fn raw(&self) -> &[i32] {
+        self.raw.get_or_init(|| {
+            let mut raw = vec![0i32; self.ci * self.co];
+            let mut poff = 0usize;
+            let mut cb = 0usize;
+            while cb < self.co {
+                let nbe = TILE_CO.min(self.co - cb);
+                for k in 0..self.ci {
+                    raw[k * self.co + cb..k * self.co + cb + nbe]
+                        .copy_from_slice(&self.panels[poff + k * nbe..poff + (k + 1) * nbe]);
+                }
+                poff += self.ci * nbe;
+                cb += nbe;
+            }
+            raw
+        })
+    }
+
+    pub fn bias(&self) -> &[i64] {
+        &self.bias
+    }
+
+    /// One output row, blocked: `orow = bias + xrow @ W`.
+    pub fn row_into(&self, xrow: &[i32], orow: &mut [i64]) {
+        debug_assert_eq!(xrow.len(), self.ci);
+        debug_assert_eq!(orow.len(), self.co);
+        orow.copy_from_slice(&self.bias);
+        let mut poff = 0usize;
+        let mut cb = 0usize;
+        while cb < self.co {
+            let nbe = TILE_CO.min(self.co - cb);
+            let otile = &mut orow[cb..cb + nbe];
+            for (k, &xr) in xrow.iter().enumerate() {
+                let xv = xr as i64;
+                if xv != 0 {
+                    let wrow = &self.panels[poff + k * nbe..poff + (k + 1) * nbe];
+                    for (o, &wv) in otile.iter_mut().zip(wrow) {
+                        *o += xv * wv as i64;
+                    }
+                }
+            }
+            poff += self.ci * nbe;
+            cb += nbe;
+        }
+    }
+
+    /// Full `t`-row matmul, output rows banded across the pool's lanes.
+    pub fn matmul(&self, x: &[i32], t: usize, pool: &LanePool) -> Vec<i64> {
+        assert_eq!(x.len(), t * self.ci, "input shape mismatch");
+        let mut out = vec![0i64; t * self.co];
+        pool.par_chunks_mut(&mut out, self.co, |r0, band| {
+            for (i, orow) in band.chunks_exact_mut(self.co).enumerate() {
+                let r = r0 + i;
+                self.row_into(&x[r * self.ci..(r + 1) * self.ci], orow);
+            }
+        });
+        out
+    }
+
+    /// The pre-fabric scalar kernel, kept verbatim as the oracle/baseline.
+    pub fn matmul_naive(&self, x: &[i32], t: usize) -> Vec<i64> {
+        assert_eq!(x.len(), t * self.ci, "input shape mismatch");
+        let (ci, co) = (self.ci, self.co);
+        let raw = self.raw();
+        let mut out = vec![0i64; t * co];
+        for r in 0..t {
+            let orow = &mut out[r * co..(r + 1) * co];
+            orow.copy_from_slice(&self.bias);
+            for k in 0..ci {
+                let xv = x[r * ci + k] as i64;
+                if xv != 0 {
+                    let wrow = &raw[k * co..(k + 1) * co];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xv * wv as i64;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn random_case(rng: &mut Prng, t: usize, ci: usize, co: usize) -> (Vec<i32>, PackedGemm) {
+        let x: Vec<i32> = (0..t * ci)
+            .map(|_| if rng.below(5) == 0 { 0 } else { rng.range_i64(-7, 7) as i32 })
+            .collect();
+        let w: Vec<i32> = (0..ci * co).map(|_| rng.range_i64(-100, 100) as i32).collect();
+        let b: Vec<i64> = (0..co).map(|_| rng.range_i64(-1_000_000_000, 1_000_000_000)).collect();
+        (x, PackedGemm::pack(w, ci, co, b))
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_randomized_shapes() {
+        // shapes straddle the TILE_CO boundary and include t / dims not
+        // divisible by the tile size, plus the real bundle shapes
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 2),
+            (7, 64, 65),
+            (5, 100, 129),
+            (2, 65, 63),
+            (16, 192, 64),
+            (16, 64, 192),
+            (4, 256, 64),
+            (16, 64, 256),
+            (9, 1, 64),
+            (1, 129, 128),
+        ];
+        let mut rng = Prng::new(0xFAB);
+        for &(t, ci, co) in &shapes {
+            let (x, g) = random_case(&mut rng, t, ci, co);
+            assert_eq!(
+                g.matmul(&x, t, &LanePool::serial()),
+                g.matmul_naive(&x, t),
+                "shape ({t},{ci},{co})"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_under_lane_pool() {
+        let mut rng = Prng::new(7);
+        for lanes in [2usize, 3, 7] {
+            let (x, g) = random_case(&mut rng, 13, 70, 130);
+            assert_eq!(
+                g.matmul(&x, 13, &LanePool::new(lanes)),
+                g.matmul_naive(&x, 13),
+                "lanes={lanes}"
+            );
+        }
+    }
+
+    #[test]
+    fn extreme_magnitudes_agree() {
+        // products at the i32*i32 extreme (|p| ~ 2^62, still inside i64)
+        // accumulate identically in both kernels; the interpreter later
+        // narrows `as i32`, so agreement must hold at full magnitude
+        let w = vec![i32::MAX, i32::MIN, -1, 1];
+        let b = vec![1i64 << 40, -(1i64 << 40)];
+        let g = PackedGemm::pack(w, 2, 2, b);
+        let x = vec![i32::MAX, 1, -3, 5];
+        let blocked = g.matmul(&x, 2, &LanePool::serial());
+        let naive = g.matmul_naive(&x, 2);
+        assert_eq!(blocked, naive);
+        assert!(blocked.iter().any(|&v| v.abs() > (1i64 << 60)));
+    }
+
+    #[test]
+    fn raw_reconstruction_inverts_packing() {
+        let mut rng = Prng::new(99);
+        for &(ci, co) in &[(5usize, 7usize), (64, 64), (3, 129), (100, 65), (1, 1)] {
+            let w: Vec<i32> = (0..ci * co).map(|_| rng.range_i64(-50, 50) as i32).collect();
+            let g = PackedGemm::pack(w.clone(), ci, co, vec![0i64; co]);
+            assert_eq!(g.raw(), &w[..], "({ci},{co})");
+        }
+    }
+
+    #[test]
+    fn bias_only_when_input_all_zero() {
+        let g = PackedGemm::pack(vec![3; 6], 2, 3, vec![11, 22, 33]);
+        assert_eq!(g.matmul(&[0, 0], 1, &LanePool::serial()), vec![11, 22, 33]);
+    }
+}

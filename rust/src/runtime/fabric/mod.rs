@@ -1,0 +1,192 @@
+//! The compute *fabric* behind the interpreter backend: a lane pool of
+//! `std::thread` workers plus cache-blocked integer GEMM kernels.
+//!
+//! HG-PIPE's throughput comes from spatially unrolling the ViT dataflow
+//! and running many coupled lanes in parallel rather than time-sharing one
+//! sequential engine. This module is the software twin of that idea for
+//! the pure-rust interpreter:
+//!
+//! * [`LanePool`] — work partitioning at two grains: whole batch lanes
+//!   (one image per worker, the coordinator's dispatch width) and row
+//!   bands inside a single image (per-token / per-head parallelism in
+//!   LayerNorm, GEMM and attention).
+//! * [`gemm::PackedGemm`] — the blocked, output-stationary i64-accumulate
+//!   matmul with the weight matrix re-packed into column panels once at
+//!   bundle load.
+//!
+//! Everything here is bit-exactness-preserving by construction: lanes
+//! write disjoint output rows and every accumulator sums the same i64
+//! terms in the same ascending-k order as the scalar reference, so the
+//! golden fixture holds at any lane count.
+//!
+//! The pool spawns scoped `std::thread` workers per parallel region (no
+//! external thread-pool crates in this offline environment). Spawn cost
+//! is amortized at batch grain (one region per dispatch); at row grain it
+//! pays off for larger token counts — a persistent worker set plus SIMD
+//! inner loops are the next step (see ROADMAP).
+
+pub mod gemm;
+
+/// Worker-lane configuration for the interpreter fabric.
+///
+/// The lane count comes from the `HGPIPE_LANES` environment variable (or
+/// the `--lanes` CLI flag, which sets it) via [`LanePool::from_env`];
+/// `lanes == 1` means fully serial execution on the caller thread.
+#[derive(Debug, Clone, Copy)]
+pub struct LanePool {
+    lanes: usize,
+}
+
+impl LanePool {
+    /// A pool with an explicit lane count (clamped to at least 1).
+    pub fn new(lanes: usize) -> Self {
+        Self { lanes: lanes.max(1) }
+    }
+
+    /// A single-lane pool: every region runs inline on the caller.
+    pub fn serial() -> Self {
+        Self { lanes: 1 }
+    }
+
+    /// Lane count from `HGPIPE_LANES`, falling back to the machine's
+    /// available parallelism (1 if that is unknown). A parsed value of 0
+    /// clamps to 1 (serial), matching the CLI's `--lanes` floor rather
+    /// than silently meaning "all cores"; an unparseable value warns on
+    /// stderr before falling back, so a typo'd env var is never a silent
+    /// misconfiguration.
+    pub fn from_env() -> Self {
+        let default = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let lanes = match std::env::var("HGPIPE_LANES") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) => n.max(1),
+                Err(_) => {
+                    eprintln!(
+                        "warning: HGPIPE_LANES='{v}' is not a lane count; \
+                         using available parallelism"
+                    );
+                    default()
+                }
+            },
+            Err(_) => default(),
+        };
+        Self::new(lanes)
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Split `data` into contiguous bands of whole `chunk`-sized rows —
+    /// one band per lane — and run `f(first_row_index, band)` on each
+    /// band, lane 0 on the caller thread and the rest on scoped workers.
+    ///
+    /// The split is deterministic (the first `rows % lanes` bands take one
+    /// extra row) but the result must not depend on it: bands are disjoint
+    /// `&mut` sub-slices, so any `f` that computes a row purely from its
+    /// global row index and shared read-only state is bit-exact at every
+    /// lane count.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk > 0, "chunk size must be positive");
+        assert_eq!(data.len() % chunk, 0, "data length must be a multiple of chunk");
+        let rows = data.len() / chunk;
+        let lanes = self.lanes.min(rows.max(1));
+        if lanes <= 1 {
+            f(0, data);
+            return;
+        }
+        let base = rows / lanes;
+        let extra = rows % lanes;
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut rest: &mut [T] = data;
+            let mut row0 = 0usize;
+            let mut own: Option<(usize, &mut [T])> = None;
+            for lane in 0..lanes {
+                let take = base + usize::from(lane < extra);
+                // move `rest` out before splitting so the band keeps the
+                // full input lifetime (required by the scoped spawns)
+                let (band, tail) = std::mem::take(&mut rest).split_at_mut(take * chunk);
+                rest = tail;
+                let start = row0;
+                row0 += take;
+                if lane == 0 {
+                    own = Some((start, band));
+                } else {
+                    s.spawn(move || f(start, band));
+                }
+            }
+            if let Some((start, band)) = own {
+                f(start, band);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let mut v = vec![0u32; 12];
+        LanePool::serial().par_chunks_mut(&mut v, 3, |r0, band| {
+            assert_eq!(r0, 0);
+            assert_eq!(band.len(), 12);
+            for x in band.iter_mut() {
+                *x = 7;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn bands_cover_all_rows_exactly_once() {
+        // odd split: 10 rows over 3 lanes -> bands of 4, 3, 3
+        for lanes in 1..=8 {
+            let mut v = vec![0usize; 10 * 4];
+            let calls = AtomicUsize::new(0);
+            LanePool::new(lanes).par_chunks_mut(&mut v, 4, |r0, band| {
+                calls.fetch_add(1, Ordering::SeqCst);
+                for (i, row) in band.chunks_exact_mut(4).enumerate() {
+                    for x in row.iter_mut() {
+                        *x = r0 + i + 1; // global row index, 1-based
+                    }
+                }
+            });
+            for (r, row) in v.chunks_exact(4).enumerate() {
+                assert!(row.iter().all(|&x| x == r + 1), "lanes={lanes} row={r}");
+            }
+            assert!(calls.load(Ordering::SeqCst) <= lanes.min(10));
+        }
+    }
+
+    #[test]
+    fn more_lanes_than_rows_is_fine() {
+        let mut v = vec![0u8; 2 * 5];
+        LanePool::new(16).par_chunks_mut(&mut v, 5, |_, band| {
+            for x in band.iter_mut() {
+                *x = 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn empty_data_is_a_noop() {
+        let mut v: Vec<i64> = Vec::new();
+        LanePool::new(4).par_chunks_mut(&mut v, 8, |_, band| {
+            assert!(band.is_empty());
+        });
+    }
+
+    #[test]
+    fn new_clamps_zero_lanes() {
+        assert_eq!(LanePool::new(0).lanes(), 1);
+        assert!(LanePool::from_env().lanes() >= 1);
+    }
+}

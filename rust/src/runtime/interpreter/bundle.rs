@@ -1,0 +1,257 @@
+//! Bundle loading + validation: parse the weight/LUT JSON written by
+//! `python -m compile.export` into a ready-to-execute [`QuantViT`].
+//!
+//! Everything the run-time kernels index is validated here, so a
+//! malformed bundle is a load error, not an executor-thread panic. Weight
+//! matrices are re-packed into [`PackedGemm`] column panels once, at
+//! load — the blocked kernel never touches the JSON layout again.
+
+use std::path::Path;
+
+use crate::lut::{AnyTable, LutTable};
+use crate::runtime::fabric::gemm::PackedGemm;
+use crate::util::json::Json;
+
+/// One encoder block's integer parameters + tables.
+pub(crate) struct BlockParams {
+    pub(crate) qkv: PackedGemm,
+    pub(crate) proj: PackedGemm,
+    pub(crate) mm1: PackedGemm,
+    pub(crate) mm2: PackedGemm,
+    pub(crate) ln1_guard: u32,
+    pub(crate) ln2_guard: u32,
+    pub(crate) ln1_rsqrt: LutTable,
+    pub(crate) ln1_rq: LutTable,
+    pub(crate) qkv_rq: LutTable,
+    pub(crate) exp: LutTable,
+    pub(crate) recip: AnyTable,
+    pub(crate) prob: LutTable,
+    pub(crate) rv_rq: LutTable,
+    pub(crate) proj_rq: LutTable,
+    pub(crate) ln2_rsqrt: LutTable,
+    pub(crate) ln2_rq: LutTable,
+    pub(crate) gelu: LutTable,
+    pub(crate) mm2_rq: LutTable,
+}
+
+/// A fully-loaded quantized ViT, ready to execute.
+pub struct QuantViT {
+    pub model: String,
+    pub precision: String,
+    pub tokens: usize,
+    pub patch_dim: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub hidden: usize,
+    pub num_classes: usize,
+    pub(crate) in_scale: f64,
+    pub(crate) in_qmin: i64,
+    pub(crate) in_qmax: i64,
+    pub(crate) logit_scale: f64,
+    /// Head bias: float32 values widened to f64 (numpy adds them in f64).
+    pub(crate) head_bias: Vec<f64>,
+    pub(crate) pe: PackedGemm,
+    pub(crate) pe_rq: LutTable,
+    pub(crate) blocks: Vec<BlockParams>,
+    pub(crate) ln_f_guard: u32,
+    pub(crate) ln_f_rsqrt: LutTable,
+    pub(crate) ln_f_rq: LutTable,
+    pub(crate) head_w: Vec<i32>,
+}
+
+fn ints_i32(v: &Json, key: &str, expect: usize) -> crate::Result<Vec<i32>> {
+    let arr = v
+        .req(key)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bundle '{key}' is not an array"))?;
+    anyhow::ensure!(arr.len() == expect, "bundle '{key}': {} values, expected {expect}", arr.len());
+    arr.iter()
+        .map(|x| x.as_i64().map(|v| v as i32).ok_or_else(|| anyhow::anyhow!("bad int in '{key}'")))
+        .collect()
+}
+
+fn ints_i64(v: &Json, key: &str, expect: usize) -> crate::Result<Vec<i64>> {
+    let arr = v
+        .req(key)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bundle '{key}' is not an array"))?;
+    anyhow::ensure!(arr.len() == expect, "bundle '{key}': {} values, expected {expect}", arr.len());
+    arr.iter()
+        .map(|x| x.as_i64().ok_or_else(|| anyhow::anyhow!("bad int in '{key}'")))
+        .collect()
+}
+
+fn usize_field(v: &Json, key: &str) -> crate::Result<usize> {
+    v.req(key)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .as_i64()
+        .map(|x| x as usize)
+        .ok_or_else(|| anyhow::anyhow!("bundle '{key}' is not an integer"))
+}
+
+impl QuantViT {
+    /// Parse a bundle JSON written by `compile/export.py`.
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("bundle {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("bundle parse: {e}"))?;
+        let format = v.get("format").and_then(|f| f.as_str()).unwrap_or("?");
+        anyhow::ensure!(format == "hgpipe-bundle-v1", "unsupported bundle format '{format}'");
+
+        let cfg = v.req("cfg").map_err(|e| anyhow::anyhow!(e))?;
+        let tokens = usize_field(cfg, "tokens")?;
+        let patch_dim = usize_field(cfg, "patch_dim")?;
+        let dim = usize_field(cfg, "dim")?;
+        let depth = usize_field(cfg, "depth")?;
+        let heads = usize_field(cfg, "heads")?;
+        let hidden = usize_field(cfg, "hidden")?;
+        let num_classes = usize_field(cfg, "num_classes")?;
+        anyhow::ensure!(heads > 0 && dim % heads == 0, "dim {dim} not divisible by heads {heads}");
+
+        let input = v.req("input").map_err(|e| anyhow::anyhow!(e))?;
+        let head = v.req("head").map_err(|e| anyhow::anyhow!(e))?;
+        let weights = v.req("weights").map_err(|e| anyhow::anyhow!(e))?;
+        let guards = v.req("guards").map_err(|e| anyhow::anyhow!(e))?;
+        let luts = v
+            .req("luts")
+            .map_err(|e| anyhow::anyhow!(e))?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("bundle 'luts' is not an object"))?;
+
+        // validate at load time what lut_i32 will index at run time
+        fn check(t: &LutTable) -> crate::Result<()> {
+            let depth = 1usize << t.n_bits;
+            anyhow::ensure!(
+                t.entries.len() == depth,
+                "lut '{}': {} entries, expected {depth}",
+                t.name,
+                t.entries.len()
+            );
+            anyhow::ensure!(t.shift < 32, "lut '{}': shift {} out of i32 range", t.name, t.shift);
+            Ok(())
+        }
+        let table = |name: &str| -> crate::Result<AnyTable> {
+            let t = luts.get(name).ok_or_else(|| anyhow::anyhow!("bundle missing lut '{name}'"))?;
+            let t = AnyTable::from_json(t).map_err(|e| anyhow::anyhow!("lut '{name}': {e}"))?;
+            match &t {
+                AnyTable::Lut(l) => check(l)?,
+                AnyTable::Segmented(s) => {
+                    check(&s.steep)?;
+                    check(&s.flat)?;
+                }
+            }
+            Ok(t)
+        };
+        let plain = |name: &str| -> crate::Result<LutTable> {
+            match table(name)? {
+                AnyTable::Lut(t) => Ok(t),
+                AnyTable::Segmented(_) => anyhow::bail!("lut '{name}': expected plain table"),
+            }
+        };
+        let guard = |name: &str| -> crate::Result<u32> {
+            guards
+                .get(name)
+                .and_then(|g| g.as_i64())
+                .map(|g| g as u32)
+                .ok_or_else(|| anyhow::anyhow!("bundle missing guard '{name}'"))
+        };
+        let gemm = |wk: &str, bk: &str, ci: usize, co: usize| -> crate::Result<PackedGemm> {
+            Ok(PackedGemm::pack(ints_i32(weights, wk, ci * co)?, ci, co, ints_i64(weights, bk, co)?))
+        };
+
+        let mut blocks = Vec::with_capacity(depth);
+        for i in 0..depth {
+            let p = |n: &str| format!("b{i}.{n}");
+            blocks.push(BlockParams {
+                qkv: gemm(&p("qkv_w"), &p("qkv_b"), dim, 3 * dim)?,
+                proj: gemm(&p("proj_w"), &p("proj_b"), dim, dim)?,
+                mm1: gemm(&p("mm1_w"), &p("mm1_b"), dim, hidden)?,
+                mm2: gemm(&p("mm2_w"), &p("mm2_b"), hidden, dim)?,
+                ln1_guard: guard(&p("ln1"))?,
+                ln2_guard: guard(&p("ln2"))?,
+                ln1_rsqrt: plain(&p("ln1.rsqrt"))?,
+                ln1_rq: plain(&p("ln1.rq"))?,
+                qkv_rq: plain(&p("qkv"))?,
+                exp: plain(&p("attn.exp"))?,
+                recip: table(&p("attn.recip"))?,
+                prob: plain(&p("attn.prob"))?,
+                rv_rq: plain(&p("rv"))?,
+                proj_rq: plain(&p("proj"))?,
+                ln2_rsqrt: plain(&p("ln2.rsqrt"))?,
+                ln2_rq: plain(&p("ln2.rq"))?,
+                gelu: plain(&p("gelu"))?,
+                mm2_rq: plain(&p("mm2"))?,
+            });
+        }
+
+        let bias_f64 = head
+            .req("bias")
+            .map_err(|e| anyhow::anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("head bias not an array"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("bad head bias")))
+            .collect::<crate::Result<Vec<f64>>>()?;
+        anyhow::ensure!(bias_f64.len() == num_classes, "head bias length mismatch");
+
+        Ok(Self {
+            model: v.get("model").and_then(|m| m.as_str()).unwrap_or("?").to_string(),
+            precision: v.get("precision").and_then(|m| m.as_str()).unwrap_or("?").to_string(),
+            tokens,
+            patch_dim,
+            dim,
+            depth,
+            heads,
+            hidden,
+            num_classes,
+            in_scale: input
+                .req("scale")
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("input scale"))?,
+            in_qmin: input
+                .req("qmin")
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_i64()
+                .ok_or_else(|| anyhow::anyhow!("input qmin"))?,
+            in_qmax: input
+                .req("qmax")
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_i64()
+                .ok_or_else(|| anyhow::anyhow!("input qmax"))?,
+            logit_scale: head
+                .req("logit_scale")
+                .map_err(|e| anyhow::anyhow!(e))?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("logit scale"))?,
+            head_bias: bias_f64,
+            pe: gemm("pe_w", "pe_b", patch_dim, dim)?,
+            pe_rq: plain("pe")?,
+            blocks,
+            ln_f_guard: guard("ln_f")?,
+            ln_f_rsqrt: plain("ln_f.rsqrt")?,
+            ln_f_rq: plain("ln_f.rq")?,
+            head_w: ints_i32(weights, "head_w", dim * num_classes)?,
+        })
+    }
+
+    pub fn tokens_per_image(&self) -> usize {
+        self.tokens * self.patch_dim
+    }
+
+    /// Input quantization — `QuantParams.quantize` (round half away from
+    /// zero, computed in f64 exactly as numpy does over the f32 tokens).
+    #[inline]
+    pub(crate) fn quantize_in(&self, x: f32) -> i32 {
+        let xf = x as f64;
+        let q = if xf < 0.0 {
+            -((-xf / self.in_scale + 0.5).floor())
+        } else {
+            (xf / self.in_scale + 0.5).floor()
+        };
+        (q as i64).clamp(self.in_qmin, self.in_qmax) as i32
+    }
+}

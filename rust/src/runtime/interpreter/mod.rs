@@ -1,0 +1,357 @@
+//! Pure-rust interpreter backend: execute the quantized ViT directly
+//! from its weight/LUT *bundle* (`python -m compile.export`).
+//!
+//! This is the default execution engine — no XLA, no HLO, no native
+//! libraries. It mirrors, **bit-exactly**, the integer semantics of
+//! `python/compile/kernels/ref.py` / `model.LutExec` (the accelerator's
+//! canonical dataflow): i64 output-stationary matmul accumulation,
+//! PoT-indexed LUT non-linears, three-pass integer LayerNorm, inverted-Exp
+//! + segmented-Recip Softmax. Where the numpy reference narrows to int32
+//! (`LutExec._i32`: every LUT input, attention scores, the residual
+//! stream), this interpreter performs the same wrapping cast, so even
+//! out-of-range corner cases agree with the python oracle; the golden
+//! fixture in `rust/artifacts/` pins that equality logit-for-logit.
+//!
+//! The module is split by concern so the kernels are independently
+//! testable:
+//!
+//! * [`bundle`](self) — load/validate the JSON bundle ([`QuantViT`]);
+//!   weights are re-packed into blocked GEMM panels here, once.
+//! * `ops` — the integer kernels (LUT application, LayerNorm, Softmax,
+//!   fused attention) in pooled and pre-fabric (naive) variants.
+//! * this file — the forward pass, per-op profiling, and the
+//!   [`Executor`] adapter the coordinator drives.
+//!
+//! Execution runs on the [`fabric`](crate::runtime::fabric): a
+//! [`LanePool`] parallelizes whole batch lanes across workers (one image
+//! per lane) or, when the dispatch is smaller than the pool, token-row
+//! bands inside each image. Lane count comes from `HGPIPE_LANES` / the
+//! `--lanes` CLI flag; every lane count produces bit-identical logits
+//! (`cargo test` pins lanes 1, 2 and 7 against the golden fixture).
+
+mod bundle;
+mod ops;
+
+pub use bundle::QuantViT;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::artifacts::{BundleInfo, Manifest};
+use crate::runtime::fabric::LanePool;
+use crate::runtime::{ExecStats, Executor, LoadedModel};
+use ops::lut_i32;
+
+/// Wall-clock milliseconds spent per kernel family during a forward
+/// pass — the per-op breakdown `benches/interpreter.rs` reports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpProfile {
+    pub quantize_ms: f64,
+    pub gemm_ms: f64,
+    pub layernorm_ms: f64,
+    pub attention_ms: f64,
+    /// Elementwise requant LUT maps + residual adds between kernels.
+    pub requant_ms: f64,
+    pub head_ms: f64,
+}
+
+impl OpProfile {
+    pub fn merge(&mut self, o: &OpProfile) {
+        self.quantize_ms += o.quantize_ms;
+        self.gemm_ms += o.gemm_ms;
+        self.layernorm_ms += o.layernorm_ms;
+        self.attention_ms += o.attention_ms;
+        self.requant_ms += o.requant_ms;
+        self.head_ms += o.head_ms;
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.quantize_ms
+            + self.gemm_ms
+            + self.layernorm_ms
+            + self.attention_ms
+            + self.requant_ms
+            + self.head_ms
+    }
+}
+
+fn lap(last: &mut Instant) -> f64 {
+    let now = Instant::now();
+    let ms = now.duration_since(*last).as_secs_f64() * 1e3;
+    *last = now;
+    ms
+}
+
+impl QuantViT {
+    /// Full integer forward for one image: f32 tokens (T*P) -> f64 logits.
+    ///
+    /// Bit-exact with `model.forward_int_np` over the same f32 tokens.
+    /// Runs fully serial; see [`Self::forward_image_pooled`] for the
+    /// lane-parallel variant (identical results).
+    pub fn forward_image(&self, tokens: &[f32]) -> crate::Result<Vec<f64>> {
+        self.forward_image_pooled(tokens, &LanePool::serial())
+    }
+
+    /// [`Self::forward_image`] with token-row bands spread across the
+    /// pool's lanes. Bit-identical at every lane count.
+    pub fn forward_image_pooled(&self, tokens: &[f32], pool: &LanePool) -> crate::Result<Vec<f64>> {
+        Ok(self.forward_profiled(tokens, pool)?.0)
+    }
+
+    /// [`Self::forward_image_pooled`] plus the per-op time breakdown.
+    pub fn forward_profiled(
+        &self,
+        tokens: &[f32],
+        pool: &LanePool,
+    ) -> crate::Result<(Vec<f64>, OpProfile)> {
+        anyhow::ensure!(
+            tokens.len() == self.tokens_per_image(),
+            "expected {} token values, got {}",
+            self.tokens_per_image(),
+            tokens.len()
+        );
+        let (t, d, h) = (self.tokens, self.dim, self.heads);
+        let mut prof = OpProfile::default();
+        let mut last = Instant::now();
+
+        let xq: Vec<i32> = tokens.iter().map(|&x| self.quantize_in(x)).collect();
+        prof.quantize_ms += lap(&mut last);
+        let acc = self.pe.matmul(&xq, t, pool);
+        prof.gemm_ms += lap(&mut last);
+        // residual stream: int32, common scale s0 (+2 guard bits)
+        let mut x: Vec<i32> = acc.iter().map(|&a| lut_i32(&self.pe_rq, a as i32)).collect();
+        prof.requant_ms += lap(&mut last);
+
+        for blk in &self.blocks {
+            // ---- MHA ----
+            let n = ops::layernorm(&x, d, blk.ln1_guard, &blk.ln1_rsqrt, &blk.ln1_rq, pool);
+            prof.layernorm_ms += lap(&mut last);
+            let acc = blk.qkv.matmul(&n, t, pool);
+            prof.gemm_ms += lap(&mut last);
+            let qkv: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.qkv_rq, a as i32)).collect();
+            prof.requant_ms += lap(&mut last);
+            let a_q = ops::attention(blk, &qkv, t, d, h, pool);
+            prof.attention_ms += lap(&mut last);
+            let acc = blk.proj.matmul(&a_q, t, pool);
+            prof.gemm_ms += lap(&mut last);
+            for (xv, &a) in x.iter_mut().zip(&acc) {
+                *xv = xv.wrapping_add(lut_i32(&blk.proj_rq, a as i32));
+            }
+            prof.requant_ms += lap(&mut last);
+
+            // ---- MLP ----
+            let n2 = ops::layernorm(&x, d, blk.ln2_guard, &blk.ln2_rsqrt, &blk.ln2_rq, pool);
+            prof.layernorm_ms += lap(&mut last);
+            let acc = blk.mm1.matmul(&n2, t, pool);
+            prof.gemm_ms += lap(&mut last);
+            let hdn: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.gelu, a as i32)).collect();
+            prof.requant_ms += lap(&mut last);
+            let acc = blk.mm2.matmul(&hdn, t, pool);
+            prof.gemm_ms += lap(&mut last);
+            for (xv, &a) in x.iter_mut().zip(&acc) {
+                *xv = xv.wrapping_add(lut_i32(&blk.mm2_rq, a as i32));
+            }
+            prof.requant_ms += lap(&mut last);
+        }
+
+        // ---- final LN + mean-pool head (the /T fold lives in logit_scale)
+        let n = ops::layernorm(&x, d, self.ln_f_guard, &self.ln_f_rsqrt, &self.ln_f_rq, pool);
+        prof.layernorm_ms += lap(&mut last);
+        let logits = self.head(&n);
+        prof.head_ms += lap(&mut last);
+        Ok((logits, prof))
+    }
+
+    /// The pre-fabric forward — naive row-major GEMM, per-head
+    /// probability matrix, per-row softmax allocations, fully serial.
+    /// Kept as the differential-testing oracle and the scalar baseline
+    /// `benches/interpreter.rs` measures the fabric against; must stay
+    /// bit-identical to [`Self::forward_image`].
+    pub fn forward_image_naive(&self, tokens: &[f32]) -> crate::Result<Vec<f64>> {
+        anyhow::ensure!(
+            tokens.len() == self.tokens_per_image(),
+            "expected {} token values, got {}",
+            self.tokens_per_image(),
+            tokens.len()
+        );
+        let (t, d, h) = (self.tokens, self.dim, self.heads);
+        let serial = LanePool::serial();
+
+        let xq: Vec<i32> = tokens.iter().map(|&x| self.quantize_in(x)).collect();
+        let acc = self.pe.matmul_naive(&xq, t);
+        let mut x: Vec<i32> = acc.iter().map(|&a| lut_i32(&self.pe_rq, a as i32)).collect();
+
+        for blk in &self.blocks {
+            let n = ops::layernorm(&x, d, blk.ln1_guard, &blk.ln1_rsqrt, &blk.ln1_rq, &serial);
+            let acc = blk.qkv.matmul_naive(&n, t);
+            let qkv: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.qkv_rq, a as i32)).collect();
+            let a_q = ops::attention_naive(blk, &qkv, t, d, h);
+            let acc = blk.proj.matmul_naive(&a_q, t);
+            for (xv, &a) in x.iter_mut().zip(&acc) {
+                *xv = xv.wrapping_add(lut_i32(&blk.proj_rq, a as i32));
+            }
+
+            let n2 = ops::layernorm(&x, d, blk.ln2_guard, &blk.ln2_rsqrt, &blk.ln2_rq, &serial);
+            let acc = blk.mm1.matmul_naive(&n2, t);
+            let hdn: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.gelu, a as i32)).collect();
+            let acc = blk.mm2.matmul_naive(&hdn, t);
+            for (xv, &a) in x.iter_mut().zip(&acc) {
+                *xv = xv.wrapping_add(lut_i32(&blk.mm2_rq, a as i32));
+            }
+        }
+
+        let n = ops::layernorm(&x, d, self.ln_f_guard, &self.ln_f_rsqrt, &self.ln_f_rq, &serial);
+        Ok(self.head(&n))
+    }
+
+    /// Mean-pool + classifier head over the final-LN output rows.
+    fn head(&self, n: &[i32]) -> Vec<f64> {
+        let d = self.dim;
+        let mut pooled = vec![0i64; d];
+        for row in n.chunks_exact(d) {
+            for (p, &v) in pooled.iter_mut().zip(row) {
+                *p += v as i64;
+            }
+        }
+        let mut logits = Vec::with_capacity(self.num_classes);
+        for k in 0..self.num_classes {
+            let mut s: i64 = 0;
+            for (c, &p) in pooled.iter().enumerate() {
+                s += p * self.head_w[c * self.num_classes + k] as i64;
+            }
+            logits.push(s as f64 * self.logit_scale + self.head_bias[k]);
+        }
+        logits
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor adapter (one per batch variant, sharing the loaded model)
+// ---------------------------------------------------------------------------
+
+/// A batch-size view over a shared [`QuantViT`], executing on a
+/// [`LanePool`].
+///
+/// Work is partitioned at two grains: when the dispatch carries at least
+/// as many images as the pool has lanes, each worker runs whole images
+/// (batch-lane grain, one parallel region per dispatch); otherwise the
+/// pool drops inside each image and parallelizes token-row bands (row
+/// grain). Both grains are bit-exact with serial execution.
+pub struct InterpreterExecutor {
+    net: Arc<QuantViT>,
+    batch: usize,
+    pool: LanePool,
+    load_ms: f64,
+    stats: Mutex<ExecStats>,
+}
+
+impl Executor for InterpreterExecutor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run_f32(&self, input: &[f32]) -> crate::Result<Vec<f32>> {
+        let per = self.net.tokens_per_image();
+        anyhow::ensure!(
+            input.len() == self.batch * per,
+            "input length {} != batch {} x {}",
+            input.len(),
+            self.batch,
+            per
+        );
+        let t0 = Instant::now();
+        let nc = self.net.num_classes;
+        let mut out = vec![0.0f32; self.batch * nc];
+        if self.pool.lanes() > 1 && self.batch >= self.pool.lanes() {
+            // batch-lane grain: a band of whole images per worker
+            let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+            let serial = LanePool::serial();
+            self.pool.par_chunks_mut(&mut out, nc, |i0, band| {
+                for (j, orow) in band.chunks_exact_mut(nc).enumerate() {
+                    let i = i0 + j;
+                    match self.net.forward_image_pooled(&input[i * per..(i + 1) * per], &serial) {
+                        Ok(logits) => {
+                            for (o, &v) in orow.iter_mut().zip(&logits) {
+                                *o = v as f32;
+                            }
+                        }
+                        Err(e) => {
+                            *err.lock().unwrap() = Some(e);
+                            return;
+                        }
+                    }
+                }
+            });
+            if let Some(e) = err.into_inner().unwrap() {
+                return Err(e);
+            }
+        } else {
+            // row grain: images serial, token rows banded inside each
+            for (i, lane) in input.chunks_exact(per).enumerate() {
+                let logits = self.net.forward_image_pooled(lane, &self.pool)?;
+                for (o, &v) in out[i * nc..(i + 1) * nc].iter_mut().zip(&logits) {
+                    *o = v as f32;
+                }
+            }
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.total_ms += ms;
+        Ok(out)
+    }
+
+    fn compile_ms(&self) -> f64 {
+        self.load_ms
+    }
+
+    fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// Load a model's bundle and wrap it in one executor per batch variant,
+/// with the lane count taken from `HGPIPE_LANES` (or the machine's
+/// available parallelism).
+pub fn load_model(manifest: &Manifest, model: &str) -> crate::Result<LoadedModel> {
+    load_model_with_lanes(manifest, model, LanePool::from_env().lanes())
+}
+
+/// [`load_model`] with an explicit lane count (tests and benches pass
+/// this directly so they never race on the process environment).
+pub fn load_model_with_lanes(
+    manifest: &Manifest,
+    model: &str,
+    lanes: usize,
+) -> crate::Result<LoadedModel> {
+    let info: &BundleInfo = manifest
+        .bundle_for(model)
+        .ok_or_else(|| anyhow::anyhow!("no interpreter bundle for model '{model}' in manifest"))?;
+    let t0 = Instant::now();
+    let net = Arc::new(QuantViT::load(&info.path)?);
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(
+        net.model == model,
+        "bundle model '{}' != requested '{model}'",
+        net.model
+    );
+    let batches = if info.batches.is_empty() { vec![1] } else { info.batches.clone() };
+    let executors: Vec<Box<dyn Executor>> = batches
+        .iter()
+        .map(|&b| {
+            Box::new(InterpreterExecutor {
+                net: net.clone(),
+                batch: b,
+                pool: LanePool::new(lanes),
+                load_ms,
+                stats: Mutex::new(ExecStats::default()),
+            }) as Box<dyn Executor>
+        })
+        .collect();
+    Ok(LoadedModel {
+        executors,
+        tokens_per_image: net.tokens_per_image(),
+        num_classes: net.num_classes,
+        compile_ms: load_ms,
+    })
+}

@@ -1,0 +1,296 @@
+//! Integer kernels of the interpreter — the rust twin of
+//! `python/compile/kernels/ref.py` / `model.LutExec`.
+//!
+//! Every kernel here is bit-exact with the numpy oracle: i64
+//! accumulation in ascending index order, `as i32` wrapping narrowings
+//! exactly where `LutExec._i32` narrows, PoT-indexed LUT lookups for the
+//! non-linears. The pooled variants band output rows across
+//! [`LanePool`] lanes; each row's arithmetic is unchanged, so lane count
+//! never changes a single bit of the result.
+//!
+//! The `*_naive` variants preserve the pre-fabric scalar structure
+//! (per-row scratch allocations, per-head probability matrix,
+//! column-outer `R @ V`). They are the differential-testing oracle and
+//! the baseline `benches/interpreter.rs` measures the fabric against.
+
+use crate::lut::{AnyTable, LutTable, SegmentedTable};
+use crate::runtime::fabric::LanePool;
+
+use super::bundle::BlockParams;
+
+// ---------------------------------------------------------------------------
+// integer LUT application — the rust twin of model.LutExec._lut / _seg
+// ---------------------------------------------------------------------------
+
+/// `LutExec._lut`: int32-domain PoT-indexed lookup.
+#[inline]
+pub(crate) fn lut_i32(t: &LutTable, x: i32) -> i32 {
+    let alpha = t.alpha as i32;
+    let diff = if t.inverted { alpha.wrapping_sub(x) } else { x.wrapping_sub(alpha) };
+    let raw = diff >> t.shift;
+    let hi = (1i32 << t.n_bits) - 1;
+    t.entries[raw.clamp(0, hi) as usize] as i32
+}
+
+/// `LutExec._seg`: segmented lookup in the common (flat) output scale.
+#[inline]
+pub(crate) fn seg_i32(s: &SegmentedTable, x: i32) -> i32 {
+    if x < s.pivot as i32 {
+        lut_i32(&s.steep, x).wrapping_shl(s.ratio_log2())
+    } else {
+        lut_i32(&s.flat, x)
+    }
+}
+
+#[inline]
+pub(crate) fn any_i32(t: &AnyTable, x: i32) -> i32 {
+    match t {
+        AnyTable::Lut(l) => lut_i32(l, x),
+        AnyTable::Segmented(s) => seg_i32(s, x),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm
+// ---------------------------------------------------------------------------
+
+/// Integer LayerNorm (`LutExec.layernorm`): three passes per token row,
+/// rows banded across the pool.
+pub(crate) fn layernorm(
+    x: &[i32],
+    d: usize,
+    guard: u32,
+    rsqrt: &LutTable,
+    rq: &LutTable,
+    pool: &LanePool,
+) -> Vec<i32> {
+    debug_assert_eq!(x.len() % d, 0);
+    let mut out = vec![0i32; x.len()];
+    pool.par_chunks_mut(&mut out, d, |r0, band| {
+        let mut c = vec![0i64; d];
+        for (i, orow) in band.chunks_exact_mut(d).enumerate() {
+            let row = &x[(r0 + i) * d..(r0 + i + 1) * d];
+            let s: i64 = row.iter().map(|&v| v as i64).sum();
+            let mut v: i64 = 0;
+            for (cj, &xv) in c.iter_mut().zip(row) {
+                // numpy: `ci * x` runs in int32 (wrapping) before the
+                // int64 subtraction widens it
+                *cj = (d as i32).wrapping_mul(xv) as i64 - s;
+                let cg = *cj >> guard;
+                v += cg * cg;
+            }
+            let r = lut_i32(rsqrt, v as i32) as i64;
+            for (o, &cj) in orow.iter_mut().zip(c.iter()) {
+                *o = lut_i32(rq, (cj * r) as i32);
+            }
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Softmax
+// ---------------------------------------------------------------------------
+
+/// Reusable per-worker buffers for one softmax row — hoisted out of the
+/// per-row hot path (the pre-fabric code allocated two vectors per row).
+pub(crate) struct SoftmaxScratch {
+    sc: Vec<i32>,
+    e: Vec<i32>,
+}
+
+impl SoftmaxScratch {
+    pub(crate) fn new(t: usize) -> Self {
+        Self { sc: vec![0i32; t], e: vec![0i32; t] }
+    }
+}
+
+/// Integer Softmax over one score row (`LutExec.softmax`): max-subtract,
+/// inverted Exp LUT, (segmented) Recip, prob ReQuant.
+pub(crate) fn softmax_row(
+    exp: &LutTable,
+    recip: &AnyTable,
+    prob: &LutTable,
+    scores: &[i64],
+    probs: &mut [i32],
+    scratch: &mut SoftmaxScratch,
+) {
+    debug_assert_eq!(scores.len(), scratch.sc.len());
+    for (s, &a) in scratch.sc.iter_mut().zip(scores) {
+        *s = a as i32;
+    }
+    let m = *scratch.sc.iter().max().unwrap();
+    let mut tot: i64 = 0;
+    for (ev, &s) in scratch.e.iter_mut().zip(scratch.sc.iter()) {
+        *ev = lut_i32(exp, s.wrapping_sub(m));
+        tot += *ev as i64;
+    }
+    let r = any_i32(recip, tot as i32);
+    for (p, &ev) in probs.iter_mut().zip(scratch.e.iter()) {
+        *p = lut_i32(prob, ev.wrapping_mul(r));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Attention
+// ---------------------------------------------------------------------------
+
+/// Fused multi-head attention over requantized `qkv` rows: per output
+/// token `t1` (banded across the pool) and head, compute the score row,
+/// softmax it, and accumulate `R @ V` with the zero-probability skip.
+///
+/// Bit-exact with [`attention_naive`]: per output element the same i64
+/// terms are summed in the same ascending-`t2` order (skipping a zero
+/// probability adds nothing), and the `as i32` narrowing into the
+/// `rv` requant LUT is unchanged.
+pub(crate) fn attention(
+    blk: &BlockParams,
+    qkv: &[i32],
+    t: usize,
+    d: usize,
+    h: usize,
+    pool: &LanePool,
+) -> Vec<i32> {
+    let dh = d / h;
+    let mut a_q = vec![0i32; t * d];
+    pool.par_chunks_mut(&mut a_q, d, |t1_0, band| {
+        let mut scores = vec![0i64; t];
+        let mut prob = vec![0i32; t];
+        let mut rv = vec![0i64; dh];
+        let mut scratch = SoftmaxScratch::new(t);
+        for (i, orow) in band.chunks_exact_mut(d).enumerate() {
+            let t1 = t1_0 + i;
+            let qrow = t1 * 3 * d;
+            for hh in 0..h {
+                let (qof, kof, vof) = (hh * dh, d + hh * dh, 2 * d + hh * dh);
+                // DyMM 1: scores = Q @ K^T for this (t1, head)
+                let q = &qkv[qrow + qof..qrow + qof + dh];
+                for (t2, sc) in scores.iter_mut().enumerate() {
+                    let k = &qkv[t2 * 3 * d + kof..t2 * 3 * d + kof + dh];
+                    *sc = q.iter().zip(k).map(|(&a, &b)| a as i64 * b as i64).sum();
+                }
+                softmax_row(&blk.exp, &blk.recip, &blk.prob, &scores, &mut prob, &mut scratch);
+                // DyMM 2: R @ V, t2-outer so V rows stream contiguously
+                rv.fill(0);
+                for (t2, &p) in prob.iter().enumerate() {
+                    let p = p as i64;
+                    if p != 0 {
+                        let v = &qkv[t2 * 3 * d + vof..t2 * 3 * d + vof + dh];
+                        for (a, &vv) in rv.iter_mut().zip(v) {
+                            *a += p * vv as i64;
+                        }
+                    }
+                }
+                for (o, &s) in orow[hh * dh..(hh + 1) * dh].iter_mut().zip(rv.iter()) {
+                    *o = lut_i32(&blk.rv_rq, s as i32);
+                }
+            }
+        }
+    });
+    a_q
+}
+
+/// The pre-fabric attention: head-outer, full `t x t` probability
+/// matrix, column-outer `R @ V`, per-row softmax allocations. Kept as
+/// the differential oracle / scalar baseline.
+pub(crate) fn attention_naive(blk: &BlockParams, qkv: &[i32], t: usize, d: usize, h: usize) -> Vec<i32> {
+    let dh = d / h;
+    let mut a_q = vec![0i32; t * d];
+    let mut scores = vec![0i64; t];
+    let mut probs = vec![0i32; t * t];
+    for hh in 0..h {
+        let (qof, kof, vof) = (hh * dh, d + hh * dh, 2 * d + hh * dh);
+        for t1 in 0..t {
+            let q = &qkv[t1 * 3 * d + qof..t1 * 3 * d + qof + dh];
+            for t2 in 0..t {
+                let k = &qkv[t2 * 3 * d + kof..t2 * 3 * d + kof + dh];
+                scores[t2] = q.iter().zip(k).map(|(&a, &b)| a as i64 * b as i64).sum();
+            }
+            let mut scratch = SoftmaxScratch::new(t); // per-row, like the old code
+            softmax_row(
+                &blk.exp,
+                &blk.recip,
+                &blk.prob,
+                &scores,
+                &mut probs[t1 * t..(t1 + 1) * t],
+                &mut scratch,
+            );
+        }
+        for t1 in 0..t {
+            for c in 0..dh {
+                let mut s: i64 = 0;
+                for t2 in 0..t {
+                    s += probs[t1 * t + t2] as i64 * qkv[t2 * 3 * d + vof + c] as i64;
+                }
+                a_q[t1 * d + hh * dh + c] = lut_i32(&blk.rv_rq, s as i32);
+            }
+        }
+    }
+    a_q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_lut(alpha: i64, shift: u32, n_bits: u32, inverted: bool, entries: Vec<i64>) -> LutTable {
+        LutTable {
+            name: "t".into(),
+            alpha,
+            shift,
+            n_bits,
+            inverted,
+            out_scale: 1.0,
+            out_zp: 0,
+            entries,
+        }
+    }
+
+    #[test]
+    fn lut_i32_matches_table_lookup_in_range() {
+        let t = mk_lut(-8, 2, 2, false, vec![10, 20, 30, 40]);
+        for x in -20i64..20 {
+            assert_eq!(lut_i32(&t, x as i32) as i64, t.lookup(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn lut_i32_inverted_matches() {
+        let t = mk_lut(0, 1, 2, true, vec![1, 2, 3, 4]);
+        for x in -20i64..5 {
+            assert_eq!(lut_i32(&t, x as i32) as i64, t.lookup(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn lut_i32_wraps_like_numpy_int32() {
+        // an accumulator past i32::MAX wraps negative before indexing,
+        // exactly as numpy's astype(int32) does in LutExec._lut
+        let t = mk_lut(0, 4, 2, false, vec![7, 8, 9, 10]);
+        let big: i64 = (1i64 << 31) + 5; // wraps to i32::MIN + 5
+        let wrapped = big as i32;
+        assert!(wrapped < 0);
+        assert_eq!(lut_i32(&t, wrapped), 7); // clamps to index 0
+    }
+
+    #[test]
+    fn seg_i32_selects_by_pivot_and_shifts() {
+        let steep = LutTable { out_scale: 1.0, ..mk_lut(0, 2, 2, false, vec![100, 90, 80, 70]) };
+        let flat = LutTable { out_scale: 0.25, alpha: 16, ..mk_lut(0, 2, 2, false, vec![5, 4, 3, 2]) };
+        let s = SegmentedTable { name: "s".into(), pivot: 16, steep, flat };
+        assert_eq!(seg_i32(&s, 0), 400); // 100 << 2
+        assert_eq!(seg_i32(&s, 16), 5);
+    }
+
+    #[test]
+    fn layernorm_rows_independent_of_lane_count() {
+        let rsqrt = mk_lut(-(1 << 20), 10, 6, false, (0..64i64).map(|i| 64 - i).collect());
+        let rq = mk_lut(-(1 << 20), 12, 6, false, (0..64i64).map(|i| i - 32).collect());
+        let d = 16;
+        let x: Vec<i32> = (0..5 * d as i32).map(|i| (i * 37 % 113) - 56).collect();
+        let serial = layernorm(&x, d, 2, &rsqrt, &rq, &LanePool::serial());
+        for lanes in [2usize, 3, 7] {
+            assert_eq!(layernorm(&x, d, 2, &rsqrt, &rq, &LanePool::new(lanes)), serial);
+        }
+    }
+}

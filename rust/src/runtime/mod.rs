@@ -8,6 +8,9 @@
 //!   (`python -m compile.export`), bit-exact with the python reference
 //!   (`python/compile/kernels/ref.py` semantics). No native deps, no
 //!   `make artifacts` prerequisite beyond the bundle JSON.
+//! * [`fabric`] — the interpreter's compute layer: a `std::thread` lane
+//!   pool (batch-lane and token-row grains, `HGPIPE_LANES`) plus the
+//!   cache-blocked, panel-packed integer GEMM. Bit-exactness-preserving.
 //! * [`pjrt`] (feature `pjrt`) — the XLA path: load `artifacts/*.hlo.txt`
 //!   emitted by `python/compile/aot.py` onto a PJRT CPU client. Interchange
 //!   is HLO **text** — jax >= 0.5 emits protos with 64-bit instruction ids
@@ -17,6 +20,7 @@
 //! Both backends expose batch-variant [`Executor`]s behind one trait, so
 //! the dynamic batcher and the metrics pipeline are backend-agnostic.
 
+pub mod fabric;
 pub mod interpreter;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -39,6 +43,11 @@ pub enum BackendKind {
     /// PJRT CPU client executing AOT-compiled HLO text.
     #[cfg(feature = "pjrt")]
     Pjrt,
+    /// Test-only: loads instantly, every execution fails. Drives the
+    /// coordinator's error-reply path in integration tests; not
+    /// reachable from [`BackendKind::parse`].
+    #[doc(hidden)]
+    Faulty,
 }
 
 impl BackendKind {
@@ -62,6 +71,7 @@ impl BackendKind {
             Self::Interpreter => "interpreter",
             #[cfg(feature = "pjrt")]
             Self::Pjrt => "pjrt",
+            Self::Faulty => "faulty",
         }
     }
 }
@@ -99,5 +109,49 @@ pub fn load_model(kind: BackendKind, manifest: &Manifest, model: &str) -> crate:
         BackendKind::Interpreter => interpreter::load_model(manifest, model),
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => pjrt::load_model(manifest, model),
+        BackendKind::Faulty => Ok(faulty::load_model()),
+    }
+}
+
+/// Test-only backend whose executors always fail at run time — the only
+/// way to exercise the coordinator's dispatch-error reply path from an
+/// integration test (the interpreter cannot fail on length-validated
+/// input).
+#[doc(hidden)]
+pub mod faulty {
+    use super::{ExecStats, Executor, LoadedModel};
+
+    pub const TOKENS_PER_IMAGE: usize = 4;
+    pub const NUM_CLASSES: usize = 2;
+
+    struct FaultyExecutor {
+        batch: usize,
+    }
+
+    impl Executor for FaultyExecutor {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+
+        fn run_f32(&self, _input: &[f32]) -> crate::Result<Vec<f32>> {
+            anyhow::bail!("injected fabric fault")
+        }
+
+        fn compile_ms(&self) -> f64 {
+            0.0
+        }
+
+        fn stats(&self) -> ExecStats {
+            ExecStats::default()
+        }
+    }
+
+    pub fn load_model() -> LoadedModel {
+        LoadedModel {
+            executors: vec![Box::new(FaultyExecutor { batch: 1 })],
+            tokens_per_image: TOKENS_PER_IMAGE,
+            num_classes: NUM_CLASSES,
+            compile_ms: 0.0,
+        }
     }
 }

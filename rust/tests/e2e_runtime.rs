@@ -78,8 +78,8 @@ fn deterministic_across_runs() {
     let manifest = Manifest::load(&dir).unwrap();
     let server = ModelServer::start_with_backend(&manifest, "tiny-synth", 2, BackendKind::Pjrt).unwrap();
     let img: Vec<f32> = tokens[..per].to_vec();
-    let a = server.submit(img.clone()).unwrap().recv().unwrap();
-    let b = server.submit(img).unwrap().recv().unwrap();
+    let a = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
+    let b = server.submit(img).unwrap().recv().unwrap().unwrap();
     assert_eq!(a.logits, b.logits, "quantized inference must be bit-deterministic");
 }
 

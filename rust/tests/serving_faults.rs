@@ -1,0 +1,95 @@
+//! Regression tests for the serving-loop request-loss fixes (PR 2):
+//!
+//! 1. a failed `run_f32` dispatch must answer every drained request with
+//!    an explicit error (previously the senders were dropped and clients
+//!    hung on `recv` until an opaque "reply lost"),
+//! 2. dropping a `ModelServer` must deterministically fail queued +
+//!    pending requests instead of silently discarding them,
+//! 3. a lone request parked behind the batching deadline must dispatch
+//!    at the deadline (the executor now blocks in `recv_timeout` for the
+//!    residual head-of-line wait instead of busy-spinning; the deadline
+//!    arithmetic itself is unit-tested in `coordinator::batcher`).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::ModelServer;
+use hgpipe::runtime::{faulty, BackendKind};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&fixture_dir()).expect("committed golden fixture")
+}
+
+#[test]
+fn failed_dispatch_replies_error_to_every_request() {
+    // the Faulty backend loads fine and fails every execution — the only
+    // way to drive the dispatch-error path end to end
+    let server =
+        ModelServer::start_with_backend(&manifest(), "any", 1, BackendKind::Faulty).unwrap();
+    assert_eq!(server.tokens_per_image(), faulty::TOKENS_PER_IMAGE);
+    let rx1 = server.submit(vec![0.5; faulty::TOKENS_PER_IMAGE]).unwrap();
+    let rx2 = server.submit(vec![0.25; faulty::TOKENS_PER_IMAGE]).unwrap();
+    for (i, rx) in [rx1, rx2].into_iter().enumerate() {
+        let reply = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i}: reply sender dropped without a message"));
+        let err = reply.expect_err("a failed dispatch must surface its error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected fabric fault"), "request {i}: unexpected error: {msg}");
+    }
+    assert_eq!(server.metrics.lock().unwrap().failed, 2);
+}
+
+#[test]
+fn infer_all_propagates_dispatch_errors() {
+    let server =
+        ModelServer::start_with_backend(&manifest(), "any", 1, BackendKind::Faulty).unwrap();
+    let images = vec![vec![0.0; faulty::TOKENS_PER_IMAGE]; 3];
+    let err = server.infer_all(images).expect_err("faulty backend cannot succeed");
+    assert!(format!("{err:#}").contains("injected fabric fault"));
+}
+
+#[test]
+fn dropping_server_fails_queued_requests_deterministically() {
+    // a 10 s batching deadline plus fewer requests than the smallest full
+    // batch keeps all three parked in the queue until the drop
+    let server = ModelServer::start(&manifest(), "tiny-synth", 10_000).unwrap();
+    let per = server.tokens_per_image();
+    let metrics = server.metrics.clone();
+    let rxs: Vec<_> = (0..3).map(|_| server.submit(vec![0.0; per]).unwrap()).collect();
+    drop(server);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i}: reply sender dropped without a message"));
+        let err = reply.expect_err("queued request must fail on shutdown, not hang");
+        assert!(format!("{err:#}").contains("shut down"), "request {i}");
+    }
+    assert_eq!(metrics.lock().unwrap().failed, 3);
+}
+
+#[test]
+fn single_request_dispatches_at_the_deadline() {
+    // batch variants are {1, 8}: a lone request can never fill the large
+    // variant, so it must be held exactly until the head-of-line deadline
+    // and then dispatched on the batch-1 variant
+    let wait = Duration::from_millis(80);
+    let server = ModelServer::start(&manifest(), "tiny-synth", wait.as_millis() as u64).unwrap();
+    let per = server.tokens_per_image();
+    let rx = server.submit(vec![0.1; per]).unwrap();
+    let resp = rx.recv().unwrap().expect("lone request must eventually run");
+    assert!(
+        resp.latency >= wait,
+        "dispatched before the batching deadline: {:?} < {wait:?}",
+        resp.latency
+    );
+    let m = server.metrics.lock().unwrap();
+    assert_eq!(m.count(), 1);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.batch_hist.keys().copied().collect::<Vec<_>>(), vec![1]);
+}
