@@ -15,11 +15,15 @@ ARTIFACTS := rust/artifacts
 build:
 	cargo build --release
 
-# Interpreter fabric throughput report (scalar baseline vs lane pool,
-# per-op breakdown) -> BENCH_interpreter.json at the repo root. The path
-# is absolute because cargo runs bench binaries with cwd = the package
-# dir (rust/), not the invocation dir. The smoke variant is what CI runs
-# on every push.
+# Interpreter fabric throughput report -> BENCH_interpreter.json at the
+# repo root: scalar baseline vs spawn-per-region pool vs the persistent
+# worker fabric, a lane-scaling sweep (1/2/4/available), the GEMM
+# microkernel-vs-naive speedup (dense + sparse), and serial + pooled
+# per-op breakdowns. Field docs live in README.md. Lane precedence:
+# `--lanes` (after `--`) > HGPIPE_LANES > max(4, available cores). The
+# path is absolute because cargo runs bench binaries with cwd = the
+# package dir (rust/), not the invocation dir. The smoke variant is what
+# CI runs on every push.
 bench-json:
 	cargo bench --bench interpreter -- --json $(CURDIR)/BENCH_interpreter.json
 

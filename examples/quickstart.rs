@@ -11,6 +11,7 @@ use hgpipe::arch::parallelism::design_network;
 use hgpipe::artifacts::Manifest;
 use hgpipe::coordinator::ModelServer;
 use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::runtime::{BackendKind, RuntimeConfig};
 use hgpipe::sim::{self, builder::Paradigm, SimConfig};
 use hgpipe::util::prng::Prng;
 
@@ -43,7 +44,11 @@ fn main() -> hgpipe::Result<()> {
     };
     let manifest = Manifest::load(&dir)?;
     let model = "tiny-synth"; // small and fast; use deit-tiny for the full net
-    let server = ModelServer::start(&manifest, model, 2)?;
+    // explicit 2-lane persistent fabric (None = HGPIPE_LANES, then all
+    // cores); the workers are created here, once, and joined when the
+    // server drops
+    let config = RuntimeConfig::new(BackendKind::Interpreter).with_lanes(Some(2));
+    let server = ModelServer::start_with_config(&manifest, model, 2, config)?;
     let mut rng = Prng::new(1);
     let image: Vec<f32> = (0..server.tokens_per_image()).map(|_| rng.f64() as f32).collect();
     let reply = server.submit(image)?.recv()??;

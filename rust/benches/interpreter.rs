@@ -1,5 +1,7 @@
 //! Interpreter fabric throughput bench: pre-fabric scalar kernels vs the
-//! blocked + lane-pooled fabric, with a per-op time breakdown.
+//! persistent lane-pooled fabric with its register-blocked GEMM
+//! microkernel, plus a spawn-per-region reference (the PR-2 fabric), a
+//! lane-scaling sweep, and per-op time breakdowns.
 //!
 //! Run directly (`cargo bench --bench interpreter`) for a human summary,
 //! or via `make bench-json` to also emit `BENCH_interpreter.json` — the
@@ -13,10 +15,21 @@
 //!
 //! The bench self-validates before timing: the fabric path must be
 //! logit-for-logit bit-identical to the naive baseline on its own input.
+//!
+//! JSON fields (see README for the full schema):
+//!   scalar_naive_img_s      pre-fabric scalar kernels, serial
+//!   fabric_serial_img_s     persistent fabric, 1 lane (microkernel on)
+//!   spawn_pooled_img_s      PR-2-style scoped-spawn-per-dispatch pool
+//!   fabric_pooled_img_s     persistent fabric through the executor
+//!   lane_sweep[]            {lanes, persistent_img_s, spawn_img_s}
+//!   gemm_microkernel        blocked-vs-naive speedup, dense + sparse
+//!   per_op_ms_per_image / per_op_pooled_ms_per_image
 
+use std::fmt::Write as _;
 use std::time::Duration;
 
 use hgpipe::artifacts::Manifest;
+use hgpipe::runtime::fabric::gemm::PackedGemm;
 use hgpipe::runtime::fabric::LanePool;
 use hgpipe::runtime::interpreter::{self, OpProfile, QuantViT};
 use hgpipe::util::bench::{bench, black_box};
@@ -61,6 +74,57 @@ fn parse_opts() -> Opts {
     Opts { json, smoke, lanes: lanes.max(1) }
 }
 
+/// The PR-2 fabric, reconstructed as a reference: one scoped-thread
+/// spawn per dispatch region (batch-lane grain), each lane forwarding
+/// its share of images serially. Measures what the persistent pool
+/// saves.
+fn spawn_pooled_round(net: &QuantViT, flat: &[f32], per: usize, lanes: usize) {
+    let n_images = flat.len() / per;
+    let lanes = lanes.min(n_images).max(1);
+    let base = n_images / lanes;
+    let extra = n_images % lanes;
+    std::thread::scope(|s| {
+        let mut i0 = 0usize;
+        for lane in 0..lanes {
+            let take = base + usize::from(lane < extra);
+            let slice = &flat[i0 * per..(i0 + take) * per];
+            i0 += take;
+            s.spawn(move || {
+                let serial = LanePool::serial();
+                for img in slice.chunks_exact(per) {
+                    black_box(net.forward_image_pooled(img, &serial).unwrap());
+                }
+            });
+        }
+    });
+}
+
+/// img/s of the persistent fabric at a given lane count, through the
+/// real executor at its widest batch variant (exactly what the
+/// coordinator dispatches).
+fn persistent_img_s(
+    manifest: &Manifest,
+    lanes: usize,
+    flat: &[f32],
+    per: usize,
+    budget: Duration,
+    label: &str,
+) -> f64 {
+    let loaded = interpreter::load_model_with_lanes(manifest, "tiny-synth", lanes).expect("load");
+    let exe = loaded.executors.iter().max_by_key(|e| e.batch()).expect("an executor");
+    let batch = exe.batch();
+    let n_images = flat.len() / per;
+    let rounds = n_images / batch;
+    assert!(rounds > 0, "image count {n_images} smaller than batch {batch}");
+    let r = bench(label, budget, || {
+        for c in 0..rounds {
+            black_box(exe.run_f32(&flat[c * batch * per..(c + 1) * batch * per]).unwrap());
+        }
+    });
+    println!("{r}");
+    (rounds * batch) as f64 / r.mean.as_secs_f64()
+}
+
 fn main() {
     let opts = parse_opts();
     println!("=== interpreter fabric bench ({} lanes) ===\n", opts.lanes);
@@ -82,13 +146,15 @@ fn main() {
 
     let n_images: usize = if opts.smoke { 16 } else { 64 };
     let budget = Duration::from_millis(if opts.smoke { 200 } else { 2000 });
+    let sweep_budget = budget / 2;
     let mut rng = Prng::new(17);
     let flat: Vec<f32> = (0..n_images * per).map(|_| rng.f64() as f32).collect();
 
     // self-check: fabric output must be bit-identical to the baseline
     let want = net.forward_image_naive(&flat[..per]).unwrap();
     for lanes in [1usize, opts.lanes] {
-        let got = net.forward_image_pooled(&flat[..per], &LanePool::new(lanes)).unwrap();
+        let pool = LanePool::new(lanes);
+        let got = net.forward_image_pooled(&flat[..per], &pool).unwrap();
         assert_eq!(
             want.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
             got.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
@@ -105,50 +171,123 @@ fn main() {
     println!("{r_naive}");
     let naive_ips = n_images as f64 / r_naive.mean.as_secs_f64();
 
-    // 2. fabric, serial: blocked GEMM + hoisted scratch, one lane
-    let r_serial = bench("fabric forward, 1 lane (blocked GEMM)", budget, || {
+    // 2. fabric, serial: microkernel GEMM + arena scratch, one lane
+    let serial_pool = LanePool::serial();
+    let r_serial = bench("fabric forward, 1 lane (GEMM microkernel)", budget, || {
         for img in flat.chunks_exact(per) {
-            black_box(net.forward_image(img).unwrap());
+            black_box(net.forward_image_pooled(img, &serial_pool).unwrap());
         }
     });
     println!("{r_serial}");
     let serial_ips = n_images as f64 / r_serial.mean.as_secs_f64();
 
-    // 3. fabric, pooled: through the real executor at its widest batch
-    // variant (batch-lane grain, exactly what the coordinator dispatches)
-    let loaded =
-        interpreter::load_model_with_lanes(&manifest, "tiny-synth", opts.lanes).expect("load");
-    let exe = loaded.executors.iter().max_by_key(|e| e.batch()).expect("an executor");
-    let batch = exe.batch();
-    let rounds = n_images / batch;
-    assert!(rounds > 0, "image count {n_images} smaller than batch {batch}");
-    let name = format!("fabric run_f32, {} lanes, batch {batch}", opts.lanes);
-    let r_pooled = bench(&name, budget, || {
-        for c in 0..rounds {
-            black_box(exe.run_f32(&flat[c * batch * per..(c + 1) * batch * per]).unwrap());
-        }
-    });
-    println!("{r_pooled}");
-    let pooled_ips = (rounds * batch) as f64 / r_pooled.mean.as_secs_f64();
+    // 3. spawn-per-region reference (the PR-2 fabric) at the headline
+    // lane count
+    let r_spawn = bench(
+        &format!("spawn-per-dispatch pool, {} lanes (PR-2 ref)", opts.lanes),
+        budget,
+        || spawn_pooled_round(&net, &flat, per, opts.lanes),
+    );
+    println!("{r_spawn}");
+    let spawn_ips = n_images as f64 / r_spawn.mean.as_secs_f64();
 
-    // per-op breakdown (serial, so attribution is not interleaved)
+    // 4. persistent fabric through the real executor at its widest batch
+    let pooled_ips = persistent_img_s(
+        &manifest,
+        opts.lanes,
+        &flat,
+        per,
+        budget,
+        &format!("persistent fabric run_f32, {} lanes", opts.lanes),
+    );
+
+    // 5. lane-scaling sweep: persistent vs spawn at 1/2/4/available
+    let mut sweep_lanes = vec![1usize, 2, 4, opts.lanes];
+    sweep_lanes.sort_unstable();
+    sweep_lanes.dedup();
+    let mut sweep: Vec<(usize, f64, f64)> = Vec::new();
+    for &lanes in &sweep_lanes {
+        let p_ips = persistent_img_s(
+            &manifest,
+            lanes,
+            &flat,
+            per,
+            sweep_budget,
+            &format!("  sweep: persistent, {lanes} lanes"),
+        );
+        let r_sp = bench(&format!("  sweep: spawn, {lanes} lanes"), sweep_budget, || {
+            spawn_pooled_round(&net, &flat, per, lanes)
+        });
+        println!("{r_sp}");
+        let s_ips = n_images as f64 / r_sp.mean.as_secs_f64();
+        sweep.push((lanes, p_ips, s_ips));
+    }
+
+    // 6. GEMM microkernel vs the scalar oracle, dense and sparse inputs
+    // (deit-tiny MLP shape when not smoking; panels + remainder edges)
+    let (gt, gci, gco) = if opts.smoke { (16usize, 64usize, 192usize) } else { (197, 192, 768) };
+    let mut grng = Prng::new(0xBE);
+    let gw: Vec<i32> = (0..gci * gco).map(|_| grng.range_i64(-100, 100) as i32).collect();
+    let gb: Vec<i64> = (0..gco).map(|_| grng.range_i64(-1000, 1000)).collect();
+    let g = PackedGemm::pack(gw, gci, gco, gb);
+    let dense_x: Vec<i32> = (0..gt * gci).map(|_| grng.range_i64(1, 15) as i32).collect();
+    let sparse_x: Vec<i32> = (0..gt * gci)
+        .map(|_| if grng.below(10) < 7 { 0 } else { grng.range_i64(-15, 15) as i32 })
+        .collect();
+    assert_eq!(g.matmul(&dense_x, gt, &serial_pool), g.matmul_naive(&dense_x, gt));
+    assert_eq!(g.matmul(&sparse_x, gt, &serial_pool), g.matmul_naive(&sparse_x, gt));
+    let gemm_speedup = |x: &[i32], tag: &str| -> f64 {
+        let rb = bench(&format!("gemm microkernel ({gt}x{gci}x{gco}, {tag})"), sweep_budget, || {
+            black_box(g.matmul(x, gt, &serial_pool));
+        });
+        println!("{rb}");
+        let rn = bench(&format!("gemm naive scalar ({gt}x{gci}x{gco}, {tag})"), sweep_budget, || {
+            black_box(g.matmul_naive(x, gt));
+        });
+        println!("{rn}");
+        rn.mean.as_secs_f64() / rb.mean.as_secs_f64()
+    };
+    let gemm_dense_speedup = gemm_speedup(&dense_x, "dense");
+    let gemm_sparse_speedup = gemm_speedup(&sparse_x, "70% zeros");
+
+    // per-op breakdowns: serial (clean attribution) and pooled (what the
+    // serving path actually spends per op at the headline lane count)
     let prof_images = n_images.min(8);
     let mut prof = OpProfile::default();
     for img in flat.chunks_exact(per).take(prof_images) {
-        let (_, p) = net.forward_profiled(img, &LanePool::serial()).unwrap();
+        let (_, p) = net.forward_profiled(img, &serial_pool).unwrap();
         prof.merge(&p);
+    }
+    let pooled_pool = LanePool::new(opts.lanes);
+    let mut prof_pooled = OpProfile::default();
+    for img in flat.chunks_exact(per).take(prof_images) {
+        let (_, p) = net.forward_profiled(img, &pooled_pool).unwrap();
+        prof_pooled.merge(&p);
     }
     let scale = 1.0 / prof_images as f64;
     let total = prof.total_ms().max(1e-12);
 
-    println!("\n    scalar naive     {naive_ips:8.1} img/s");
-    println!("    fabric 1 lane    {serial_ips:8.1} img/s   ({:.2}x)", serial_ips / naive_ips);
+    println!("\n    scalar naive         {naive_ips:8.1} img/s");
     println!(
-        "    fabric {} lanes   {pooled_ips:8.1} img/s   ({:.2}x vs naive, {:.2}x vs 1 lane)",
+        "    fabric 1 lane        {serial_ips:8.1} img/s   ({:.2}x vs naive)",
+        serial_ips / naive_ips
+    );
+    println!(
+        "    spawn pool {:2} lanes  {spawn_ips:8.1} img/s   ({:.2}x vs naive)",
+        opts.lanes,
+        spawn_ips / naive_ips
+    );
+    println!(
+        "    persistent {:2} lanes  {pooled_ips:8.1} img/s   ({:.2}x vs naive, {:.2}x vs spawn)",
         opts.lanes,
         pooled_ips / naive_ips,
-        pooled_ips / serial_ips
+        pooled_ips / spawn_ips
     );
+    println!("    gemm microkernel     {gemm_dense_speedup:.2}x dense, {gemm_sparse_speedup:.2}x sparse (vs naive)");
+    println!("    lane sweep (persistent | spawn img/s):");
+    for &(lanes, p, s) in &sweep {
+        println!("      {lanes:2} lanes   {p:8.1} | {s:8.1}");
+    }
     println!(
         "    per-op (1 lane): gemm {:.0}%  attention {:.0}%  layernorm {:.0}%  requant {:.0}%",
         100.0 * prof.gemm_ms / total,
@@ -158,29 +297,58 @@ fn main() {
     );
 
     if let Some(path) = &opts.json {
+        let mut sweep_json = String::new();
+        for (i, &(lanes, p, s)) in sweep.iter().enumerate() {
+            let _ = write!(
+                sweep_json,
+                "{}\n    {{\"lanes\": {lanes}, \"persistent_img_s\": {p:.3}, \
+                 \"spawn_img_s\": {s:.3}}}",
+                if i == 0 { "" } else { "," },
+            );
+        }
+        let per_op = |p: &OpProfile| {
+            format!(
+                "{{\n    \"quantize\": {:.4},\n    \"gemm\": {:.4},\n    \
+                 \"layernorm\": {:.4},\n    \"attention\": {:.4},\n    \
+                 \"requant\": {:.4},\n    \"head\": {:.4}\n  }}",
+                p.quantize_ms * scale,
+                p.gemm_ms * scale,
+                p.layernorm_ms * scale,
+                p.attention_ms * scale,
+                p.requant_ms * scale,
+                p.head_ms * scale,
+            )
+        };
         let json = format!(
             "{{\n  \"model\": \"tiny-synth\",\n  \"smoke\": {},\n  \"images\": {},\n  \
-             \"lanes\": {},\n  \"batch\": {},\n  \"scalar_naive_img_s\": {:.3},\n  \
-             \"fabric_serial_img_s\": {:.3},\n  \"fabric_pooled_img_s\": {:.3},\n  \
+             \"lanes\": {},\n  \"scalar_naive_img_s\": {:.3},\n  \
+             \"fabric_serial_img_s\": {:.3},\n  \"spawn_pooled_img_s\": {:.3},\n  \
+             \"fabric_pooled_img_s\": {:.3},\n  \
              \"speedup_pooled_vs_naive\": {:.3},\n  \"speedup_pooled_vs_serial\": {:.3},\n  \
-             \"per_op_ms_per_image\": {{\n    \"quantize\": {:.4},\n    \"gemm\": {:.4},\n    \
-             \"layernorm\": {:.4},\n    \"attention\": {:.4},\n    \"requant\": {:.4},\n    \
-             \"head\": {:.4}\n  }}\n}}\n",
+             \"speedup_persistent_vs_spawn\": {:.3},\n  \
+             \"gemm_microkernel\": {{\"shape\": [{}, {}, {}], \
+             \"dense_speedup_vs_naive\": {:.3}, \"sparse_speedup_vs_naive\": {:.3}}},\n  \
+             \"lane_sweep\": [{}\n  ],\n  \
+             \"per_op_ms_per_image\": {},\n  \
+             \"per_op_pooled_ms_per_image\": {}\n}}\n",
             opts.smoke,
             n_images,
             opts.lanes,
-            batch,
             naive_ips,
             serial_ips,
+            spawn_ips,
             pooled_ips,
             pooled_ips / naive_ips,
             pooled_ips / serial_ips,
-            prof.quantize_ms * scale,
-            prof.gemm_ms * scale,
-            prof.layernorm_ms * scale,
-            prof.attention_ms * scale,
-            prof.requant_ms * scale,
-            prof.head_ms * scale,
+            pooled_ips / spawn_ips,
+            gt,
+            gci,
+            gco,
+            gemm_dense_speedup,
+            gemm_sparse_speedup,
+            sweep_json,
+            per_op(&prof),
+            per_op(&prof_pooled),
         );
         std::fs::write(path, &json).expect("write bench json");
         println!("\nwrote {path}");

@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::artifacts::Manifest;
-use crate::runtime::{self, BackendKind, Executor};
+use crate::runtime::{self, BackendKind, Executor, RuntimeConfig};
 use batcher::BatchPolicy;
 use metrics::ServeMetrics;
 
@@ -51,9 +51,14 @@ pub struct Response {
 }
 
 /// A serving endpoint for one model (all its batch variants).
+///
+/// Each server owns its fabric: the executor thread loads the model,
+/// which creates the persistent worker pool; dropping the server joins
+/// the executor thread, which drops the loaded model and in turn joins
+/// the fabric workers — unload never leaks threads.
 pub struct ModelServer {
     name: String,
-    backend: BackendKind,
+    config: RuntimeConfig,
     queue_tx: Sender<Request>,
     next_id: AtomicU64,
     pub metrics: Arc<Mutex<ServeMetrics>>,
@@ -71,18 +76,29 @@ impl ModelServer {
         Self::start_with_backend(manifest, model, policy_wait_ms, BackendKind::default())
     }
 
-    /// Spin up the executor thread for a model's batch variants on the
-    /// chosen backend.
-    ///
-    /// The backend's executors are created *inside* the executor thread:
-    /// the PJRT `xla` handles are not `Send` (Rc-based), so the thread
-    /// owns the whole runtime — which also mirrors the hardware: one
-    /// fabric, one feeder.
+    /// [`Self::start_with_config`] with the default lane policy for the
+    /// chosen backend (`HGPIPE_LANES`, then available parallelism).
     pub fn start_with_backend(
         manifest: &Manifest,
         model: &str,
         policy_wait_ms: u64,
         backend: BackendKind,
+    ) -> crate::Result<Self> {
+        Self::start_with_config(manifest, model, policy_wait_ms, RuntimeConfig::new(backend))
+    }
+
+    /// Spin up the executor thread for a model's batch variants on the
+    /// configured backend (engine + explicit fabric lane count).
+    ///
+    /// The backend's executors are created *inside* the executor thread:
+    /// the PJRT `xla` handles are not `Send` (Rc-based), so the thread
+    /// owns the whole runtime — which also mirrors the hardware: one
+    /// fabric, one feeder.
+    pub fn start_with_config(
+        manifest: &Manifest,
+        model: &str,
+        policy_wait_ms: u64,
+        config: RuntimeConfig,
     ) -> crate::Result<Self> {
         let manifest = manifest.clone();
         let model_name = model.to_string();
@@ -95,7 +111,7 @@ impl ModelServer {
         let wait = std::time::Duration::from_millis(policy_wait_ms);
         let worker = std::thread::spawn(move || {
             // load/compile all variants up front (the paper's bitstream load)
-            match runtime::load_model(backend, &manifest, &model_name) {
+            match runtime::load_model(config, &manifest, &model_name) {
                 Err(e) => {
                     let _ = init_tx.send(Err(format!("{e:#}")));
                 }
@@ -127,7 +143,7 @@ impl ModelServer {
 
         Ok(Self {
             name: model.to_string(),
-            backend,
+            config,
             queue_tx: tx,
             next_id: AtomicU64::new(0),
             metrics,
@@ -145,7 +161,12 @@ impl ModelServer {
 
     /// The execution backend this server was started on.
     pub fn backend(&self) -> BackendKind {
-        self.backend
+        self.config.backend
+    }
+
+    /// The full runtime configuration (backend + explicit lane count).
+    pub fn config(&self) -> RuntimeConfig {
+        self.config
     }
 
     pub fn tokens_per_image(&self) -> usize {

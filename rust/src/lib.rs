@@ -26,27 +26,42 @@
 //! | `runtime::interpreter` | default | weight/LUT bundle JSON (`python -m compile.export`) | pure rust, zero native deps; bit-exact with the python integer reference; the committed golden fixture in `rust/artifacts/` makes `cargo test` self-contained |
 //! | `runtime::pjrt` | `--features pjrt` | HLO text (`python/compile/aot.py`, via `make artifacts`) | XLA CPU client; the `xla` dependency resolves to the in-repo stub (`rust/xla-stub`) which type-checks the integration — swap in a real binding to execute |
 //!
-//! ## Interpreter fabric & `HGPIPE_LANES`
+//! ## Interpreter fabric & lane count
 //!
 //! The interpreter executes on [`runtime::fabric`]: weight matrices are
-//! re-packed into blocked GEMM panels at bundle load, and a
-//! [`runtime::fabric::LanePool`] of `std::thread` workers parallelizes
-//! either whole batch lanes (one image per worker, when a dispatch
-//! carries at least as many images as lanes) or token-row bands inside a
-//! single image. The lane count is read from the **`HGPIPE_LANES`**
-//! environment variable when a model loads (the `hgpipe serve`/`eval`
-//! `--lanes N` flag sets it); unset, it defaults to the machine's
-//! available parallelism. `HGPIPE_LANES=1` forces fully serial
-//! execution. Results are bit-identical at every lane count — `cargo
-//! test` pins lane counts 1, 2 and 7 against the golden fixture — and
-//! `make bench-json` reports scalar-vs-pooled throughput plus a per-op
-//! breakdown into `BENCH_interpreter.json`.
+//! re-packed into blocked GEMM panels at bundle load (with a 4-row ×
+//! 8-wide register-blocked microkernel and a per-row activation-density
+//! fallback to the zero-skip path), and a
+//! [`runtime::fabric::LanePool`] of **persistent parked workers** —
+//! created once per loaded model, joined deterministically on unload —
+//! parallelizes either whole batch lanes (one image per worker, when a
+//! dispatch carries at least as many images as lanes) or token-row bands
+//! inside a single image. Every intermediate buffer comes from the
+//! pool's scratch arena, so steady-state serving performs no per-image
+//! heap allocation in GEMM/attention scratch.
+//!
+//! Lane-count precedence: the `hgpipe serve`/`eval` **`--lanes N`** flag
+//! (threaded explicitly via [`runtime::RuntimeConfig`] — the binary
+//! never mutates its environment), then the **`HGPIPE_LANES`** env var
+//! (read-only fallback), then the machine's available parallelism.
+//! `--lanes 1` / `HGPIPE_LANES=1` forces fully serial execution.
+//! Results are bit-identical at every lane count — `cargo test` pins
+//! lane counts 1, 2, 7 and 16 against the golden fixture — and `make
+//! bench-json` reports scalar / spawn-pool / persistent-pool throughput,
+//! a lane-scaling sweep and per-op breakdowns into
+//! `BENCH_interpreter.json`.
 //!
 //! Python never runs on the request path: the build pipeline (`make
 //! artifacts` for the full set, `make golden` for the interpreter
 //! fixture) runs once, and the `hgpipe` binary is self-contained
 //! afterwards — `hgpipe serve`/`eval` work out of a clean checkout on the
 //! interpreter backend.
+
+// This crate is index-heavy numeric code mirroring numpy semantics; the
+// explicit-index loops are deliberate (they state the accumulation order
+// the bit-exactness contract is defined over), so the iterator-style
+// pedantic lints are opted out crate-wide rather than per-loop.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod arch;
 pub mod artifacts;

@@ -15,7 +15,7 @@ use hgpipe::arch::parallelism::design_network;
 use hgpipe::artifacts::Manifest;
 use hgpipe::coordinator::ModelServer;
 use hgpipe::model::{Precision, ViTConfig};
-use hgpipe::runtime::BackendKind;
+use hgpipe::runtime::{BackendKind, RuntimeConfig};
 use hgpipe::sim::{self, builder::Paradigm, SimConfig};
 use hgpipe::util::prng::Prng;
 use hgpipe::{report, Result};
@@ -81,6 +81,25 @@ impl Args {
     fn backend(&self) -> Result<BackendKind> {
         BackendKind::parse(&self.flag("backend", "interpreter"))
     }
+
+    /// The full runtime configuration: backend plus the `--lanes` flag
+    /// threaded through explicitly. `--lanes` beats `HGPIPE_LANES`,
+    /// which beats the machine's available parallelism — the binary
+    /// never mutates its own environment (`set_var` is unsound once
+    /// threads exist).
+    fn runtime_config(&self) -> Result<RuntimeConfig> {
+        let lanes = match self.flags.get("lanes") {
+            None => None,
+            Some(v) => {
+                let n: usize = v.parse().map_err(|_| {
+                    anyhow::anyhow!("--lanes expects a positive integer, got '{v}'")
+                })?;
+                anyhow::ensure!(n >= 1, "--lanes must be at least 1");
+                Some(n)
+            }
+        };
+        Ok(RuntimeConfig::new(self.backend()?).with_lanes(lanes))
+    }
 }
 
 fn main() {
@@ -138,24 +157,11 @@ COMMANDS:
 
 The default backend is the pure-rust interpreter (runs from the bundle
 JSON in the artifacts dir); `--backend pjrt` needs `--features pjrt`.
-`--lanes N` (equivalently the HGPIPE_LANES env var) sets the interpreter
-fabric's worker-lane count; the default is the machine's available
-parallelism, and results are bit-identical at every lane count.
+`--lanes N` sets the interpreter fabric's persistent worker-lane count
+for this invocation; unset, the HGPIPE_LANES env var is consulted, then
+the machine's available parallelism. Results are bit-identical at every
+lane count.
 ";
-
-/// `--lanes N` is sugar for HGPIPE_LANES=N (the interpreter fabric reads
-/// the env var when the executor thread loads the model). Must run
-/// before the server spawns its executor thread.
-fn apply_lanes_flag(args: &Args) -> Result<()> {
-    if let Some(lanes) = args.flags.get("lanes") {
-        let n: usize = lanes
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--lanes expects a positive integer, got '{lanes}'"))?;
-        anyhow::ensure!(n >= 1, "--lanes must be at least 1");
-        std::env::set_var("HGPIPE_LANES", lanes);
-    }
-    Ok(())
-}
 
 fn cmd_report(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
@@ -271,16 +277,15 @@ fn cmd_fifo_search(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
     let model = args.flag("model", "tiny-synth");
-    let backend = args.backend()?;
-    apply_lanes_flag(args)?;
+    let config = args.runtime_config()?;
     let requests: usize = args.flag("requests", "64").parse()?;
     let rate: f64 = args.flag("rate", "0").parse()?; // 0 = closed loop
     let manifest = Manifest::load(&dir)?;
-    let server = ModelServer::start_with_backend(&manifest, &model, 2, backend)?;
+    let server = ModelServer::start_with_config(&manifest, &model, 2, config)?;
     println!(
         "serving '{}' on {} backend ({} token values/img, {} classes, loaded in {:.0} ms)",
         model,
-        backend.label(),
+        config.backend.label(),
         server.tokens_per_image(),
         server.num_classes(),
         server.compile_ms()
@@ -320,11 +325,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
     let model = args.flag("model", "tiny-synth");
-    let backend = args.backend()?;
-    apply_lanes_flag(args)?;
+    let config = args.runtime_config()?;
     let manifest = Manifest::load(&dir)?;
     let (tokens, labels, shape) = load_eval_set(&dir)?;
-    let server = ModelServer::start_with_backend(&manifest, &model, 1, backend)?;
+    let server = ModelServer::start_with_config(&manifest, &model, 1, config)?;
     anyhow::ensure!(
         server.tokens_per_image() == shape[1] * shape[2],
         "eval set shape {:?} does not match model '{}'",

@@ -1,23 +1,37 @@
-//! Cache-blocked integer GEMM over a load-time-packed weight matrix.
+//! Register-blocked integer GEMM over a load-time-packed weight matrix.
 //!
 //! The interpreter's hot loop is `acc = x @ W + b` with `x: (t, ci) i32`,
 //! `W: (ci, co) i32` and exact i64 accumulation. The naive row-major walk
 //! touches `W` with stride `co` per k step; [`PackedGemm`] instead
 //! re-packs `W` once at bundle load into column *panels* of width
-//! [`TILE_CO`], so the kernel streams each panel linearly (the k loop
+//! [`TILE_CO`], so every kernel streams each panel linearly (the k loop
 //! advances by one contiguous `nbe`-wide row) while a [`TILE_CO`]-wide
 //! i64 output tile stays register/L1-resident — the classic
 //! output-stationary blocking, here in integer arithmetic.
 //!
-//! Bit-exactness: for every output element the packed kernel adds exactly
+//! On top of the panel layout sit three row kernels, chosen per output
+//! row by an activation-density check ([`PackedGemm::row_is_sparse`]):
+//!
+//! * [`rows4`](PackedGemm::rows4_into) — the register-blocked
+//!   microkernel: **4 output rows × 8-wide fixed-unrolled columns**.
+//!   Each packed panel row is loaded once and multiplied into four
+//!   accumulator tiles, and the 8-wide unroll gives the compiler
+//!   straight-line i32×i32→i64 multiply-add chains it can schedule (and,
+//!   where profitable, vectorize) — the scalar per-element loop could
+//!   not be.
+//! * a single-row dense kernel (same 8-wide unroll) for the 1–3-row
+//!   remainder of a dense run.
+//! * the original zero-skip scalar kernel ([`PackedGemm::row_into`]) for
+//!   **sparse** rows: quantized activations — GELU outputs especially —
+//!   can be mostly zero, and skipping a whole panel row then beats the
+//!   dense unroll. The crossover is [`SPARSE_NUM`]/[`SPARSE_DEN`].
+//!
+//! Bit-exactness: for every output element every kernel adds exactly
 //! the terms `x[r,k] * W[k,c]` for `k = 0..ci` in ascending k, the same
 //! order as the naive triple loop — and two's-complement i64 addition is
 //! associative anyway — so results are identical to the scalar reference
-//! on every input, including wrap-around corner cases.
-//!
-//! The zero skip (`x[r,k] == 0` contributes nothing) is kept from the
-//! naive kernel: quantized activations — GELU outputs especially — are
-//! sparse, and skipping a zero row of the panel is free.
+//! on every input, including wrap-around corner cases. The zero skip
+//! contributes nothing by construction (`0 * w == 0`).
 
 use super::LanePool;
 
@@ -27,7 +41,41 @@ use super::LanePool;
 /// MLP, a 192 KiB panel).
 pub const TILE_CO: usize = 64;
 
-/// A weight matrix packed for the blocked kernel, plus its bias row.
+/// A row whose zero fraction is at least `SPARSE_NUM / SPARSE_DEN` takes
+/// the zero-skip scalar kernel instead of the dense unroll: at ~3/8
+/// zeros the skipped panel rows pay for the lost straight-line
+/// scheduling.
+pub const SPARSE_NUM: usize = 3;
+/// See [`SPARSE_NUM`].
+pub const SPARSE_DEN: usize = 8;
+
+/// `o[j] += a * w[j]` over one packed panel row, 8-wide fixed-unrolled.
+///
+/// The explicit unroll keeps eight independent multiply-accumulate
+/// chains in flight per iteration; the i64-widening multiply blocked
+/// rustc's autovectorizer on the old per-element loop.
+#[inline(always)]
+fn axpy8(a: i64, w: &[i32], o: &mut [i64]) {
+    debug_assert_eq!(w.len(), o.len());
+    let n8 = w.len() & !7;
+    let (w8, w_tail) = w.split_at(n8);
+    let (o8, o_tail) = o.split_at_mut(n8);
+    for (oc, wc) in o8.chunks_exact_mut(8).zip(w8.chunks_exact(8)) {
+        oc[0] += a * wc[0] as i64;
+        oc[1] += a * wc[1] as i64;
+        oc[2] += a * wc[2] as i64;
+        oc[3] += a * wc[3] as i64;
+        oc[4] += a * wc[4] as i64;
+        oc[5] += a * wc[5] as i64;
+        oc[6] += a * wc[6] as i64;
+        oc[7] += a * wc[7] as i64;
+    }
+    for (ov, &wv) in o_tail.iter_mut().zip(w_tail) {
+        *ov += a * wv as i64;
+    }
+}
+
+/// A weight matrix packed for the blocked kernels, plus its bias row.
 ///
 /// The naive reference kernel ([`Self::matmul_naive`]) — the
 /// differential-testing oracle and the scalar baseline the interpreter
@@ -95,7 +143,17 @@ impl PackedGemm {
         &self.bias
     }
 
-    /// One output row, blocked: `orow = bias + xrow @ W`.
+    /// The activation-density check: should this row take the zero-skip
+    /// scalar kernel instead of the dense unroll?
+    #[inline]
+    pub fn row_is_sparse(xrow: &[i32]) -> bool {
+        let zeros = xrow.iter().filter(|&&v| v == 0).count();
+        zeros * SPARSE_DEN >= xrow.len() * SPARSE_NUM
+    }
+
+    /// One output row, zero-skip scalar: `orow = bias + xrow @ W`. The
+    /// sparse-row kernel (and the pre-microkernel baseline): a zero
+    /// activation skips its whole panel row.
     pub fn row_into(&self, xrow: &[i32], orow: &mut [i64]) {
         debug_assert_eq!(xrow.len(), self.ci);
         debug_assert_eq!(orow.len(), self.co);
@@ -119,16 +177,116 @@ impl PackedGemm {
         }
     }
 
-    /// Full `t`-row matmul, output rows banded across the pool's lanes.
-    pub fn matmul(&self, x: &[i32], t: usize, pool: &LanePool) -> Vec<i64> {
-        assert_eq!(x.len(), t * self.ci, "input shape mismatch");
-        let mut out = vec![0i64; t * self.co];
-        pool.par_chunks_mut(&mut out, self.co, |r0, band| {
-            for (i, orow) in band.chunks_exact_mut(self.co).enumerate() {
-                let r = r0 + i;
-                self.row_into(&x[r * self.ci..(r + 1) * self.ci], orow);
+    /// One output row, dense 8-wide unrolled (no zero skip) — the
+    /// 1–3-row remainder of a dense run.
+    fn row_into_dense(&self, xrow: &[i32], orow: &mut [i64]) {
+        debug_assert_eq!(xrow.len(), self.ci);
+        debug_assert_eq!(orow.len(), self.co);
+        orow.copy_from_slice(&self.bias);
+        let mut poff = 0usize;
+        let mut cb = 0usize;
+        while cb < self.co {
+            let nbe = TILE_CO.min(self.co - cb);
+            let otile = &mut orow[cb..cb + nbe];
+            for (k, &xr) in xrow.iter().enumerate() {
+                let wrow = &self.panels[poff + k * nbe..poff + (k + 1) * nbe];
+                axpy8(xr as i64, wrow, otile);
             }
+            poff += self.ci * nbe;
+            cb += nbe;
+        }
+    }
+
+    /// The register-blocked microkernel: four output rows at once,
+    /// 8-wide unrolled columns. `o` is the four rows, contiguous
+    /// (`4 * co` values). Each packed panel row is read once and
+    /// multiplied into all four accumulator tiles.
+    fn rows4_into(&self, x0: &[i32], x1: &[i32], x2: &[i32], x3: &[i32], o: &mut [i64]) {
+        let co = self.co;
+        debug_assert_eq!(o.len(), 4 * co);
+        let (o0, rest) = o.split_at_mut(co);
+        let (o1, rest) = rest.split_at_mut(co);
+        let (o2, o3) = rest.split_at_mut(co);
+        o0.copy_from_slice(&self.bias);
+        o1.copy_from_slice(&self.bias);
+        o2.copy_from_slice(&self.bias);
+        o3.copy_from_slice(&self.bias);
+        let mut poff = 0usize;
+        let mut cb = 0usize;
+        while cb < co {
+            let nbe = TILE_CO.min(co - cb);
+            let t0 = &mut o0[cb..cb + nbe];
+            let t1 = &mut o1[cb..cb + nbe];
+            let t2 = &mut o2[cb..cb + nbe];
+            let t3 = &mut o3[cb..cb + nbe];
+            for k in 0..self.ci {
+                let wrow = &self.panels[poff + k * nbe..poff + (k + 1) * nbe];
+                axpy8(x0[k] as i64, wrow, t0);
+                axpy8(x1[k] as i64, wrow, t1);
+                axpy8(x2[k] as i64, wrow, t2);
+                axpy8(x3[k] as i64, wrow, t3);
+            }
+            poff += self.ci * nbe;
+            cb += nbe;
+        }
+    }
+
+    /// One lane band of output rows (`band = rows [r0, r0 + n)` of the
+    /// full output, contiguous): partition the band's rows into dense
+    /// runs (microkernel in groups of 4, dense single-row for the
+    /// remainder) and sparse rows (zero-skip), by the per-row density
+    /// check.
+    pub(crate) fn band_into(&self, x: &[i32], r0: usize, band: &mut [i64]) {
+        let (ci, co) = (self.ci, self.co);
+        debug_assert_eq!(band.len() % co, 0);
+        let rows = band.len() / co;
+        let xrow = |r: usize| &x[(r0 + r) * ci..(r0 + r + 1) * ci];
+        let mut i = 0usize;
+        while i < rows {
+            if Self::row_is_sparse(xrow(i)) {
+                self.row_into(xrow(i), &mut band[i * co..(i + 1) * co]);
+                i += 1;
+                continue;
+            }
+            let mut run = 1usize;
+            while run < 4 && i + run < rows && !Self::row_is_sparse(xrow(i + run)) {
+                run += 1;
+            }
+            if run == 4 {
+                self.rows4_into(
+                    xrow(i),
+                    xrow(i + 1),
+                    xrow(i + 2),
+                    xrow(i + 3),
+                    &mut band[i * co..(i + 4) * co],
+                );
+            } else {
+                for j in 0..run {
+                    self.row_into_dense(xrow(i + j), &mut band[(i + j) * co..(i + j + 1) * co]);
+                }
+            }
+            i += run;
+        }
+    }
+
+    /// Full `t`-row matmul into a caller-owned buffer (resized to
+    /// `t * co`, capacity reused), output rows banded across the pool's
+    /// lanes. The serving path — no allocation once `out` has warmed up.
+    pub fn matmul_into(&self, x: &[i32], t: usize, out: &mut Vec<i64>, pool: &LanePool) {
+        assert_eq!(x.len(), t * self.ci, "input shape mismatch");
+        // no clear(): every output row starts from a bias copy, so stale
+        // values from the previous (possibly different-shape) matmul are
+        // fully overwritten — resize only zero-fills newly grown tail
+        out.resize(t * self.co, 0);
+        pool.par_chunks_mut(out.as_mut_slice(), self.co, |_s, r0, band| {
+            self.band_into(x, r0, band);
         });
+    }
+
+    /// [`Self::matmul_into`] into a fresh vec (tests and one-shot use).
+    pub fn matmul(&self, x: &[i32], t: usize, pool: &LanePool) -> Vec<i64> {
+        let mut out = Vec::new();
+        self.matmul_into(x, t, &mut out, pool);
         out
     }
 
@@ -172,7 +330,8 @@ mod tests {
     #[test]
     fn blocked_matches_naive_on_randomized_shapes() {
         // shapes straddle the TILE_CO boundary and include t / dims not
-        // divisible by the tile size, plus the real bundle shapes
+        // divisible by the tile size or the 4-row microkernel, plus the
+        // real bundle shapes
         let shapes = [
             (1usize, 1usize, 1usize),
             (3, 5, 2),
@@ -185,15 +344,13 @@ mod tests {
             (16, 64, 256),
             (9, 1, 64),
             (1, 129, 128),
+            (6, 40, 9),
         ];
+        let pool = LanePool::serial();
         let mut rng = Prng::new(0xFAB);
         for &(t, ci, co) in &shapes {
             let (x, g) = random_case(&mut rng, t, ci, co);
-            assert_eq!(
-                g.matmul(&x, t, &LanePool::serial()),
-                g.matmul_naive(&x, t),
-                "shape ({t},{ci},{co})"
-            );
+            assert_eq!(g.matmul(&x, t, &pool), g.matmul_naive(&x, t), "shape ({t},{ci},{co})");
         }
     }
 
@@ -211,9 +368,82 @@ mod tests {
     }
 
     #[test]
+    fn density_dispatch_agrees_with_naive_at_every_sparsity() {
+        // sweep activation sparsity through the dense/sparse crossover so
+        // the microkernel, the dense remainder and the zero-skip fallback
+        // all run — and all agree with the oracle
+        let pool = LanePool::serial();
+        let mut rng = Prng::new(0xD15E);
+        for &(t, ci, co) in &[(9usize, 33usize, 70usize), (4, 64, 64), (6, 100, 129), (16, 192, 64)]
+        {
+            for &zero_pct in &[0u64, 20, 45, 80, 100] {
+                let x: Vec<i32> = (0..t * ci)
+                    .map(|_| {
+                        if rng.below(100) < zero_pct {
+                            0
+                        } else {
+                            rng.range_i64(-9, 9) as i32
+                        }
+                    })
+                    .collect();
+                let w: Vec<i32> = (0..ci * co).map(|_| rng.range_i64(-50, 50) as i32).collect();
+                let b: Vec<i64> = (0..co).map(|_| rng.range_i64(-1000, 1000)).collect();
+                let g = PackedGemm::pack(w, ci, co, b);
+                assert_eq!(
+                    g.matmul(&x, t, &pool),
+                    g.matmul_naive(&x, t),
+                    "shape ({t},{ci},{co}) zeros {zero_pct}%"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_sparse_dense_rows_break_runs_correctly() {
+        // alternating all-zero (sparse) and all-nonzero (dense) rows force
+        // every run length 1..4 through the band partitioner
+        let pool = LanePool::serial();
+        let (ci, co) = (24usize, 40usize);
+        let mut rng = Prng::new(42);
+        let w: Vec<i32> = (0..ci * co).map(|_| rng.range_i64(-30, 30) as i32).collect();
+        let b: Vec<i64> = (0..co).map(|_| rng.range_i64(-500, 500)).collect();
+        let g = PackedGemm::pack(w, ci, co, b);
+        // patterns: 1 = dense row, 0 = all-zero row
+        for pattern in [
+            vec![1, 0, 1, 1, 0, 1, 1, 1, 0, 1, 1, 1, 1, 0, 1],
+            vec![0, 0, 0, 0],
+            vec![1, 1, 1, 1, 1, 1, 1, 1, 1],
+            vec![1],
+            vec![0, 1],
+        ] {
+            let t = pattern.len();
+            let x: Vec<i32> = (0..t * ci)
+                .map(|i| if pattern[i / ci] == 0 { 0 } else { rng.range_i64(-5, 5) as i32 })
+                .collect();
+            for lanes in [1usize, 3] {
+                let p = if lanes == 1 { pool.clone() } else { LanePool::new(lanes) };
+                assert_eq!(
+                    g.matmul(&x, t, &p),
+                    g.matmul_naive(&x, t),
+                    "pattern {pattern:?} lanes {lanes}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn density_check_thresholds() {
+        assert!(PackedGemm::row_is_sparse(&[0, 0, 0, 0]));
+        assert!(!PackedGemm::row_is_sparse(&[1, 2, 3, 4]));
+        // exactly at the 3/8 boundary counts as sparse
+        assert!(PackedGemm::row_is_sparse(&[0, 0, 0, 1, 1, 1, 1, 1]));
+        assert!(!PackedGemm::row_is_sparse(&[0, 0, 1, 1, 1, 1, 1, 1]));
+    }
+
+    #[test]
     fn extreme_magnitudes_agree() {
         // products at the i32*i32 extreme (|p| ~ 2^62, still inside i64)
-        // accumulate identically in both kernels; the interpreter later
+        // accumulate identically in all kernels; the interpreter later
         // narrows `as i32`, so agreement must hold at full magnitude
         let w = vec![i32::MAX, i32::MIN, -1, 1];
         let b = vec![1i64 << 40, -(1i64 << 40)];
@@ -239,5 +469,23 @@ mod tests {
     fn bias_only_when_input_all_zero() {
         let g = PackedGemm::pack(vec![3; 6], 2, 3, vec![11, 22, 33]);
         assert_eq!(g.matmul(&[0, 0], 1, &LanePool::serial()), vec![11, 22, 33]);
+    }
+
+    #[test]
+    fn matmul_into_reuses_the_output_buffer() {
+        let mut rng = Prng::new(5);
+        let (x, g) = random_case(&mut rng, 8, 32, 96);
+        let pool = LanePool::serial();
+        let mut out = Vec::new();
+        g.matmul_into(&x, 8, &mut out, &pool);
+        let want = out.clone();
+        let cap = out.capacity();
+        let ptr = out.as_ptr();
+        for _ in 0..5 {
+            g.matmul_into(&x, 8, &mut out, &pool);
+            assert_eq!(out, want);
+        }
+        assert_eq!(out.capacity(), cap);
+        assert_eq!(out.as_ptr(), ptr, "steady-state matmul must not reallocate its output");
     }
 }

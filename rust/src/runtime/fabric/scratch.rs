@@ -1,0 +1,206 @@
+//! Per-lane scratch arena: every reusable buffer the interpreter's
+//! forward pass and band kernels need, recycled through a bag so
+//! steady-state serving does no per-image heap allocation in
+//! GEMM/attention scratch.
+//!
+//! A [`LaneScratch`] box is checked out of the pool's [`ScratchArena`]
+//! at two nesting levels that never alias:
+//!
+//! * the **forward pass** holds one box for its whole-pass buffers
+//!   (quantized tokens, residual stream, GEMM accumulator, requantized
+//!   intermediates, head pooling);
+//! * each **band job** inside a parallel region checks out its own box
+//!   for the per-row kernels (LayerNorm centered sums, attention
+//!   score/probability rows, softmax exps).
+//!
+//! Buffers only ever grow (`clear` + `resize` reuses capacity), and
+//! boxes return to the bag when their holder finishes, so after a
+//! warmup forward the arena's allocation count
+//! ([`ScratchArena::allocs`]) and capacity footprint
+//! ([`ScratchArena::footprint`]) are both flat — the zero-alloc
+//! regression tests pin exactly that.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Reusable per-row softmax buffers (max-subtracted scores + exps) —
+/// hoisted out of the per-row hot path.
+pub struct SoftmaxScratch {
+    pub(crate) sc: Vec<i32>,
+    pub(crate) e: Vec<i32>,
+}
+
+impl SoftmaxScratch {
+    pub(crate) fn new(t: usize) -> Self {
+        Self { sc: vec![0i32; t], e: vec![0i32; t] }
+    }
+
+    /// Set both buffers to length `t`, reusing capacity. No clear():
+    /// `softmax_row` overwrites every element before reading it.
+    pub(crate) fn reset(&mut self, t: usize) {
+        self.sc.resize(t, 0);
+        self.e.resize(t, 0);
+    }
+
+    fn footprint(&self) -> usize {
+        (self.sc.capacity() + self.e.capacity()) * std::mem::size_of::<i32>()
+    }
+}
+
+/// One lane's worth of reusable interpreter buffers. All fields start
+/// empty and grow to their steady-state size on first use.
+pub struct LaneScratch {
+    // ---- band-level kernel buffers ----
+    /// LayerNorm centered sums `d*x[j] - sum(x)` for one token row.
+    pub(crate) ln_c: Vec<i64>,
+    /// Attention score row (one output token against all key tokens).
+    pub(crate) scores: Vec<i64>,
+    /// Attention probability row (requantized softmax output).
+    pub(crate) prob: Vec<i32>,
+    /// `R @ V` accumulator for one head's output slice.
+    pub(crate) rv: Vec<i64>,
+    /// Softmax working buffers for one score row.
+    pub(crate) softmax: SoftmaxScratch,
+    // ---- forward-pass buffers (held by the pass, not by band jobs) ----
+    /// Quantized input tokens.
+    pub(crate) xq: Vec<i32>,
+    /// Residual stream (int32, common scale).
+    pub(crate) x: Vec<i32>,
+    /// LayerNorm output rows.
+    pub(crate) n: Vec<i32>,
+    /// Requantized fused QKV rows.
+    pub(crate) qkv: Vec<i32>,
+    /// Attention output rows.
+    pub(crate) a_q: Vec<i32>,
+    /// Requantized MLP hidden activations (GELU output).
+    pub(crate) hdn: Vec<i32>,
+    /// GEMM i64 accumulator, reused by every matmul in the pass.
+    pub(crate) acc: Vec<i64>,
+    /// Head mean-pool accumulator.
+    pub(crate) pooled: Vec<i64>,
+}
+
+impl Default for LaneScratch {
+    fn default() -> Self {
+        Self {
+            ln_c: Vec::new(),
+            scores: Vec::new(),
+            prob: Vec::new(),
+            rv: Vec::new(),
+            softmax: SoftmaxScratch { sc: Vec::new(), e: Vec::new() },
+            xq: Vec::new(),
+            x: Vec::new(),
+            n: Vec::new(),
+            qkv: Vec::new(),
+            a_q: Vec::new(),
+            hdn: Vec::new(),
+            acc: Vec::new(),
+            pooled: Vec::new(),
+        }
+    }
+}
+
+impl LaneScratch {
+    /// Total bytes of capacity held across all buffers.
+    fn footprint(&self) -> usize {
+        let i32s = self.prob.capacity()
+            + self.xq.capacity()
+            + self.x.capacity()
+            + self.n.capacity()
+            + self.qkv.capacity()
+            + self.a_q.capacity()
+            + self.hdn.capacity();
+        let i64s = self.ln_c.capacity()
+            + self.scores.capacity()
+            + self.rv.capacity()
+            + self.acc.capacity()
+            + self.pooled.capacity();
+        i32s * std::mem::size_of::<i32>()
+            + i64s * std::mem::size_of::<i64>()
+            + self.softmax.footprint()
+    }
+}
+
+/// A bag of recycled [`LaneScratch`] boxes shared by every handle to one
+/// [`super::LanePool`].
+pub(crate) struct ScratchArena {
+    bag: Mutex<Vec<Box<LaneScratch>>>,
+    /// Boxes ever allocated — flat once the pool is warmed up.
+    created: AtomicUsize,
+}
+
+impl ScratchArena {
+    pub(crate) fn new() -> Self {
+        Self { bag: Mutex::new(Vec::new()), created: AtomicUsize::new(0) }
+    }
+
+    pub(crate) fn checkout(&self) -> Box<LaneScratch> {
+        if let Some(s) = self.bag.lock().unwrap().pop() {
+            return s;
+        }
+        self.created.fetch_add(1, Ordering::SeqCst);
+        Box::<LaneScratch>::default()
+    }
+
+    pub(crate) fn restore(&self, s: Box<LaneScratch>) {
+        self.bag.lock().unwrap().push(s);
+    }
+
+    pub(crate) fn allocs(&self) -> usize {
+        self.created.load(Ordering::SeqCst)
+    }
+
+    /// Capacity bytes across the *idle* boxes in the bag. Deterministic
+    /// whenever no forward is in flight (every box is back in the bag).
+    pub(crate) fn footprint(&self) -> usize {
+        self.bag.lock().unwrap().iter().map(|s| s.footprint()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_recycles_boxes() {
+        let arena = ScratchArena::new();
+        let mut a = arena.checkout();
+        a.acc.resize(1024, 0);
+        arena.restore(a);
+        assert_eq!(arena.allocs(), 1);
+        let fp = arena.footprint();
+        assert!(fp >= 1024 * 8);
+        // steady state: the same box cycles, nothing new is created and
+        // no buffer regrows
+        for _ in 0..10 {
+            let mut b = arena.checkout();
+            b.acc.clear();
+            b.acc.resize(1024, 0);
+            arena.restore(b);
+        }
+        assert_eq!(arena.allocs(), 1);
+        assert_eq!(arena.footprint(), fp);
+    }
+
+    #[test]
+    fn concurrent_checkouts_get_distinct_boxes() {
+        let arena = ScratchArena::new();
+        let a = arena.checkout();
+        let b = arena.checkout();
+        assert_eq!(arena.allocs(), 2);
+        arena.restore(a);
+        arena.restore(b);
+        assert_eq!(arena.checkout().footprint(), 0);
+        assert_eq!(arena.allocs(), 2);
+    }
+
+    #[test]
+    fn softmax_reset_reuses_capacity() {
+        let mut s = SoftmaxScratch::new(16);
+        let cap = s.sc.capacity();
+        s.reset(8);
+        assert_eq!(s.sc.len(), 8);
+        s.reset(16);
+        assert_eq!(s.sc.capacity(), cap);
+    }
+}

@@ -18,16 +18,23 @@
 //! * [`bundle`](self) — load/validate the JSON bundle ([`QuantViT`]);
 //!   weights are re-packed into blocked GEMM panels here, once.
 //! * `ops` — the integer kernels (LUT application, LayerNorm, Softmax,
-//!   fused attention) in pooled and pre-fabric (naive) variants.
+//!   fused attention) in scratch-backed pooled and pre-fabric (naive)
+//!   variants.
 //! * this file — the forward pass, per-op profiling, and the
 //!   [`Executor`] adapter the coordinator drives.
 //!
 //! Execution runs on the [`fabric`](crate::runtime::fabric): a
-//! [`LanePool`] parallelizes whole batch lanes across workers (one image
-//! per lane) or, when the dispatch is smaller than the pool, token-row
-//! bands inside each image. Lane count comes from `HGPIPE_LANES` / the
-//! `--lanes` CLI flag; every lane count produces bit-identical logits
-//! (`cargo test` pins lanes 1, 2 and 7 against the golden fixture).
+//! [`LanePool`] of **persistent parked workers** (created once per
+//! loaded model) parallelizes whole batch lanes across workers (one
+//! image per lane) or, when the dispatch is smaller than the pool,
+//! token-row bands inside each image. The forward pass checks a scratch
+//! box out of the pool's arena for every intermediate buffer, so
+//! steady-state serving performs no per-image heap allocation in
+//! GEMM/attention scratch. Lane count comes from
+//! [`crate::runtime::RuntimeConfig`] (the `--lanes` CLI flag) or the
+//! `HGPIPE_LANES` env var; every lane count produces bit-identical
+//! logits (`cargo test` pins lanes 1, 2, 7 and 16 against the golden
+//! fixture).
 
 mod bundle;
 mod ops;
@@ -86,14 +93,16 @@ impl QuantViT {
     /// Full integer forward for one image: f32 tokens (T*P) -> f64 logits.
     ///
     /// Bit-exact with `model.forward_int_np` over the same f32 tokens.
-    /// Runs fully serial; see [`Self::forward_image_pooled`] for the
-    /// lane-parallel variant (identical results).
+    /// Runs fully serial on a throwaway pool; hot paths should hold a
+    /// [`LanePool`] and call [`Self::forward_image_pooled`] so scratch
+    /// buffers are recycled across calls (identical results either way).
     pub fn forward_image(&self, tokens: &[f32]) -> crate::Result<Vec<f64>> {
         self.forward_image_pooled(tokens, &LanePool::serial())
     }
 
     /// [`Self::forward_image`] with token-row bands spread across the
-    /// pool's lanes. Bit-identical at every lane count.
+    /// pool's lanes and every intermediate buffer drawn from the pool's
+    /// scratch arena. Bit-identical at every lane count.
     pub fn forward_image_pooled(&self, tokens: &[f32], pool: &LanePool) -> crate::Result<Vec<f64>> {
         Ok(self.forward_profiled(tokens, pool)?.0)
     }
@@ -114,51 +123,61 @@ impl QuantViT {
         let mut prof = OpProfile::default();
         let mut last = Instant::now();
 
-        let xq: Vec<i32> = tokens.iter().map(|&x| self.quantize_in(x)).collect();
+        // the pass-level scratch box: every intermediate below reuses its
+        // buffers, so a warmed-up pool serves images allocation-free
+        let mut fs = pool.checkout_scratch();
+        let s = &mut *fs;
+
+        s.xq.clear();
+        s.xq.extend(tokens.iter().map(|&x| self.quantize_in(x)));
         prof.quantize_ms += lap(&mut last);
-        let acc = self.pe.matmul(&xq, t, pool);
+        self.pe.matmul_into(&s.xq, t, &mut s.acc, pool);
         prof.gemm_ms += lap(&mut last);
         // residual stream: int32, common scale s0 (+2 guard bits)
-        let mut x: Vec<i32> = acc.iter().map(|&a| lut_i32(&self.pe_rq, a as i32)).collect();
+        s.x.clear();
+        s.x.extend(s.acc.iter().map(|&a| lut_i32(&self.pe_rq, a as i32)));
         prof.requant_ms += lap(&mut last);
 
         for blk in &self.blocks {
             // ---- MHA ----
-            let n = ops::layernorm(&x, d, blk.ln1_guard, &blk.ln1_rsqrt, &blk.ln1_rq, pool);
+            ops::layernorm_into(&s.x, d, blk.ln1_guard, &blk.ln1_rsqrt, &blk.ln1_rq, &mut s.n, pool);
             prof.layernorm_ms += lap(&mut last);
-            let acc = blk.qkv.matmul(&n, t, pool);
+            blk.qkv.matmul_into(&s.n, t, &mut s.acc, pool);
             prof.gemm_ms += lap(&mut last);
-            let qkv: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.qkv_rq, a as i32)).collect();
+            s.qkv.clear();
+            s.qkv.extend(s.acc.iter().map(|&a| lut_i32(&blk.qkv_rq, a as i32)));
             prof.requant_ms += lap(&mut last);
-            let a_q = ops::attention(blk, &qkv, t, d, h, pool);
+            ops::attention_into(blk, &s.qkv, t, d, h, &mut s.a_q, pool);
             prof.attention_ms += lap(&mut last);
-            let acc = blk.proj.matmul(&a_q, t, pool);
+            blk.proj.matmul_into(&s.a_q, t, &mut s.acc, pool);
             prof.gemm_ms += lap(&mut last);
-            for (xv, &a) in x.iter_mut().zip(&acc) {
+            for (xv, &a) in s.x.iter_mut().zip(s.acc.iter()) {
                 *xv = xv.wrapping_add(lut_i32(&blk.proj_rq, a as i32));
             }
             prof.requant_ms += lap(&mut last);
 
             // ---- MLP ----
-            let n2 = ops::layernorm(&x, d, blk.ln2_guard, &blk.ln2_rsqrt, &blk.ln2_rq, pool);
+            ops::layernorm_into(&s.x, d, blk.ln2_guard, &blk.ln2_rsqrt, &blk.ln2_rq, &mut s.n, pool);
             prof.layernorm_ms += lap(&mut last);
-            let acc = blk.mm1.matmul(&n2, t, pool);
+            blk.mm1.matmul_into(&s.n, t, &mut s.acc, pool);
             prof.gemm_ms += lap(&mut last);
-            let hdn: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.gelu, a as i32)).collect();
+            s.hdn.clear();
+            s.hdn.extend(s.acc.iter().map(|&a| lut_i32(&blk.gelu, a as i32)));
             prof.requant_ms += lap(&mut last);
-            let acc = blk.mm2.matmul(&hdn, t, pool);
+            blk.mm2.matmul_into(&s.hdn, t, &mut s.acc, pool);
             prof.gemm_ms += lap(&mut last);
-            for (xv, &a) in x.iter_mut().zip(&acc) {
+            for (xv, &a) in s.x.iter_mut().zip(s.acc.iter()) {
                 *xv = xv.wrapping_add(lut_i32(&blk.mm2_rq, a as i32));
             }
             prof.requant_ms += lap(&mut last);
         }
 
         // ---- final LN + mean-pool head (the /T fold lives in logit_scale)
-        let n = ops::layernorm(&x, d, self.ln_f_guard, &self.ln_f_rsqrt, &self.ln_f_rq, pool);
+        ops::layernorm_into(&s.x, d, self.ln_f_guard, &self.ln_f_rsqrt, &self.ln_f_rq, &mut s.n, pool);
         prof.layernorm_ms += lap(&mut last);
-        let logits = self.head(&n);
+        let logits = self.head_with(&s.n, &mut s.pooled);
         prof.head_ms += lap(&mut last);
+        pool.restore_scratch(fs);
         Ok((logits, prof))
     }
 
@@ -175,14 +194,13 @@ impl QuantViT {
             tokens.len()
         );
         let (t, d, h) = (self.tokens, self.dim, self.heads);
-        let serial = LanePool::serial();
 
         let xq: Vec<i32> = tokens.iter().map(|&x| self.quantize_in(x)).collect();
         let acc = self.pe.matmul_naive(&xq, t);
         let mut x: Vec<i32> = acc.iter().map(|&a| lut_i32(&self.pe_rq, a as i32)).collect();
 
         for blk in &self.blocks {
-            let n = ops::layernorm(&x, d, blk.ln1_guard, &blk.ln1_rsqrt, &blk.ln1_rq, &serial);
+            let n = layernorm_naive(&x, d, blk.ln1_guard, &blk.ln1_rsqrt, &blk.ln1_rq);
             let acc = blk.qkv.matmul_naive(&n, t);
             let qkv: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.qkv_rq, a as i32)).collect();
             let a_q = ops::attention_naive(blk, &qkv, t, d, h);
@@ -191,7 +209,7 @@ impl QuantViT {
                 *xv = xv.wrapping_add(lut_i32(&blk.proj_rq, a as i32));
             }
 
-            let n2 = ops::layernorm(&x, d, blk.ln2_guard, &blk.ln2_rsqrt, &blk.ln2_rq, &serial);
+            let n2 = layernorm_naive(&x, d, blk.ln2_guard, &blk.ln2_rsqrt, &blk.ln2_rq);
             let acc = blk.mm1.matmul_naive(&n2, t);
             let hdn: Vec<i32> = acc.iter().map(|&a| lut_i32(&blk.gelu, a as i32)).collect();
             let acc = blk.mm2.matmul_naive(&hdn, t);
@@ -200,14 +218,18 @@ impl QuantViT {
             }
         }
 
-        let n = ops::layernorm(&x, d, self.ln_f_guard, &self.ln_f_rsqrt, &self.ln_f_rq, &serial);
-        Ok(self.head(&n))
+        let n = layernorm_naive(&x, d, self.ln_f_guard, &self.ln_f_rsqrt, &self.ln_f_rq);
+        let mut pooled = Vec::new();
+        Ok(self.head_with(&n, &mut pooled))
     }
 
-    /// Mean-pool + classifier head over the final-LN output rows.
-    fn head(&self, n: &[i32]) -> Vec<f64> {
+    /// Mean-pool + classifier head over the final-LN output rows; the
+    /// pooling accumulator comes from the caller (scratch on the hot
+    /// path), only the returned logits allocate.
+    fn head_with(&self, n: &[i32], pooled: &mut Vec<i64>) -> Vec<f64> {
         let d = self.dim;
-        let mut pooled = vec![0i64; d];
+        pooled.clear();
+        pooled.resize(d, 0);
         for row in n.chunks_exact(d) {
             for (p, &v) in pooled.iter_mut().zip(row) {
                 *p += v as i64;
@@ -215,32 +237,70 @@ impl QuantViT {
         }
         let mut logits = Vec::with_capacity(self.num_classes);
         for k in 0..self.num_classes {
-            let mut s: i64 = 0;
+            let mut acc: i64 = 0;
             for (c, &p) in pooled.iter().enumerate() {
-                s += p * self.head_w[c * self.num_classes + k] as i64;
+                acc += p * self.head_w[c * self.num_classes + k] as i64;
             }
-            logits.push(s as f64 * self.logit_scale + self.head_bias[k]);
+            logits.push(acc as f64 * self.logit_scale + self.head_bias[k]);
         }
         logits
     }
+}
+
+/// Serial allocate-per-call LayerNorm for the naive oracle path (the
+/// exact pre-fabric structure, preserved as a baseline).
+fn layernorm_naive(
+    x: &[i32],
+    d: usize,
+    guard: u32,
+    rsqrt: &crate::lut::LutTable,
+    rq: &crate::lut::LutTable,
+) -> Vec<i32> {
+    let mut out = vec![0i32; x.len()];
+    let mut c = vec![0i64; d];
+    for (orow, row) in out.chunks_exact_mut(d).zip(x.chunks_exact(d)) {
+        let sum: i64 = row.iter().map(|&v| v as i64).sum();
+        let mut v: i64 = 0;
+        for (cj, &xv) in c.iter_mut().zip(row) {
+            *cj = (d as i32).wrapping_mul(xv) as i64 - sum;
+            let cg = *cj >> guard;
+            v += cg * cg;
+        }
+        let r = lut_i32(rsqrt, v as i32) as i64;
+        for (o, &cj) in orow.iter_mut().zip(c.iter()) {
+            *o = lut_i32(rq, (cj * r) as i32);
+        }
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------
 // Executor adapter (one per batch variant, sharing the loaded model)
 // ---------------------------------------------------------------------------
 
-/// A batch-size view over a shared [`QuantViT`], executing on a
-/// [`LanePool`].
+/// A batch-size view over a shared [`QuantViT`], executing on the
+/// model's persistent [`LanePool`] fabric.
 ///
 /// Work is partitioned at two grains: when the dispatch carries at least
 /// as many images as the pool has lanes, each worker runs whole images
 /// (batch-lane grain, one parallel region per dispatch); otherwise the
 /// pool drops inside each image and parallelizes token-row bands (row
-/// grain). Both grains are bit-exact with serial execution.
+/// grain). Both grains are bit-exact with serial execution. All batch
+/// variants of one model clone the same two pool handles, so workers are
+/// created once per loaded model and shut down when it unloads.
 pub struct InterpreterExecutor {
     net: Arc<QuantViT>,
     batch: usize,
+    /// The model's persistent worker fabric.
     pool: LanePool,
+    /// Serial pool whose arena backs the per-image forwards of the
+    /// batch-lane grain: those run *inside* worker bands, where each
+    /// image is already one parallel lane, so their regions should be
+    /// serial by construction. (Re-entering `pool` from a worker would
+    /// run inline anyway — the fabric detects its own workers — but the
+    /// caller-thread band would pointlessly re-dispatch; the explicit
+    /// serial pool keeps both sides of the split on one code path.)
+    inline_pool: LanePool,
     load_ms: f64,
     stats: Mutex<ExecStats>,
 }
@@ -265,11 +325,13 @@ impl Executor for InterpreterExecutor {
         if self.pool.lanes() > 1 && self.batch >= self.pool.lanes() {
             // batch-lane grain: a band of whole images per worker
             let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-            let serial = LanePool::serial();
-            self.pool.par_chunks_mut(&mut out, nc, |i0, band| {
+            self.pool.par_chunks_mut(&mut out, nc, |_s, i0, band| {
                 for (j, orow) in band.chunks_exact_mut(nc).enumerate() {
                     let i = i0 + j;
-                    match self.net.forward_image_pooled(&input[i * per..(i + 1) * per], &serial) {
+                    match self
+                        .net
+                        .forward_image_pooled(&input[i * per..(i + 1) * per], &self.inline_pool)
+                    {
                         Ok(logits) => {
                             for (o, &v) in orow.iter_mut().zip(&logits) {
                                 *o = v as f32;
@@ -314,11 +376,16 @@ impl Executor for InterpreterExecutor {
 /// with the lane count taken from `HGPIPE_LANES` (or the machine's
 /// available parallelism).
 pub fn load_model(manifest: &Manifest, model: &str) -> crate::Result<LoadedModel> {
-    load_model_with_lanes(manifest, model, LanePool::from_env().lanes())
+    load_model_with_lanes(manifest, model, LanePool::lanes_from_env())
 }
 
-/// [`load_model`] with an explicit lane count (tests and benches pass
-/// this directly so they never race on the process environment).
+/// [`load_model`] with an explicit lane count (the `--lanes` flag
+/// arrives here via [`crate::runtime::RuntimeConfig`]; tests and benches
+/// pass it directly so they never depend on the process environment).
+///
+/// The persistent worker fabric is created here, once: every batch
+/// variant clones the same pool handle, and dropping the returned
+/// [`LoadedModel`] joins the workers.
 pub fn load_model_with_lanes(
     manifest: &Manifest,
     model: &str,
@@ -336,13 +403,16 @@ pub fn load_model_with_lanes(
         net.model
     );
     let batches = if info.batches.is_empty() { vec![1] } else { info.batches.clone() };
+    let pool = LanePool::new(lanes);
+    let inline_pool = LanePool::serial();
     let executors: Vec<Box<dyn Executor>> = batches
         .iter()
         .map(|&b| {
             Box::new(InterpreterExecutor {
                 net: net.clone(),
                 batch: b,
-                pool: LanePool::new(lanes),
+                pool: pool.clone(),
+                inline_pool: inline_pool.clone(),
                 load_ms,
                 stats: Mutex::new(ExecStats::default()),
             }) as Box<dyn Executor>

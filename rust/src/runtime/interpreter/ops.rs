@@ -4,9 +4,10 @@
 //! Every kernel here is bit-exact with the numpy oracle: i64
 //! accumulation in ascending index order, `as i32` wrapping narrowings
 //! exactly where `LutExec._i32` narrows, PoT-indexed LUT lookups for the
-//! non-linears. The pooled variants band output rows across
-//! [`LanePool`] lanes; each row's arithmetic is unchanged, so lane count
-//! never changes a single bit of the result.
+//! non-linears. The `*_into` variants band output rows across
+//! [`LanePool`] lanes and draw every working buffer from the lane's
+//! [`LaneScratch`] (no per-call allocation); each row's arithmetic is
+//! unchanged, so lane count never changes a single bit of the result.
 //!
 //! The `*_naive` variants preserve the pre-fabric scalar structure
 //! (per-row scratch allocations, per-head probability matrix,
@@ -14,6 +15,7 @@
 //! the baseline `benches/interpreter.rs` measures the fabric against.
 
 use crate::lut::{AnyTable, LutTable, SegmentedTable};
+use crate::runtime::fabric::scratch::SoftmaxScratch;
 use crate::runtime::fabric::LanePool;
 
 use super::bundle::BlockParams;
@@ -55,55 +57,46 @@ pub(crate) fn any_i32(t: &AnyTable, x: i32) -> i32 {
 // ---------------------------------------------------------------------------
 
 /// Integer LayerNorm (`LutExec.layernorm`): three passes per token row,
-/// rows banded across the pool.
-pub(crate) fn layernorm(
+/// rows banded across the pool, centered-sum buffer from the lane
+/// scratch, output into a caller-owned reusable buffer.
+pub(crate) fn layernorm_into(
     x: &[i32],
     d: usize,
     guard: u32,
     rsqrt: &LutTable,
     rq: &LutTable,
+    out: &mut Vec<i32>,
     pool: &LanePool,
-) -> Vec<i32> {
+) {
     debug_assert_eq!(x.len() % d, 0);
-    let mut out = vec![0i32; x.len()];
-    pool.par_chunks_mut(&mut out, d, |r0, band| {
-        let mut c = vec![0i64; d];
+    // no clear(): every element of every row is written below, so
+    // resize only pays for newly grown capacity
+    out.resize(x.len(), 0);
+    pool.par_chunks_mut(out.as_mut_slice(), d, |s, r0, band| {
+        s.ln_c.resize(d, 0); // fully overwritten per row
+
         for (i, orow) in band.chunks_exact_mut(d).enumerate() {
             let row = &x[(r0 + i) * d..(r0 + i + 1) * d];
-            let s: i64 = row.iter().map(|&v| v as i64).sum();
+            let sum: i64 = row.iter().map(|&v| v as i64).sum();
             let mut v: i64 = 0;
-            for (cj, &xv) in c.iter_mut().zip(row) {
+            for (cj, &xv) in s.ln_c.iter_mut().zip(row) {
                 // numpy: `ci * x` runs in int32 (wrapping) before the
                 // int64 subtraction widens it
-                *cj = (d as i32).wrapping_mul(xv) as i64 - s;
+                *cj = (d as i32).wrapping_mul(xv) as i64 - sum;
                 let cg = *cj >> guard;
                 v += cg * cg;
             }
             let r = lut_i32(rsqrt, v as i32) as i64;
-            for (o, &cj) in orow.iter_mut().zip(c.iter()) {
+            for (o, &cj) in orow.iter_mut().zip(s.ln_c.iter()) {
                 *o = lut_i32(rq, (cj * r) as i32);
             }
         }
     });
-    out
 }
 
 // ---------------------------------------------------------------------------
 // Softmax
 // ---------------------------------------------------------------------------
-
-/// Reusable per-worker buffers for one softmax row — hoisted out of the
-/// per-row hot path (the pre-fabric code allocated two vectors per row).
-pub(crate) struct SoftmaxScratch {
-    sc: Vec<i32>,
-    e: Vec<i32>,
-}
-
-impl SoftmaxScratch {
-    pub(crate) fn new(t: usize) -> Self {
-        Self { sc: vec![0i32; t], e: vec![0i32; t] }
-    }
-}
 
 /// Integer Softmax over one score row (`LutExec.softmax`): max-subtract,
 /// inverted Exp LUT, (segmented) Recip, prob ReQuant.
@@ -138,26 +131,31 @@ pub(crate) fn softmax_row(
 /// Fused multi-head attention over requantized `qkv` rows: per output
 /// token `t1` (banded across the pool) and head, compute the score row,
 /// softmax it, and accumulate `R @ V` with the zero-probability skip.
+/// All per-row buffers come from the lane's scratch; the output goes
+/// into a caller-owned reusable buffer.
 ///
 /// Bit-exact with [`attention_naive`]: per output element the same i64
 /// terms are summed in the same ascending-`t2` order (skipping a zero
 /// probability adds nothing), and the `as i32` narrowing into the
 /// `rv` requant LUT is unchanged.
-pub(crate) fn attention(
+pub(crate) fn attention_into(
     blk: &BlockParams,
     qkv: &[i32],
     t: usize,
     d: usize,
     h: usize,
+    out: &mut Vec<i32>,
     pool: &LanePool,
-) -> Vec<i32> {
+) {
     let dh = d / h;
-    let mut a_q = vec![0i32; t * d];
-    pool.par_chunks_mut(&mut a_q, d, |t1_0, band| {
-        let mut scores = vec![0i64; t];
-        let mut prob = vec![0i32; t];
-        let mut rv = vec![0i64; dh];
-        let mut scratch = SoftmaxScratch::new(t);
+    // no clear(): `d % h == 0` (validated at bundle load), so the head
+    // slices cover every element of every row — stale values never leak
+    out.resize(t * d, 0);
+    pool.par_chunks_mut(out.as_mut_slice(), d, |s, t1_0, band| {
+        s.scores.resize(t, 0); // fully overwritten per (t1, head)
+        s.prob.resize(t, 0); // ditto (softmax writes all t entries)
+        s.rv.resize(dh, 0); // zeroed per head by fill(0) below
+        s.softmax.reset(t);
         for (i, orow) in band.chunks_exact_mut(d).enumerate() {
             let t1 = t1_0 + i;
             let qrow = t1 * 3 * d;
@@ -165,29 +163,28 @@ pub(crate) fn attention(
                 let (qof, kof, vof) = (hh * dh, d + hh * dh, 2 * d + hh * dh);
                 // DyMM 1: scores = Q @ K^T for this (t1, head)
                 let q = &qkv[qrow + qof..qrow + qof + dh];
-                for (t2, sc) in scores.iter_mut().enumerate() {
+                for (t2, sc) in s.scores.iter_mut().enumerate() {
                     let k = &qkv[t2 * 3 * d + kof..t2 * 3 * d + kof + dh];
                     *sc = q.iter().zip(k).map(|(&a, &b)| a as i64 * b as i64).sum();
                 }
-                softmax_row(&blk.exp, &blk.recip, &blk.prob, &scores, &mut prob, &mut scratch);
+                softmax_row(&blk.exp, &blk.recip, &blk.prob, &s.scores, &mut s.prob, &mut s.softmax);
                 // DyMM 2: R @ V, t2-outer so V rows stream contiguously
-                rv.fill(0);
-                for (t2, &p) in prob.iter().enumerate() {
+                s.rv.fill(0);
+                for (t2, &p) in s.prob.iter().enumerate() {
                     let p = p as i64;
                     if p != 0 {
                         let v = &qkv[t2 * 3 * d + vof..t2 * 3 * d + vof + dh];
-                        for (a, &vv) in rv.iter_mut().zip(v) {
+                        for (a, &vv) in s.rv.iter_mut().zip(v) {
                             *a += p * vv as i64;
                         }
                     }
                 }
-                for (o, &s) in orow[hh * dh..(hh + 1) * dh].iter_mut().zip(rv.iter()) {
-                    *o = lut_i32(&blk.rv_rq, s as i32);
+                for (o, &acc) in orow[hh * dh..(hh + 1) * dh].iter_mut().zip(s.rv.iter()) {
+                    *o = lut_i32(&blk.rv_rq, acc as i32);
                 }
             }
         }
     });
-    a_q
 }
 
 /// The pre-fabric attention: head-outer, full `t x t` probability
@@ -288,9 +285,29 @@ mod tests {
         let rq = mk_lut(-(1 << 20), 12, 6, false, (0..64i64).map(|i| i - 32).collect());
         let d = 16;
         let x: Vec<i32> = (0..5 * d as i32).map(|i| (i * 37 % 113) - 56).collect();
-        let serial = layernorm(&x, d, 2, &rsqrt, &rq, &LanePool::serial());
+        let mut serial = Vec::new();
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut serial, &LanePool::serial());
+        assert_eq!(serial.len(), x.len());
         for lanes in [2usize, 3, 7] {
-            assert_eq!(layernorm(&x, d, 2, &rsqrt, &rq, &LanePool::new(lanes)), serial);
+            let mut pooled = Vec::new();
+            layernorm_into(&x, d, 2, &rsqrt, &rq, &mut pooled, &LanePool::new(lanes));
+            assert_eq!(pooled, serial, "lanes={lanes}");
         }
+    }
+
+    #[test]
+    fn layernorm_into_reuses_the_output_buffer() {
+        let rsqrt = mk_lut(-(1 << 20), 10, 6, false, (0..64i64).map(|i| 64 - i).collect());
+        let rq = mk_lut(-(1 << 20), 12, 6, false, (0..64i64).map(|i| i - 32).collect());
+        let d = 8;
+        let x: Vec<i32> = (0..4 * d as i32).map(|i| (i * 11 % 37) - 18).collect();
+        let pool = LanePool::serial();
+        let mut out = Vec::new();
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &pool);
+        let want = out.clone();
+        let ptr = out.as_ptr();
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &pool);
+        assert_eq!(out, want);
+        assert_eq!(out.as_ptr(), ptr, "steady-state layernorm must not reallocate");
     }
 }

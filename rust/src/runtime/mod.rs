@@ -8,9 +8,11 @@
 //!   (`python -m compile.export`), bit-exact with the python reference
 //!   (`python/compile/kernels/ref.py` semantics). No native deps, no
 //!   `make artifacts` prerequisite beyond the bundle JSON.
-//! * [`fabric`] — the interpreter's compute layer: a `std::thread` lane
-//!   pool (batch-lane and token-row grains, `HGPIPE_LANES`) plus the
-//!   cache-blocked, panel-packed integer GEMM. Bit-exactness-preserving.
+//! * [`fabric`] — the interpreter's compute layer: a persistent pool of
+//!   parked worker threads (batch-lane and token-row grains, created
+//!   once per loaded model), a per-lane scratch arena, and the
+//!   panel-packed integer GEMM with its register-blocked microkernel.
+//!   Bit-exactness-preserving.
 //! * [`pjrt`] (feature `pjrt`) — the XLA path: load `artifacts/*.hlo.txt`
 //!   emitted by `python/compile/aot.py` onto a PJRT CPU client. Interchange
 //!   is HLO **text** — jax >= 0.5 emits protos with 64-bit instruction ids
@@ -48,6 +50,39 @@ pub enum BackendKind {
     /// reachable from [`BackendKind::parse`].
     #[doc(hidden)]
     Faulty,
+}
+
+/// How to run a model: which engine, and how wide its fabric is.
+///
+/// The `--lanes` CLI flag travels here explicitly — mutating
+/// `HGPIPE_LANES` from the binary was unsound once threads existed
+/// (`set_var` races every concurrent `getenv`), so the env var is now a
+/// read-only *fallback* consulted only when `lanes` is `None`
+/// (see [`fabric::LanePool::from_env`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeConfig {
+    pub backend: BackendKind,
+    /// Explicit fabric lane count. `None` defers to `HGPIPE_LANES`,
+    /// then to the machine's available parallelism.
+    pub lanes: Option<usize>,
+}
+
+impl RuntimeConfig {
+    pub fn new(backend: BackendKind) -> Self {
+        Self { backend, lanes: None }
+    }
+
+    /// Set (or clear) the explicit lane count.
+    pub fn with_lanes(mut self, lanes: Option<usize>) -> Self {
+        self.lanes = lanes;
+        self
+    }
+}
+
+impl From<BackendKind> for RuntimeConfig {
+    fn from(backend: BackendKind) -> Self {
+        Self::new(backend)
+    }
 }
 
 impl BackendKind {
@@ -103,10 +138,19 @@ pub struct LoadedModel {
     pub compile_ms: f64,
 }
 
-/// Load a model's batch variants on the chosen backend.
-pub fn load_model(kind: BackendKind, manifest: &Manifest, model: &str) -> crate::Result<LoadedModel> {
-    match kind {
-        BackendKind::Interpreter => interpreter::load_model(manifest, model),
+/// Load a model's batch variants on the configured backend. An explicit
+/// `cfg.lanes` wins; otherwise the interpreter falls back to
+/// `HGPIPE_LANES` / available parallelism.
+pub fn load_model(
+    cfg: RuntimeConfig,
+    manifest: &Manifest,
+    model: &str,
+) -> crate::Result<LoadedModel> {
+    match cfg.backend {
+        BackendKind::Interpreter => match cfg.lanes {
+            Some(n) => interpreter::load_model_with_lanes(manifest, model, n),
+            None => interpreter::load_model(manifest, model),
+        },
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => pjrt::load_model(manifest, model),
         BackendKind::Faulty => Ok(faulty::load_model()),
