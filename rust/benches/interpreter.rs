@@ -23,15 +23,22 @@
 //!   fabric_pooled_img_s     persistent fabric through the executor
 //!   lane_sweep[]            {lanes, persistent_img_s, spawn_img_s}
 //!   gemm_microkernel        blocked-vs-naive speedup, dense + sparse
+//!   pipeline                hybrid-grained spatial executor: img/s vs
+//!                           the lane-parallel fabric, a stage-count
+//!                           sweep, per-stage occupancy over an explicit
+//!                           measurement window, and fill/drain bubble +
+//!                           backpressure stall counts
 //!   per_op_ms_per_image / per_op_pooled_ms_per_image
 
 use std::fmt::Write as _;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use hgpipe::artifacts::Manifest;
 use hgpipe::runtime::fabric::gemm::PackedGemm;
 use hgpipe::runtime::fabric::LanePool;
 use hgpipe::runtime::interpreter::{self, OpProfile, QuantViT};
+use hgpipe::runtime::pipeline::{Pipeline, PipelineConfig, DEFAULT_QUEUE_DEPTH};
 use hgpipe::util::bench::{bench, black_box};
 use hgpipe::util::prng::Prng;
 
@@ -141,7 +148,7 @@ fn main() {
         eprintln!("error: no tiny-synth bundle in {}", dir.display());
         std::process::exit(2);
     };
-    let net = QuantViT::load(&info.path).expect("bundle loads");
+    let net = Arc::new(QuantViT::load(&info.path).expect("bundle loads"));
     let per = net.tokens_per_image();
 
     let n_images: usize = if opts.smoke { 16 } else { 64 };
@@ -250,6 +257,53 @@ fn main() {
     let gemm_dense_speedup = gemm_speedup(&dense_x, "dense");
     let gemm_sparse_speedup = gemm_speedup(&sparse_x, "70% zeros");
 
+    // 7. hybrid-grained pipeline executor: resident stages + bounded
+    // queues, vs the lane-parallel fabric. Sweep stage counts, then
+    // measure the fully-unrolled pipeline over an explicit window so
+    // per-stage occupancy and bubble counts attribute to that window.
+    let queue_depth = DEFAULT_QUEUE_DEPTH;
+    let mut pipe_sweep: Vec<(usize, f64)> = Vec::new();
+    let mut headline: Option<Pipeline> = None;
+    // requested counts, ascending; 0 = fully unrolled. Dedup happens on
+    // the RESOLVED pipe.stage_count() so the bench never re-measures a
+    // count a shallow model clamps to, whatever the resolution policy
+    for &stages in &[1usize, 2, 0] {
+        let pipe = Pipeline::new(
+            net.clone(),
+            PipelineConfig { stages, queue_depth, lanes: opts.lanes },
+        );
+        if pipe_sweep.iter().any(|&(s, _)| s == pipe.stage_count()) {
+            continue; // resolved to a count already measured
+        }
+        let resolved = pipe.stage_count();
+        // self-check: pipeline logits bit-identical to the naive baseline
+        let got = pipe.run_batch(&flat[..per], 1).unwrap();
+        assert_eq!(
+            want.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            "pipeline logits diverged from the naive baseline at {resolved} stages"
+        );
+        let r = bench(&format!("  pipeline, {resolved} stages (depth {queue_depth} FIFOs)"), sweep_budget, || {
+            black_box(pipe.run_batch(&flat, n_images).unwrap());
+        });
+        println!("{r}");
+        pipe_sweep.push((pipe.stage_count(), n_images as f64 / r.mean.as_secs_f64()));
+        headline = Some(pipe); // ascending sweep: the last benched entry is the most unrolled
+    }
+    // headline window: reuse the sweep's fully-unrolled pipeline (already
+    // constructed and warmed by its bench rounds); occupancy and
+    // fill/drain bubbles are diffed across exactly this window
+    let pipe = headline.expect("stage sweep is non-empty");
+    let pipe_rounds: usize = if opts.smoke { 3 } else { 10 };
+    let s0 = pipe.stats();
+    let tw = Instant::now();
+    for _ in 0..pipe_rounds {
+        black_box(pipe.run_batch(&flat, n_images).unwrap());
+    }
+    let pipe_wall_ms = tw.elapsed().as_secs_f64() * 1e3;
+    let pd = pipe.stats().delta(&s0);
+    let pipeline_ips = (pipe_rounds * n_images) as f64 / (pipe_wall_ms / 1e3);
+
     // per-op breakdowns: serial (clean attribution) and pooled (what the
     // serving path actually spends per op at the headline lane count)
     let prof_images = n_images.min(8);
@@ -284,9 +338,32 @@ fn main() {
         pooled_ips / spawn_ips
     );
     println!("    gemm microkernel     {gemm_dense_speedup:.2}x dense, {gemm_sparse_speedup:.2}x sparse (vs naive)");
+    println!(
+        "    pipeline {:2} stages  {pipeline_ips:8.1} img/s   ({:.2}x vs lane-parallel fabric)",
+        pipe.stage_count(),
+        pipeline_ips / pooled_ips
+    );
     println!("    lane sweep (persistent | spawn img/s):");
     for &(lanes, p, s) in &sweep {
         println!("      {lanes:2} lanes   {p:8.1} | {s:8.1}");
+    }
+    println!("    pipeline stage sweep (img/s):");
+    for &(stages, ips) in &pipe_sweep {
+        println!("      {stages:2} stages  {ips:8.1}");
+    }
+    println!(
+        "    pipeline occupancy ({pipe_rounds} x {n_images} imgs): bubbles {} backpressure {}",
+        pd.fill_drain_bubbles, pd.backpressure_stalls
+    );
+    for s in &pd.stages {
+        println!(
+            "      {:<8} blocks {:?}  occ {:5.1}%  empty {:5}  full {:5}",
+            s.name,
+            s.blocks,
+            100.0 * s.busy_ms / pipe_wall_ms,
+            s.stalls_empty,
+            s.stalls_full,
+        );
     }
     println!(
         "    per-op (1 lane): gemm {:.0}%  attention {:.0}%  layernorm {:.0}%  requant {:.0}%",
@@ -306,6 +383,48 @@ fn main() {
                 if i == 0 { "" } else { "," },
             );
         }
+        let mut pipe_sweep_json = String::new();
+        for (i, &(stages, ips)) in pipe_sweep.iter().enumerate() {
+            let _ = write!(
+                pipe_sweep_json,
+                "{}\n      {{\"stages\": {stages}, \"img_s\": {ips:.3}}}",
+                if i == 0 { "" } else { "," },
+            );
+        }
+        let mut per_stage_json = String::new();
+        for (i, s) in pd.stages.iter().enumerate() {
+            let _ = write!(
+                per_stage_json,
+                "{}\n      {{\"name\": \"{}\", \"blocks\": [{}, {}], \"lanes\": {}, \
+                 \"images\": {}, \"busy_ms\": {:.3}, \"occupancy\": {:.4}, \
+                 \"stalls_empty\": {}, \"stalls_full\": {}}}",
+                if i == 0 { "" } else { "," },
+                s.name,
+                s.blocks.0,
+                s.blocks.1,
+                s.lanes,
+                s.images,
+                s.busy_ms,
+                s.busy_ms / pipe_wall_ms,
+                s.stalls_empty,
+                s.stalls_full,
+            );
+        }
+        let pipeline_json = format!(
+            "{{\n    \"stages\": {},\n    \"queue_depth\": {queue_depth},\n    \
+             \"lanes_per_stage\": {},\n    \"img_s\": {pipeline_ips:.3},\n    \
+             \"speedup_vs_lane_parallel\": {:.3},\n    \
+             \"window\": {{\"rounds\": {pipe_rounds}, \"images_per_round\": {n_images}, \
+             \"wall_ms\": {pipe_wall_ms:.3}}},\n    \
+             \"fill_drain_bubbles\": {},\n    \"backpressure_stalls\": {},\n    \
+             \"stage_sweep\": [{pipe_sweep_json}\n    ],\n    \
+             \"per_stage\": [{per_stage_json}\n    ]\n  }}",
+            pipe.stage_count(),
+            pipe.lanes_per_stage(),
+            pipeline_ips / pooled_ips,
+            pd.fill_drain_bubbles,
+            pd.backpressure_stalls,
+        );
         let per_op = |p: &OpProfile| {
             format!(
                 "{{\n    \"quantize\": {:.4},\n    \"gemm\": {:.4},\n    \
@@ -329,6 +448,7 @@ fn main() {
              \"gemm_microkernel\": {{\"shape\": [{}, {}, {}], \
              \"dense_speedup_vs_naive\": {:.3}, \"sparse_speedup_vs_naive\": {:.3}}},\n  \
              \"lane_sweep\": [{}\n  ],\n  \
+             \"pipeline\": {},\n  \
              \"per_op_ms_per_image\": {},\n  \
              \"per_op_pooled_ms_per_image\": {}\n}}\n",
             opts.smoke,
@@ -347,6 +467,7 @@ fn main() {
             gemm_dense_speedup,
             gemm_sparse_speedup,
             sweep_json,
+            pipeline_json,
             per_op(&prof),
             per_op(&prof_pooled),
         );

@@ -6,7 +6,11 @@
 //!
 //! The coordinator is generic over the execution backend via
 //! [`crate::runtime::BackendKind`]: `ModelServer::start` uses the default
-//! (pure-rust interpreter); `start_with_backend` selects explicitly.
+//! (pure-rust interpreter); `start_with_backend` selects explicitly, and
+//! `start_with_config` also carries the lane count and the temporal-vs-
+//! spatial [`crate::runtime::ExecMode`] (lane-parallel or pipeline) per
+//! model. [`Router`] fronts several `ModelServer`s, routing requests by
+//! model name with per-model metrics export.
 //!
 //! Delivery guarantee: every accepted request receives exactly one reply
 //! — `Ok(Response)` on success, an explicit `Err` if its dispatch failed
@@ -350,7 +354,11 @@ fn executor_loop(
     }
 }
 
-/// Route requests across several models (the vLLM-style front door).
+/// Route requests across several models (the vLLM-style front door):
+/// one [`ModelServer`] per model name — each with its own executor
+/// thread and its own fabric or pipeline — with submission routed by
+/// model name and per-model metrics export. `hgpipe serve --models a,b`
+/// drives one of these.
 pub struct Router {
     servers: Vec<ModelServer>,
 }
@@ -360,11 +368,65 @@ impl Router {
         Self { servers }
     }
 
+    /// Start one server per model name, all on the same runtime config.
+    /// Duplicate names are rejected (routing would silently shadow one).
+    pub fn start(
+        manifest: &Manifest,
+        models: &[String],
+        policy_wait_ms: u64,
+        config: RuntimeConfig,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!models.is_empty(), "router needs at least one model");
+        let mut servers: Vec<ModelServer> = Vec::with_capacity(models.len());
+        for m in models {
+            anyhow::ensure!(
+                servers.iter().all(|s| s.name() != m),
+                "duplicate model '{m}' in --models"
+            );
+            servers.push(ModelServer::start_with_config(manifest, m, policy_wait_ms, config)?);
+        }
+        Ok(Self { servers })
+    }
+
     pub fn server(&self, model: &str) -> Option<&ModelServer> {
         self.servers.iter().find(|s| s.name() == model)
     }
 
+    /// The server for `model`, or an actionable routing error naming
+    /// what *is* being served.
+    fn routed(&self, model: &str) -> crate::Result<&ModelServer> {
+        self.server(model).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no server for model '{model}' (serving: {})",
+                self.models().join(", ")
+            )
+        })
+    }
+
+    /// Route one request to `model`'s server.
+    pub fn submit(
+        &self,
+        model: &str,
+        tokens: Vec<f32>,
+    ) -> crate::Result<Receiver<crate::Result<Response>>> {
+        self.routed(model)?.submit(tokens)
+    }
+
+    /// Route a whole image set to `model`'s server and wait for replies.
+    pub fn infer_all(&self, model: &str, images: Vec<Vec<f32>>) -> crate::Result<Vec<Response>> {
+        self.routed(model)?.infer_all(images)
+    }
+
     pub fn models(&self) -> Vec<&str> {
         self.servers.iter().map(|s| s.name()).collect()
+    }
+
+    /// Per-model metrics export: a `(model, metrics)` snapshot per
+    /// served model (the front door's observability surface).
+    pub fn metrics(&self) -> Vec<(String, ServeMetrics)> {
+        self.servers
+            .iter()
+            .map(|s| (s.name().to_string(), s.metrics.lock().unwrap().clone()))
+            .collect()
     }
 }

@@ -26,29 +26,42 @@
 //! | `runtime::interpreter` | default | weight/LUT bundle JSON (`python -m compile.export`) | pure rust, zero native deps; bit-exact with the python integer reference; the committed golden fixture in `rust/artifacts/` makes `cargo test` self-contained |
 //! | `runtime::pjrt` | `--features pjrt` | HLO text (`python/compile/aot.py`, via `make artifacts`) | XLA CPU client; the `xla` dependency resolves to the in-repo stub (`rust/xla-stub`) which type-checks the integration — swap in a real binding to execute |
 //!
-//! ## Interpreter fabric & lane count
+//! ## Interpreter execution modes, fabric & lane count
 //!
-//! The interpreter executes on [`runtime::fabric`]: weight matrices are
+//! The interpreter has three execution modes (all bit-identical):
+//! **scalar** (the `*_naive` oracle kernels), **lane-parallel**
+//! (temporal — default), and **pipeline** (spatial — the paper's
+//! architecture, [`runtime::pipeline`]): the model unrolled into
+//! resident stages connected by bounded SPSC queues, selected via
+//! [`runtime::ExecMode`], `--pipeline [--stages N] [--queue-depth N]`,
+//! or `HGPIPE_MODE=pipeline`.
+//!
+//! Temporal execution runs on [`runtime::fabric`]: weight matrices are
 //! re-packed into blocked GEMM panels at bundle load (with a 4-row ×
 //! 8-wide register-blocked microkernel and a per-row activation-density
-//! fallback to the zero-skip path), and a
+//! fallback to the zero-skip path), the elementwise requant LUT passes
+//! are fused into the GEMM band that produces them, and a
 //! [`runtime::fabric::LanePool`] of **persistent parked workers** —
 //! created once per loaded model, joined deterministically on unload —
 //! parallelizes either whole batch lanes (one image per worker, when a
 //! dispatch carries at least as many images as lanes) or token-row bands
 //! inside a single image. Every intermediate buffer comes from the
 //! pool's scratch arena, so steady-state serving performs no per-image
-//! heap allocation in GEMM/attention scratch.
+//! heap allocation in GEMM/attention scratch; a fully-serial forward
+//! runs lock-free in a single scratch box.
 //!
 //! Lane-count precedence: the `hgpipe serve`/`eval` **`--lanes N`** flag
 //! (threaded explicitly via [`runtime::RuntimeConfig`] — the binary
 //! never mutates its environment), then the **`HGPIPE_LANES`** env var
 //! (read-only fallback), then the machine's available parallelism.
-//! `--lanes 1` / `HGPIPE_LANES=1` forces fully serial execution.
-//! Results are bit-identical at every lane count — `cargo test` pins
-//! lane counts 1, 2, 7 and 16 against the golden fixture — and `make
-//! bench-json` reports scalar / spawn-pool / persistent-pool throughput,
-//! a lane-scaling sweep and per-op breakdowns into
+//! `--lanes 1` / `HGPIPE_LANES=1` forces fully serial execution. The
+//! execution mode resolves the same way (`--pipeline`, then
+//! `HGPIPE_MODE`). Results are bit-identical at every lane count, stage
+//! count and queue depth — `cargo test` pins lane counts 1, 2, 7 and 16
+//! and stage counts 1, 2, 4 and max against the golden fixture — and
+//! `make bench-json` reports scalar / spawn-pool / persistent-pool /
+//! pipeline throughput, lane- and stage-scaling sweeps, per-stage
+//! occupancy + bubble counts and per-op breakdowns into
 //! `BENCH_interpreter.json`.
 //!
 //! Python never runs on the request path: the build pipeline (`make

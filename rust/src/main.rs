@@ -13,9 +13,9 @@ use std::path::PathBuf;
 
 use hgpipe::arch::parallelism::design_network;
 use hgpipe::artifacts::Manifest;
-use hgpipe::coordinator::ModelServer;
+use hgpipe::coordinator::{ModelServer, Router};
 use hgpipe::model::{Precision, ViTConfig};
-use hgpipe::runtime::{BackendKind, RuntimeConfig};
+use hgpipe::runtime::{pipeline, BackendKind, ExecMode, RuntimeConfig};
 use hgpipe::sim::{self, builder::Paradigm, SimConfig};
 use hgpipe::util::prng::Prng;
 use hgpipe::{report, Result};
@@ -82,11 +82,11 @@ impl Args {
         BackendKind::parse(&self.flag("backend", "interpreter"))
     }
 
-    /// The full runtime configuration: backend plus the `--lanes` flag
-    /// threaded through explicitly. `--lanes` beats `HGPIPE_LANES`,
-    /// which beats the machine's available parallelism — the binary
-    /// never mutates its own environment (`set_var` is unsound once
-    /// threads exist).
+    /// The full runtime configuration: backend, the `--lanes` flag, and
+    /// the execution mode, all threaded through explicitly. `--lanes`
+    /// beats `HGPIPE_LANES` and `--pipeline` beats `HGPIPE_MODE` —
+    /// the binary never mutates its own environment (`set_var` is
+    /// unsound once threads exist).
     fn runtime_config(&self) -> Result<RuntimeConfig> {
         let lanes = match self.flags.get("lanes") {
             None => None,
@@ -98,7 +98,40 @@ impl Args {
                 Some(n)
             }
         };
-        Ok(RuntimeConfig::new(self.backend()?).with_lanes(lanes))
+        let backend = self.backend()?;
+        let mode = if let Some(v) = self.flags.get("pipeline") {
+            // boolean flag: the parser would otherwise swallow a stray
+            // token ('--pipeline 4') and silently run auto stages
+            anyhow::ensure!(
+                v == "true",
+                "--pipeline takes no value (got '{v}'); use --stages N for the stage count"
+            );
+            // the pipeline executor is an interpreter architecture; a
+            // non-interpreter backend must reject the flag rather than
+            // silently measure the wrong execution mode
+            anyhow::ensure!(
+                matches!(backend, BackendKind::Interpreter),
+                "--pipeline requires the interpreter backend"
+            );
+            let stages: usize = self.flag("stages", "0").parse().map_err(|_| {
+                anyhow::anyhow!("--stages expects a non-negative integer (0 = one per block)")
+            })?;
+            let queue_depth: usize = self
+                .flag("queue-depth", &pipeline::DEFAULT_QUEUE_DEPTH.to_string())
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--queue-depth expects a positive integer"))?;
+            anyhow::ensure!(queue_depth >= 1, "--queue-depth must be at least 1");
+            ExecMode::Pipeline { stages, queue_depth }
+        } else {
+            // a forgotten `--pipeline` must not silently downgrade a
+            // "4-stage pipeline" benchmark to lane-parallel mode
+            anyhow::ensure!(
+                !self.flags.contains_key("stages") && !self.flags.contains_key("queue-depth"),
+                "--stages/--queue-depth only apply with --pipeline"
+            );
+            ExecMode::Auto
+        };
+        Ok(RuntimeConfig::new(backend).with_lanes(lanes).with_mode(mode))
     }
 }
 
@@ -147,20 +180,27 @@ COMMANDS:
                            [--paradigm hybrid|coarse|fine] [--images N] [--gantt]
   fifo-search              minimal deadlock-free deep-FIFO depth [--network N]
   serve                    serve synthetic requests through the quantized model
-                           [--model tiny-synth] [--requests N] [--rate R/s]
-                           [--artifacts DIR] [--backend interpreter|pjrt]
-                           [--lanes N]
+                           [--model tiny-synth | --models a,b] [--requests N]
+                           [--rate R/s] [--artifacts DIR]
+                           [--backend interpreter|pjrt] [--lanes N]
+                           [--pipeline [--stages N] [--queue-depth N]]
   eval                     eval-batch accuracy of a quantized model
                            [--model tiny-synth] [--artifacts DIR]
                            [--backend interpreter|pjrt] [--lanes N]
+                           [--pipeline [--stages N] [--queue-depth N]]
   artifacts                list the artifact manifest [--artifacts DIR]
 
 The default backend is the pure-rust interpreter (runs from the bundle
 JSON in the artifacts dir); `--backend pjrt` needs `--features pjrt`.
 `--lanes N` sets the interpreter fabric's persistent worker-lane count
 for this invocation; unset, the HGPIPE_LANES env var is consulted, then
-the machine's available parallelism. Results are bit-identical at every
-lane count.
+the machine's available parallelism. `--pipeline` switches the
+interpreter to the hybrid-grained spatial executor: the model unrolled
+into `--stages` resident stages (0 = one per encoder block) connected
+by bounded queues of `--queue-depth` tiles; unset, the HGPIPE_MODE env
+var is consulted (`pipeline` | `lane-parallel`). `--models a,b` serves
+several models behind one router with per-model metrics. Results are
+bit-identical at every lane count, stage count and queue depth.
 ";
 
 fn cmd_report(args: &Args) -> Result<()> {
@@ -276,49 +316,97 @@ fn cmd_fifo_search(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
-    let model = args.flag("model", "tiny-synth");
     let config = args.runtime_config()?;
     let requests: usize = args.flag("requests", "64").parse()?;
     let rate: f64 = args.flag("rate", "0").parse()?; // 0 = closed loop
     let manifest = Manifest::load(&dir)?;
-    let server = ModelServer::start_with_config(&manifest, &model, 2, config)?;
-    println!(
-        "serving '{}' on {} backend ({} token values/img, {} classes, loaded in {:.0} ms)",
-        model,
-        config.backend.label(),
-        server.tokens_per_image(),
-        server.num_classes(),
-        server.compile_ms()
-    );
+    // `--models a,b` fronts several per-model servers with one router;
+    // `--model` (the default) is the single-model special case of it
+    let models: Vec<String> = match args.flags.get("models") {
+        Some(list) => {
+            // a conflicting --model must error, not be silently ignored
+            anyhow::ensure!(
+                !args.flags.contains_key("model"),
+                "--model conflicts with --models (list every model in --models)"
+            );
+            let v: Vec<String> =
+                list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+            anyhow::ensure!(!v.is_empty(), "--models expects a comma-separated list");
+            v
+        }
+        None => vec![args.flag("model", "tiny-synth")],
+    };
+    let router = Router::start(&manifest, &models, 2, config)?;
+    for model in router.models() {
+        let s = router.server(model).expect("router started this model");
+        println!(
+            "serving '{}' on {} backend ({} token values/img, {} classes, loaded in {:.0} ms)",
+            model,
+            config.backend.label(),
+            s.tokens_per_image(),
+            s.num_classes(),
+            s.compile_ms()
+        );
+    }
 
     let mut rng = Prng::new(7);
-    let n_tok = server.tokens_per_image();
-    let mk_image = |rng: &mut Prng| -> Vec<f32> { (0..n_tok).map(|_| rng.f64() as f32).collect() };
-
+    let mk_image = |rng: &mut Prng, n_tok: usize| -> Vec<f32> {
+        (0..n_tok).map(|_| rng.f64() as f32).collect()
+    };
+    // per-model image sizes, resolved once (submission still routes by
+    // name — that is the router path being exercised)
+    let n_toks: Vec<usize> = models
+        .iter()
+        .map(|m| router.server(m).expect("router started this model").tokens_per_image())
+        .collect();
+    let mut rxs = Vec::with_capacity(requests);
+    let t0;
     if rate > 0.0 {
-        // open-loop Poisson arrivals
-        let mut rxs = Vec::with_capacity(requests);
-        for _ in 0..requests {
-            rxs.push(server.submit(mk_image(&mut rng))?);
+        // open-loop Poisson arrivals: generate each image lazily right
+        // before its submit (pre-materializing a long run would hold the
+        // whole workload in memory for no benefit)
+        t0 = std::time::Instant::now();
+        for i in 0..requests {
+            let model: &str = &models[i % models.len()];
+            rxs.push(router.submit(model, mk_image(&mut rng, n_toks[i % models.len()]))?);
             let gap = rng.exp(1.0 / rate);
             std::thread::sleep(std::time::Duration::from_secs_f64(gap));
         }
-        for rx in rxs {
-            let _ = rx.recv();
-        }
     } else {
-        let images: Vec<Vec<f32>> = (0..requests).map(|_| mk_image(&mut rng)).collect();
-        let t0 = std::time::Instant::now();
-        let responses = server.infer_all(images)?;
-        let dt = t0.elapsed();
+        // closed loop: pre-generate the round-robin traffic so the
+        // throughput timer measures serving, not the PRNG
+        let traffic: Vec<(&str, Vec<f32>)> = (0..requests)
+            .map(|i| {
+                let model: &str = &models[i % models.len()];
+                (model, mk_image(&mut rng, n_toks[i % models.len()]))
+            })
+            .collect();
+        t0 = std::time::Instant::now();
+        for (model, image) in traffic {
+            rxs.push(router.submit(model, image)?);
+        }
+    }
+    let mut answered = 0usize;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Ok(_)) => answered += 1,
+            // closed loop propagates failures (as `infer_all` did); the
+            // open loop tolerates stragglers and reports via metrics
+            Ok(Err(e)) if rate <= 0.0 => return Err(e),
+            Err(e) if rate <= 0.0 => anyhow::bail!("reply lost: {e}"),
+            _ => {}
+        }
+    }
+    let dt = t0.elapsed();
+    if rate <= 0.0 {
         println!(
-            "{} inferences in {:?} = {:.1} img/s",
-            responses.len(),
-            dt,
-            responses.len() as f64 / dt.as_secs_f64()
+            "{answered} inferences in {dt:?} = {:.1} img/s",
+            answered as f64 / dt.as_secs_f64()
         );
     }
-    println!("{}", server.metrics.lock().unwrap().summary());
+    for (model, metrics) in router.metrics() {
+        println!("[{model}] {}", metrics.summary());
+    }
     Ok(())
 }
 

@@ -53,8 +53,54 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-pub use scratch::LaneScratch;
+pub use scratch::{BandScratch, LaneScratch, PassScratch};
 use scratch::ScratchArena;
+
+/// How a kernel's output-row bands execute: inline with an explicitly
+/// provided band scratch, or spread across a [`LanePool`]'s lanes.
+///
+/// The serial variant is what lets the batch-grain worker bands and the
+/// pipeline's resident stages run a whole per-image forward with **zero
+/// locking**: the kernels draw their band buffers straight from the
+/// caller's [`BandScratch`] instead of checking a box out of the arena
+/// per parallel region. Both variants are bit-exact — the banding never
+/// changes a kernel's per-row arithmetic.
+pub enum Exec<'a> {
+    /// Fully serial on the caller thread, band buffers provided
+    /// explicitly — no arena traffic, no job-queue traffic.
+    Serial(&'a mut BandScratch),
+    /// Bands dispatched to the pool's parked workers
+    /// (via [`LanePool::par_chunks_mut`]).
+    Pool(&'a LanePool),
+}
+
+impl Exec<'_> {
+    /// Run `f(band_scratch, first_row_index, band)` over `data` split
+    /// into bands of whole `chunk`-sized rows: one band inline (serial),
+    /// or one per lane (pool). Same banding contract as
+    /// [`LanePool::par_chunks_mut`]: bands are disjoint, every row is
+    /// visited exactly once, and any `f` that computes a row purely from
+    /// its global row index, its own scratch and shared read-only state
+    /// is bit-exact under both variants.
+    pub(crate) fn run<T, F>(&mut self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(&mut BandScratch, usize, &mut [T]) + Sync,
+    {
+        match self {
+            Exec::Serial(band) => {
+                // same hard asserts as par_chunks_mut, so a malformed
+                // caller fails identically at every lane count (a
+                // debug-only check would let release builds silently
+                // drop a trailing partial row in serial mode)
+                assert!(chunk > 0, "chunk size must be positive");
+                assert_eq!(data.len() % chunk, 0, "data length must be a multiple of chunk");
+                f(&mut **band, 0, data)
+            }
+            Exec::Pool(pool) => pool.par_chunks_mut(data, chunk, |s, r0, b| f(&mut s.band, r0, b)),
+        }
+    }
+}
 
 /// Count of currently-live fabric worker threads across the process.
 /// Incremented before a worker spawns, decremented when its thread

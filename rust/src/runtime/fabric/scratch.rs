@@ -3,15 +3,18 @@
 //! steady-state serving does no per-image heap allocation in
 //! GEMM/attention scratch.
 //!
-//! A [`LaneScratch`] box is checked out of the pool's [`ScratchArena`]
-//! at two nesting levels that never alias:
+//! A [`LaneScratch`] box is two disjoint halves that never alias:
 //!
-//! * the **forward pass** holds one box for its whole-pass buffers
-//!   (quantized tokens, residual stream, GEMM accumulator, requantized
-//!   intermediates, head pooling);
-//! * each **band job** inside a parallel region checks out its own box
-//!   for the per-row kernels (LayerNorm centered sums, attention
-//!   score/probability rows, softmax exps).
+//! * [`PassScratch`] — the **forward pass** buffers (quantized tokens,
+//!   residual stream, LayerNorm/QKV/attention/MLP intermediates, head
+//!   pooling), held by whoever drives a whole image through the model:
+//!   the pooled forward, a batch-grain band worker, or a pipeline stage.
+//! * [`BandScratch`] — the **band kernel** buffers (GEMM band
+//!   accumulator for the fused requant epilogue, LayerNorm centered
+//!   sums, attention score/probability rows, softmax exps), used by one
+//!   band of a parallel region — or, on the serial path, threaded
+//!   directly into the kernels so a fully-serial forward touches no
+//!   arena lock at all.
 //!
 //! Buffers only ever grow (`clear` + `resize` reuses capacity), and
 //! boxes return to the bag when their holder finishes, so after a
@@ -25,6 +28,7 @@ use std::sync::Mutex;
 
 /// Reusable per-row softmax buffers (max-subtracted scores + exps) —
 /// hoisted out of the per-row hot path.
+#[derive(Default)]
 pub struct SoftmaxScratch {
     pub(crate) sc: Vec<i32>,
     pub(crate) e: Vec<i32>,
@@ -47,10 +51,14 @@ impl SoftmaxScratch {
     }
 }
 
-/// One lane's worth of reusable interpreter buffers. All fields start
-/// empty and grow to their steady-state size on first use.
-pub struct LaneScratch {
-    // ---- band-level kernel buffers ----
+/// Band-level kernel buffers: what one band of a parallel region (or the
+/// serial kernel path) needs. All fields start empty and grow to their
+/// steady-state size on first use.
+#[derive(Default)]
+pub struct BandScratch {
+    /// GEMM i64 band accumulator — the fused requant epilogue maps it
+    /// into the i32 output band right after the band's rows are computed.
+    pub(crate) acc: Vec<i64>,
     /// LayerNorm centered sums `d*x[j] - sum(x)` for one token row.
     pub(crate) ln_c: Vec<i64>,
     /// Attention score row (one output token against all key tokens).
@@ -61,10 +69,26 @@ pub struct LaneScratch {
     pub(crate) rv: Vec<i64>,
     /// Softmax working buffers for one score row.
     pub(crate) softmax: SoftmaxScratch,
-    // ---- forward-pass buffers (held by the pass, not by band jobs) ----
+}
+
+impl BandScratch {
+    fn footprint(&self) -> usize {
+        (self.prob.capacity()) * std::mem::size_of::<i32>()
+            + (self.acc.capacity() + self.ln_c.capacity() + self.scores.capacity() + self.rv.capacity())
+                * std::mem::size_of::<i64>()
+            + self.softmax.footprint()
+    }
+}
+
+/// Whole-pass buffers, held by the driver of one image's forward (never
+/// by band jobs, so they can be borrowed alongside a [`BandScratch`]).
+#[derive(Default)]
+pub struct PassScratch {
     /// Quantized input tokens.
     pub(crate) xq: Vec<i32>,
-    /// Residual stream (int32, common scale).
+    /// Residual stream (int32, common scale). Taken out of the scratch
+    /// for the duration of a pass (`mem::take`) so pipeline stages can
+    /// carry the same buffer through bounded channels instead.
     pub(crate) x: Vec<i32>,
     /// LayerNorm output rows.
     pub(crate) n: Vec<i32>,
@@ -74,50 +98,38 @@ pub struct LaneScratch {
     pub(crate) a_q: Vec<i32>,
     /// Requantized MLP hidden activations (GELU output).
     pub(crate) hdn: Vec<i32>,
-    /// GEMM i64 accumulator, reused by every matmul in the pass.
-    pub(crate) acc: Vec<i64>,
     /// Head mean-pool accumulator.
     pub(crate) pooled: Vec<i64>,
 }
 
-impl Default for LaneScratch {
-    fn default() -> Self {
-        Self {
-            ln_c: Vec::new(),
-            scores: Vec::new(),
-            prob: Vec::new(),
-            rv: Vec::new(),
-            softmax: SoftmaxScratch { sc: Vec::new(), e: Vec::new() },
-            xq: Vec::new(),
-            x: Vec::new(),
-            n: Vec::new(),
-            qkv: Vec::new(),
-            a_q: Vec::new(),
-            hdn: Vec::new(),
-            acc: Vec::new(),
-            pooled: Vec::new(),
-        }
+impl PassScratch {
+    fn footprint(&self) -> usize {
+        (self.xq.capacity()
+            + self.x.capacity()
+            + self.n.capacity()
+            + self.qkv.capacity()
+            + self.a_q.capacity()
+            + self.hdn.capacity())
+            * std::mem::size_of::<i32>()
+            + self.pooled.capacity() * std::mem::size_of::<i64>()
     }
+}
+
+/// One lane's worth of reusable interpreter buffers: a band half and a
+/// pass half. The split lets a fully-serial forward borrow both halves
+/// of one box simultaneously (pass buffers + kernel band buffers) with
+/// zero arena locking — the batch-grain worker and every pipeline stage
+/// run exactly that way.
+#[derive(Default)]
+pub struct LaneScratch {
+    pub(crate) band: BandScratch,
+    pub(crate) pass: PassScratch,
 }
 
 impl LaneScratch {
     /// Total bytes of capacity held across all buffers.
     fn footprint(&self) -> usize {
-        let i32s = self.prob.capacity()
-            + self.xq.capacity()
-            + self.x.capacity()
-            + self.n.capacity()
-            + self.qkv.capacity()
-            + self.a_q.capacity()
-            + self.hdn.capacity();
-        let i64s = self.ln_c.capacity()
-            + self.scores.capacity()
-            + self.rv.capacity()
-            + self.acc.capacity()
-            + self.pooled.capacity();
-        i32s * std::mem::size_of::<i32>()
-            + i64s * std::mem::size_of::<i64>()
-            + self.softmax.footprint()
+        self.band.footprint() + self.pass.footprint()
     }
 }
 
@@ -165,7 +177,7 @@ mod tests {
     fn checkout_recycles_boxes() {
         let arena = ScratchArena::new();
         let mut a = arena.checkout();
-        a.acc.resize(1024, 0);
+        a.band.acc.resize(1024, 0);
         arena.restore(a);
         assert_eq!(arena.allocs(), 1);
         let fp = arena.footprint();
@@ -174,8 +186,8 @@ mod tests {
         // no buffer regrows
         for _ in 0..10 {
             let mut b = arena.checkout();
-            b.acc.clear();
-            b.acc.resize(1024, 0);
+            b.band.acc.clear();
+            b.band.acc.resize(1024, 0);
             arena.restore(b);
         }
         assert_eq!(arena.allocs(), 1);
@@ -202,5 +214,16 @@ mod tests {
         assert_eq!(s.sc.len(), 8);
         s.reset(16);
         assert_eq!(s.sc.capacity(), cap);
+    }
+
+    #[test]
+    fn pass_and_band_halves_are_independently_borrowable() {
+        // the serial forward relies on this split: pass buffers and band
+        // buffers of ONE box borrowed mutably at the same time
+        let mut s = LaneScratch::default();
+        let LaneScratch { band, pass } = &mut s;
+        band.acc.push(1);
+        pass.x.push(2);
+        assert_eq!((band.acc[0], pass.x[0]), (1, 2));
     }
 }

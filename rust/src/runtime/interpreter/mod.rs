@@ -18,26 +18,34 @@
 //! * [`bundle`](self) — load/validate the JSON bundle ([`QuantViT`]);
 //!   weights are re-packed into blocked GEMM panels here, once.
 //! * `ops` — the integer kernels (LUT application, LayerNorm, Softmax,
-//!   fused attention) in scratch-backed pooled and pre-fabric (naive)
+//!   fused attention, GEMM with the requant LUT fused into the
+//!   producing band) in scratch-backed banded and pre-fabric (naive)
 //!   variants.
-//! * this file — the forward pass, per-op profiling, and the
-//!   [`Executor`] adapter the coordinator drives.
+//! * this file — the forward pass as **stage-sliceable segments**
+//!   ([`QuantViT::embed_into`] / [`QuantViT::block_into`] /
+//!   [`QuantViT::head_into`]), per-op profiling, and the [`Executor`]
+//!   adapter the coordinator drives. The pipeline executor
+//!   ([`crate::runtime::pipeline`]) runs the *same* segments, one
+//!   contiguous slice per resident stage, so pipeline logits are
+//!   bit-identical by construction.
 //!
-//! Execution runs on the [`fabric`](crate::runtime::fabric): a
-//! [`LanePool`] of **persistent parked workers** (created once per
-//! loaded model) parallelizes whole batch lanes across workers (one
-//! image per lane) or, when the dispatch is smaller than the pool,
-//! token-row bands inside each image. The forward pass checks a scratch
-//! box out of the pool's arena for every intermediate buffer, so
-//! steady-state serving performs no per-image heap allocation in
-//! GEMM/attention scratch. Lane count comes from
-//! [`crate::runtime::RuntimeConfig`] (the `--lanes` CLI flag) or the
-//! `HGPIPE_LANES` env var; every lane count produces bit-identical
-//! logits (`cargo test` pins lanes 1, 2, 7 and 16 against the golden
-//! fixture).
+//! Execution runs on the [`fabric`](crate::runtime::fabric) behind an
+//! [`Exec`] dispatch: token-row bands either stream serially through a
+//! caller-provided [`BandScratch`] (zero locking — the batch-grain
+//! worker bands and the pipeline's resident stages run this way), or
+//! spread across a [`LanePool`] of **persistent parked workers**
+//! (created once per loaded model). The elementwise requant LUT passes
+//! are fused into the GEMM band that produces them, so no kernel leaves
+//! a serial epilogue on the caller thread. Every intermediate buffer
+//! comes from a scratch box, so steady-state serving performs no
+//! per-image heap allocation in GEMM/attention scratch. Lane count
+//! comes from [`crate::runtime::RuntimeConfig`] (the `--lanes` CLI
+//! flag) or the `HGPIPE_LANES` env var; every lane count produces
+//! bit-identical logits (`cargo test` pins lanes 1, 2, 7 and 16 against
+//! the golden fixture).
 
 mod bundle;
-mod ops;
+pub(crate) mod ops;
 
 pub use bundle::QuantViT;
 
@@ -45,19 +53,25 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::artifacts::{BundleInfo, Manifest};
-use crate::runtime::fabric::LanePool;
+use crate::runtime::fabric::{Exec, LanePool, LaneScratch, PassScratch};
 use crate::runtime::{ExecStats, Executor, LoadedModel};
 use ops::lut_i32;
 
 /// Wall-clock milliseconds spent per kernel family during a forward
 /// pass — the per-op breakdown `benches/interpreter.rs` reports.
+///
+/// Since the requant LUT maps are fused into the GEMM bands that
+/// produce them, their time lands in `gemm_ms`; `requant_ms` remains in
+/// the schema (it tracked the pre-fusion serial caller-thread passes)
+/// and now stays at zero — the field is the record that the cost moved.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct OpProfile {
     pub quantize_ms: f64,
     pub gemm_ms: f64,
     pub layernorm_ms: f64,
     pub attention_ms: f64,
-    /// Elementwise requant LUT maps + residual adds between kernels.
+    /// Standalone elementwise requant passes between kernels — zero
+    /// since the fusion into the producing GEMM band.
     pub requant_ms: f64,
     pub head_ms: f64,
 }
@@ -82,11 +96,32 @@ impl OpProfile {
     }
 }
 
-fn lap(last: &mut Instant) -> f64 {
-    let now = Instant::now();
-    let ms = now.duration_since(*last).as_secs_f64() * 1e3;
-    *last = now;
-    ms
+/// Lap timer feeding an [`OpProfile`] — or a no-op when detached, so
+/// hot paths that never read the profile (the pipeline's per-image
+/// stage loop) pay **zero** clock reads for it.
+pub(crate) struct OpClock<'a> {
+    prof: Option<(&'a mut OpProfile, Instant)>,
+}
+
+impl<'a> OpClock<'a> {
+    pub(crate) fn attached(prof: &'a mut OpProfile) -> Self {
+        Self { prof: Some((prof, Instant::now())) }
+    }
+
+    pub(crate) fn detached() -> OpClock<'static> {
+        OpClock { prof: None }
+    }
+
+    /// Attribute the time since the previous lap to the [`OpProfile`]
+    /// field `pick` selects. Detached clocks do nothing.
+    #[inline]
+    pub(crate) fn lap(&mut self, pick: impl FnOnce(&mut OpProfile) -> &mut f64) {
+        if let Some((prof, last)) = &mut self.prof {
+            let now = Instant::now();
+            *pick(&mut **prof) += now.duration_since(*last).as_secs_f64() * 1e3;
+            *last = now;
+        }
+    }
 }
 
 impl QuantViT {
@@ -108,6 +143,11 @@ impl QuantViT {
     }
 
     /// [`Self::forward_image_pooled`] plus the per-op time breakdown.
+    ///
+    /// A single-lane pool takes the fully-serial path: the whole pass
+    /// runs in one scratch box with the kernels' band buffers threaded
+    /// in explicitly, so beyond the one checkout/restore of that box it
+    /// touches no lock at all.
     pub fn forward_profiled(
         &self,
         tokens: &[f32],
@@ -119,73 +159,144 @@ impl QuantViT {
             self.tokens_per_image(),
             tokens.len()
         );
-        let (t, d, h) = (self.tokens, self.dim, self.heads);
-        let mut prof = OpProfile::default();
-        let mut last = Instant::now();
-
-        // the pass-level scratch box: every intermediate below reuses its
-        // buffers, so a warmed-up pool serves images allocation-free
         let mut fs = pool.checkout_scratch();
-        let s = &mut *fs;
-
-        s.xq.clear();
-        s.xq.extend(tokens.iter().map(|&x| self.quantize_in(x)));
-        prof.quantize_ms += lap(&mut last);
-        self.pe.matmul_into(&s.xq, t, &mut s.acc, pool);
-        prof.gemm_ms += lap(&mut last);
-        // residual stream: int32, common scale s0 (+2 guard bits)
-        s.x.clear();
-        s.x.extend(s.acc.iter().map(|&a| lut_i32(&self.pe_rq, a as i32)));
-        prof.requant_ms += lap(&mut last);
-
-        for blk in &self.blocks {
-            // ---- MHA ----
-            ops::layernorm_into(&s.x, d, blk.ln1_guard, &blk.ln1_rsqrt, &blk.ln1_rq, &mut s.n, pool);
-            prof.layernorm_ms += lap(&mut last);
-            blk.qkv.matmul_into(&s.n, t, &mut s.acc, pool);
-            prof.gemm_ms += lap(&mut last);
-            s.qkv.clear();
-            s.qkv.extend(s.acc.iter().map(|&a| lut_i32(&blk.qkv_rq, a as i32)));
-            prof.requant_ms += lap(&mut last);
-            ops::attention_into(blk, &s.qkv, t, d, h, &mut s.a_q, pool);
-            prof.attention_ms += lap(&mut last);
-            blk.proj.matmul_into(&s.a_q, t, &mut s.acc, pool);
-            prof.gemm_ms += lap(&mut last);
-            for (xv, &a) in s.x.iter_mut().zip(s.acc.iter()) {
-                *xv = xv.wrapping_add(lut_i32(&blk.proj_rq, a as i32));
-            }
-            prof.requant_ms += lap(&mut last);
-
-            // ---- MLP ----
-            ops::layernorm_into(&s.x, d, blk.ln2_guard, &blk.ln2_rsqrt, &blk.ln2_rq, &mut s.n, pool);
-            prof.layernorm_ms += lap(&mut last);
-            blk.mm1.matmul_into(&s.n, t, &mut s.acc, pool);
-            prof.gemm_ms += lap(&mut last);
-            s.hdn.clear();
-            s.hdn.extend(s.acc.iter().map(|&a| lut_i32(&blk.gelu, a as i32)));
-            prof.requant_ms += lap(&mut last);
-            blk.mm2.matmul_into(&s.hdn, t, &mut s.acc, pool);
-            prof.gemm_ms += lap(&mut last);
-            for (xv, &a) in s.x.iter_mut().zip(s.acc.iter()) {
-                *xv = xv.wrapping_add(lut_i32(&blk.mm2_rq, a as i32));
-            }
-            prof.requant_ms += lap(&mut last);
-        }
-
-        // ---- final LN + mean-pool head (the /T fold lives in logit_scale)
-        ops::layernorm_into(&s.x, d, self.ln_f_guard, &self.ln_f_rsqrt, &self.ln_f_rq, &mut s.n, pool);
-        prof.layernorm_ms += lap(&mut last);
-        let logits = self.head_with(&s.n, &mut s.pooled);
-        prof.head_ms += lap(&mut last);
+        let mut prof = OpProfile::default();
+        let mut clk = OpClock::attached(&mut prof);
+        let logits = if pool.lanes() <= 1 {
+            let LaneScratch { band, pass } = &mut *fs;
+            self.forward_core(tokens, pass, &mut Exec::Serial(band), &mut clk)
+        } else {
+            self.forward_core(tokens, &mut fs.pass, &mut Exec::Pool(pool), &mut clk)
+        };
+        drop(clk);
         pool.restore_scratch(fs);
         Ok((logits, prof))
     }
 
+    /// Fully-serial forward in a caller-provided scratch box — **zero
+    /// locking**: the pass buffers and the kernels' band buffers are the
+    /// two disjoint halves of `fs`. This is how a batch-grain worker
+    /// band runs its nested per-image forwards (its own worker box,
+    /// retiring the old `inline_pool` arena mutex) and how a pipeline
+    /// stage runs its block slice. Nobody here reads a per-op profile,
+    /// so the clock stays detached (zero clock reads). Input length must
+    /// already be validated (`tokens_per_image` values).
+    pub(crate) fn forward_in_scratch(&self, tokens: &[f32], fs: &mut LaneScratch) -> Vec<f64> {
+        debug_assert_eq!(tokens.len(), self.tokens_per_image());
+        let LaneScratch { band, pass } = fs;
+        self.forward_core(tokens, pass, &mut Exec::Serial(band), &mut OpClock::detached())
+    }
+
+    /// The one forward-pass implementation both dispatches share:
+    /// embed → blocks → head, each segment a reusable stage slice.
+    fn forward_core(
+        &self,
+        tokens: &[f32],
+        ps: &mut PassScratch,
+        exec: &mut Exec<'_>,
+        clk: &mut OpClock<'_>,
+    ) -> Vec<f64> {
+        // the residual stream leaves the scratch for the pass so the
+        // block segments can borrow it alongside the other pass buffers
+        // (pipeline stages carry it through channels the same way)
+        let mut x = std::mem::take(&mut ps.x);
+        self.embed_into(tokens, &mut x, ps, exec, clk);
+        for bi in 0..self.blocks.len() {
+            self.block_into(bi, &mut x, ps, exec, clk);
+        }
+        let logits = self.head_into(&x, ps, exec, clk);
+        ps.x = x;
+        logits
+    }
+
+    // -----------------------------------------------------------------
+    // Stage segments: the spatial slices the pipeline executor pins to
+    // resident stages. `forward_core` chains all of them, so monolithic
+    // and stage-sliced execution are the same arithmetic by construction.
+    // -----------------------------------------------------------------
+
+    /// Patch-embed segment: quantize the f32 tokens and produce the
+    /// int32 residual stream `x` (GEMM with the pe requant LUT fused
+    /// into the producing band).
+    pub(crate) fn embed_into(
+        &self,
+        tokens: &[f32],
+        x: &mut Vec<i32>,
+        ps: &mut PassScratch,
+        exec: &mut Exec<'_>,
+        clk: &mut OpClock<'_>,
+    ) {
+        debug_assert_eq!(tokens.len(), self.tokens_per_image());
+        ps.xq.clear();
+        ps.xq.extend(tokens.iter().map(|&v| self.quantize_in(v)));
+        clk.lap(|p| &mut p.quantize_ms);
+        ops::gemm_rq_into(&self.pe, &ps.xq, self.tokens, &self.pe_rq, x, exec);
+        clk.lap(|p| &mut p.gemm_ms);
+    }
+
+    /// One encoder block (MHA + MLP) over the residual stream, in place.
+    /// Every requant LUT pass is fused into the GEMM band producing it;
+    /// the residual adds ride the same bands.
+    pub(crate) fn block_into(
+        &self,
+        bi: usize,
+        x: &mut [i32],
+        ps: &mut PassScratch,
+        exec: &mut Exec<'_>,
+        clk: &mut OpClock<'_>,
+    ) {
+        let (t, d, h) = (self.tokens, self.dim, self.heads);
+        let blk = &self.blocks[bi];
+
+        // ---- MHA ----
+        ops::layernorm_into(x, d, blk.ln1_guard, &blk.ln1_rsqrt, &blk.ln1_rq, &mut ps.n, exec);
+        clk.lap(|p| &mut p.layernorm_ms);
+        ops::gemm_rq_into(&blk.qkv, &ps.n, t, &blk.qkv_rq, &mut ps.qkv, exec);
+        clk.lap(|p| &mut p.gemm_ms);
+        ops::attention_into(blk, &ps.qkv, t, d, h, &mut ps.a_q, exec);
+        clk.lap(|p| &mut p.attention_ms);
+        ops::gemm_rq_add_into(&blk.proj, &ps.a_q, t, &blk.proj_rq, x, exec);
+        clk.lap(|p| &mut p.gemm_ms);
+
+        // ---- MLP ----
+        ops::layernorm_into(x, d, blk.ln2_guard, &blk.ln2_rsqrt, &blk.ln2_rq, &mut ps.n, exec);
+        clk.lap(|p| &mut p.layernorm_ms);
+        ops::gemm_rq_into(&blk.mm1, &ps.n, t, &blk.gelu, &mut ps.hdn, exec);
+        clk.lap(|p| &mut p.gemm_ms);
+        ops::gemm_rq_add_into(&blk.mm2, &ps.hdn, t, &blk.mm2_rq, x, exec);
+        clk.lap(|p| &mut p.gemm_ms);
+    }
+
+    /// Head segment: final LayerNorm + mean-pool classifier over the
+    /// residual stream.
+    pub(crate) fn head_into(
+        &self,
+        x: &[i32],
+        ps: &mut PassScratch,
+        exec: &mut Exec<'_>,
+        clk: &mut OpClock<'_>,
+    ) -> Vec<f64> {
+        ops::layernorm_into(
+            x,
+            self.dim,
+            self.ln_f_guard,
+            &self.ln_f_rsqrt,
+            &self.ln_f_rq,
+            &mut ps.n,
+            exec,
+        );
+        clk.lap(|p| &mut p.layernorm_ms);
+        let logits = self.head_with(&ps.n, &mut ps.pooled);
+        clk.lap(|p| &mut p.head_ms);
+        logits
+    }
+
     /// The pre-fabric forward — naive row-major GEMM, per-head
-    /// probability matrix, per-row softmax allocations, fully serial.
-    /// Kept as the differential-testing oracle and the scalar baseline
-    /// `benches/interpreter.rs` measures the fabric against; must stay
-    /// bit-identical to [`Self::forward_image`].
+    /// probability matrix, per-row softmax allocations, unfused serial
+    /// requant passes, fully serial. Kept as the differential-testing
+    /// oracle and the scalar baseline `benches/interpreter.rs` measures
+    /// the fabric against; must stay bit-identical to
+    /// [`Self::forward_image`].
     pub fn forward_image_naive(&self, tokens: &[f32]) -> crate::Result<Vec<f64>> {
         anyhow::ensure!(
             tokens.len() == self.tokens_per_image(),
@@ -283,24 +394,18 @@ fn layernorm_naive(
 ///
 /// Work is partitioned at two grains: when the dispatch carries at least
 /// as many images as the pool has lanes, each worker runs whole images
-/// (batch-lane grain, one parallel region per dispatch); otherwise the
-/// pool drops inside each image and parallelizes token-row bands (row
-/// grain). Both grains are bit-exact with serial execution. All batch
-/// variants of one model clone the same two pool handles, so workers are
-/// created once per loaded model and shut down when it unloads.
+/// (batch-lane grain, one parallel region per dispatch) with its nested
+/// forward running entirely in the worker's own scratch box — no arena
+/// or pool locking inside the band; otherwise the pool drops inside each
+/// image and parallelizes token-row bands (row grain). Both grains are
+/// bit-exact with serial execution. All batch variants of one model
+/// clone the same pool handle, so workers are created once per loaded
+/// model and shut down when it unloads.
 pub struct InterpreterExecutor {
     net: Arc<QuantViT>,
     batch: usize,
     /// The model's persistent worker fabric.
     pool: LanePool,
-    /// Serial pool whose arena backs the per-image forwards of the
-    /// batch-lane grain: those run *inside* worker bands, where each
-    /// image is already one parallel lane, so their regions should be
-    /// serial by construction. (Re-entering `pool` from a worker would
-    /// run inline anyway — the fabric detects its own workers — but the
-    /// caller-thread band would pointlessly re-dispatch; the explicit
-    /// serial pool keeps both sides of the split on one code path.)
-    inline_pool: LanePool,
     load_ms: f64,
     stats: Mutex<ExecStats>,
 }
@@ -323,30 +428,17 @@ impl Executor for InterpreterExecutor {
         let nc = self.net.num_classes;
         let mut out = vec![0.0f32; self.batch * nc];
         if self.pool.lanes() > 1 && self.batch >= self.pool.lanes() {
-            // batch-lane grain: a band of whole images per worker
-            let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-            self.pool.par_chunks_mut(&mut out, nc, |_s, i0, band| {
+            // batch-lane grain: a band of whole images per worker, each
+            // image's forward running serially in the band's own scratch
+            self.pool.par_chunks_mut(&mut out, nc, |s, i0, band| {
                 for (j, orow) in band.chunks_exact_mut(nc).enumerate() {
                     let i = i0 + j;
-                    match self
-                        .net
-                        .forward_image_pooled(&input[i * per..(i + 1) * per], &self.inline_pool)
-                    {
-                        Ok(logits) => {
-                            for (o, &v) in orow.iter_mut().zip(&logits) {
-                                *o = v as f32;
-                            }
-                        }
-                        Err(e) => {
-                            *err.lock().unwrap() = Some(e);
-                            return;
-                        }
+                    let logits = self.net.forward_in_scratch(&input[i * per..(i + 1) * per], s);
+                    for (o, &v) in orow.iter_mut().zip(&logits) {
+                        *o = v as f32;
                     }
                 }
             });
-            if let Some(e) = err.into_inner().unwrap() {
-                return Err(e);
-            }
         } else {
             // row grain: images serial, token rows banded inside each
             for (i, lane) in input.chunks_exact(per).enumerate() {
@@ -379,18 +471,12 @@ pub fn load_model(manifest: &Manifest, model: &str) -> crate::Result<LoadedModel
     load_model_with_lanes(manifest, model, LanePool::lanes_from_env())
 }
 
-/// [`load_model`] with an explicit lane count (the `--lanes` flag
-/// arrives here via [`crate::runtime::RuntimeConfig`]; tests and benches
-/// pass it directly so they never depend on the process environment).
-///
-/// The persistent worker fabric is created here, once: every batch
-/// variant clones the same pool handle, and dropping the returned
-/// [`LoadedModel`] joins the workers.
-pub fn load_model_with_lanes(
+/// Load and validate a model's bundle for `model`, shared between the
+/// lane-parallel and pipeline executors.
+pub(crate) fn load_bundle(
     manifest: &Manifest,
     model: &str,
-    lanes: usize,
-) -> crate::Result<LoadedModel> {
+) -> crate::Result<(Arc<QuantViT>, Vec<usize>, f64)> {
     let info: &BundleInfo = manifest
         .bundle_for(model)
         .ok_or_else(|| anyhow::anyhow!("no interpreter bundle for model '{model}' in manifest"))?;
@@ -403,8 +489,23 @@ pub fn load_model_with_lanes(
         net.model
     );
     let batches = if info.batches.is_empty() { vec![1] } else { info.batches.clone() };
+    Ok((net, batches, load_ms))
+}
+
+/// [`load_model`] with an explicit lane count (the `--lanes` flag
+/// arrives here via [`crate::runtime::RuntimeConfig`]; tests and benches
+/// pass it directly so they never depend on the process environment).
+///
+/// The persistent worker fabric is created here, once: every batch
+/// variant clones the same pool handle, and dropping the returned
+/// [`LoadedModel`] joins the workers.
+pub fn load_model_with_lanes(
+    manifest: &Manifest,
+    model: &str,
+    lanes: usize,
+) -> crate::Result<LoadedModel> {
+    let (net, batches, load_ms) = load_bundle(manifest, model)?;
     let pool = LanePool::new(lanes);
-    let inline_pool = LanePool::serial();
     let executors: Vec<Box<dyn Executor>> = batches
         .iter()
         .map(|&b| {
@@ -412,7 +513,6 @@ pub fn load_model_with_lanes(
                 net: net.clone(),
                 batch: b,
                 pool: pool.clone(),
-                inline_pool: inline_pool.clone(),
                 load_ms,
                 stats: Mutex::new(ExecStats::default()),
             }) as Box<dyn Executor>

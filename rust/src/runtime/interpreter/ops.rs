@@ -4,10 +4,22 @@
 //! Every kernel here is bit-exact with the numpy oracle: i64
 //! accumulation in ascending index order, `as i32` wrapping narrowings
 //! exactly where `LutExec._i32` narrows, PoT-indexed LUT lookups for the
-//! non-linears. The `*_into` variants band output rows across
-//! [`LanePool`] lanes and draw every working buffer from the lane's
-//! [`LaneScratch`] (no per-call allocation); each row's arithmetic is
-//! unchanged, so lane count never changes a single bit of the result.
+//! non-linears. The `*_into` variants band output rows through an
+//! [`Exec`] dispatch — serial with explicit band scratch (zero locks),
+//! or spread across [`LanePool`](crate::runtime::fabric::LanePool)
+//! lanes — and draw every working buffer from the band's
+//! [`BandScratch`] (no per-call allocation); each row's arithmetic is
+//! unchanged, so the dispatch never changes a single bit of the result.
+//!
+//! The elementwise requant LUT passes are **fused into the GEMM band
+//! that produces them** ([`gemm_rq_into`] / [`gemm_rq_add_into`]): a
+//! band computes its i64 accumulator rows and immediately maps them
+//! through the requant LUT (plus the residual add where the dataflow
+//! has one) before the region completes. Pre-fusion these passes ran
+//! serially on the caller thread after every matmul — the per-op
+//! profile's top non-GEMM cost. Per output element the arithmetic is
+//! `lut(acc as i32)` either way, in the same order, so fusion is
+//! bit-exactness-preserving.
 //!
 //! The `*_naive` variants preserve the pre-fabric scalar structure
 //! (per-row scratch allocations, per-head probability matrix,
@@ -15,8 +27,9 @@
 //! the baseline `benches/interpreter.rs` measures the fabric against.
 
 use crate::lut::{AnyTable, LutTable, SegmentedTable};
+use crate::runtime::fabric::gemm::PackedGemm;
 use crate::runtime::fabric::scratch::SoftmaxScratch;
-use crate::runtime::fabric::LanePool;
+use crate::runtime::fabric::Exec;
 
 use super::bundle::BlockParams;
 
@@ -53,11 +66,63 @@ pub(crate) fn any_i32(t: &AnyTable, x: i32) -> i32 {
 }
 
 // ---------------------------------------------------------------------------
+// GEMM with the requant LUT fused into the producing band
+// ---------------------------------------------------------------------------
+
+/// `out = rq_lut(x @ W + b)`, the requant map applied by the same band
+/// that computed the accumulator rows (no serial epilogue on the caller
+/// thread). Bit-exact with `matmul` + a serial `lut_i32` map: per
+/// element, the identical `lut(acc as i32)` in the identical order.
+pub(crate) fn gemm_rq_into(
+    g: &PackedGemm,
+    x: &[i32],
+    t: usize,
+    rq: &LutTable,
+    out: &mut Vec<i32>,
+    exec: &mut Exec<'_>,
+) {
+    assert_eq!(x.len(), t * g.ci(), "input shape mismatch");
+    let co = g.co();
+    // no clear(): every element is written by the band epilogue below
+    out.resize(t * co, 0);
+    exec.run(out.as_mut_slice(), co, |s, r0, band| {
+        s.acc.resize(band.len(), 0); // fully overwritten by band_into
+        g.band_into(x, r0, &mut s.acc[..band.len()]);
+        for (o, &a) in band.iter_mut().zip(s.acc.iter()) {
+            *o = lut_i32(rq, a as i32);
+        }
+    });
+}
+
+/// `xio += rq_lut(xin @ W + b)` (wrapping add into the residual
+/// stream), fused exactly like [`gemm_rq_into`]. The residual rows are
+/// banded, so the add also stops being a serial caller-thread pass.
+pub(crate) fn gemm_rq_add_into(
+    g: &PackedGemm,
+    xin: &[i32],
+    t: usize,
+    rq: &LutTable,
+    xio: &mut [i32],
+    exec: &mut Exec<'_>,
+) {
+    assert_eq!(xin.len(), t * g.ci(), "input shape mismatch");
+    let co = g.co();
+    assert_eq!(xio.len(), t * co, "residual shape mismatch");
+    exec.run(xio, co, |s, r0, band| {
+        s.acc.resize(band.len(), 0);
+        g.band_into(xin, r0, &mut s.acc[..band.len()]);
+        for (o, &a) in band.iter_mut().zip(s.acc.iter()) {
+            *o = o.wrapping_add(lut_i32(rq, a as i32));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // LayerNorm
 // ---------------------------------------------------------------------------
 
 /// Integer LayerNorm (`LutExec.layernorm`): three passes per token row,
-/// rows banded across the pool, centered-sum buffer from the lane
+/// rows banded through the dispatch, centered-sum buffer from the band
 /// scratch, output into a caller-owned reusable buffer.
 pub(crate) fn layernorm_into(
     x: &[i32],
@@ -66,13 +131,13 @@ pub(crate) fn layernorm_into(
     rsqrt: &LutTable,
     rq: &LutTable,
     out: &mut Vec<i32>,
-    pool: &LanePool,
+    exec: &mut Exec<'_>,
 ) {
     debug_assert_eq!(x.len() % d, 0);
     // no clear(): every element of every row is written below, so
     // resize only pays for newly grown capacity
     out.resize(x.len(), 0);
-    pool.par_chunks_mut(out.as_mut_slice(), d, |s, r0, band| {
+    exec.run(out.as_mut_slice(), d, |s, r0, band| {
         s.ln_c.resize(d, 0); // fully overwritten per row
 
         for (i, orow) in band.chunks_exact_mut(d).enumerate() {
@@ -129,10 +194,10 @@ pub(crate) fn softmax_row(
 // ---------------------------------------------------------------------------
 
 /// Fused multi-head attention over requantized `qkv` rows: per output
-/// token `t1` (banded across the pool) and head, compute the score row,
-/// softmax it, and accumulate `R @ V` with the zero-probability skip.
-/// All per-row buffers come from the lane's scratch; the output goes
-/// into a caller-owned reusable buffer.
+/// token `t1` (banded through the dispatch) and head, compute the score
+/// row, softmax it, and accumulate `R @ V` with the zero-probability
+/// skip. All per-row buffers come from the band scratch; the output
+/// goes into a caller-owned reusable buffer.
 ///
 /// Bit-exact with [`attention_naive`]: per output element the same i64
 /// terms are summed in the same ascending-`t2` order (skipping a zero
@@ -145,13 +210,13 @@ pub(crate) fn attention_into(
     d: usize,
     h: usize,
     out: &mut Vec<i32>,
-    pool: &LanePool,
+    exec: &mut Exec<'_>,
 ) {
     let dh = d / h;
     // no clear(): `d % h == 0` (validated at bundle load), so the head
     // slices cover every element of every row — stale values never leak
     out.resize(t * d, 0);
-    pool.par_chunks_mut(out.as_mut_slice(), d, |s, t1_0, band| {
+    exec.run(out.as_mut_slice(), d, |s, t1_0, band| {
         s.scores.resize(t, 0); // fully overwritten per (t1, head)
         s.prob.resize(t, 0); // ditto (softmax writes all t entries)
         s.rv.resize(dh, 0); // zeroed per head by fill(0) below
@@ -229,6 +294,8 @@ pub(crate) fn attention_naive(blk: &BlockParams, qkv: &[i32], t: usize, d: usize
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::fabric::{BandScratch, LanePool};
+    use crate::util::prng::Prng;
 
     fn mk_lut(alpha: i64, shift: u32, n_bits: u32, inverted: bool, entries: Vec<i64>) -> LutTable {
         LutTable {
@@ -280,17 +347,19 @@ mod tests {
     }
 
     #[test]
-    fn layernorm_rows_independent_of_lane_count() {
+    fn layernorm_rows_independent_of_dispatch() {
         let rsqrt = mk_lut(-(1 << 20), 10, 6, false, (0..64i64).map(|i| 64 - i).collect());
         let rq = mk_lut(-(1 << 20), 12, 6, false, (0..64i64).map(|i| i - 32).collect());
         let d = 16;
         let x: Vec<i32> = (0..5 * d as i32).map(|i| (i * 37 % 113) - 56).collect();
         let mut serial = Vec::new();
-        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut serial, &LanePool::serial());
+        let mut band = BandScratch::default();
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut serial, &mut Exec::Serial(&mut band));
         assert_eq!(serial.len(), x.len());
-        for lanes in [2usize, 3, 7] {
+        for lanes in [1usize, 2, 3, 7] {
+            let pool = LanePool::new(lanes);
             let mut pooled = Vec::new();
-            layernorm_into(&x, d, 2, &rsqrt, &rq, &mut pooled, &LanePool::new(lanes));
+            layernorm_into(&x, d, 2, &rsqrt, &rq, &mut pooled, &mut Exec::Pool(&pool));
             assert_eq!(pooled, serial, "lanes={lanes}");
         }
     }
@@ -301,13 +370,72 @@ mod tests {
         let rq = mk_lut(-(1 << 20), 12, 6, false, (0..64i64).map(|i| i - 32).collect());
         let d = 8;
         let x: Vec<i32> = (0..4 * d as i32).map(|i| (i * 11 % 37) - 18).collect();
-        let pool = LanePool::serial();
+        let mut band = BandScratch::default();
         let mut out = Vec::new();
-        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &pool);
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut Exec::Serial(&mut band));
         let want = out.clone();
         let ptr = out.as_ptr();
-        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &pool);
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut Exec::Serial(&mut band));
         assert_eq!(out, want);
         assert_eq!(out.as_ptr(), ptr, "steady-state layernorm must not reallocate");
+    }
+
+    /// Unfused reference for the fused GEMM+requant kernels: full matmul
+    /// followed by a serial elementwise LUT pass (the pre-fusion shape).
+    fn gemm_then_lut(g: &PackedGemm, x: &[i32], t: usize, rq: &LutTable) -> Vec<i32> {
+        g.matmul_naive(x, t).iter().map(|&a| lut_i32(rq, a as i32)).collect()
+    }
+
+    #[test]
+    fn fused_gemm_requant_matches_serial_epilogue() {
+        let mut rng = Prng::new(0xF0);
+        let rq = mk_lut(-(1 << 16), 9, 7, false, (0..128i64).map(|i| i * 3 - 192).collect());
+        for &(t, ci, co) in &[(1usize, 1usize, 1usize), (5, 40, 9), (13, 70, 130), (16, 64, 192)] {
+            let x: Vec<i32> = (0..t * ci)
+                .map(|_| if rng.below(4) == 0 { 0 } else { rng.range_i64(-9, 9) as i32 })
+                .collect();
+            let w: Vec<i32> = (0..ci * co).map(|_| rng.range_i64(-50, 50) as i32).collect();
+            let b: Vec<i64> = (0..co).map(|_| rng.range_i64(-4000, 4000)).collect();
+            let g = PackedGemm::pack(w, ci, co, b);
+            let want = gemm_then_lut(&g, &x, t, &rq);
+
+            let mut band = BandScratch::default();
+            let mut got = Vec::new();
+            gemm_rq_into(&g, &x, t, &rq, &mut got, &mut Exec::Serial(&mut band));
+            assert_eq!(got, want, "serial ({t},{ci},{co})");
+            for lanes in [2usize, 3, 7] {
+                let pool = LanePool::new(lanes);
+                let mut got = Vec::new();
+                gemm_rq_into(&g, &x, t, &rq, &mut got, &mut Exec::Pool(&pool));
+                assert_eq!(got, want, "lanes={lanes} ({t},{ci},{co})");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_gemm_requant_residual_add_matches() {
+        let mut rng = Prng::new(0xF1);
+        let rq = mk_lut(-(1 << 16), 9, 6, false, (0..64i64).map(|i| i * 5 - 160).collect());
+        let (t, ci, co) = (9usize, 33usize, 70usize);
+        let x: Vec<i32> = (0..t * ci).map(|_| rng.range_i64(-9, 9) as i32).collect();
+        let w: Vec<i32> = (0..ci * co).map(|_| rng.range_i64(-50, 50) as i32).collect();
+        let b: Vec<i64> = (0..co).map(|_| rng.range_i64(-4000, 4000)).collect();
+        let g = PackedGemm::pack(w, ci, co, b);
+        let residual: Vec<i32> = (0..t * co).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+        let mut want = residual.clone();
+        for (o, &l) in want.iter_mut().zip(gemm_then_lut(&g, &x, t, &rq).iter()) {
+            *o = o.wrapping_add(l);
+        }
+
+        let mut band = BandScratch::default();
+        let mut got = residual.clone();
+        gemm_rq_add_into(&g, &x, t, &rq, &mut got, &mut Exec::Serial(&mut band));
+        assert_eq!(got, want, "serial");
+        for lanes in [2usize, 5] {
+            let pool = LanePool::new(lanes);
+            let mut got = residual.clone();
+            gemm_rq_add_into(&g, &x, t, &rq, &mut got, &mut Exec::Pool(&pool));
+            assert_eq!(got, want, "lanes={lanes}");
+        }
     }
 }

@@ -13,6 +13,12 @@
 //!   once per loaded model), a per-lane scratch arena, and the
 //!   panel-packed integer GEMM with its register-blocked microkernel.
 //!   Bit-exactness-preserving.
+//! * [`pipeline`] — the hybrid-grained **spatial** executor
+//!   ([`ExecMode::Pipeline`]): the model unrolled into resident stages,
+//!   each pinned to its own persistent worker with stage-resident
+//!   scratch, connected by bounded SPSC queues carrying activation
+//!   tiles. Coarse grain across stages, fine token-row grain inside
+//!   them; bit-identical logits at every stage count.
 //! * [`pjrt`] (feature `pjrt`) — the XLA path: load `artifacts/*.hlo.txt`
 //!   emitted by `python/compile/aot.py` onto a PJRT CPU client. Interchange
 //!   is HLO **text** — jax >= 0.5 emits protos with 64-bit instruction ids
@@ -24,6 +30,7 @@
 
 pub mod fabric;
 pub mod interpreter;
+pub mod pipeline;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
@@ -52,29 +59,100 @@ pub enum BackendKind {
     Faulty,
 }
 
-/// How to run a model: which engine, and how wide its fabric is.
+/// How the interpreter backend executes a model: temporally (the
+/// lane-parallel fabric, every lane on the same layer) or spatially
+/// (the hybrid-grained [`pipeline`] of resident stages connected by
+/// bounded queues). Both are bit-exact against the golden fixture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Resolve from the `HGPIPE_MODE` env var (read-only fallback:
+    /// `pipeline` or `lane-parallel`/`lanes`), defaulting to
+    /// [`ExecMode::LaneParallel`] when unset. Mirrors the
+    /// `lanes: None` → `HGPIPE_LANES` precedence.
+    #[default]
+    Auto,
+    /// Temporal execution on the persistent worker fabric (batch-lane
+    /// or token-row grains).
+    LaneParallel,
+    /// Spatial execution: resident transformer stages with bounded
+    /// inter-stage queues ([`pipeline`]).
+    Pipeline {
+        /// Resident stage count; `0` = auto (one stage per block).
+        stages: usize,
+        /// Bounded inter-stage FIFO depth in tiles (min 1).
+        queue_depth: usize,
+    },
+}
+
+impl ExecMode {
+    /// The mode `Auto` resolves to: `HGPIPE_MODE` (read-only — the CLI's
+    /// `--pipeline` is threaded through [`RuntimeConfig`] instead of
+    /// mutating the environment), defaulting to lane-parallel. An
+    /// unrecognized value warns on stderr rather than silently changing
+    /// the execution architecture.
+    pub fn from_env() -> Self {
+        match std::env::var("HGPIPE_MODE") {
+            Ok(v) => match v.trim() {
+                "pipeline" => {
+                    Self::Pipeline { stages: 0, queue_depth: pipeline::DEFAULT_QUEUE_DEPTH }
+                }
+                "lanes" | "lane-parallel" => Self::LaneParallel,
+                other => {
+                    eprintln!(
+                        "warning: HGPIPE_MODE='{other}' is not a mode \
+                         (pipeline | lane-parallel); using lane-parallel"
+                    );
+                    Self::LaneParallel
+                }
+            },
+            Err(_) => Self::LaneParallel,
+        }
+    }
+
+    /// Resolve `Auto` through the environment; explicit modes pass
+    /// through unchanged.
+    pub fn resolve(self) -> Self {
+        match self {
+            Self::Auto => Self::from_env(),
+            other => other,
+        }
+    }
+}
+
+/// How to run a model: which engine, how wide its fabric is, and
+/// whether execution is temporal (lane-parallel) or spatial (pipeline).
 ///
 /// The `--lanes` CLI flag travels here explicitly — mutating
 /// `HGPIPE_LANES` from the binary was unsound once threads existed
 /// (`set_var` races every concurrent `getenv`), so the env var is now a
 /// read-only *fallback* consulted only when `lanes` is `None`
-/// (see [`fabric::LanePool::from_env`]).
+/// (see [`fabric::LanePool::from_env`]). `--pipeline` travels the same
+/// way via [`ExecMode`], with `HGPIPE_MODE` as its read-only fallback.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RuntimeConfig {
     pub backend: BackendKind,
     /// Explicit fabric lane count. `None` defers to `HGPIPE_LANES`,
-    /// then to the machine's available parallelism.
+    /// then to the machine's available parallelism. In pipeline mode
+    /// this is the total fine-grained budget split across stages.
     pub lanes: Option<usize>,
+    /// Temporal vs spatial execution (interpreter backend only).
+    pub mode: ExecMode,
 }
 
 impl RuntimeConfig {
     pub fn new(backend: BackendKind) -> Self {
-        Self { backend, lanes: None }
+        Self { backend, lanes: None, mode: ExecMode::Auto }
     }
 
     /// Set (or clear) the explicit lane count.
     pub fn with_lanes(mut self, lanes: Option<usize>) -> Self {
         self.lanes = lanes;
+        self
+    }
+
+    /// Set the execution mode explicitly (beats `HGPIPE_MODE`).
+    pub fn with_mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
         self
     }
 }
@@ -140,17 +218,34 @@ pub struct LoadedModel {
 
 /// Load a model's batch variants on the configured backend. An explicit
 /// `cfg.lanes` wins; otherwise the interpreter falls back to
-/// `HGPIPE_LANES` / available parallelism.
+/// `HGPIPE_LANES` / available parallelism. Likewise `cfg.mode`:
+/// explicit beats the `HGPIPE_MODE` env fallback.
 pub fn load_model(
     cfg: RuntimeConfig,
     manifest: &Manifest,
     model: &str,
 ) -> crate::Result<LoadedModel> {
+    // an EXPLICITLY requested pipeline mode on a backend that cannot
+    // execute it must be a load error, not a silent downgrade to the
+    // temporal path (the read-only HGPIPE_MODE fallback, by contrast,
+    // only ever applies to the interpreter backend)
+    if !matches!(cfg.backend, BackendKind::Interpreter) {
+        anyhow::ensure!(
+            !matches!(cfg.mode, ExecMode::Pipeline { .. }),
+            "pipeline mode requires the interpreter backend (got '{}')",
+            cfg.backend.label()
+        );
+    }
     match cfg.backend {
-        BackendKind::Interpreter => match cfg.lanes {
-            Some(n) => interpreter::load_model_with_lanes(manifest, model, n),
-            None => interpreter::load_model(manifest, model),
-        },
+        BackendKind::Interpreter => {
+            let lanes = cfg.lanes.unwrap_or_else(fabric::LanePool::lanes_from_env);
+            match cfg.mode.resolve() {
+                ExecMode::Pipeline { stages, queue_depth } => {
+                    pipeline::load_model(manifest, model, lanes, stages, queue_depth)
+                }
+                _ => interpreter::load_model_with_lanes(manifest, model, lanes),
+            }
+        }
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => pjrt::load_model(manifest, model),
         BackendKind::Faulty => Ok(faulty::load_model()),

@@ -1,0 +1,567 @@
+//! The hybrid-grained pipeline executor: the paper's architecture as a
+//! software execution mode.
+//!
+//! Where the lane-parallel interpreter runs the ViT *temporally* — one
+//! kernel at a time over the whole model, all lanes on the same layer —
+//! this module **spatially unrolls** the model into resident stages:
+//!
+//! * **Coarse grain**: the encoder blocks are partitioned into
+//!   contiguous slices, each pinned to its own persistent worker thread
+//!   ([`stage`]) with stage-resident scratch. The patch-embed front
+//!   rides with the first stage, the classifier head with the last.
+//!   Different images occupy different stages simultaneously, so
+//!   steady-state throughput is set by the **slowest stage**, not the
+//!   sum of all layers. Each stage only ever touches its own slice's
+//!   packed GEMM panels — the software analogue of weights resident per
+//!   processing element (ME-ViT's single-load discipline).
+//! * **Fine grain**: inside a stage, token-row bands stream through the
+//!   GEMM/LayerNorm/attention kernels with the requant LUT epilogue
+//!   fused into the producing band, either serially in the stage's own
+//!   scratch or across the stage's private [`LanePool`] share of the
+//!   lane budget.
+//! * **Bounded queues, no barriers**: stages are connected by bounded
+//!   SPSC [`channel`]s carrying whole activation tiles (the int32
+//!   residual stream, updated in place). Backpressure from a full queue
+//!   is the only synchronization; fill/drain bubbles and backpressure
+//!   stalls are counted per channel and reported in
+//!   [`PipelineStats`].
+//!
+//! Bit-exactness: stages execute the *same* forward-pass segments
+//! ([`QuantViT::embed_into`] / `block_into` / `head_into`) the
+//! monolithic forward chains, so pipeline logits are bit-identical to
+//! the lane-parallel and scalar paths at every stage count, queue depth
+//! and lane split — `tests/pipeline_golden.rs` pins stage counts 1, 2,
+//! 4 and max against the golden fixture.
+//!
+//! Select the mode with `RuntimeConfig::with_mode(ExecMode::Pipeline
+//! { .. })`, the `--pipeline [--stages N] [--queue-depth N]` CLI flags,
+//! or `HGPIPE_MODE=pipeline` (read-only env fallback, used by the CI
+//! matrix).
+
+pub(crate) mod channel;
+mod stage;
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+use crate::artifacts::Manifest;
+use crate::runtime::fabric::LanePool;
+use crate::runtime::interpreter::{self, QuantViT};
+use crate::runtime::{ExecStats, Executor, LoadedModel};
+use channel::ChannelStats;
+use stage::{StageOut, StageShared, StageSpec, Work};
+
+/// Default inter-stage FIFO depth (in activation tiles). Depth 1 is the
+/// minimum for rate decoupling; 2 absorbs one tile of jitter per hop —
+/// the paper's deep-FIFO sizing question, at tile granularity.
+pub const DEFAULT_QUEUE_DEPTH: usize = 2;
+
+/// Count of live resident stage threads across the process (the
+/// pipeline twin of `LanePool::live_workers`); dropping a [`Pipeline`]
+/// joins its stages, so the liveness tests pin "no leaked threads" on
+/// this going back to baseline.
+static LIVE_STAGES: AtomicUsize = AtomicUsize::new(0);
+
+/// Process-wide count of live pipeline stage threads.
+pub fn live_stages() -> usize {
+    LIVE_STAGES.load(Ordering::SeqCst)
+}
+
+/// How to spatially unroll a model.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Requested resident stage count. `0` means auto: one stage per
+    /// encoder block (the paper's fully-unrolled layout). Clamped to
+    /// `[1, depth]` — more stages than blocks would sit empty.
+    pub stages: usize,
+    /// Bounded inter-stage FIFO depth, in tiles (min 1).
+    pub queue_depth: usize,
+    /// Total fine-grained lane budget, split evenly across stages
+    /// (each stage gets at least its own thread).
+    pub lanes: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { stages: 0, queue_depth: DEFAULT_QUEUE_DEPTH, lanes: 1 }
+    }
+}
+
+fn resolve_stage_count(depth: usize, requested: usize) -> usize {
+    let max = depth.max(1);
+    if requested == 0 {
+        max
+    } else {
+        requested.clamp(1, max)
+    }
+}
+
+/// Near-even contiguous partition of `depth` blocks into `stages`
+/// slices (the first `depth % stages` slices take one extra block).
+fn partition(depth: usize, stages: usize) -> Vec<Range<usize>> {
+    let base = depth / stages;
+    let extra = depth % stages;
+    let mut parts = Vec::with_capacity(stages);
+    let mut b0 = 0usize;
+    for si in 0..stages {
+        let take = base + usize::from(si < extra);
+        parts.push(b0..b0 + take);
+        b0 += take;
+    }
+    parts
+}
+
+/// One stage's cumulative counters, snapshotted.
+#[derive(Debug, Clone)]
+pub struct StageSnapshot {
+    pub name: String,
+    /// Encoder blocks resident in this stage, `[start, end)`.
+    pub blocks: (usize, usize),
+    /// Fine-grained lanes inside the stage (1 = the stage thread alone).
+    pub lanes: usize,
+    pub images: u64,
+    /// Time spent computing (excludes time parked on channels).
+    pub busy_ms: f64,
+    /// Input-FIFO stalls: the stage sat empty (fill/drain bubbles plus
+    /// steady-state starvation).
+    pub stalls_empty: u64,
+    /// Output-FIFO stalls: the stage was backpressured by a full queue.
+    pub stalls_full: u64,
+}
+
+/// Cumulative pipeline counters. Diff two snapshots
+/// ([`PipelineStats::delta`]) to attribute occupancy and bubbles to a
+/// measurement window, as `benches/interpreter.rs` does.
+#[derive(Debug, Clone)]
+pub struct PipelineStats {
+    pub stages: Vec<StageSnapshot>,
+    /// Total input-FIFO stalls across stages — the pipeline's fill and
+    /// drain bubbles (plus any steady-state starvation of a fast stage).
+    pub fill_drain_bubbles: u64,
+    /// Total output-FIFO backpressure stalls across stages.
+    pub backpressure_stalls: u64,
+}
+
+impl PipelineStats {
+    /// Counters accumulated since `earlier` (same pipeline, same shape).
+    pub fn delta(&self, earlier: &PipelineStats) -> PipelineStats {
+        let stages = self
+            .stages
+            .iter()
+            .zip(&earlier.stages)
+            .map(|(now, was)| StageSnapshot {
+                name: now.name.clone(),
+                blocks: now.blocks,
+                lanes: now.lanes,
+                images: now.images - was.images,
+                busy_ms: now.busy_ms - was.busy_ms,
+                stalls_empty: now.stalls_empty - was.stalls_empty,
+                stalls_full: now.stalls_full - was.stalls_full,
+            })
+            .collect::<Vec<_>>();
+        let fill_drain_bubbles = stages.iter().map(|s| s.stalls_empty).sum();
+        let backpressure_stalls = stages.iter().map(|s| s.stalls_full).sum();
+        PipelineStats { stages, fill_drain_bubbles, backpressure_stalls }
+    }
+}
+
+/// Per-stage bookkeeping the owning [`Pipeline`] keeps after the
+/// endpoints moved into the stage threads.
+struct StageMeta {
+    name: String,
+    blocks: Range<usize>,
+    lanes: usize,
+    shared: Arc<StageShared>,
+    /// Stats of the stage's *input* channel (stalls_empty).
+    in_stats: Arc<ChannelStats>,
+    /// Stats of the stage's *output* channel; `None` for the head stage
+    /// (its output is the unbounded logits channel).
+    out_stats: Option<Arc<ChannelStats>>,
+}
+
+/// Feeder-side state, serialized under one mutex: batches are fed and
+/// drained by exactly one caller at a time (the pipeline is SPSC end to
+/// end).
+struct Feeder {
+    /// `None` once the pipeline began shutting down.
+    input: Option<channel::Sender<Work>>,
+    output: std::sync::mpsc::Receiver<(usize, Vec<f64>)>,
+    recycle: Arc<Mutex<Vec<Work>>>,
+}
+
+/// A spatially-unrolled, queue-connected instance of one model: the
+/// resident stage threads, their channels, and the feeder endpoints.
+///
+/// All batch-variant executors of a loaded model share one `Pipeline`
+/// via `Arc`; dropping the last handle closes the input channel, lets
+/// every stage drain, and joins the stage threads deterministically.
+pub struct Pipeline {
+    net: Arc<QuantViT>,
+    feeder: Mutex<Feeder>,
+    meta: Vec<StageMeta>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    queue_depth: usize,
+}
+
+impl Pipeline {
+    /// Spatially unroll `net` into resident stages. Threads spawn here
+    /// and park on their input FIFOs until images arrive.
+    pub fn new(net: Arc<QuantViT>, cfg: PipelineConfig) -> Self {
+        let depth = net.depth;
+        let stages = resolve_stage_count(depth, cfg.stages);
+        let queue_depth = cfg.queue_depth.max(1);
+        let per_stage_lanes = (cfg.lanes / stages).max(1);
+        let parts = partition(depth, stages);
+
+        let (in_tx, in_rx, in_stats) = channel::bounded::<Work>(queue_depth);
+        let (out_tx, out_rx) = std::sync::mpsc::channel::<(usize, Vec<f64>)>();
+        let recycle = Arc::new(Mutex::new(Vec::<Work>::new()));
+
+        let mut meta = Vec::with_capacity(stages);
+        let mut workers = Vec::with_capacity(stages);
+        let mut cur_rx = Some(in_rx);
+        let mut cur_in_stats = in_stats;
+        for (si, blocks) in parts.into_iter().enumerate() {
+            // the stage's private fabric share is created HERE, on the
+            // loading thread: a worker-spawn failure must be a load
+            // error (like lane-parallel mode), never a silent stage
+            // death after the load reported success. On panic, close
+            // the feed and join the stages spawned so far first.
+            let stage_pool = match std::panic::catch_unwind(|| {
+                (per_stage_lanes > 1).then(|| LanePool::new(per_stage_lanes))
+            }) {
+                Ok(p) => p,
+                Err(payload) => {
+                    drop(cur_rx.take());
+                    drop(in_tx);
+                    for h in workers.drain(..) {
+                        let _ = h.join();
+                    }
+                    std::panic::resume_unwind(payload);
+                }
+            };
+            let spec = StageSpec {
+                embed: si == 0,
+                head: si + 1 == stages,
+                blocks: blocks.clone(),
+            };
+            let (out, next_rx, out_stats) = if si + 1 < stages {
+                let (tx, rxn, cs) = channel::bounded::<Work>(queue_depth);
+                (StageOut::Next(tx), Some(rxn), Some(cs))
+            } else {
+                (
+                    StageOut::Done { logits: out_tx.clone(), recycle: recycle.clone() },
+                    None,
+                    None,
+                )
+            };
+            let shared = Arc::new(StageShared::default());
+            let rx_stage = cur_rx.take().expect("one receiver per stage");
+            let net2 = net.clone();
+            let shared2 = shared.clone();
+            LIVE_STAGES.fetch_add(1, Ordering::SeqCst);
+            let handle = std::thread::Builder::new()
+                .name(format!("hgpipe-stage-{si}"))
+                .spawn(move || {
+                    // decrement on every exit path, including unwinding
+                    struct Live;
+                    impl Drop for Live {
+                        fn drop(&mut self) {
+                            LIVE_STAGES.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    }
+                    let _live = Live;
+                    stage::stage_loop(net2, spec, rx_stage, out, shared2, stage_pool);
+                });
+            let handle = match handle {
+                Ok(h) => h,
+                Err(e) => {
+                    LIVE_STAGES.fetch_sub(1, Ordering::SeqCst);
+                    // mirror LanePool::new's hardening: the failed
+                    // closure (with this stage's endpoints) was already
+                    // dropped by `spawn`, so closing the feed lets the
+                    // EOS cascade reach every stage spawned so far —
+                    // JOIN them before propagating, so a failed spawn
+                    // neither leaks resident threads nor leaves
+                    // live_stages() settling asynchronously under a
+                    // caught panic
+                    drop(in_tx);
+                    for h in workers.drain(..) {
+                        let _ = h.join();
+                    }
+                    panic!("failed to spawn pipeline stage {si}: {e}");
+                }
+            };
+            workers.push(handle);
+            meta.push(StageMeta {
+                name: format!("stage{si}"),
+                blocks,
+                lanes: per_stage_lanes,
+                shared,
+                in_stats: cur_in_stats.clone(),
+                out_stats: out_stats.clone(),
+            });
+            if let Some(cs) = out_stats {
+                cur_in_stats = cs;
+            }
+            cur_rx = next_rx;
+        }
+        // only the head stage may hold a logits sender: the feeder's
+        // recv must observe disconnection if the stages die
+        drop(out_tx);
+
+        Self {
+            net,
+            feeder: Mutex::new(Feeder { input: Some(in_tx), output: out_rx, recycle }),
+            meta,
+            workers,
+            queue_depth,
+        }
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Fine-grained lanes inside each stage.
+    pub fn lanes_per_stage(&self) -> usize {
+        self.meta.first().map_or(1, |m| m.lanes)
+    }
+
+    pub fn tokens_per_image(&self) -> usize {
+        self.net.tokens_per_image()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.net.num_classes
+    }
+
+    /// Stream a batch through the pipeline: feed every image (the
+    /// bounded input FIFO backpressures the feed), then drain exactly
+    /// `batch` logit rows, placed by image index. Flat f64 logits,
+    /// bit-identical to the monolithic forward.
+    ///
+    /// Streaming, not a barrier: image `i+1` enters stage 0 while image
+    /// `i` is deeper in the pipe; the only waits are bounded-queue
+    /// backpressure and the final drain.
+    pub fn run_batch(&self, input: &[f32], batch: usize) -> crate::Result<Vec<f64>> {
+        let per = self.net.tokens_per_image();
+        let nc = self.net.num_classes;
+        anyhow::ensure!(
+            input.len() == batch * per,
+            "input length {} != batch {batch} x {per}",
+            input.len()
+        );
+        let mut feeder = self.feeder.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut result = feed_and_drain(&feeder, input, batch, per, nc);
+        if result.is_err() {
+            // a stage died mid-batch: poison the pipeline (no later call
+            // may run against a partially-dead stage chain) and discard
+            // any logits the head already emitted for this batch — stale
+            // outputs must never be attributed to a future batch
+            feeder.input = None;
+            while feeder.output.try_recv().is_ok() {}
+            // surface the original cause when a kernel panicked (the
+            // panicking stage parks its message before dropping the
+            // channels whose disconnect produced this error)
+            if let Some((name, msg)) = self.meta.iter().find_map(|m| {
+                m.shared
+                    .panic_msg
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .clone()
+                    .map(|msg| (m.name.clone(), msg))
+            }) {
+                result = result.map_err(|e| e.context(format!("{name} panicked: {msg}")));
+            }
+        }
+        result
+    }
+
+    /// Snapshot every stage's cumulative occupancy and stall counters.
+    pub fn stats(&self) -> PipelineStats {
+        let stages: Vec<StageSnapshot> = self
+            .meta
+            .iter()
+            .map(|m| StageSnapshot {
+                name: m.name.clone(),
+                blocks: (m.blocks.start, m.blocks.end),
+                lanes: m.lanes,
+                images: m.shared.images.load(Ordering::Relaxed),
+                busy_ms: m.shared.busy_ns.load(Ordering::Relaxed) as f64 / 1e6,
+                stalls_empty: m.in_stats.blocked_recvs.load(Ordering::Relaxed),
+                stalls_full: m
+                    .out_stats
+                    .as_ref()
+                    .map_or(0, |s| s.blocked_sends.load(Ordering::Relaxed)),
+            })
+            .collect();
+        let fill_drain_bubbles = stages.iter().map(|s| s.stalls_empty).sum();
+        let backpressure_stalls = stages.iter().map(|s| s.stalls_full).sum();
+        PipelineStats { stages, fill_drain_bubbles, backpressure_stalls }
+    }
+}
+
+/// The body of [`Pipeline::run_batch`], separated so the caller can
+/// poison the feeder state on any error without fighting the borrow of
+/// the in-flight feed.
+fn feed_and_drain(
+    feeder: &Feeder,
+    input: &[f32],
+    batch: usize,
+    per: usize,
+    nc: usize,
+) -> crate::Result<Vec<f64>> {
+    let tx = feeder
+        .input
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("pipeline is shut down"))?;
+    let mut out = vec![0f64; batch * nc];
+    for (i, img) in input.chunks_exact(per).enumerate() {
+        let mut w = feeder
+            .recycle
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .pop()
+            .unwrap_or_default();
+        w.idx = i;
+        w.tokens.clear();
+        w.tokens.extend_from_slice(img);
+        tx.send(w)
+            .map_err(|_| anyhow::anyhow!("pipeline stage terminated while feeding"))?;
+    }
+    for _ in 0..batch {
+        let (idx, logits) = feeder
+            .output
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pipeline stages terminated before the batch drained"))?;
+        anyhow::ensure!(idx < batch && logits.len() == nc, "corrupt pipeline output");
+        out[idx * nc..(idx + 1) * nc].copy_from_slice(&logits);
+    }
+    Ok(out)
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        // close the input FIFO: stage 0 drains its queue, observes EOS
+        // and exits, dropping its output sender — the shutdown cascades
+        // stage by stage with every in-flight image completing
+        self.feeder.lock().unwrap_or_else(PoisonError::into_inner).input.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor adapter + model loading (the coordinator-facing surface)
+// ---------------------------------------------------------------------------
+
+/// A batch-size view over a shared [`Pipeline`] (all batch variants of
+/// one model stream through the same resident stages).
+pub struct PipelineExecutor {
+    pipe: Arc<Pipeline>,
+    batch: usize,
+    load_ms: f64,
+    stats: Mutex<ExecStats>,
+}
+
+impl Executor for PipelineExecutor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run_f32(&self, input: &[f32]) -> crate::Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let out = self.pipe.run_batch(input, self.batch)?;
+        let out32: Vec<f32> = out.iter().map(|&v| v as f32).collect();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.total_ms += ms;
+        Ok(out32)
+    }
+
+    fn compile_ms(&self) -> f64 {
+        self.load_ms
+    }
+
+    fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// Load a model's bundle and spatially unroll it into a resident-stage
+/// pipeline; one [`PipelineExecutor`] per batch variant, all sharing the
+/// same stages. Dropping the returned [`LoadedModel`] drains and joins
+/// the stage threads.
+pub fn load_model(
+    manifest: &Manifest,
+    model: &str,
+    lanes: usize,
+    stages: usize,
+    queue_depth: usize,
+) -> crate::Result<LoadedModel> {
+    let (net, batches, bundle_ms) = interpreter::load_bundle(manifest, model)?;
+    let t0 = Instant::now();
+    let pipe = Arc::new(Pipeline::new(net.clone(), PipelineConfig { stages, queue_depth, lanes }));
+    let load_ms = bundle_ms + t0.elapsed().as_secs_f64() * 1e3;
+    let executors: Vec<Box<dyn Executor>> = batches
+        .iter()
+        .map(|&b| {
+            Box::new(PipelineExecutor {
+                pipe: pipe.clone(),
+                batch: b,
+                load_ms,
+                stats: Mutex::new(ExecStats::default()),
+            }) as Box<dyn Executor>
+        })
+        .collect();
+    Ok(LoadedModel {
+        executors,
+        tokens_per_image: net.tokens_per_image(),
+        num_classes: net.num_classes,
+        compile_ms: load_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_all_blocks_exactly_once() {
+        for depth in 1..=12usize {
+            for stages in 1..=depth {
+                let parts = partition(depth, stages);
+                assert_eq!(parts.len(), stages);
+                let mut next = 0usize;
+                for p in &parts {
+                    assert_eq!(p.start, next, "contiguous ({depth},{stages})");
+                    assert!(p.end >= p.start);
+                    next = p.end;
+                }
+                assert_eq!(next, depth, "all blocks covered ({depth},{stages})");
+                // near-even: sizes differ by at most one
+                let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "uneven split ({depth},{stages}): {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_count_resolution() {
+        assert_eq!(resolve_stage_count(4, 0), 4, "auto = one stage per block");
+        assert_eq!(resolve_stage_count(4, 1), 1);
+        assert_eq!(resolve_stage_count(4, 3), 3);
+        assert_eq!(resolve_stage_count(4, 99), 4, "clamped to depth");
+        assert_eq!(resolve_stage_count(0, 0), 1, "blockless model still has a stage");
+    }
+}

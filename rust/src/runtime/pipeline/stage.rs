@@ -1,0 +1,148 @@
+//! A resident pipeline stage: one persistent worker thread pinned to a
+//! contiguous slice of the model (optionally the patch-embed front and
+//! the classifier head), with its own scratch box and — when the lane
+//! budget allows — its own private [`LanePool`] for fine-grained
+//! token-row banding inside the stage.
+//!
+//! The stage loop is the paper's decentralized FSM in software: recv an
+//! activation tile, run the stage's slice over it in place, send it on.
+//! No stage knows the global schedule; the bounded channels alone
+//! provide ordering and backpressure.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+use crate::runtime::fabric::{Exec, LanePool, LaneScratch};
+use crate::runtime::interpreter::{OpClock, QuantViT};
+
+use super::channel;
+
+/// The unit flowing through the pipeline: one image's buffers. The
+/// residual stream `x` is updated **in place** by every stage (the
+/// dataflow is residual, so the same tile flows end to end), and the
+/// whole struct returns to the feeder's recycle bag after the head
+/// stage — steady-state pipelining allocates no activation buffers.
+#[derive(Default)]
+pub(crate) struct Work {
+    pub(crate) idx: usize,
+    /// f32 input tokens — consumed by the embed stage, dead weight (a
+    /// vec header riding along for recycling) afterwards.
+    pub(crate) tokens: Vec<f32>,
+    /// The int32 residual stream, `tokens x dim`.
+    pub(crate) x: Vec<i32>,
+}
+
+/// What one stage executes: which encoder blocks, and whether the
+/// patch-embed front and/or the classifier head are fused in.
+pub(crate) struct StageSpec {
+    pub(crate) embed: bool,
+    pub(crate) head: bool,
+    pub(crate) blocks: Range<usize>,
+}
+
+/// Occupancy counters one stage publishes (channel stall counters live
+/// on the channels themselves).
+#[derive(Default)]
+pub(crate) struct StageShared {
+    pub(crate) images: AtomicU64,
+    /// Nanoseconds spent computing (excludes time parked on channels).
+    pub(crate) busy_ns: AtomicU64,
+    /// Panic message of a kernel that died in this stage — surfaced by
+    /// `run_batch` so a stage death reports its original cause, not
+    /// just a generic channel-termination error (the pipeline twin of
+    /// the fabric's re-raise-original-panic contract).
+    pub(crate) panic_msg: Mutex<Option<String>>,
+}
+
+/// Where a stage's finished tile goes: the next stage's bounded FIFO,
+/// or (for the head stage) the feeder's unbounded logits channel plus
+/// the buffer recycle bag.
+pub(crate) enum StageOut {
+    Next(channel::Sender<Work>),
+    Done {
+        logits: std::sync::mpsc::Sender<(usize, Vec<f64>)>,
+        recycle: Arc<Mutex<Vec<Work>>>,
+    },
+}
+
+/// The stage worker body. Runs until its input channel reports
+/// end-of-stream (pipeline shutdown) or its output side disappears (a
+/// downstream stage died) — either way it returns, dropping its
+/// endpoints, which cascades the shutdown both directions.
+pub(crate) fn stage_loop(
+    net: Arc<QuantViT>,
+    spec: StageSpec,
+    rx: channel::Receiver<Work>,
+    tx: StageOut,
+    shared: Arc<StageShared>,
+    // the stage's private fabric share, created by `Pipeline::new` on
+    // the loading thread so a worker-spawn failure is a *load* error,
+    // not a silent post-load stage death
+    pool: Option<LanePool>,
+) {
+    // stage-resident state: the scratch box and a detached op clock —
+    // nobody reads a per-op profile here, so the segments' lap calls
+    // cost zero clock reads
+    let mut scratch = Box::<LaneScratch>::default();
+    let mut clk = OpClock::detached();
+
+    while let Some(mut w) = rx.recv() {
+        let t0 = Instant::now();
+        // contain a panicking kernel: park its message where run_batch
+        // can attach it to the error, then exit (dropping the endpoints
+        // cascades the shutdown; the stage is not reusable after this)
+        let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let LaneScratch { band, pass } = &mut *scratch;
+            let mut exec = match &pool {
+                Some(p) => Exec::Pool(p),
+                None => Exec::Serial(band),
+            };
+            if spec.embed {
+                net.embed_into(&w.tokens, &mut w.x, pass, &mut exec, &mut clk);
+            }
+            for bi in spec.blocks.clone() {
+                net.block_into(bi, &mut w.x, pass, &mut exec, &mut clk);
+            }
+            if spec.head {
+                Some(net.head_into(&w.x, pass, &mut exec, &mut clk))
+            } else {
+                None
+            }
+        }));
+        let logits = match computed {
+            Ok(l) => l,
+            Err(p) => {
+                let msg = if let Some(s) = p.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = p.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "non-string panic payload".to_string()
+                };
+                *shared.panic_msg.lock().unwrap_or_else(PoisonError::into_inner) = Some(msg);
+                break;
+            }
+        };
+        shared.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        shared.images.fetch_add(1, Ordering::Relaxed);
+
+        match &tx {
+            StageOut::Next(next) => {
+                if next.send(w).is_err() {
+                    // downstream stage is gone; stop consuming so the
+                    // shutdown cascades upstream through our rx drop
+                    break;
+                }
+            }
+            StageOut::Done { logits: out, recycle } => {
+                let l = logits.expect("head stage produced no logits");
+                // a failed send means the feeder is gone (drop-mid-stream):
+                // keep draining so upstream stages empty out cleanly
+                let _ = out.send((w.idx, l));
+                recycle.lock().unwrap_or_else(PoisonError::into_inner).push(w);
+            }
+        }
+    }
+}

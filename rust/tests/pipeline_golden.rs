@@ -1,0 +1,255 @@
+//! The hybrid-grained pipeline executor against the golden fixture:
+//!
+//! 1. **bit-exactness** — logits are bit-identical to the python
+//!    reference at stage counts 1, 2, 4 and max (clamped), at queue
+//!    depth 1 and the default, and with fine-grained lanes inside the
+//!    stages;
+//! 2. **backpressure liveness** — depth-1 FIFOs fully serialize the
+//!    hand-offs: no deadlock, no reordering, every image answered;
+//! 3. **lifecycle** — dropping a pipeline (or a `ModelServer` whose
+//!    model runs in pipeline mode, including mid-stream with requests
+//!    in flight) drains the stages and joins every stage thread and
+//!    every inner fabric worker.
+//!
+//! Tests serialize on a lock: `pipeline::live_stages` and
+//! `LanePool::live_workers` are process-wide counters, and concurrent
+//! pipeline-creating tests would make their baseline assertions racy.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::ModelServer;
+use hgpipe::runtime::fabric::LanePool;
+use hgpipe::runtime::interpreter::QuantViT;
+use hgpipe::runtime::pipeline::{self, Pipeline, PipelineConfig};
+use hgpipe::runtime::{BackendKind, ExecMode, RuntimeConfig};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn golden() -> (Arc<QuantViT>, Vec<f32>, Vec<f64>) {
+    let dir = fixture_dir();
+    let net = Arc::new(QuantViT::load(&dir.join("tinyvit_bundle.json")).expect("bundle loads"));
+    let tokens = std::fs::read(dir.join("golden_tokens.bin"))
+        .unwrap()
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let logits = std::fs::read(dir.join("golden_logits.bin"))
+        .unwrap()
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    (net, tokens, logits)
+}
+
+fn assert_logits(got: &[f64], want: &[f64], ctx: &str) {
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx} logit {k}: {g:e} != {w:e}");
+    }
+}
+
+#[test]
+fn pipeline_bit_exact_at_every_stage_count() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    let depth = net.depth; // 4 for tiny-synth: "max" = fully unrolled
+    let n = 16usize;
+    // stage counts the acceptance pins: 1, 2, 4, and max (0 = auto =
+    // one per block, which for tiny-synth *is* 4 — assert that too)
+    for &stages in &[1usize, 2, 4, 0] {
+        let pipe = Pipeline::new(
+            net.clone(),
+            PipelineConfig { stages, queue_depth: 2, lanes: 1 },
+        );
+        let want_stages = if stages == 0 { depth } else { stages.clamp(1, depth) };
+        assert_eq!(pipe.stage_count(), want_stages, "requested {stages}");
+        let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
+        for i in 0..n {
+            assert_logits(
+                &out[i * nc..(i + 1) * nc],
+                &expected[i * nc..(i + 1) * nc],
+                &format!("stages {stages} img {i}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_bit_exact_with_fine_grained_lanes_inside_stages() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    // 2 stages x 2 lanes each: both grains of the hybrid pipeline active
+    let pipe = Pipeline::new(net.clone(), PipelineConfig { stages: 2, queue_depth: 2, lanes: 4 });
+    assert_eq!(pipe.lanes_per_stage(), 2);
+    let n = 8usize;
+    let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
+    for i in 0..n {
+        assert_logits(
+            &out[i * nc..(i + 1) * nc],
+            &expected[i * nc..(i + 1) * nc],
+            &format!("hybrid img {i}"),
+        );
+    }
+}
+
+#[test]
+fn excess_stage_request_clamps_to_depth() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    let pipe = Pipeline::new(net.clone(), PipelineConfig { stages: 99, queue_depth: 1, lanes: 1 });
+    assert_eq!(pipe.stage_count(), net.depth, "99 stages clamp to one per block");
+    assert_eq!(pipe.queue_depth(), 1);
+    let out = pipe.run_batch(&tokens[..per], 1).unwrap();
+    assert_logits(&out[..nc], &expected[..nc], "clamped");
+}
+
+#[test]
+fn queue_depth_one_backpressure_no_deadlock_no_reordering() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    // depth-1 FIFOs: every hand-off serializes on backpressure; a
+    // batch much larger than pipeline capacity must still stream
+    // through, in order, with every logit pinned to its own image
+    let pipe = Pipeline::new(net.clone(), PipelineConfig { stages: 0, queue_depth: 1, lanes: 1 });
+    let n = 48usize;
+    let s0 = pipe.stats();
+    let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
+    for i in 0..n {
+        assert_logits(
+            &out[i * nc..(i + 1) * nc],
+            &expected[i * nc..(i + 1) * nc],
+            &format!("qd1 img {i}"),
+        );
+    }
+    // every stage saw every image exactly once (no drops, no dupes)
+    let d = pipe.stats().delta(&s0);
+    for s in &d.stages {
+        assert_eq!(s.images, n as u64, "{} image count", s.name);
+    }
+}
+
+#[test]
+fn repeated_batches_reuse_buffers_and_stay_pinned() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    let pipe = Pipeline::new(net.clone(), PipelineConfig { stages: 0, queue_depth: 2, lanes: 1 });
+    for round in 0..3 {
+        let n = 8usize;
+        let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
+        for i in 0..n {
+            assert_logits(
+                &out[i * nc..(i + 1) * nc],
+                &expected[i * nc..(i + 1) * nc],
+                &format!("round {round} img {i}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn dropping_the_pipeline_joins_all_stage_threads() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let (net, tokens, _) = golden();
+    let per = net.tokens_per_image();
+    let stage_baseline = pipeline::live_stages();
+    let worker_baseline = LanePool::live_workers();
+    for round in 0..3 {
+        // 2 lanes per stage: each stage owns an inner fabric worker that
+        // must be joined through the same drop cascade
+        let pipe =
+            Pipeline::new(net.clone(), PipelineConfig { stages: 0, queue_depth: 1, lanes: 8 });
+        assert_eq!(
+            pipeline::live_stages(),
+            stage_baseline + pipe.stage_count(),
+            "round {round}: one resident thread per stage"
+        );
+        let _ = pipe.run_batch(&tokens[..4 * per], 4).unwrap();
+        drop(pipe);
+        assert_eq!(
+            pipeline::live_stages(),
+            stage_baseline,
+            "round {round}: pipeline drop must join its stage threads"
+        );
+        assert_eq!(
+            LanePool::live_workers(),
+            worker_baseline,
+            "round {round}: stage drop must join its inner fabric workers"
+        );
+    }
+}
+
+#[test]
+fn model_server_in_pipeline_mode_matches_golden() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = Manifest::load(&fixture_dir()).unwrap();
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(2))
+        .with_mode(ExecMode::Pipeline { stages: 2, queue_depth: 2 });
+    let server = ModelServer::start_with_config(&manifest, "tiny-synth", 2, config).unwrap();
+    let n = 16usize;
+    let images: Vec<Vec<f32>> = tokens.chunks(per).take(n).map(|c| c.to_vec()).collect();
+    let responses = server.infer_all(images).unwrap();
+    assert_eq!(responses.len(), n);
+    for (i, r) in responses.iter().enumerate() {
+        for (k, (&g, &w)) in r.logits.iter().zip(&expected[i * nc..(i + 1) * nc]).enumerate() {
+            assert_eq!(g.to_bits(), (w as f32).to_bits(), "image {i} logit {k}");
+        }
+    }
+    drop(server);
+    // the coordinator's unload cascade reaches the stage threads
+    assert_eq!(pipeline::live_stages(), 0, "server drop must join pipeline stages");
+}
+
+#[test]
+fn drop_mid_stream_drains_answers_everything_and_joins_cleanly() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = Manifest::load(&fixture_dir()).unwrap();
+    let (net, tokens, _) = golden();
+    let per = net.tokens_per_image();
+    let stage_baseline = pipeline::live_stages();
+    let worker_baseline = LanePool::live_workers();
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(4))
+        .with_mode(ExecMode::Pipeline { stages: 0, queue_depth: 1 });
+    let server = ModelServer::start_with_config(&manifest, "tiny-synth", 50, config).unwrap();
+    // flood the server, then drop it with requests still in flight: the
+    // delivery guarantee says every reply channel gets exactly one
+    // answer (logits if the dispatch ran, an explicit error otherwise)
+    let rxs: Vec<_> = (0..24usize)
+        .map(|i| server.submit(tokens[i * per..(i + 1) * per].to_vec()).unwrap())
+        .collect();
+    drop(server);
+    // not asserting how many succeeded: what dispatched before the drop
+    // is timing-dependent — only that every reply arrived, exactly once
+    let mut answered = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i}: reply sender dropped without a message"));
+        if reply.is_ok() {
+            answered += 1;
+        }
+    }
+    assert!(answered <= 24);
+    // whatever ran, ran to completion; nothing hung, nothing leaked
+    assert_eq!(pipeline::live_stages(), stage_baseline, "stage threads leaked past drop");
+    assert_eq!(LanePool::live_workers(), worker_baseline, "fabric workers leaked past drop");
+}

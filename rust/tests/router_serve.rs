@@ -1,0 +1,77 @@
+//! The multi-model front door: `coordinator::Router` wired into serving
+//! (one `ModelServer` per model, requests routed by name, per-model
+//! metrics export) — over the committed golden fixture.
+
+use std::path::{Path, PathBuf};
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::Router;
+use hgpipe::runtime::{BackendKind, ExecMode, RuntimeConfig};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&fixture_dir()).expect("committed golden fixture")
+}
+
+fn config() -> RuntimeConfig {
+    RuntimeConfig::new(BackendKind::Interpreter).with_lanes(Some(2))
+}
+
+#[test]
+fn routes_by_model_name_and_exports_per_model_metrics() {
+    let router = Router::start(&manifest(), &["tiny-synth".to_string()], 2, config()).unwrap();
+    assert_eq!(router.models(), vec!["tiny-synth"]);
+    let per = router.server("tiny-synth").unwrap().tokens_per_image();
+
+    let images: Vec<Vec<f32>> = (0..6).map(|i| vec![0.01 * i as f32; per]).collect();
+    let responses = router.infer_all("tiny-synth", images).unwrap();
+    assert_eq!(responses.len(), 6);
+
+    let metrics = router.metrics();
+    assert_eq!(metrics.len(), 1);
+    let (name, m) = &metrics[0];
+    assert_eq!(name, "tiny-synth");
+    assert_eq!(m.count(), 6, "per-model metrics must attribute the routed requests");
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn unknown_model_is_a_routing_error_naming_whats_served() {
+    let router = Router::start(&manifest(), &["tiny-synth".to_string()], 2, config()).unwrap();
+    let per = router.server("tiny-synth").unwrap().tokens_per_image();
+    let err = router.submit("no-such-model", vec![0.0; per]).unwrap_err().to_string();
+    assert!(err.contains("no-such-model"), "error names the missing model: {err}");
+    assert!(err.contains("tiny-synth"), "error names what IS served: {err}");
+}
+
+#[test]
+fn unknown_model_in_startup_list_fails_router_start() {
+    assert!(Router::start(&manifest(), &["nope".to_string()], 2, config()).is_err());
+}
+
+#[test]
+fn duplicate_models_are_rejected() {
+    let models = vec!["tiny-synth".to_string(), "tiny-synth".to_string()];
+    let err = Router::start(&manifest(), &models, 2, config()).unwrap_err().to_string();
+    assert!(err.contains("duplicate"), "{err}");
+}
+
+#[test]
+fn empty_model_list_is_rejected() {
+    assert!(Router::start(&manifest(), &[], 2, config()).is_err());
+}
+
+#[test]
+fn router_works_in_pipeline_mode_too() {
+    // the per-model RuntimeConfig carries the execution mode: the same
+    // front door can put a model on the spatial pipeline executor
+    let cfg = config().with_mode(ExecMode::Pipeline { stages: 2, queue_depth: 2 });
+    let router = Router::start(&manifest(), &["tiny-synth".to_string()], 2, cfg).unwrap();
+    let per = router.server("tiny-synth").unwrap().tokens_per_image();
+    let responses = router.infer_all("tiny-synth", vec![vec![0.25; per]; 3]).unwrap();
+    assert_eq!(responses.len(), 3);
+    assert_eq!(router.metrics()[0].1.count(), 3);
+}
