@@ -10,7 +10,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test test-rust test-python artifacts golden bench-json bench-json-smoke
+.PHONY: build test test-rust test-python artifacts golden bench-json bench-json-smoke bench-check
 
 build:
 	cargo build --release
@@ -29,6 +29,17 @@ bench-json:
 
 bench-json-smoke:
 	cargo bench --bench interpreter -- --json $(CURDIR)/BENCH_interpreter.json --smoke
+
+# CI perf-regression gate: schema-validate the freshly generated
+# BENCH_interpreter.json (every README-documented key incl. the
+# scale_out section) and compare the pooled/pipeline img/s headline
+# numbers against the committed floors in BENCH_baseline.json (generous
+# tolerance — catches catastrophic regressions and schema drift, not
+# runner noise). Run after bench-json[-smoke].
+bench-check:
+	cargo run --release --bin bench_check -- \
+	  --bench $(CURDIR)/BENCH_interpreter.json \
+	  --baseline $(CURDIR)/BENCH_baseline.json
 
 test: test-rust test-python
 

@@ -28,6 +28,11 @@
 //!                           sweep, per-stage occupancy over an explicit
 //!                           measurement window, and fill/drain bubble +
 //!                           backpressure stall counts
+//!   scale_out               multi-executor scale-out: img/s at 1/2/4
+//!                           replicas behind one model queue (with
+//!                           per-replica occupancy), and the near-even
+//!                           vs work-proportional partition compared by
+//!                           per-stage busy_ms at stages = max
 //!   per_op_ms_per_image / per_op_pooled_ms_per_image
 
 use std::fmt::Write as _;
@@ -35,10 +40,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::ModelServer;
 use hgpipe::runtime::fabric::gemm::PackedGemm;
 use hgpipe::runtime::fabric::LanePool;
 use hgpipe::runtime::interpreter::{self, OpProfile, QuantViT};
-use hgpipe::runtime::pipeline::{Pipeline, PipelineConfig, DEFAULT_QUEUE_DEPTH};
+use hgpipe::runtime::pipeline::{
+    PartitionStrategy, Pipeline, PipelineConfig, DEFAULT_QUEUE_DEPTH,
+};
+use hgpipe::runtime::{BackendKind, RuntimeConfig};
 use hgpipe::util::bench::{bench, black_box};
 use hgpipe::util::prng::Prng;
 
@@ -270,7 +279,7 @@ fn main() {
     for &stages in &[1usize, 2, 0] {
         let pipe = Pipeline::new(
             net.clone(),
-            PipelineConfig { stages, queue_depth, lanes: opts.lanes },
+            PipelineConfig { stages, queue_depth, lanes: opts.lanes, ..Default::default() },
         );
         if pipe_sweep.iter().any(|&(s, _)| s == pipe.stage_count()) {
             continue; // resolved to a count already measured
@@ -303,6 +312,112 @@ fn main() {
     let pipe_wall_ms = tw.elapsed().as_secs_f64() * 1e3;
     let pd = pipe.stats().delta(&s0);
     let pipeline_ips = (pipe_rounds * n_images) as f64 / (pipe_wall_ms / 1e3);
+
+    // 8. multi-executor scale-out: N executor replicas behind one shared
+    // model queue, through the real ModelServer (exactly what
+    // `--replicas` serves). Each replica is pinned to 1 lane so the
+    // sweep isolates replica scaling from intra-replica banding.
+    let scale_requests = n_images * if opts.smoke { 2 } else { 4 };
+    let scale_images: Vec<Vec<f32>> = (0..scale_requests)
+        .map(|i| flat[(i % n_images) * per..(i % n_images + 1) * per].to_vec())
+        .collect();
+    struct ReplicaPoint {
+        replicas: usize,
+        img_s: f64,
+        /// Per replica over the timed window: (images, exec_ms, occupancy).
+        per_replica: Vec<(u64, f64, f64)>,
+    }
+    let mut replica_sweep: Vec<ReplicaPoint> = Vec::new();
+    for &replicas in &[1usize, 2, 4] {
+        let cfg = RuntimeConfig::new(BackendKind::Interpreter)
+            .with_lanes(Some(1))
+            .with_replicas(Some(replicas));
+        let server = ModelServer::start_with_config(&manifest, "tiny-synth", 1, cfg)
+            .expect("scale-out server");
+        assert_eq!(server.replicas(), replicas);
+        // self-check: replicated serving must stay bit-identical to the
+        // naive baseline (in the coordinator's f32 reply view)
+        let check = server
+            .infer_all(vec![flat[..per].to_vec(); 2 * replicas])
+            .expect("scale-out self-check inference");
+        for resp in &check {
+            for (k, (&g, &w)) in resp.logits.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    (w as f32).to_bits(),
+                    "scale-out logits diverged from naive at {replicas} replicas (logit {k})"
+                );
+            }
+        }
+        server.infer_all(scale_images.clone()).expect("scale-out warm-up");
+        let before = server.replica_metrics();
+        let t0 = Instant::now();
+        server.infer_all(scale_images.clone()).expect("scale-out window");
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let img_s = scale_requests as f64 / (wall_ms / 1e3);
+        let per_replica: Vec<(u64, f64, f64)> = server
+            .replica_metrics()
+            .iter()
+            .zip(&before)
+            .map(|(now, was)| {
+                let images = (now.count() - was.count()) as u64;
+                let exec_ms = now.exec_ms_total - was.exec_ms_total;
+                (images, exec_ms, exec_ms / wall_ms)
+            })
+            .collect();
+        println!("  scale-out: {replicas} replica(s), 1 lane each   {img_s:8.1} img/s");
+        replica_sweep.push(ReplicaPoint { replicas, img_s, per_replica });
+    }
+    let scale_base_ips = replica_sweep[0].img_s;
+
+    // 9. stage partition: near-even block slicing vs the
+    // work-proportional cost model, compared by per-stage busy time
+    // over identical windows. Three layouts keep the comparison honest:
+    // near-even at stages=max (same thread budget as the cost model —
+    // block-count slicing parks an empty tail stage there, which IS its
+    // behavior at that resource count), near-even at PR-4's natural
+    // fully-unrolled count (stages=depth, embed riding stage 0 — the
+    // pre-cost-model baseline), and work-proportional at stages=max.
+    struct PartitionPoint {
+        stages: usize,
+        img_s: f64,
+        busy_ms: Vec<f64>,
+        max_min_ratio: f64,
+    }
+    let mut part_cmp: Vec<PartitionPoint> = Vec::new();
+    for (label, strategy, req_stages) in [
+        ("near_even", PartitionStrategy::NearEven, 0usize),
+        ("near_even_pr4", PartitionStrategy::NearEven, net.depth),
+        ("work_proportional", PartitionStrategy::WorkProportional, 0),
+    ] {
+        let pipe = Pipeline::new(
+            net.clone(),
+            PipelineConfig { stages: req_stages, queue_depth, lanes: 1, partition: strategy },
+        );
+        pipe.run_batch(&flat, n_images).expect("partition warm-up");
+        let s0 = pipe.stats();
+        let t0 = Instant::now();
+        for _ in 0..pipe_rounds {
+            black_box(pipe.run_batch(&flat, n_images).unwrap());
+        }
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        let d = pipe.stats().delta(&s0);
+        let busy_ms: Vec<f64> = d.stages.iter().map(|s| s.busy_ms).collect();
+        let mx = busy_ms.iter().cloned().fold(f64::MIN, f64::max);
+        let mn = busy_ms.iter().cloned().fold(f64::MAX, f64::min);
+        let max_min_ratio = mx / mn.max(1e-6);
+        let img_s = (pipe_rounds * n_images) as f64 / (wall / 1e3);
+        println!(
+            "  partition {label:<18} {:2} stages  {img_s:8.1} img/s  busy max/min {max_min_ratio:.1}x  bottleneck {mx:.1} ms",
+            pipe.stage_count(),
+        );
+        part_cmp.push(PartitionPoint {
+            stages: pipe.stage_count(),
+            img_s,
+            busy_ms,
+            max_min_ratio,
+        });
+    }
 
     // per-op breakdowns: serial (clean attribution) and pooled (what the
     // serving path actually spends per op at the headline lane count)
@@ -365,6 +480,24 @@ fn main() {
             s.stalls_full,
         );
     }
+    println!("    scale-out replica sweep (1 lane per replica):");
+    for p in &replica_sweep {
+        println!(
+            "      {:2} replicas {:8.1} img/s   ({:.2}x vs 1 replica)",
+            p.replicas,
+            p.img_s,
+            p.img_s / scale_base_ips
+        );
+    }
+    println!(
+        "    partition busy max/min @ {} stages: near-even {:.1}x -> work-proportional {:.1}x \
+         (PR-4 near-even @ {} stages: {:.1}x)",
+        part_cmp[0].stages,
+        part_cmp[0].max_min_ratio,
+        part_cmp[2].max_min_ratio,
+        part_cmp[1].stages,
+        part_cmp[1].max_min_ratio
+    );
     println!(
         "    per-op (1 lane): gemm {:.0}%  attention {:.0}%  layernorm {:.0}%  requant {:.0}%",
         100.0 * prof.gemm_ms / total,
@@ -425,6 +558,48 @@ fn main() {
             pd.fill_drain_bubbles,
             pd.backpressure_stalls,
         );
+        let mut replica_sweep_json = String::new();
+        for (i, p) in replica_sweep.iter().enumerate() {
+            let mut pr = String::new();
+            for (j, &(images, exec_ms, occ)) in p.per_replica.iter().enumerate() {
+                let _ = write!(
+                    pr,
+                    "{}{{\"images\": {images}, \"exec_ms\": {exec_ms:.3}, \
+                     \"occupancy\": {occ:.4}}}",
+                    if j == 0 { "" } else { ", " },
+                );
+            }
+            let _ = write!(
+                replica_sweep_json,
+                "{}\n      {{\"replicas\": {}, \"img_s\": {:.3}, \"speedup_vs_1\": {:.3}, \
+                 \"per_replica\": [{pr}]}}",
+                if i == 0 { "" } else { "," },
+                p.replicas,
+                p.img_s,
+                p.img_s / scale_base_ips,
+            );
+        }
+        let partition_entry = |p: &PartitionPoint| -> String {
+            let mut busy = String::new();
+            for (i, b) in p.busy_ms.iter().enumerate() {
+                let _ = write!(busy, "{}{b:.3}", if i == 0 { "" } else { ", " });
+            }
+            format!(
+                "{{\"stages\": {}, \"img_s\": {:.3}, \"per_stage_busy_ms\": [{busy}], \
+                 \"max_min_busy_ratio\": {:.3}}}",
+                p.stages, p.img_s, p.max_min_ratio,
+            )
+        };
+        let scale_out_json = format!(
+            "{{\n    \"replica_sweep\": [{replica_sweep_json}\n    ],\n    \
+             \"partition\": {{\n      \"stages\": {},\n      \
+             \"near_even\": {},\n      \"near_even_pr4\": {},\n      \
+             \"work_proportional\": {}\n    }}\n  }}",
+            part_cmp[0].stages,
+            partition_entry(&part_cmp[0]),
+            partition_entry(&part_cmp[1]),
+            partition_entry(&part_cmp[2]),
+        );
         let per_op = |p: &OpProfile| {
             format!(
                 "{{\n    \"quantize\": {:.4},\n    \"gemm\": {:.4},\n    \
@@ -449,6 +624,7 @@ fn main() {
              \"dense_speedup_vs_naive\": {:.3}, \"sparse_speedup_vs_naive\": {:.3}}},\n  \
              \"lane_sweep\": [{}\n  ],\n  \
              \"pipeline\": {},\n  \
+             \"scale_out\": {},\n  \
              \"per_op_ms_per_image\": {},\n  \
              \"per_op_pooled_ms_per_image\": {}\n}}\n",
             opts.smoke,
@@ -468,6 +644,7 @@ fn main() {
             gemm_sparse_speedup,
             sweep_json,
             pipeline_json,
+            scale_out_json,
             per_op(&prof),
             per_op(&prof_pooled),
         );

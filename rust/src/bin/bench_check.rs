@@ -1,0 +1,78 @@
+//! `bench_check` — the CI perf-regression gate (`make bench-check`).
+//!
+//! Reads the freshly-generated `BENCH_interpreter.json` and the
+//! committed `BENCH_baseline.json`, then fails (exit 1) when:
+//!
+//! * the bench artifact is missing any field of its documented schema
+//!   (including the `scale_out` section) — schema drift vs README, or
+//! * a gated throughput (pooled fabric, pipeline) fell below its
+//!   committed floor by more than the baseline's `tolerance`.
+//!
+//! The logic lives in `hgpipe::util::benchcheck` (unit-tested there);
+//! this binary is the argument parsing and the process exit code.
+//!
+//! Usage: bench_check [--bench PATH] [--baseline PATH]
+
+use hgpipe::util::benchcheck::{regression_errors, schema_errors};
+use hgpipe::util::json::Json;
+
+fn load(path: &str, what: &str) -> Json {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("bench-check: cannot read {what} '{path}': {e}");
+        std::process::exit(2);
+    });
+    Json::parse(&text).unwrap_or_else(|e| {
+        eprintln!("bench-check: {what} '{path}' is not valid JSON: {e}");
+        std::process::exit(2);
+    })
+}
+
+fn main() {
+    let mut bench_path = "BENCH_interpreter.json".to_string();
+    let mut baseline_path = "BENCH_baseline.json".to_string();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--bench" if i + 1 < argv.len() => {
+                bench_path = argv[i + 1].clone();
+                i += 1;
+            }
+            "--baseline" if i + 1 < argv.len() => {
+                baseline_path = argv[i + 1].clone();
+                i += 1;
+            }
+            other => {
+                eprintln!("bench-check: unknown argument '{other}'");
+                eprintln!("usage: bench_check [--bench PATH] [--baseline PATH]");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+
+    let bench = load(&bench_path, "bench json");
+    let baseline = load(&baseline_path, "baseline");
+
+    let mut errors = schema_errors(&bench);
+    errors.extend(regression_errors(&bench, &baseline));
+
+    if errors.is_empty() {
+        let pooled = bench.get("fabric_pooled_img_s").and_then(Json::as_f64).unwrap_or(0.0);
+        let pipe = bench
+            .get("pipeline")
+            .and_then(|p| p.get("img_s"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        println!(
+            "bench-check: OK — schema valid, pooled {pooled:.1} img/s and pipeline \
+             {pipe:.1} img/s within tolerance of the committed baseline"
+        );
+    } else {
+        eprintln!("bench-check: FAILED ({} problem(s))", errors.len());
+        for e in &errors {
+            eprintln!("  - {e}");
+        }
+        std::process::exit(1);
+    }
+}

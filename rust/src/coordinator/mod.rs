@@ -1,26 +1,38 @@
 //! L3 serving coordinator: request queue → dynamic batcher → backend
 //! executor, with per-request latency accounting. Thread-based (this
-//! offline environment has no tokio); the executor thread plays the role
-//! of the accelerator's DMA feeder, the backend (interpreter or PJRT)
+//! offline environment has no tokio); the executor threads play the role
+//! of the accelerator's DMA feeders, the backend (interpreter or PJRT)
 //! plays the fully-pipelined fabric.
 //!
 //! The coordinator is generic over the execution backend via
 //! [`crate::runtime::BackendKind`]: `ModelServer::start` uses the default
 //! (pure-rust interpreter); `start_with_backend` selects explicitly, and
-//! `start_with_config` also carries the lane count and the temporal-vs-
-//! spatial [`crate::runtime::ExecMode`] (lane-parallel or pipeline) per
-//! model. [`Router`] fronts several `ModelServer`s, routing requests by
-//! model name with per-model metrics export.
+//! `start_with_config` also carries the lane count, the temporal-vs-
+//! spatial [`crate::runtime::ExecMode`] (lane-parallel or pipeline), and
+//! the **executor replica count** per model. [`Router`] fronts several
+//! `ModelServer`s, routing requests by model name with per-model (and
+//! per-replica) metrics export.
+//!
+//! Scale-out: one model may run `RuntimeConfig::replicas` executor
+//! threads (the `--replicas` flag / `HGPIPE_REPLICAS` env fallback), all
+//! pulling from **one shared MPMC front [`queue`]**. Each replica owns a
+//! complete runtime of its own — its persistent fabric in lane-parallel
+//! mode, its resident stage pipeline in pipeline mode (the pipeline
+//! feeder is SPSC, so replication happens at the pipeline boundary) —
+//! the software analogue of replicating whole accelerator engines behind
+//! one request stream. Every request is popped by exactly one replica,
+//! so metrics roll up without double counting.
 //!
 //! Delivery guarantee: every accepted request receives exactly one reply
 //! — `Ok(Response)` on success, an explicit `Err` if its dispatch failed
 //! or the server shut down first (counted in [`ServeMetrics::failed`]).
 //! While a partial batch waits out the batching deadline the executor
-//! blocks in `recv_timeout` for the residual head-of-line wait rather
-//! than spinning.
+//! blocks in a timed pop for the residual head-of-line wait rather than
+//! spinning.
 
 pub mod batcher;
 pub mod metrics;
+pub mod queue;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -31,6 +43,7 @@ use crate::artifacts::Manifest;
 use crate::runtime::{self, BackendKind, Executor, RuntimeConfig};
 use batcher::BatchPolicy;
 use metrics::ServeMetrics;
+use queue::{FrontQueue, Pop};
 
 /// One inference request: a patchified image (flat T*P f32 tokens).
 ///
@@ -54,20 +67,27 @@ pub struct Response {
     pub latency: std::time::Duration,
 }
 
-/// A serving endpoint for one model (all its batch variants).
+/// A serving endpoint for one model (all its batch variants), executed
+/// by one or more replica threads behind a shared front queue.
 ///
-/// Each server owns its fabric: the executor thread loads the model,
-/// which creates the persistent worker pool; dropping the server joins
-/// the executor thread, which drops the loaded model and in turn joins
-/// the fabric workers — unload never leaks threads.
+/// Each replica owns its runtime: the executor thread loads the model,
+/// which creates its persistent worker pool (or resident pipeline);
+/// dropping the server closes the queue and joins every executor
+/// thread, which drops the loaded models and in turn joins the fabric
+/// workers and stage threads — unload never leaks threads.
 pub struct ModelServer {
     name: String,
     config: RuntimeConfig,
-    queue_tx: Sender<Request>,
+    front: Arc<FrontQueue<Request>>,
     next_id: AtomicU64,
+    /// Rolled-up serving metrics across all executor replicas. Every
+    /// request is popped by exactly one replica and recorded here once,
+    /// so sums never double count; [`Self::replica_metrics`] has the
+    /// per-replica breakdown.
     pub metrics: Arc<Mutex<ServeMetrics>>,
+    replica_metrics: Vec<Arc<Mutex<ServeMetrics>>>,
     stop: Arc<AtomicBool>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     tokens_per_image: usize,
     num_classes: usize,
     compile_ms: f64,
@@ -91,68 +111,127 @@ impl ModelServer {
         Self::start_with_config(manifest, model, policy_wait_ms, RuntimeConfig::new(backend))
     }
 
-    /// Spin up the executor thread for a model's batch variants on the
-    /// configured backend (engine + explicit fabric lane count).
+    /// Spin up the executor replica threads for a model's batch variants
+    /// on the configured backend (engine + explicit fabric lane count +
+    /// replica count).
     ///
-    /// The backend's executors are created *inside* the executor thread:
-    /// the PJRT `xla` handles are not `Send` (Rc-based), so the thread
-    /// owns the whole runtime — which also mirrors the hardware: one
-    /// fabric, one feeder.
+    /// Each replica's executors are created *inside* its own thread: the
+    /// PJRT `xla` handles are not `Send` (Rc-based), so every thread
+    /// owns a whole runtime — which also mirrors the hardware: one
+    /// fabric (or pipeline) per feeder, N feeders behind one queue.
+    /// If any replica fails to load, startup fails as a unit (the
+    /// replicas that did load are shut down and joined first).
     pub fn start_with_config(
         manifest: &Manifest,
         model: &str,
         policy_wait_ms: u64,
         config: RuntimeConfig,
     ) -> crate::Result<Self> {
-        let manifest = manifest.clone();
-        let model_name = model.to_string();
-        let (tx, rx) = channel::<Request>();
-        let (init_tx, init_rx) = channel::<Result<(usize, usize, f64), String>>();
+        let replicas = config.resolve_replicas();
+        let front = Arc::new(FrontQueue::<Request>::new());
+        let (init_tx, init_rx) = channel::<(usize, Result<(usize, usize, f64), String>)>();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let stop = Arc::new(AtomicBool::new(false));
-        let m2 = metrics.clone();
-        let s2 = stop.clone();
         let wait = std::time::Duration::from_millis(policy_wait_ms);
-        let worker = std::thread::spawn(move || {
-            // load/compile all variants up front (the paper's bitstream load)
-            match runtime::load_model(config, &manifest, &model_name) {
-                Err(e) => {
-                    let _ = init_tx.send(Err(format!("{e:#}")));
+        let mut workers = Vec::with_capacity(replicas);
+        let mut replica_metrics = Vec::with_capacity(replicas);
+        for ri in 0..replicas {
+            let manifest = manifest.clone();
+            let model_name = model.to_string();
+            let own = Arc::new(Mutex::new(ServeMetrics::default()));
+            replica_metrics.push(own.clone());
+            let sinks = MetricSinks { rollup: metrics.clone(), own };
+            let q = front.clone();
+            let s2 = stop.clone();
+            let itx = init_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                // load/compile all variants up front (the paper's
+                // bitstream load, once per replica engine)
+                match runtime::load_model(config, &manifest, &model_name) {
+                    Err(e) => {
+                        let _ = itx.send((ri, Err(format!("{e:#}"))));
+                    }
+                    Ok(loaded) => {
+                        let _ = itx.send((
+                            ri,
+                            Ok((loaded.tokens_per_image, loaded.num_classes, loaded.compile_ms)),
+                        ));
+                        // release the init sender BEFORE serving: if a
+                        // sibling replica panics inside load_model (no
+                        // message sent), the starter's recv must observe
+                        // disconnection rather than block behind this
+                        // replica's still-alive sender for the whole
+                        // serve lifetime
+                        drop(itx);
+                        let policy = BatchPolicy::new(
+                            loaded.executors.iter().map(|e| e.batch()).collect(),
+                            wait,
+                        );
+                        executor_loop(
+                            q,
+                            loaded.executors,
+                            policy,
+                            loaded.tokens_per_image,
+                            loaded.num_classes,
+                            sinks,
+                            s2,
+                        );
+                    }
                 }
-                Ok(loaded) => {
-                    let _ = init_tx.send(Ok((
-                        loaded.tokens_per_image,
-                        loaded.num_classes,
-                        loaded.compile_ms,
-                    )));
-                    let policy =
-                        BatchPolicy::new(loaded.executors.iter().map(|e| e.batch()).collect(), wait);
-                    executor_loop(
-                        rx,
-                        loaded.executors,
-                        policy,
-                        loaded.tokens_per_image,
-                        loaded.num_classes,
-                        m2,
-                        s2,
-                    );
+            }));
+        }
+        drop(init_tx);
+
+        // collect every replica's init result before deciding: a partial
+        // fleet must not serve (replicas are interchangeable consumers,
+        // so a silently-missing one would just skew throughput)
+        let mut shape: Option<(usize, usize)> = None;
+        let mut compile_ms = 0.0f64;
+        let mut failures: Vec<String> = Vec::new();
+        for _ in 0..replicas {
+            match init_rx.recv() {
+                Ok((_, Ok((tpi, nc, cms)))) => {
+                    // replicas load the same bundle; a shape mismatch
+                    // means the artifact changed mid-start
+                    match shape {
+                        None => shape = Some((tpi, nc)),
+                        Some(s) if s != (tpi, nc) => {
+                            failures.push(format!(
+                                "replica shape mismatch: {s:?} vs {:?}",
+                                (tpi, nc)
+                            ));
+                        }
+                        Some(_) => {}
+                    }
+                    // loads run concurrently: the deployment pays the max
+                    compile_ms = compile_ms.max(cms);
                 }
+                Ok((ri, Err(e))) => failures.push(format!("replica {ri}: {e}")),
+                Err(_) => failures.push("executor thread died during init".to_string()),
             }
-        });
-        let (tokens_per_image, num_classes, compile_ms) = match init_rx.recv() {
-            Ok(Ok(shape)) => shape,
-            Ok(Err(e)) => return Err(anyhow::anyhow!("model '{model}' failed to load: {e}")),
-            Err(_) => return Err(anyhow::anyhow!("executor thread died during init")),
-        };
+        }
+        if !failures.is_empty() || shape.is_none() {
+            stop.store(true, Ordering::SeqCst);
+            front.close();
+            for w in workers {
+                let _ = w.join();
+            }
+            return Err(anyhow::anyhow!(
+                "model '{model}' failed to load: {}",
+                failures.join("; ")
+            ));
+        }
+        let (tokens_per_image, num_classes) = shape.expect("checked above");
 
         Ok(Self {
             name: model.to_string(),
             config,
-            queue_tx: tx,
+            front,
             next_id: AtomicU64::new(0),
             metrics,
+            replica_metrics,
             stop,
-            worker: Some(worker),
+            workers,
             tokens_per_image,
             num_classes,
             compile_ms,
@@ -171,6 +250,18 @@ impl ModelServer {
     /// The full runtime configuration (backend + explicit lane count).
     pub fn config(&self) -> RuntimeConfig {
         self.config
+    }
+
+    /// Number of executor replicas serving this model's queue.
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Per-replica metrics snapshot (same order as replica indices).
+    /// Each request is recorded by exactly one replica, so these sum to
+    /// the rolled-up [`Self::metrics`] — including `failed`.
+    pub fn replica_metrics(&self) -> Vec<ServeMetrics> {
+        self.replica_metrics.iter().map(|m| m.lock().unwrap().clone()).collect()
     }
 
     pub fn tokens_per_image(&self) -> usize {
@@ -204,7 +295,7 @@ impl ModelServer {
             enqueued: Instant::now(),
             reply: tx,
         };
-        self.queue_tx.send(req).map_err(|_| anyhow::anyhow!("server stopped"))?;
+        self.front.push(req).map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
     }
 
@@ -220,24 +311,49 @@ impl ModelServer {
 impl Drop for ModelServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // unblock the executor by closing the queue; the loop's shutdown
-        // drain then fails every queued + pending request explicitly
-        // (clients blocked on `recv` get an error, not a dropped sender)
-        let (tx, _rx) = channel();
-        let _ = std::mem::replace(&mut self.queue_tx, tx);
-        if let Some(w) = self.worker.take() {
+        // unblock every replica by closing the queue; each loop's
+        // shutdown drain then fails its share of the queued + pending
+        // requests explicitly (clients blocked on `recv` get an error,
+        // not a dropped sender) — one replica per request, no double
+        // counting
+        self.front.close();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
+/// The metric destinations one executor replica records into: the
+/// server-wide rollup (what [`ModelServer::metrics`] exposes) and the
+/// replica's own breakdown. Each request is drained by exactly one
+/// replica, so recording into both sinks keeps `rollup == Σ replicas`
+/// for every counter, including `failed`.
+///
+/// The rollup is deliberately **materialized** rather than derived from
+/// the replica sinks at read time: `ModelServer::metrics` is a shared
+/// `Arc` that callers clone and may read *after* the server (and its
+/// replica sinks) is gone — the shutdown-accounting tests rely on that.
+/// The cost is one extra mutex lock per *batch* (not per request) and a
+/// duplicate latency sample; both are noise next to a dispatch.
+struct MetricSinks {
+    rollup: Arc<Mutex<ServeMetrics>>,
+    own: Arc<Mutex<ServeMetrics>>,
+}
+
+impl MetricSinks {
+    fn each(&self, f: impl Fn(&mut ServeMetrics)) {
+        f(&mut self.rollup.lock().unwrap());
+        f(&mut self.own.lock().unwrap());
+    }
+}
+
 fn executor_loop(
-    rx: Receiver<Request>,
+    front: Arc<FrontQueue<Request>>,
     executables: Vec<Box<dyn Executor>>,
     policy: BatchPolicy,
     tokens_per_image: usize,
     num_classes: usize,
-    metrics: Arc<Mutex<ServeMetrics>>,
+    sinks: MetricSinks,
     stop: Arc<AtomicBool>,
 ) {
     let mut pending: Vec<Request> = Vec::new();
@@ -245,16 +361,27 @@ fn executor_loop(
         if stop.load(Ordering::SeqCst) {
             break 'serve;
         }
-        // top up the pending queue (non-blocking drain, short block if empty)
+        // top up the pending queue (non-blocking drain, bounded block if
+        // empty); other replicas compete on the same front queue, and
+        // each pop transfers exclusive ownership of that request. The
+        // timeout is only a safety poll — pushes and close() both wake
+        // parked poppers immediately, so idle replicas mostly sleep
         if pending.is_empty() {
-            match rx.recv_timeout(std::time::Duration::from_millis(5)) {
-                Ok(r) => pending.push(r),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+            match front.pop_timeout(std::time::Duration::from_millis(100)) {
+                Pop::Item(r) => pending.push(r),
+                Pop::TimedOut => continue,
+                Pop::Closed => break 'serve,
             }
         }
-        while let Ok(r) = rx.try_recv() {
-            pending.push(r);
+        // top up to at most one full largest-variant batch: draining the
+        // whole backlog would hoard requests in this replica's private
+        // `pending` where idle sibling replicas cannot steal them,
+        // collapsing a bursty submission back to single-replica speed
+        while pending.len() < policy.largest() {
+            match front.try_pop() {
+                Some(r) => pending.push(r),
+                None => break,
+            }
         }
 
         let head_waited = pending[0].enqueued.elapsed();
@@ -263,10 +390,10 @@ fn executor_loop(
             // the residual head-of-line deadline instead of burning a core
             // in a sleep/poll spin — a new arrival wakes us early (it may
             // complete a batch), the timeout lands us past the deadline
-            match rx.recv_timeout(policy.residual_wait(head_waited)) {
-                Ok(r) => pending.push(r),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+            match front.pop_timeout(policy.residual_wait(head_waited)) {
+                Pop::Item(r) => pending.push(r),
+                Pop::TimedOut => {}
+                Pop::Closed => break 'serve,
             }
             continue;
         };
@@ -298,7 +425,8 @@ fn executor_loop(
                 // dropping their senders (which left clients hanging on
                 // `recv` until an opaque "reply lost")
                 let msg = format!("{e:#}");
-                metrics.lock().unwrap().failed += reqs.len() as u64;
+                let n = reqs.len() as u64;
+                sinks.each(|m| m.failed += n);
                 for r in reqs {
                     let _ = r.reply.send(Err(anyhow::anyhow!(
                         "executor error running request {}: {msg}",
@@ -312,14 +440,28 @@ fn executor_loop(
         let per_image_exec_ms = exec_ms / reqs.len() as f64;
 
         {
-            let mut m = metrics.lock().unwrap();
-            if m.started.is_none() {
-                m.started = Some(t0);
-            }
-            m.finished = Some(Instant::now());
-            for r in &reqs {
-                m.record(r.enqueued.elapsed(), batch, per_image_exec_ms, queue_ms);
-            }
+            // snapshot the latencies once so rollup and replica sinks
+            // record identical values
+            let finished = Instant::now();
+            let lats: Vec<std::time::Duration> =
+                reqs.iter().map(|r| r.enqueued.elapsed()).collect();
+            sinks.each(|m| {
+                // replicas race on the rollup: keep the EARLIEST start
+                // and the LATEST finish, not first/last-writer-wins —
+                // otherwise a replica recording out of order shrinks
+                // (or inverts) the throughput window
+                m.started = Some(match m.started {
+                    Some(s) if s <= t0 => s,
+                    _ => t0,
+                });
+                m.finished = Some(match m.finished {
+                    Some(f) if f >= finished => f,
+                    _ => finished,
+                });
+                for &lat in &lats {
+                    m.record(lat, batch, per_image_exec_ms, queue_ms);
+                }
+            });
         }
         for (i, r) in reqs.into_iter().enumerate() {
             let logits = out[i * num_classes..(i + 1) * num_classes].to_vec();
@@ -338,13 +480,17 @@ fn executor_loop(
         }
     }
 
-    // shutdown drain: whatever is still queued or pending will never run;
-    // fail each request deterministically so no client hangs on `recv`
-    while let Ok(r) = rx.try_recv() {
+    // shutdown drain: whatever this replica still holds — plus whatever
+    // it can win from the shared queue — will never run; fail each
+    // request deterministically so no client hangs on `recv`. Pops are
+    // exclusive, so concurrent replica drains never fail one request
+    // twice.
+    while let Some(r) = front.try_pop() {
         pending.push(r);
     }
     if !pending.is_empty() {
-        metrics.lock().unwrap().failed += pending.len() as u64;
+        let n = pending.len() as u64;
+        sinks.each(|m| m.failed += n);
         for r in pending {
             let _ = r.reply.send(Err(anyhow::anyhow!(
                 "server shut down before request {} was executed",
@@ -356,9 +502,9 @@ fn executor_loop(
 
 /// Route requests across several models (the vLLM-style front door):
 /// one [`ModelServer`] per model name — each with its own executor
-/// thread and its own fabric or pipeline — with submission routed by
-/// model name and per-model metrics export. `hgpipe serve --models a,b`
-/// drives one of these.
+/// replica fleet, every replica owning its own fabric or pipeline —
+/// with submission routed by model name and per-model + per-replica
+/// metrics export. `hgpipe serve --models a,b` drives one of these.
 pub struct Router {
     servers: Vec<ModelServer>,
 }
@@ -422,11 +568,33 @@ impl Router {
     }
 
     /// Per-model metrics export: a `(model, metrics)` snapshot per
-    /// served model (the front door's observability surface).
+    /// served model (the front door's observability surface). The
+    /// snapshot is the cross-replica rollup; see
+    /// [`Self::metrics_lines`] / [`ModelServer::replica_metrics`] for
+    /// the per-replica breakdown.
     pub fn metrics(&self) -> Vec<(String, ServeMetrics)> {
         self.servers
             .iter()
             .map(|s| (s.name().to_string(), s.metrics.lock().unwrap().clone()))
             .collect()
+    }
+
+    /// Human-readable metric report: one rollup line per model, plus —
+    /// when a model runs more than one executor replica — one line per
+    /// replica with its queue/exec breakdown. The rollup line *is* the
+    /// total (each request is popped and recorded by exactly one
+    /// replica), so the replica lines are a decomposition of it, never
+    /// an addition to it — failed dispatches included.
+    pub fn metrics_lines(&self) -> Vec<String> {
+        let mut lines = Vec::new();
+        for s in &self.servers {
+            lines.push(format!("[{}] {}", s.name(), s.metrics.lock().unwrap().summary()));
+            if s.replicas() > 1 {
+                for (ri, m) in s.replica_metrics().into_iter().enumerate() {
+                    lines.push(format!("[{}/replica{}] {}", s.name(), ri, m.summary()));
+                }
+            }
+        }
+        lines
     }
 }

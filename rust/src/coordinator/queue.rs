@@ -1,0 +1,210 @@
+//! The multi-consumer front queue replicated executors pull from.
+//!
+//! `std::sync::mpsc` is single-consumer (`Receiver` is `!Sync`), so once
+//! a model runs **N executor replicas** the request stream needs a real
+//! MPMC queue: one producer side fed by [`super::ModelServer::submit`],
+//! any number of replica threads competing to pop. A `Mutex<VecDeque>` +
+//! `Condvar` is exactly enough — requests are popped one at a time under
+//! the lock, so every request is owned by **exactly one** replica (the
+//! delivery guarantee and the no-double-counting metrics invariant both
+//! rest on this).
+//!
+//! Close semantics mirror the mpsc disconnect contract the single-
+//! executor loop relied on: after [`FrontQueue::close`], pushes fail
+//! (handing the item back), but queued items keep draining — a popper
+//! observes [`Pop::Closed`] only once the queue is *empty*, so shutdown
+//! never strands an accepted request inside the queue.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outcome of a bounded wait on the queue.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Pop<T> {
+    /// An item was dequeued (this caller now exclusively owns it).
+    Item(T),
+    /// The queue stayed empty for the whole timeout (still open).
+    TimedOut,
+    /// The queue is closed *and* fully drained — end of stream.
+    Closed,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// An unbounded MPMC FIFO shared between one front door and N executor
+/// replicas (share it via `Arc`).
+pub struct FrontQueue<T> {
+    state: Mutex<State<T>>,
+    available: Condvar,
+}
+
+impl<T> Default for FrontQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> FrontQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Enqueue `t`, waking one parked popper. `Err(t)` once the queue is
+    /// closed (the server is shutting down) — the item is handed back so
+    /// the caller can reply with an explicit error instead of dropping
+    /// the request silently.
+    pub fn push(&self, t: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(t);
+        }
+        st.items.push_back(t);
+        drop(st);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue without blocking. Items keep draining after close; `None`
+    /// means only "empty right now", not end-of-stream.
+    pub fn try_pop(&self) -> Option<T> {
+        self.state.lock().unwrap().items.pop_front()
+    }
+
+    /// Dequeue, parking up to `timeout` while the queue is empty and
+    /// open. Returns [`Pop::Closed`] only when closed *and* drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(t) = st.items.pop_front() {
+                return Pop::Item(t);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            // wait_timeout can wake spuriously or at the boundary with an
+            // item just pushed — the loop re-checks items before closed
+            // before deadline, in that order
+            let (guard, _) = self.available.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Close the queue: subsequent pushes fail, queued items keep
+    /// draining, and every parked popper wakes (observing `Closed` once
+    /// the backlog is gone). Idempotent.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+
+    /// Items currently queued (snapshot; racy by nature).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = FrontQueue::new();
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn pop_timeout_times_out_on_open_empty_queue() {
+        let q: FrontQueue<u8> = FrontQueue::new();
+        let t0 = Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(20)), Pop::TimedOut);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn close_drains_before_reporting_closed() {
+        let q = FrontQueue::new();
+        q.push(1u8).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(q.push(3), Err(3), "push after close hands the item back");
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(1));
+        assert_eq!(q.try_pop(), Some(2), "queued items drain after close");
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed);
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed, "Closed is sticky");
+    }
+
+    #[test]
+    fn close_wakes_parked_poppers() {
+        let q: Arc<FrontQueue<u8>> = Arc::new(FrontQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(30)));
+        // no deterministic "is parked" signal — close is required to wake
+        // a popper whether it parked already or is about to
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), Pop::Closed);
+    }
+
+    #[test]
+    fn push_wakes_a_parked_popper() {
+        let q: Arc<FrontQueue<u32>> = Arc::new(FrontQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(5));
+        q.push(42).unwrap();
+        assert_eq!(h.join().unwrap(), Pop::Item(42));
+    }
+
+    #[test]
+    fn every_item_is_popped_exactly_once_across_consumers() {
+        let q: Arc<FrontQueue<usize>> = Arc::new(FrontQueue::new());
+        let n = 200usize;
+        let consumers = 4usize;
+        let mut handles = Vec::new();
+        for _ in 0..consumers {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    match q.pop_timeout(Duration::from_secs(10)) {
+                        Pop::Item(v) => got.push(v),
+                        Pop::Closed => return got,
+                        Pop::TimedOut => panic!("test queue should close, not time out"),
+                    }
+                }
+            }));
+        }
+        for i in 0..n {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "each item exactly once, none lost");
+    }
+}

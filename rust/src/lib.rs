@@ -50,19 +50,31 @@
 //! heap allocation in GEMM/attention scratch; a fully-serial forward
 //! runs lock-free in a single scratch box.
 //!
+//! Spatial execution slices the encoder **work-proportionally**: a
+//! per-segment GEMM-MAC cost model picks the contiguous block partition
+//! with the smallest bottleneck stage, dedicating a resident stage to
+//! patch-embed when that evens occupancy out (fully unrolled =
+//! `depth + 1` stages). And one model can scale **out**: `--replicas N`
+//! (env fallback `HGPIPE_REPLICAS`) runs N executor replicas per
+//! [`coordinator::ModelServer`], pulling from one shared MPMC front
+//! queue, each replica owning its own fabric or resident pipeline, with
+//! per-replica metrics rolled up without double counting.
+//!
 //! Lane-count precedence: the `hgpipe serve`/`eval` **`--lanes N`** flag
 //! (threaded explicitly via [`runtime::RuntimeConfig`] — the binary
 //! never mutates its environment), then the **`HGPIPE_LANES`** env var
 //! (read-only fallback), then the machine's available parallelism.
 //! `--lanes 1` / `HGPIPE_LANES=1` forces fully serial execution. The
-//! execution mode resolves the same way (`--pipeline`, then
-//! `HGPIPE_MODE`). Results are bit-identical at every lane count, stage
-//! count and queue depth — `cargo test` pins lane counts 1, 2, 7 and 16
-//! and stage counts 1, 2, 4 and max against the golden fixture — and
-//! `make bench-json` reports scalar / spawn-pool / persistent-pool /
-//! pipeline throughput, lane- and stage-scaling sweeps, per-stage
-//! occupancy + bubble counts and per-op breakdowns into
-//! `BENCH_interpreter.json`.
+//! execution mode and replica count resolve the same way (`--pipeline` /
+//! `--replicas`, then `HGPIPE_MODE` / `HGPIPE_REPLICAS`). Results are
+//! bit-identical at every lane count, stage count, queue depth and
+//! replica count — `cargo test` pins lane counts 1, 2, 7 and 16, stage
+//! counts 1, 2, 4 and max, and replica counts 1, 2 and 4 against the
+//! golden fixture — and `make bench-json` reports scalar / spawn-pool /
+//! persistent-pool / pipeline throughput, lane-, stage- and
+//! replica-scaling sweeps, per-stage occupancy + bubble counts and
+//! per-op breakdowns into `BENCH_interpreter.json` (`make bench-check`
+//! gates CI on it against `BENCH_baseline.json`).
 //!
 //! Python never runs on the request path: the build pipeline (`make
 //! artifacts` for the full set, `make golden` for the interpreter

@@ -82,11 +82,12 @@ impl Args {
         BackendKind::parse(&self.flag("backend", "interpreter"))
     }
 
-    /// The full runtime configuration: backend, the `--lanes` flag, and
-    /// the execution mode, all threaded through explicitly. `--lanes`
-    /// beats `HGPIPE_LANES` and `--pipeline` beats `HGPIPE_MODE` —
-    /// the binary never mutates its own environment (`set_var` is
-    /// unsound once threads exist).
+    /// The full runtime configuration: backend, the `--lanes` flag, the
+    /// execution mode, and the `--replicas` executor count, all threaded
+    /// through explicitly. `--lanes` beats `HGPIPE_LANES`, `--pipeline`
+    /// beats `HGPIPE_MODE`, `--replicas` beats `HGPIPE_REPLICAS` — the
+    /// binary never mutates its own environment (`set_var` is unsound
+    /// once threads exist).
     fn runtime_config(&self) -> Result<RuntimeConfig> {
         let lanes = match self.flags.get("lanes") {
             None => None,
@@ -95,6 +96,16 @@ impl Args {
                     anyhow::anyhow!("--lanes expects a positive integer, got '{v}'")
                 })?;
                 anyhow::ensure!(n >= 1, "--lanes must be at least 1");
+                Some(n)
+            }
+        };
+        let replicas = match self.flags.get("replicas") {
+            None => None,
+            Some(v) => {
+                let n: usize = v.parse().map_err(|_| {
+                    anyhow::anyhow!("--replicas expects a positive integer, got '{v}'")
+                })?;
+                anyhow::ensure!(n >= 1, "--replicas must be at least 1");
                 Some(n)
             }
         };
@@ -114,7 +125,10 @@ impl Args {
                 "--pipeline requires the interpreter backend"
             );
             let stages: usize = self.flag("stages", "0").parse().map_err(|_| {
-                anyhow::anyhow!("--stages expects a non-negative integer (0 = one per block)")
+                anyhow::anyhow!(
+                    "--stages expects a non-negative integer \
+                     (0 = auto: embed stage + one per block)"
+                )
             })?;
             let queue_depth: usize = self
                 .flag("queue-depth", &pipeline::DEFAULT_QUEUE_DEPTH.to_string())
@@ -131,7 +145,10 @@ impl Args {
             );
             ExecMode::Auto
         };
-        Ok(RuntimeConfig::new(backend).with_lanes(lanes).with_mode(mode))
+        Ok(RuntimeConfig::new(backend)
+            .with_lanes(lanes)
+            .with_mode(mode)
+            .with_replicas(replicas))
     }
 }
 
@@ -183,10 +200,12 @@ COMMANDS:
                            [--model tiny-synth | --models a,b] [--requests N]
                            [--rate R/s] [--artifacts DIR]
                            [--backend interpreter|pjrt] [--lanes N]
+                           [--replicas N]
                            [--pipeline [--stages N] [--queue-depth N]]
   eval                     eval-batch accuracy of a quantized model
                            [--model tiny-synth] [--artifacts DIR]
                            [--backend interpreter|pjrt] [--lanes N]
+                           [--replicas N]
                            [--pipeline [--stages N] [--queue-depth N]]
   artifacts                list the artifact manifest [--artifacts DIR]
 
@@ -196,11 +215,16 @@ JSON in the artifacts dir); `--backend pjrt` needs `--features pjrt`.
 for this invocation; unset, the HGPIPE_LANES env var is consulted, then
 the machine's available parallelism. `--pipeline` switches the
 interpreter to the hybrid-grained spatial executor: the model unrolled
-into `--stages` resident stages (0 = one per encoder block) connected
-by bounded queues of `--queue-depth` tiles; unset, the HGPIPE_MODE env
-var is consulted (`pipeline` | `lane-parallel`). `--models a,b` serves
-several models behind one router with per-model metrics. Results are
-bit-identical at every lane count, stage count and queue depth.
+into `--stages` resident stages (0 = auto: a dedicated patch-embed
+stage plus one per encoder block, sliced work-proportionally by a GEMM
+MAC cost model) connected by bounded queues of `--queue-depth` tiles;
+unset, the HGPIPE_MODE env var is consulted (`pipeline` |
+`lane-parallel`). `--replicas N` scales a model out to N executor
+replicas pulling from one shared queue, each owning its own fabric or
+pipeline (env fallback: HGPIPE_REPLICAS). `--models a,b` serves several
+models behind one router with per-model and per-replica metrics.
+Results are bit-identical at every lane count, stage count, queue depth
+and replica count.
 ";
 
 fn cmd_report(args: &Args) -> Result<()> {
@@ -340,9 +364,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for model in router.models() {
         let s = router.server(model).expect("router started this model");
         println!(
-            "serving '{}' on {} backend ({} token values/img, {} classes, loaded in {:.0} ms)",
+            "serving '{}' on {} backend x{} executor replica(s) \
+             ({} token values/img, {} classes, loaded in {:.0} ms)",
             model,
             config.backend.label(),
+            s.replicas(),
             s.tokens_per_image(),
             s.num_classes(),
             s.compile_ms()
@@ -404,8 +430,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             answered as f64 / dt.as_secs_f64()
         );
     }
-    for (model, metrics) in router.metrics() {
-        println!("[{model}] {}", metrics.summary());
+    for line in router.metrics_lines() {
+        println!("{line}");
     }
     Ok(())
 }

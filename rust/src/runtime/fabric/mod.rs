@@ -35,7 +35,10 @@
 //! clones drive the same workers and the same scratch arena. When the
 //! last handle drops, the pool flags shutdown, wakes every parked
 //! worker, and **joins** them — model unload never leaks threads (the
-//! lifecycle test asserts this via [`LanePool::live_workers`]).
+//! lifecycle test asserts this via [`LanePool::live_workers`]). Under
+//! multi-executor scale-out (`RuntimeConfig::replicas`) each replica
+//! loads its own model and therefore owns its own pool: fabrics are
+//! never shared across replicas, mirroring one engine per feeder.
 //!
 //! ## Lane count
 //!

@@ -77,7 +77,9 @@ pub enum ExecMode {
     /// Spatial execution: resident transformer stages with bounded
     /// inter-stage queues ([`pipeline`]).
     Pipeline {
-        /// Resident stage count; `0` = auto (one stage per block).
+        /// Resident stage count; `0` = auto (fully unrolled: a
+        /// dedicated patch-embed stage plus one stage per block,
+        /// clamped to `depth + 1`).
         stages: usize,
         /// Bounded inter-stage FIFO depth in tiles (min 1).
         queue_depth: usize,
@@ -137,11 +139,18 @@ pub struct RuntimeConfig {
     pub lanes: Option<usize>,
     /// Temporal vs spatial execution (interpreter backend only).
     pub mode: ExecMode,
+    /// Executor replicas per model: how many executor threads the
+    /// coordinator runs for one model, each owning its **own** fabric
+    /// (lane-parallel mode) or its own resident pipeline (pipeline
+    /// mode — the pipeline feeder is SPSC, so replication happens at
+    /// the pipeline boundary, not inside it), all pulling from one
+    /// shared front queue. `None` defers to `HGPIPE_REPLICAS`, then 1.
+    pub replicas: Option<usize>,
 }
 
 impl RuntimeConfig {
     pub fn new(backend: BackendKind) -> Self {
-        Self { backend, lanes: None, mode: ExecMode::Auto }
+        Self { backend, lanes: None, mode: ExecMode::Auto, replicas: None }
     }
 
     /// Set (or clear) the explicit lane count.
@@ -154,6 +163,40 @@ impl RuntimeConfig {
     pub fn with_mode(mut self, mode: ExecMode) -> Self {
         self.mode = mode;
         self
+    }
+
+    /// Set (or clear) the explicit executor replica count (beats
+    /// `HGPIPE_REPLICAS`). A value of 0 clamps to 1 at resolution.
+    pub fn with_replicas(mut self, replicas: Option<usize>) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    /// The executor replica count this config resolves to: the explicit
+    /// value wins, else the `HGPIPE_REPLICAS` env fallback, else 1.
+    /// Always at least 1.
+    pub fn resolve_replicas(&self) -> usize {
+        self.replicas.unwrap_or_else(Self::replicas_from_env).max(1)
+    }
+
+    /// The `HGPIPE_REPLICAS` read-only env fallback (mirrors
+    /// `HGPIPE_LANES` / `HGPIPE_MODE`: nothing in this crate mutates
+    /// it). Unset means 1 executor per model — the pre-scale-out
+    /// layout; an unparseable value warns rather than silently changing
+    /// the serving topology.
+    pub fn replicas_from_env() -> usize {
+        match std::env::var("HGPIPE_REPLICAS") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) => n.max(1),
+                Err(_) => {
+                    eprintln!(
+                        "warning: HGPIPE_REPLICAS='{v}' is not a replica count; using 1"
+                    );
+                    1
+                }
+            },
+            Err(_) => 1,
+        }
     }
 }
 

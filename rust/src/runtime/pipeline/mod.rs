@@ -7,8 +7,13 @@
 //!
 //! * **Coarse grain**: the encoder blocks are partitioned into
 //!   contiguous slices, each pinned to its own persistent worker thread
-//!   ([`stage`]) with stage-resident scratch. The patch-embed front
-//!   rides with the first stage, the classifier head with the last.
+//!   ([`stage`]) with stage-resident scratch. The slicing is
+//!   **work-proportional** by default ([`PartitionStrategy`]): a
+//!   per-segment cost model (GEMM MACs of the patch-embed, block and
+//!   head segments) picks the contiguous partition with the smallest
+//!   bottleneck stage, dedicating a stage to the patch-embed front
+//!   whenever that evens out occupancy — otherwise embed rides the
+//!   first stage; the classifier head always rides the last.
 //!   Different images occupy different stages simultaneously, so
 //!   steady-state throughput is set by the **slowest stage**, not the
 //!   sum of all layers. Each stage only ever touches its own slice's
@@ -69,28 +74,55 @@ pub fn live_stages() -> usize {
     LIVE_STAGES.load(Ordering::SeqCst)
 }
 
+/// How the encoder blocks are sliced across resident stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionStrategy {
+    /// Slice by a per-segment **cost model** (GEMM MACs of the
+    /// patch-embed, per-block, and head segments): minimize the
+    /// bottleneck stage over all contiguous partitions, which
+    /// dedicates a stage to patch-embed whenever that evens out
+    /// fully-unrolled occupancy. The default.
+    #[default]
+    WorkProportional,
+    /// PR-4's near-even block-count split (patch-embed always rides
+    /// stage 0). Kept as the baseline the cost model is measured
+    /// against in `benches/interpreter.rs`.
+    NearEven,
+}
+
 /// How to spatially unroll a model.
 #[derive(Debug, Clone, Copy)]
 pub struct PipelineConfig {
-    /// Requested resident stage count. `0` means auto: one stage per
-    /// encoder block (the paper's fully-unrolled layout). Clamped to
-    /// `[1, depth]` — more stages than blocks would sit empty.
+    /// Requested resident stage count. `0` means auto: fully unrolled —
+    /// one stage per encoder block **plus** the dedicated patch-embed
+    /// stage. Clamped to `[1, depth + 1]` — more stages than segments
+    /// would sit empty.
     pub stages: usize,
     /// Bounded inter-stage FIFO depth, in tiles (min 1).
     pub queue_depth: usize,
     /// Total fine-grained lane budget, split evenly across stages
     /// (each stage gets at least its own thread).
     pub lanes: usize,
+    /// Near-even block slicing vs the work-proportional cost model.
+    pub partition: PartitionStrategy,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        Self { stages: 0, queue_depth: DEFAULT_QUEUE_DEPTH, lanes: 1 }
+        Self {
+            stages: 0,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            lanes: 1,
+            partition: PartitionStrategy::default(),
+        }
     }
 }
 
 fn resolve_stage_count(depth: usize, requested: usize) -> usize {
-    let max = depth.max(1);
+    // depth + 1 partitionable segments: patch-embed plus each block
+    // (the head always rides the last stage — it is orders of magnitude
+    // lighter than any GEMM segment)
+    let max = depth + 1;
     if requested == 0 {
         max
     } else {
@@ -99,8 +131,9 @@ fn resolve_stage_count(depth: usize, requested: usize) -> usize {
 }
 
 /// Near-even contiguous partition of `depth` blocks into `stages`
-/// slices (the first `depth % stages` slices take one extra block).
-fn partition(depth: usize, stages: usize) -> Vec<Range<usize>> {
+/// slices (the first `depth % stages` slices take one extra block;
+/// with more stages than blocks the tail slices are empty).
+fn partition_near_even(depth: usize, stages: usize) -> Vec<Range<usize>> {
     let base = depth / stages;
     let extra = depth % stages;
     let mut parts = Vec::with_capacity(stages);
@@ -111,6 +144,81 @@ fn partition(depth: usize, stages: usize) -> Vec<Range<usize>> {
         b0 += take;
     }
     parts
+}
+
+/// GEMM MAC counts for the three segment kinds of the forward pass —
+/// the cost model driving [`PartitionStrategy::WorkProportional`].
+/// Attention's two token×token matmuls count as GEMM work too; the LUT
+/// and LayerNorm passes ride the same bands and scale with the same
+/// terms, so MACs are a faithful relative weight.
+fn segment_costs(net: &QuantViT) -> (f64, f64, f64) {
+    let t = net.tokens as f64;
+    let d = net.dim as f64;
+    let h = net.hidden as f64;
+    let pd = net.patch_dim as f64;
+    let embed = t * pd * d;
+    // qkv (d -> 3d) + proj (d -> d) + mlp up (d -> h) + mlp down (h -> d)
+    // per token, plus the score and probability-x-V matmuls (t*t*d each)
+    let block = t * (d * 3.0 * d + d * d + d * h + h * d) + 2.0 * t * t * d;
+    let head = t * d + d * net.num_classes as f64;
+    (embed, block, head)
+}
+
+/// Contiguous partition of `items` into exactly `stages` non-empty
+/// groups minimizing the maximum group sum (the classic linear
+/// partition DP — `items.len()` is at most depth+1, so O(n²·s) is
+/// trivially cheap at load time). Deterministic: ties keep the earliest
+/// cut found.
+fn min_bottleneck_groups(items: &[f64], stages: usize) -> Vec<Range<usize>> {
+    let n = items.len();
+    debug_assert!(stages >= 1 && stages <= n, "stages {stages} for {n} items");
+    let mut pre = vec![0.0f64; n + 1];
+    for (i, &c) in items.iter().enumerate() {
+        pre[i + 1] = pre[i] + c;
+    }
+    // dp[k][i]: min achievable bottleneck splitting items[0..i] into k
+    // groups; cut[k][i]: the j that starts the k-th group
+    let mut dp = vec![vec![f64::INFINITY; n + 1]; stages + 1];
+    let mut cut = vec![vec![0usize; n + 1]; stages + 1];
+    dp[0][0] = 0.0;
+    for k in 1..=stages {
+        // leave at least one item per remaining group
+        for i in k..=(n - (stages - k)) {
+            for j in (k - 1)..i {
+                let cand = dp[k - 1][j].max(pre[i] - pre[j]);
+                if cand < dp[k][i] {
+                    dp[k][i] = cand;
+                    cut[k][i] = j;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![n];
+    let mut i = n;
+    for k in (1..=stages).rev() {
+        i = cut[k][i];
+        bounds.push(i);
+    }
+    bounds.reverse();
+    bounds.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+/// Work-proportional block slices for `stages` resident stages. The
+/// partitionable sequence is `[embed, block 0, …, block depth-1]` with
+/// the (tiny) head cost folded into the final item; the returned ranges
+/// are encoder-block ranges per stage — stage 0's may be **empty**,
+/// which is the dedicated patch-embed stage.
+fn partition_work(embed: f64, block_costs: &[f64], head: f64, stages: usize) -> Vec<Range<usize>> {
+    let mut items = Vec::with_capacity(block_costs.len() + 1);
+    items.push(embed);
+    items.extend_from_slice(block_costs);
+    if let Some(last) = items.last_mut() {
+        *last += head;
+    }
+    let groups = min_bottleneck_groups(&items, stages.min(items.len()));
+    // item 0 is embed; item i >= 1 is block i-1. Group [a, b) therefore
+    // covers blocks [max(a,1)-1, b-1).
+    groups.into_iter().map(|g| g.start.max(1) - 1..g.end - 1).collect()
 }
 
 /// One stage's cumulative counters, snapshotted.
@@ -203,6 +311,7 @@ pub struct Pipeline {
     meta: Vec<StageMeta>,
     workers: Vec<std::thread::JoinHandle<()>>,
     queue_depth: usize,
+    partition: PartitionStrategy,
 }
 
 impl Pipeline {
@@ -213,7 +322,13 @@ impl Pipeline {
         let stages = resolve_stage_count(depth, cfg.stages);
         let queue_depth = cfg.queue_depth.max(1);
         let per_stage_lanes = (cfg.lanes / stages).max(1);
-        let parts = partition(depth, stages);
+        let parts = match cfg.partition {
+            PartitionStrategy::NearEven => partition_near_even(depth, stages),
+            PartitionStrategy::WorkProportional => {
+                let (embed, block, head) = segment_costs(&net);
+                partition_work(embed, &vec![block; depth], head, stages)
+            }
+        };
 
         let (in_tx, in_rx, in_stats) = channel::bounded::<Work>(queue_depth);
         let (out_tx, out_rx) = std::sync::mpsc::channel::<(usize, Vec<f64>)>();
@@ -318,6 +433,7 @@ impl Pipeline {
             meta,
             workers,
             queue_depth,
+            partition: cfg.partition,
         }
     }
 
@@ -327,6 +443,11 @@ impl Pipeline {
 
     pub fn queue_depth(&self) -> usize {
         self.queue_depth
+    }
+
+    /// The block-slicing strategy this pipeline was built with.
+    pub fn partition_strategy(&self) -> PartitionStrategy {
+        self.partition
     }
 
     /// Fine-grained lanes inside each stage.
@@ -510,7 +631,10 @@ pub fn load_model(
 ) -> crate::Result<LoadedModel> {
     let (net, batches, bundle_ms) = interpreter::load_bundle(manifest, model)?;
     let t0 = Instant::now();
-    let pipe = Arc::new(Pipeline::new(net.clone(), PipelineConfig { stages, queue_depth, lanes }));
+    let pipe = Arc::new(Pipeline::new(
+        net.clone(),
+        PipelineConfig { stages, queue_depth, lanes, ..Default::default() },
+    ));
     let load_ms = bundle_ms + t0.elapsed().as_secs_f64() * 1e3;
     let executors: Vec<Box<dyn Executor>> = batches
         .iter()
@@ -535,19 +659,24 @@ pub fn load_model(
 mod tests {
     use super::*;
 
+    /// Contiguity + exactly-once coverage shared by both strategies.
+    fn assert_covers(parts: &[Range<usize>], depth: usize, stages: usize, ctx: &str) {
+        assert_eq!(parts.len(), stages, "{ctx}");
+        let mut next = 0usize;
+        for p in parts {
+            assert_eq!(p.start, next, "contiguous ({ctx})");
+            assert!(p.end >= p.start);
+            next = p.end;
+        }
+        assert_eq!(next, depth, "all blocks covered ({ctx})");
+    }
+
     #[test]
-    fn partition_covers_all_blocks_exactly_once() {
+    fn near_even_partition_covers_all_blocks_exactly_once() {
         for depth in 1..=12usize {
-            for stages in 1..=depth {
-                let parts = partition(depth, stages);
-                assert_eq!(parts.len(), stages);
-                let mut next = 0usize;
-                for p in &parts {
-                    assert_eq!(p.start, next, "contiguous ({depth},{stages})");
-                    assert!(p.end >= p.start);
-                    next = p.end;
-                }
-                assert_eq!(next, depth, "all blocks covered ({depth},{stages})");
+            for stages in 1..=depth + 1 {
+                let parts = partition_near_even(depth, stages);
+                assert_covers(&parts, depth, stages, &format!("near-even {depth},{stages}"));
                 // near-even: sizes differ by at most one
                 let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
                 let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
@@ -557,11 +686,95 @@ mod tests {
     }
 
     #[test]
+    fn work_partition_covers_all_blocks_exactly_once() {
+        for depth in 1..=12usize {
+            let blocks = vec![8.0f64; depth];
+            for stages in 1..=depth + 1 {
+                for embed in [0.5f64, 4.0, 30.0] {
+                    let parts = partition_work(embed, &blocks, 0.1, stages);
+                    assert_covers(
+                        &parts,
+                        depth,
+                        stages,
+                        &format!("work {depth},{stages},embed {embed}"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_bottleneck_beats_or_matches_any_even_split() {
+        let items = [3.0f64, 8.0, 8.0, 8.0, 8.0];
+        let groups = min_bottleneck_groups(&items, 2);
+        // optimal 2-way cut: [3,8,8] | [8,8] -> bottleneck 19 (vs 24/27)
+        let sums: Vec<f64> =
+            groups.iter().map(|g| items[g.clone()].iter().sum()).collect();
+        let bottleneck = sums.iter().cloned().fold(0.0f64, f64::max);
+        assert!((bottleneck - 19.0).abs() < 1e-9, "got {sums:?}");
+    }
+
+    #[test]
+    fn fully_unrolled_work_partition_dedicates_the_embed_stage() {
+        // 4 blocks, 5 stages: every segment gets its own stage, so
+        // stage 0 carries embed alone (an empty block range)
+        let parts = partition_work(3.0, &[8.0; 4], 0.1, 5);
+        assert_eq!(parts[0], 0..0, "stage 0 is the dedicated embed stage");
+        for (si, p) in parts.iter().enumerate().skip(1) {
+            assert_eq!(p.len(), 1, "stage {si} holds exactly one block");
+        }
+    }
+
+    #[test]
+    fn heavy_embed_offloads_blocks_from_stage_zero() {
+        // embed outweighs two blocks (the deit-tiny ci=192 situation):
+        // at 3 stages over 4 blocks the cost model must NOT put a block
+        // next to embed when [E | 2B | 2B] has the smaller bottleneck
+        let parts = partition_work(20.0, &[8.0; 4], 0.1, 3);
+        assert_eq!(parts[0], 0..0, "heavy embed stands alone");
+        assert_eq!(parts[1], 0..2);
+        assert_eq!(parts[2], 2..4);
+    }
+
+    #[test]
+    fn work_partition_bottleneck_never_exceeds_near_even() {
+        for depth in 1..=12usize {
+            for stages in 1..=depth + 1 {
+                for embed in [0.5f64, 8.0, 40.0] {
+                    let (block, head) = (8.0f64, 0.1f64);
+                    let cost = |parts: &[Range<usize>]| -> f64 {
+                        parts
+                            .iter()
+                            .enumerate()
+                            .map(|(si, p)| {
+                                let mut c = p.len() as f64 * block;
+                                if si == 0 {
+                                    c += embed;
+                                }
+                                if si + 1 == parts.len() {
+                                    c += head;
+                                }
+                                c
+                            })
+                            .fold(0.0f64, f64::max)
+                    };
+                    let work = cost(&partition_work(embed, &vec![block; depth], head, stages));
+                    let even = cost(&partition_near_even(depth, stages));
+                    assert!(
+                        work <= even + 1e-9,
+                        "({depth},{stages},embed {embed}): work {work} > near-even {even}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn stage_count_resolution() {
-        assert_eq!(resolve_stage_count(4, 0), 4, "auto = one stage per block");
+        assert_eq!(resolve_stage_count(4, 0), 5, "auto = embed stage + one per block");
         assert_eq!(resolve_stage_count(4, 1), 1);
         assert_eq!(resolve_stage_count(4, 3), 3);
-        assert_eq!(resolve_stage_count(4, 99), 4, "clamped to depth");
+        assert_eq!(resolve_stage_count(4, 99), 5, "clamped to depth + 1");
         assert_eq!(resolve_stage_count(0, 0), 1, "blockless model still has a stage");
     }
 }

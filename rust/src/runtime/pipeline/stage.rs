@@ -34,7 +34,9 @@ pub(crate) struct Work {
     pub(crate) x: Vec<i32>,
 }
 
-/// What one stage executes: which encoder blocks, and whether the
+/// What one stage executes: which encoder blocks (possibly an empty
+/// range — the work-proportional partition dedicates a block-less stage
+/// to patch-embed when that evens out occupancy), and whether the
 /// patch-embed front and/or the classifier head are fused in.
 pub(crate) struct StageSpec {
     pub(crate) embed: bool,

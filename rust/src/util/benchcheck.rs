@@ -1,0 +1,355 @@
+//! Schema + perf-regression checks for `BENCH_interpreter.json` — the
+//! library behind the `bench_check` binary (`make bench-check`, the CI
+//! gate that runs right after the smoke bench).
+//!
+//! Two independent checks:
+//!
+//! * [`schema_errors`] — the bench artifact must contain every field the
+//!   README documents (including the `scale_out` section), so the schema
+//!   cannot silently drift away from the docs: the bench emits its JSON
+//!   by hand (no serde offline), and a renamed or dropped key would
+//!   otherwise only be noticed by whoever next reads the artifact.
+//! * [`regression_errors`] — headline throughputs (`fabric_pooled_img_s`
+//!   and `pipeline.img_s`) must not fall below the committed floors in
+//!   `BENCH_baseline.json` by more than the baseline's own `tolerance`.
+//!   The floors are deliberately generous (CI runners are noisy and
+//!   heterogeneous): the gate exists to catch *catastrophic* regressions
+//!   — an accidentally-serial fabric, a deadlocked pipeline limping on
+//!   timeouts — not 10% jitter.
+//!
+//! Bit-exactness needs no checking here: the bench binary self-checks
+//! fabric-, pipeline- and replica-vs-naive logits before timing and
+//! exits non-zero on divergence, which already fails the CI step.
+
+use crate::util::json::Json;
+
+/// Walk a dotted path through nested objects.
+pub fn lookup<'a>(doc: &'a Json, path: &str) -> Option<&'a Json> {
+    path.split('.').try_fold(doc, |d, k| d.get(k))
+}
+
+/// Every dotted path the README documents for `BENCH_interpreter.json`.
+/// Arrays are validated element-wise by [`schema_errors`] with the
+/// per-element keys below.
+const REQUIRED_PATHS: &[&str] = &[
+    "model",
+    "smoke",
+    "images",
+    "lanes",
+    "scalar_naive_img_s",
+    "fabric_serial_img_s",
+    "spawn_pooled_img_s",
+    "fabric_pooled_img_s",
+    "speedup_pooled_vs_naive",
+    "speedup_pooled_vs_serial",
+    "speedup_persistent_vs_spawn",
+    "gemm_microkernel.shape",
+    "gemm_microkernel.dense_speedup_vs_naive",
+    "gemm_microkernel.sparse_speedup_vs_naive",
+    "lane_sweep",
+    "pipeline.stages",
+    "pipeline.queue_depth",
+    "pipeline.lanes_per_stage",
+    "pipeline.img_s",
+    "pipeline.speedup_vs_lane_parallel",
+    "pipeline.window.rounds",
+    "pipeline.window.images_per_round",
+    "pipeline.window.wall_ms",
+    "pipeline.fill_drain_bubbles",
+    "pipeline.backpressure_stalls",
+    "pipeline.stage_sweep",
+    "pipeline.per_stage",
+    "scale_out.replica_sweep",
+    "scale_out.partition.stages",
+    "scale_out.partition.near_even.stages",
+    "scale_out.partition.near_even.img_s",
+    "scale_out.partition.near_even.per_stage_busy_ms",
+    "scale_out.partition.near_even.max_min_busy_ratio",
+    "scale_out.partition.near_even_pr4.stages",
+    "scale_out.partition.near_even_pr4.img_s",
+    "scale_out.partition.near_even_pr4.per_stage_busy_ms",
+    "scale_out.partition.near_even_pr4.max_min_busy_ratio",
+    "scale_out.partition.work_proportional.stages",
+    "scale_out.partition.work_proportional.img_s",
+    "scale_out.partition.work_proportional.per_stage_busy_ms",
+    "scale_out.partition.work_proportional.max_min_busy_ratio",
+    "per_op_ms_per_image.gemm",
+    "per_op_ms_per_image.attention",
+    "per_op_ms_per_image.layernorm",
+    "per_op_ms_per_image.requant",
+    "per_op_pooled_ms_per_image.gemm",
+    "per_op_pooled_ms_per_image.attention",
+    "per_op_pooled_ms_per_image.layernorm",
+    "per_op_pooled_ms_per_image.requant",
+];
+
+/// `(array path, required keys of each element)`.
+const REQUIRED_ARRAY_ELEMENTS: &[(&str, &[&str])] = &[
+    ("lane_sweep", &["lanes", "persistent_img_s", "spawn_img_s"]),
+    ("pipeline.stage_sweep", &["stages", "img_s"]),
+    (
+        "pipeline.per_stage",
+        &["name", "blocks", "lanes", "images", "busy_ms", "occupancy", "stalls_empty", "stalls_full"],
+    ),
+    ("scale_out.replica_sweep", &["replicas", "img_s", "speedup_vs_1", "per_replica"]),
+];
+
+/// Validate `doc` against the documented `BENCH_interpreter.json`
+/// schema; returns one message per missing/ill-typed piece (empty =
+/// valid).
+pub fn schema_errors(doc: &Json) -> Vec<String> {
+    let mut errs = Vec::new();
+    for path in REQUIRED_PATHS {
+        if lookup(doc, path).is_none() {
+            errs.push(format!("missing key: {path}"));
+        }
+    }
+    for (path, keys) in REQUIRED_ARRAY_ELEMENTS {
+        let Some(arr) = lookup(doc, path) else {
+            continue; // already reported as missing above (or by REQUIRED_PATHS)
+        };
+        let Some(items) = arr.as_arr() else {
+            errs.push(format!("{path} is not an array"));
+            continue;
+        };
+        if items.is_empty() {
+            errs.push(format!("{path} is empty"));
+        }
+        for (i, item) in items.iter().enumerate() {
+            for k in *keys {
+                if item.get(k).is_none() {
+                    errs.push(format!("{path}[{i}] missing key: {k}"));
+                }
+            }
+        }
+    }
+    // the replica sweep nests one more documented array: each replica's
+    // window breakdown ({images, exec_ms, occupancy})
+    if let Some(items) = lookup(doc, "scale_out.replica_sweep").and_then(Json::as_arr) {
+        for (i, item) in items.iter().enumerate() {
+            let Some(prs) = item.get("per_replica").and_then(Json::as_arr) else {
+                continue; // absence already reported by the element loop
+            };
+            if prs.is_empty() {
+                errs.push(format!("scale_out.replica_sweep[{i}].per_replica is empty"));
+            }
+            for (j, pr) in prs.iter().enumerate() {
+                for k in ["images", "exec_ms", "occupancy"] {
+                    if pr.get(k).is_none() {
+                        errs.push(format!(
+                            "scale_out.replica_sweep[{i}].per_replica[{j}] missing key: {k}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    errs
+}
+
+/// Throughput keys gated against the baseline:
+/// `(baseline key, bench path, human label)`.
+const GATED: &[(&str, &str, &str)] = &[
+    ("fabric_pooled_img_s", "fabric_pooled_img_s", "lane-parallel pooled throughput"),
+    ("pipeline_img_s", "pipeline.img_s", "pipeline throughput"),
+];
+
+/// Compare the bench artifact against the committed baseline floors.
+/// A gated value may fall below its floor by at most the baseline's
+/// `tolerance` fraction (default 0.4). Missing baseline keys are errors
+/// — a silently-ungated baseline is how regressions slip through.
+pub fn regression_errors(current: &Json, baseline: &Json) -> Vec<String> {
+    let mut errs = Vec::new();
+    let tolerance = match baseline.get("tolerance").and_then(Json::as_f64) {
+        Some(t) if (0.0..1.0).contains(&t) => t,
+        Some(t) => {
+            errs.push(format!("baseline tolerance {t} outside [0, 1)"));
+            return errs;
+        }
+        None => 0.4,
+    };
+    for (base_key, cur_path, label) in GATED {
+        let Some(floor) = baseline.get(base_key).and_then(Json::as_f64) else {
+            errs.push(format!("baseline missing gate key: {base_key}"));
+            continue;
+        };
+        let Some(cur) = lookup(current, cur_path).and_then(Json::as_f64) else {
+            errs.push(format!("bench json missing gated value: {cur_path}"));
+            continue;
+        };
+        let allowed = floor * (1.0 - tolerance);
+        if cur < allowed {
+            errs.push(format!(
+                "{label} regressed: {cur_path} = {cur:.1} img/s < {allowed:.1} \
+                 (baseline {floor:.1} - {tolerance:.0}% tolerance)",
+                tolerance = tolerance * 100.0
+            ));
+        }
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal bench artifact satisfying the documented schema — kept
+    /// in lockstep with what `benches/interpreter.rs` emits (this test
+    /// failing after a bench edit means the schema, README and checker
+    /// need the same update).
+    pub(super) fn sample() -> Json {
+        Json::parse(
+            r#"{
+  "model": "tiny-synth", "smoke": true, "images": 16, "lanes": 4,
+  "scalar_naive_img_s": 100.0, "fabric_serial_img_s": 150.0,
+  "spawn_pooled_img_s": 300.0, "fabric_pooled_img_s": 400.0,
+  "speedup_pooled_vs_naive": 4.0, "speedup_pooled_vs_serial": 2.67,
+  "speedup_persistent_vs_spawn": 1.33,
+  "gemm_microkernel": {"shape": [16, 64, 192], "dense_speedup_vs_naive": 2.0,
+                       "sparse_speedup_vs_naive": 1.5},
+  "lane_sweep": [{"lanes": 1, "persistent_img_s": 150.0, "spawn_img_s": 140.0}],
+  "pipeline": {
+    "stages": 5, "queue_depth": 2, "lanes_per_stage": 1,
+    "img_s": 350.0, "speedup_vs_lane_parallel": 0.9,
+    "window": {"rounds": 3, "images_per_round": 16, "wall_ms": 120.0},
+    "fill_drain_bubbles": 12, "backpressure_stalls": 3,
+    "stage_sweep": [{"stages": 1, "img_s": 160.0}],
+    "per_stage": [{"name": "stage0", "blocks": [0, 0], "lanes": 1, "images": 48,
+                   "busy_ms": 20.0, "occupancy": 0.4, "stalls_empty": 4, "stalls_full": 1}]
+  },
+  "scale_out": {
+    "replica_sweep": [{"replicas": 1, "img_s": 400.0, "speedup_vs_1": 1.0,
+                       "per_replica": [{"images": 64, "exec_ms": 100.0, "occupancy": 0.8}]}],
+    "partition": {
+      "stages": 5,
+      "near_even": {"stages": 5, "img_s": 300.0,
+                    "per_stage_busy_ms": [30.0, 20.0], "max_min_busy_ratio": 12.0},
+      "near_even_pr4": {"stages": 4, "img_s": 310.0,
+                        "per_stage_busy_ms": [30.0, 24.0], "max_min_busy_ratio": 1.3},
+      "work_proportional": {"stages": 5, "img_s": 350.0,
+                            "per_stage_busy_ms": [22.0, 21.0], "max_min_busy_ratio": 3.0}
+    }
+  },
+  "per_op_ms_per_image": {"quantize": 0.1, "gemm": 2.0, "layernorm": 0.3,
+                          "attention": 0.8, "requant": 0.0, "head": 0.1},
+  "per_op_pooled_ms_per_image": {"quantize": 0.1, "gemm": 1.0, "layernorm": 0.2,
+                                 "attention": 0.5, "requant": 0.0, "head": 0.1}
+}"#,
+        )
+        .expect("sample parses")
+    }
+
+    fn baseline() -> Json {
+        Json::parse(
+            r#"{"tolerance": 0.4, "fabric_pooled_img_s": 400.0, "pipeline_img_s": 350.0}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sample_matches_schema() {
+        assert_eq!(schema_errors(&sample()), Vec::<String>::new());
+    }
+
+    #[test]
+    fn missing_scale_out_is_reported() {
+        let mut doc = sample();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("scale_out");
+        }
+        let errs = schema_errors(&doc);
+        assert!(
+            errs.iter().any(|e| e.contains("scale_out")),
+            "scale_out omission must be caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_array_element_key_is_reported() {
+        let mut doc = sample();
+        // drop "spawn_img_s" from the first lane_sweep element
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Arr(a)) = m.get_mut("lane_sweep") {
+                if let Some(Json::Obj(e)) = a.first_mut() {
+                    e.remove("spawn_img_s");
+                }
+            }
+        }
+        let errs = schema_errors(&doc);
+        assert!(
+            errs.iter().any(|e| e.contains("lane_sweep[0]") && e.contains("spawn_img_s")),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_nested_per_replica_key_is_reported() {
+        let mut doc = sample();
+        // drop "occupancy" from replica_sweep[0].per_replica[0]
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(so)) = m.get_mut("scale_out") {
+                if let Some(Json::Arr(sweep)) = so.get_mut("replica_sweep") {
+                    if let Some(Json::Obj(e)) = sweep.first_mut() {
+                        if let Some(Json::Arr(prs)) = e.get_mut("per_replica") {
+                            if let Some(Json::Obj(pr)) = prs.first_mut() {
+                                pr.remove("occupancy");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let errs = schema_errors(&doc);
+        assert!(
+            errs.iter().any(|e| e.contains("per_replica[0]") && e.contains("occupancy")),
+            "nested per_replica drift must be caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        // 40% below 400 is 240: a current of 250 squeaks by
+        let mut doc = sample();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("fabric_pooled_img_s".into(), Json::Num(250.0));
+        }
+        assert_eq!(regression_errors(&doc, &baseline()), Vec::<String>::new());
+    }
+
+    #[test]
+    fn beyond_tolerance_fails_with_a_named_gate() {
+        let mut doc = sample();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("fabric_pooled_img_s".into(), Json::Num(100.0));
+        }
+        let errs = regression_errors(&doc, &baseline());
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("fabric_pooled_img_s"), "{errs:?}");
+    }
+
+    #[test]
+    fn pipeline_gate_reads_the_nested_path() {
+        let mut doc = sample();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(p)) = m.get_mut("pipeline") {
+                p.insert("img_s".into(), Json::Num(10.0));
+            }
+        }
+        let errs = regression_errors(&doc, &baseline());
+        assert!(errs.iter().any(|e| e.contains("pipeline.img_s")), "{errs:?}");
+    }
+
+    #[test]
+    fn baseline_missing_gate_key_is_an_error() {
+        let b = Json::parse(r#"{"tolerance": 0.4, "fabric_pooled_img_s": 400.0}"#).unwrap();
+        let errs = regression_errors(&sample(), &b);
+        assert!(errs.iter().any(|e| e.contains("pipeline_img_s")), "{errs:?}");
+    }
+
+    #[test]
+    fn bogus_tolerance_is_rejected() {
+        let b = Json::parse(r#"{"tolerance": 1.5}"#).unwrap();
+        let errs = regression_errors(&sample(), &b);
+        assert!(errs.iter().any(|e| e.contains("tolerance")), "{errs:?}");
+    }
+}

@@ -3,6 +3,7 @@
 //! PRNG, bench harness, table formatting.
 
 pub mod bench;
+pub mod benchcheck;
 pub mod json;
 pub mod prng;
 

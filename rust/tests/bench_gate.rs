@@ -1,0 +1,60 @@
+//! The committed `BENCH_baseline.json` must stay a valid gate input:
+//! `make bench-check` reads it in CI right after the smoke bench, and a
+//! malformed baseline would either crash the gate or (worse) silently
+//! stop gating. The checker logic itself is unit-tested in
+//! `util::benchcheck`; this test pins the committed artifact.
+
+use std::path::Path;
+
+use hgpipe::util::json::Json;
+
+fn baseline() -> Json {
+    // the baseline lives at the repository root, next to the Makefile
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_baseline.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("committed baseline {} unreadable: {e}", path.display()));
+    Json::parse(&text).expect("BENCH_baseline.json parses")
+}
+
+#[test]
+fn baseline_has_every_gate_key_with_sane_values() {
+    let b = baseline();
+    let tol = b
+        .get("tolerance")
+        .and_then(Json::as_f64)
+        .expect("baseline carries an explicit tolerance");
+    assert!(
+        (0.0..1.0).contains(&tol),
+        "tolerance {tol} must be a fraction in [0, 1)"
+    );
+    for key in ["fabric_pooled_img_s", "pipeline_img_s"] {
+        let floor = b
+            .get(key)
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("baseline missing gate key {key}"));
+        assert!(floor > 0.0, "{key} floor must be positive, got {floor}");
+        assert!(
+            floor < 1e6,
+            "{key} floor {floor} is implausibly high for the smoke workload — \
+             the gate would fail every runner"
+        );
+    }
+}
+
+#[test]
+fn baseline_passes_the_checker_against_its_own_floors() {
+    // a bench artifact sitting exactly at the floors must pass: the
+    // tolerance only ever relaxes the gate, never tightens it
+    let b = baseline();
+    let pooled = b.get("fabric_pooled_img_s").and_then(Json::as_f64).unwrap();
+    let pipe = b.get("pipeline_img_s").and_then(Json::as_f64).unwrap();
+    let current = Json::obj(vec![
+        ("fabric_pooled_img_s", Json::Num(pooled)),
+        (
+            "pipeline",
+            Json::obj(vec![("img_s", Json::Num(pipe))]),
+        ),
+    ]);
+    let errs = hgpipe::util::benchcheck::regression_errors(&current, &b);
+    assert_eq!(errs, Vec::<String>::new());
+}

@@ -22,7 +22,7 @@ use hgpipe::artifacts::Manifest;
 use hgpipe::coordinator::ModelServer;
 use hgpipe::runtime::fabric::LanePool;
 use hgpipe::runtime::interpreter::QuantViT;
-use hgpipe::runtime::pipeline::{self, Pipeline, PipelineConfig};
+use hgpipe::runtime::pipeline::{self, PartitionStrategy, Pipeline, PipelineConfig};
 use hgpipe::runtime::{BackendKind, ExecMode, RuntimeConfig};
 
 static SERIAL: Mutex<()> = Mutex::new(());
@@ -59,16 +59,17 @@ fn pipeline_bit_exact_at_every_stage_count() {
     let (net, tokens, expected) = golden();
     let per = net.tokens_per_image();
     let nc = net.num_classes;
-    let depth = net.depth; // 4 for tiny-synth: "max" = fully unrolled
+    // 4 blocks for tiny-synth: "max" = fully unrolled = a dedicated
+    // patch-embed stage plus one stage per block = 5
+    let depth = net.depth;
     let n = 16usize;
-    // stage counts the acceptance pins: 1, 2, 4, and max (0 = auto =
-    // one per block, which for tiny-synth *is* 4 — assert that too)
+    // stage counts the acceptance pins: 1, 2, 4, and max (0 = auto)
     for &stages in &[1usize, 2, 4, 0] {
         let pipe = Pipeline::new(
             net.clone(),
-            PipelineConfig { stages, queue_depth: 2, lanes: 1 },
+            PipelineConfig { stages, queue_depth: 2, lanes: 1, ..Default::default() },
         );
-        let want_stages = if stages == 0 { depth } else { stages.clamp(1, depth) };
+        let want_stages = if stages == 0 { depth + 1 } else { stages.clamp(1, depth + 1) };
         assert_eq!(pipe.stage_count(), want_stages, "requested {stages}");
         let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
         for i in 0..n {
@@ -88,7 +89,10 @@ fn pipeline_bit_exact_with_fine_grained_lanes_inside_stages() {
     let per = net.tokens_per_image();
     let nc = net.num_classes;
     // 2 stages x 2 lanes each: both grains of the hybrid pipeline active
-    let pipe = Pipeline::new(net.clone(), PipelineConfig { stages: 2, queue_depth: 2, lanes: 4 });
+    let pipe = Pipeline::new(
+        net.clone(),
+        PipelineConfig { stages: 2, queue_depth: 2, lanes: 4, ..Default::default() },
+    );
     assert_eq!(pipe.lanes_per_stage(), 2);
     let n = 8usize;
     let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
@@ -102,16 +106,65 @@ fn pipeline_bit_exact_with_fine_grained_lanes_inside_stages() {
 }
 
 #[test]
-fn excess_stage_request_clamps_to_depth() {
+fn excess_stage_request_clamps_to_depth_plus_embed() {
     let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
     let (net, tokens, expected) = golden();
     let per = net.tokens_per_image();
     let nc = net.num_classes;
-    let pipe = Pipeline::new(net.clone(), PipelineConfig { stages: 99, queue_depth: 1, lanes: 1 });
-    assert_eq!(pipe.stage_count(), net.depth, "99 stages clamp to one per block");
+    let pipe = Pipeline::new(
+        net.clone(),
+        PipelineConfig { stages: 99, queue_depth: 1, lanes: 1, ..Default::default() },
+    );
+    assert_eq!(
+        pipe.stage_count(),
+        net.depth + 1,
+        "99 stages clamp to one per block plus the dedicated embed stage"
+    );
     assert_eq!(pipe.queue_depth(), 1);
     let out = pipe.run_batch(&tokens[..per], 1).unwrap();
     assert_logits(&out[..nc], &expected[..nc], "clamped");
+}
+
+#[test]
+fn both_partition_strategies_are_bit_exact_and_embed_stage_is_dedicated() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    let n = 8usize;
+    for strategy in [PartitionStrategy::WorkProportional, PartitionStrategy::NearEven] {
+        let pipe = Pipeline::new(
+            net.clone(),
+            PipelineConfig { stages: 0, queue_depth: 2, lanes: 1, partition: strategy },
+        );
+        assert_eq!(pipe.partition_strategy(), strategy);
+        let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
+        for i in 0..n {
+            assert_logits(
+                &out[i * nc..(i + 1) * nc],
+                &expected[i * nc..(i + 1) * nc],
+                &format!("{strategy:?} img {i}"),
+            );
+        }
+        let stats = pipe.stats();
+        match strategy {
+            // fully unrolled, the cost model gives patch-embed its own
+            // block-less stage 0 and one block to each later stage
+            PartitionStrategy::WorkProportional => {
+                assert_eq!(stats.stages[0].blocks, (0, 0), "dedicated embed stage");
+                for (si, s) in stats.stages.iter().enumerate().skip(1) {
+                    assert_eq!(s.blocks.1 - s.blocks.0, 1, "stage {si} holds one block");
+                }
+            }
+            // the legacy slicing packs a block next to embed and leaves
+            // the tail stage block-less (head only)
+            PartitionStrategy::NearEven => {
+                assert_eq!(stats.stages[0].blocks, (0, 1));
+                let last = stats.stages.last().unwrap();
+                assert_eq!(last.blocks.0, last.blocks.1, "near-even tail stage is empty");
+            }
+        }
+    }
 }
 
 #[test]
@@ -123,7 +176,10 @@ fn queue_depth_one_backpressure_no_deadlock_no_reordering() {
     // depth-1 FIFOs: every hand-off serializes on backpressure; a
     // batch much larger than pipeline capacity must still stream
     // through, in order, with every logit pinned to its own image
-    let pipe = Pipeline::new(net.clone(), PipelineConfig { stages: 0, queue_depth: 1, lanes: 1 });
+    let pipe = Pipeline::new(
+        net.clone(),
+        PipelineConfig { stages: 0, queue_depth: 1, lanes: 1, ..Default::default() },
+    );
     let n = 48usize;
     let s0 = pipe.stats();
     let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
@@ -147,7 +203,10 @@ fn repeated_batches_reuse_buffers_and_stay_pinned() {
     let (net, tokens, expected) = golden();
     let per = net.tokens_per_image();
     let nc = net.num_classes;
-    let pipe = Pipeline::new(net.clone(), PipelineConfig { stages: 0, queue_depth: 2, lanes: 1 });
+    let pipe = Pipeline::new(
+        net.clone(),
+        PipelineConfig { stages: 0, queue_depth: 2, lanes: 1, ..Default::default() },
+    );
     for round in 0..3 {
         let n = 8usize;
         let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
@@ -169,10 +228,13 @@ fn dropping_the_pipeline_joins_all_stage_threads() {
     let stage_baseline = pipeline::live_stages();
     let worker_baseline = LanePool::live_workers();
     for round in 0..3 {
-        // 2 lanes per stage: each stage owns an inner fabric worker that
-        // must be joined through the same drop cascade
-        let pipe =
-            Pipeline::new(net.clone(), PipelineConfig { stages: 0, queue_depth: 1, lanes: 8 });
+        // 2 lanes per stage (10 lanes over 5 resident stages): each
+        // stage owns an inner fabric worker that must be joined through
+        // the same drop cascade
+        let pipe = Pipeline::new(
+            net.clone(),
+            PipelineConfig { stages: 0, queue_depth: 1, lanes: 10, ..Default::default() },
+        );
         assert_eq!(
             pipeline::live_stages(),
             stage_baseline + pipe.stage_count(),

@@ -65,6 +65,64 @@ fn empty_model_list_is_rejected() {
 }
 
 #[test]
+fn metrics_lines_report_per_model_and_per_replica_without_double_counting() {
+    // two executor replicas behind one queue: the rollup line is the
+    // total and the replica lines are its exact decomposition — failed
+    // dispatches included (each request is popped by exactly one
+    // replica, so nothing is counted twice)
+    let cfg = config().with_replicas(Some(2));
+    let router = Router::start(&manifest(), &["tiny-synth".to_string()], 2, cfg).unwrap();
+    let per = router.server("tiny-synth").unwrap().tokens_per_image();
+    let images: Vec<Vec<f32>> = (0..8).map(|i| vec![0.01 * i as f32; per]).collect();
+    let responses = router.infer_all("tiny-synth", images).unwrap();
+    assert_eq!(responses.len(), 8);
+
+    let metrics = router.metrics();
+    let (name, rollup) = &metrics[0];
+    assert_eq!(name, "tiny-synth");
+    assert_eq!(rollup.count(), 8);
+    assert_eq!(rollup.failed, 0);
+
+    let server = router.server("tiny-synth").unwrap();
+    assert_eq!(server.replicas(), 2);
+    let per_replica = server.replica_metrics();
+    assert_eq!(per_replica.len(), 2);
+    assert_eq!(
+        per_replica.iter().map(|m| m.count()).sum::<usize>(),
+        rollup.count(),
+        "replica request counts must sum to the rollup, not double it"
+    );
+    assert_eq!(per_replica.iter().map(|m| m.failed).sum::<u64>(), rollup.failed);
+    let exec_sum: f64 = per_replica.iter().map(|m| m.exec_ms_total).sum();
+    assert!(
+        (exec_sum - rollup.exec_ms_total).abs() < 1e-6,
+        "per-replica exec breakdown must decompose the rollup"
+    );
+
+    // the serve-loop report: one rollup line plus one line per replica
+    let lines = router.metrics_lines();
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    assert!(lines[0].starts_with("[tiny-synth]"), "{}", lines[0]);
+    assert!(lines[1].starts_with("[tiny-synth/replica0]"), "{}", lines[1]);
+    assert!(lines[2].starts_with("[tiny-synth/replica1]"), "{}", lines[2]);
+    for line in &lines {
+        assert!(line.contains("exec=") && line.contains("queue="), "breakdown in: {line}");
+    }
+}
+
+#[test]
+fn single_replica_metrics_lines_stay_one_per_model() {
+    let router = Router::start(&manifest(), &["tiny-synth".to_string()], 2, config()).unwrap();
+    let per = router.server("tiny-synth").unwrap().tokens_per_image();
+    router.infer_all("tiny-synth", vec![vec![0.5; per]; 2]).unwrap();
+    if router.server("tiny-synth").unwrap().replicas() == 1 {
+        // (under the HGPIPE_REPLICAS CI matrix this server is replicated
+        // and the line count is covered by the test above)
+        assert_eq!(router.metrics_lines().len(), 1);
+    }
+}
+
+#[test]
 fn router_works_in_pipeline_mode_too() {
     // the per-model RuntimeConfig carries the execution mode: the same
     // front door can put a model on the spatial pipeline executor

@@ -1,0 +1,196 @@
+//! Multi-executor scale-out against the golden fixture: N executor
+//! replicas per model behind one shared MPMC front queue
+//! (`RuntimeConfig::replicas` / `HGPIPE_REPLICAS` / `--replicas`).
+//!
+//! 1. **bit-exactness** — logits are bit-identical to the python
+//!    reference at replicas 1, 2 and 4, in both the lane-parallel and
+//!    pipeline execution modes (each replica owns its own fabric or
+//!    resident pipeline);
+//! 2. **lifecycle** — dropping a replicated server (including
+//!    mid-stream with requests in flight) answers every reply exactly
+//!    once and joins every executor, stage and fabric worker thread;
+//! 3. **metrics** — per-replica metrics decompose the rollup exactly:
+//!    every request (successes *and* failed dispatches) is recorded by
+//!    exactly one replica, so sums never double count.
+//!
+//! Tests serialize on a lock: `pipeline::live_stages` and
+//! `LanePool::live_workers` are process-wide counters, and concurrent
+//! replica-creating tests would make their baseline assertions racy.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::ModelServer;
+use hgpipe::runtime::fabric::LanePool;
+use hgpipe::runtime::interpreter::QuantViT;
+use hgpipe::runtime::{faulty, pipeline, BackendKind, ExecMode, RuntimeConfig};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&fixture_dir()).expect("committed golden fixture")
+}
+
+fn golden() -> (Arc<QuantViT>, Vec<f32>, Vec<f64>) {
+    let dir = fixture_dir();
+    let net = Arc::new(QuantViT::load(&dir.join("tinyvit_bundle.json")).expect("bundle loads"));
+    let tokens = std::fs::read(dir.join("golden_tokens.bin"))
+        .unwrap()
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let logits = std::fs::read(dir.join("golden_logits.bin"))
+        .unwrap()
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    (net, tokens, logits)
+}
+
+#[test]
+fn replicas_bit_exact_in_both_execution_modes() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    let n = 16usize;
+    let images: Vec<Vec<f32>> = tokens.chunks(per).take(n).map(|c| c.to_vec()).collect();
+    for &replicas in &[1usize, 2, 4] {
+        for mode in [ExecMode::LaneParallel, ExecMode::Pipeline { stages: 0, queue_depth: 2 }] {
+            let config = RuntimeConfig::new(BackendKind::Interpreter)
+                .with_lanes(Some(2))
+                .with_mode(mode)
+                .with_replicas(Some(replicas));
+            let server = ModelServer::start_with_config(&manifest, "tiny-synth", 2, config)
+                .unwrap_or_else(|e| panic!("start {replicas} replicas / {mode:?}: {e:#}"));
+            assert_eq!(server.replicas(), replicas);
+            let responses = server.infer_all(images.clone()).expect("replicated inference");
+            assert_eq!(responses.len(), n);
+            for (i, r) in responses.iter().enumerate() {
+                for (k, (&g, &w)) in
+                    r.logits.iter().zip(&expected[i * nc..(i + 1) * nc]).enumerate()
+                {
+                    assert_eq!(
+                        g.to_bits(),
+                        (w as f32).to_bits(),
+                        "{replicas} replicas / {mode:?}: image {i} logit {k}"
+                    );
+                }
+            }
+            // one replica fleet per server: unload must join everything
+            drop(server);
+        }
+    }
+    assert_eq!(pipeline::live_stages(), 0, "unload joined all pipeline stages");
+}
+
+#[test]
+fn drop_mid_stream_with_replicas_answers_everything_and_leaks_no_threads() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let (net, tokens, _) = golden();
+    let per = net.tokens_per_image();
+    let stage_baseline = pipeline::live_stages();
+    let worker_baseline = LanePool::live_workers();
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(10))
+        .with_mode(ExecMode::Pipeline { stages: 0, queue_depth: 1 })
+        .with_replicas(Some(3));
+    let server = ModelServer::start_with_config(&manifest, "tiny-synth", 50, config).unwrap();
+    // 3 replicas x 5 resident stages each, 2 inner lanes per stage
+    assert_eq!(pipeline::live_stages(), stage_baseline + 3 * (net.depth + 1));
+    // flood, then drop with requests in flight: the delivery guarantee
+    // says every reply channel gets exactly one answer, whichever
+    // replica (or the shutdown drain) ends up owning the request
+    let rxs: Vec<_> = (0..24usize)
+        .map(|i| server.submit(tokens[(i % 16) * per..(i % 16 + 1) * per].to_vec()).unwrap())
+        .collect();
+    drop(server);
+    let mut answered = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i}: reply sender dropped without a message"));
+        if reply.is_ok() {
+            answered += 1;
+        }
+    }
+    assert!(answered <= 24);
+    assert_eq!(pipeline::live_stages(), stage_baseline, "stage threads leaked past drop");
+    assert_eq!(LanePool::live_workers(), worker_baseline, "fabric workers leaked past drop");
+}
+
+#[test]
+fn failed_dispatches_are_counted_exactly_once_across_replicas() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let config = RuntimeConfig::new(BackendKind::Faulty).with_replicas(Some(3));
+    let server = ModelServer::start_with_config(&manifest(), "any", 1, config).unwrap();
+    assert_eq!(server.replicas(), 3);
+    let n = 6usize;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| server.submit(vec![0.5; faulty::TOKENS_PER_IMAGE]).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx.recv().unwrap_or_else(|_| panic!("request {i}: reply lost"));
+        assert!(reply.is_err(), "faulty backend cannot succeed");
+    }
+    // every failure lands in the rollup once and in exactly one
+    // replica's own metrics — the decomposition must sum, not double
+    let rollup_failed = server.metrics.lock().unwrap().failed;
+    assert_eq!(rollup_failed, n as u64);
+    let per_replica = server.replica_metrics();
+    assert_eq!(per_replica.len(), 3);
+    assert_eq!(per_replica.iter().map(|m| m.failed).sum::<u64>(), n as u64);
+}
+
+#[test]
+fn successful_requests_decompose_across_replica_metrics() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let (net, tokens, _) = golden();
+    let per = net.tokens_per_image();
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(1))
+        .with_replicas(Some(2));
+    let server = ModelServer::start_with_config(&manifest, "tiny-synth", 2, config).unwrap();
+    let n = 12usize;
+    let images: Vec<Vec<f32>> =
+        (0..n).map(|i| tokens[(i % 16) * per..(i % 16 + 1) * per].to_vec()).collect();
+    server.infer_all(images).expect("replicated inference");
+    let rollup = server.metrics.lock().unwrap().clone();
+    assert_eq!(rollup.count(), n);
+    assert_eq!(rollup.failed, 0);
+    let per_replica = server.replica_metrics();
+    assert_eq!(per_replica.iter().map(|m| m.count()).sum::<usize>(), n);
+    let exec_sum: f64 = per_replica.iter().map(|m| m.exec_ms_total).sum();
+    assert!(
+        (exec_sum - rollup.exec_ms_total).abs() < 1e-6,
+        "exec breakdown must sum to the rollup: {exec_sum} vs {}",
+        rollup.exec_ms_total
+    );
+}
+
+#[test]
+fn explicit_replicas_beat_the_env_fallback_and_clamp_to_one() {
+    // resolution only (no server): explicit wins over HGPIPE_REPLICAS,
+    // zero clamps to one; the CI matrix exercises the env route itself
+    assert_eq!(
+        RuntimeConfig::new(BackendKind::Interpreter).with_replicas(Some(3)).resolve_replicas(),
+        3
+    );
+    assert_eq!(
+        RuntimeConfig::new(BackendKind::Interpreter).with_replicas(Some(0)).resolve_replicas(),
+        1,
+        "zero replicas clamps to one"
+    );
+    assert!(
+        RuntimeConfig::new(BackendKind::Interpreter).resolve_replicas() >= 1,
+        "unset resolves to at least one replica"
+    );
+}
