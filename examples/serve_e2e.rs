@@ -1,14 +1,19 @@
 //! End-to-end serving driver (the EXPERIMENTS.md §E2E workload).
 //!
-//! Loads the trained tiny-ViT *and* the full DeiT-tiny AOT artifacts,
-//! serves batched requests through the coordinator (dynamic batcher +
-//! PJRT executor), reports latency percentiles / throughput / accuracy —
-//! proving all three layers compose with python nowhere on the path.
+//! Serves the trained tiny-ViT through the coordinator's multi-model
+//! [`Router`]: a replicated executor fleet sharing one immutable
+//! `ModelArtifact`, accuracy on the real eval batch, then a **mid-stream
+//! hot swap** — requests keep arriving while the model is swapped to a
+//! fresh version, and drain-then-swap delivers every one of them exactly
+//! once (reply or explicit failure, zero silent drops). When the full
+//! DeiT-tiny AOT artifacts are present the same router serves them too —
+//! python nowhere on the path.
 //!
 //! Run: `cargo run --release --example serve_e2e [-- --deit-requests 32]`
 
 use hgpipe::artifacts::Manifest;
-use hgpipe::coordinator::ModelServer;
+use hgpipe::coordinator::Router;
+use hgpipe::runtime::RuntimeConfig;
 use hgpipe::util::json::Json;
 use hgpipe::util::prng::Prng;
 
@@ -21,15 +26,26 @@ fn main() -> hgpipe::Result<()> {
     let dir = Manifest::discover()
         .ok_or_else(|| anyhow::anyhow!("no artifacts found — run `make artifacts` first"))?;
     let manifest = Manifest::load(&dir)?;
+    let config = RuntimeConfig::default().with_replicas(Some(2));
+    let router = Router::start(&manifest, &["tiny-synth".to_string()], 2, config)?;
 
     // ---- phase 1: accuracy on the real eval batch (tiny-ViT) --------------
     println!("=== phase 1: tiny-ViT accuracy (real trained model, 512 eval images) ===");
     let (tokens, labels, shape) = load_eval_set(&dir)?;
-    let tiny = ModelServer::start(&manifest, "tiny-synth", 2)?;
     let per = shape[1] * shape[2];
+    let n_imgs = labels.len();
+    let tiny = router.server("tiny-synth").expect("router started tiny-synth");
+    if let Some(a) = tiny.artifact() {
+        println!(
+            "one shared artifact: {:.2} MiB across {} replica(s) ({} Arc refs)",
+            a.footprint_bytes() as f64 / (1024.0 * 1024.0),
+            tiny.replicas(),
+            a.strong_count()
+        );
+    }
     let images: Vec<Vec<f32>> = tokens.chunks(per).map(|c| c.to_vec()).collect();
     let t0 = std::time::Instant::now();
-    let responses = tiny.infer_all(images)?;
+    let responses = router.infer_all("tiny-synth", images)?;
     let correct = responses.iter().zip(&labels).filter(|(r, &l)| r.argmax == l as usize).count();
     let dt = t0.elapsed();
     println!(
@@ -39,42 +55,81 @@ fn main() -> hgpipe::Result<()> {
         100.0 * correct as f64 / labels.len() as f64,
         labels.len() as f64 / dt.as_secs_f64()
     );
-    println!("{}", tiny.metrics.lock().unwrap().summary());
-    drop(tiny);
+    drop(tiny); // release the fleet handle so the swap below can drain it
 
-    // ---- phase 2: DeiT-tiny latency/throughput (full paper network) -------
-    println!("\n=== phase 2: DeiT-tiny serving ({deit_requests} requests, batch variants 1+8) ===");
+    // ---- phase 2: hot swap mid-stream (drain-then-swap) -------------------
+    println!("\n=== phase 2: hot swap with requests in flight ===");
+    let swap_requests = 64usize;
+    let mut rxs = Vec::with_capacity(swap_requests);
+    for i in 0..swap_requests {
+        if i == swap_requests / 2 {
+            // half the traffic is queued or in flight on v1; the swap
+            // routes the rest to a freshly loaded v2 while v1 drains
+            let v = router.swap(&manifest, "tiny-synth", 2, config)?;
+            println!("swapped tiny-synth to v{v} mid-stream");
+        }
+        let img = tokens[(i % n_imgs) * per..(i % n_imgs + 1) * per].to_vec();
+        // a submit racing the closing queue errs explicitly — resubmit
+        // once and it lands on the new version; nothing is dropped
+        let rx = match router.submit("tiny-synth", img.clone()) {
+            Ok(rx) => rx,
+            Err(_) => router.submit("tiny-synth", img)?,
+        };
+        rxs.push(rx);
+    }
+    let (mut answered, mut failed) = (0usize, 0usize);
+    for rx in rxs {
+        match rx.recv().expect("every accepted request gets exactly one reply") {
+            Ok(_) => answered += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    println!(
+        "{answered} answered + {failed} explicitly failed = {} submitted (zero silent drops)",
+        answered + failed
+    );
+    anyhow::ensure!(answered + failed == swap_requests, "a request vanished across the swap");
+    for (v, m) in router.version_metrics("tiny-synth")? {
+        println!("  tiny-synth v{v}: {}", m.summary());
+    }
+
+    // ---- phase 3: DeiT-tiny latency/throughput (full paper network) -------
+    println!("\n=== phase 3: DeiT-tiny serving ({deit_requests} requests, batch variants 1+8) ===");
     if manifest.bundle_for("deit-tiny").is_none() && manifest.variants("deit-tiny").is_empty() {
-        println!("(no deit-tiny artifacts — run a full `make artifacts` for phases 2-3)");
+        println!("(no deit-tiny artifacts — run a full `make artifacts` for phases 3-4)");
         return Ok(());
     }
-    let deit = ModelServer::start(&manifest, "deit-tiny", 4)?;
+    // the zoo grows hot: the same router takes a second model without
+    // touching the one already serving
+    router.load(&manifest, "deit-tiny", 4, RuntimeConfig::default())?;
     let mut rng = Prng::new(11);
-    let n_tok = deit.tokens_per_image();
+    let n_tok = router.server("deit-tiny").expect("just loaded").tokens_per_image();
     let imgs: Vec<Vec<f32>> =
         (0..deit_requests).map(|_| (0..n_tok).map(|_| rng.f64() as f32).collect()).collect();
     let t0 = std::time::Instant::now();
-    let responses = deit.infer_all(imgs)?;
+    let responses = router.infer_all("deit-tiny", imgs)?;
     let dt = t0.elapsed();
     println!(
-        "{} inferences in {:.2?} = {:.2} img/s (CPU PJRT; the FPGA-cycle model puts the fabric at 7139 img/s)",
+        "{} inferences in {:.2?} = {:.2} img/s (CPU; the FPGA-cycle model puts the fabric at 7139 img/s)",
         responses.len(),
         dt,
         responses.len() as f64 / dt.as_secs_f64()
     );
-    println!("{}", deit.metrics.lock().unwrap().summary());
+    for line in router.metrics_lines() {
+        println!("{line}");
+    }
 
     // batch-1 vs batch-8 must agree numerically on identical input
-    println!("\n=== phase 3: batch-variant consistency ===");
+    println!("\n=== phase 4: batch-variant consistency ===");
     let probe: Vec<f32> = (0..n_tok).map(|_| rng.f64() as f32).collect();
-    let single = deit.submit(probe.clone())?.recv()??;
+    let single = router.submit("deit-tiny", probe.clone())?.recv()??;
     let mut batch: Vec<Vec<f32>> = vec![probe; 8];
     for extra in batch.iter_mut().skip(1) {
         for v in extra.iter_mut() {
             *v = rng.f64() as f32;
         }
     }
-    let replies = deit.infer_all(batch)?;
+    let replies = router.infer_all("deit-tiny", batch)?;
     let drift = single
         .logits
         .iter()

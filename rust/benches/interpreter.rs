@@ -33,6 +33,11 @@
 //!                           per-replica occupancy), and the near-even
 //!                           vs work-proportional partition compared by
 //!                           per-stage busy_ms at stages = max
+//!   memory                  shared-artifact accounting: the weight/LUT
+//!                           footprint of one `ModelArtifact`, what a
+//!                           4-replica fleet would cost unshared, and
+//!                           the Arc refcount proving every replica
+//!                           borrows the same copy
 //!   per_op_ms_per_image / per_op_pooled_ms_per_image
 
 use std::fmt::Write as _;
@@ -47,7 +52,7 @@ use hgpipe::runtime::interpreter::{self, OpProfile, QuantViT};
 use hgpipe::runtime::pipeline::{
     PartitionStrategy, Pipeline, PipelineConfig, DEFAULT_QUEUE_DEPTH,
 };
-use hgpipe::runtime::{BackendKind, RuntimeConfig};
+use hgpipe::runtime::{BackendKind, ModelArtifact, RuntimeConfig};
 use hgpipe::util::bench::{bench, black_box};
 use hgpipe::util::prng::Prng;
 
@@ -419,6 +424,34 @@ fn main() {
         });
     }
 
+    // 10. artifact memory: every replica borrows one immutable
+    // `ModelArtifact` (weights, packed GEMM panels, requant tables), so
+    // a replicated fleet pays the footprint once; the unshared number
+    // is the pre-sharing cost of loading one copy per replica.
+    let mem_replicas = 4usize;
+    let solo_artifact = ModelArtifact::load(&manifest, "tiny-synth").expect("artifact load");
+    let artifact_footprint = solo_artifact.footprint_bytes();
+    drop(solo_artifact);
+    let mem_cfg = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(1))
+        .with_replicas(Some(mem_replicas));
+    let mem_server =
+        ModelServer::start_with_config(&manifest, "tiny-synth", 1, mem_cfg).expect("memory fleet");
+    let shared = mem_server.artifact().expect("interpreter backend shares an artifact");
+    assert_eq!(
+        shared.footprint_bytes(),
+        artifact_footprint,
+        "the fleet serves the same artifact a solo load produces"
+    );
+    let artifact_refs = shared.strong_count();
+    assert!(
+        artifact_refs >= 1 + mem_replicas,
+        "every replica must hold the shared artifact (refs: {artifact_refs})"
+    );
+    let unshared_bytes = artifact_footprint * mem_replicas;
+    let memory_savings = unshared_bytes as f64 / artifact_footprint as f64;
+    drop(mem_server);
+
     // per-op breakdowns: serial (clean attribution) and pooled (what the
     // serving path actually spends per op at the headline lane count)
     let prof_images = n_images.min(8);
@@ -497,6 +530,12 @@ fn main() {
         part_cmp[2].max_min_ratio,
         part_cmp[1].stages,
         part_cmp[1].max_min_ratio
+    );
+    println!(
+        "    artifact memory: {:.2} MiB shared across {mem_replicas} replicas \
+         ({:.2} MiB unshared, {memory_savings:.1}x saved, {artifact_refs} refs)",
+        artifact_footprint as f64 / (1024.0 * 1024.0),
+        unshared_bytes as f64 / (1024.0 * 1024.0),
     );
     println!(
         "    per-op (1 lane): gemm {:.0}%  attention {:.0}%  layernorm {:.0}%  requant {:.0}%",
@@ -625,6 +664,12 @@ fn main() {
              \"lane_sweep\": [{}\n  ],\n  \
              \"pipeline\": {},\n  \
              \"scale_out\": {},\n  \
+             \"memory\": {{\n    \"artifact_footprint_bytes\": {artifact_footprint},\n    \
+             \"replicas\": {mem_replicas},\n    \
+             \"unshared_bytes\": {unshared_bytes},\n    \
+             \"shared_bytes\": {artifact_footprint},\n    \
+             \"savings_ratio\": {memory_savings:.3},\n    \
+             \"artifact_refs\": {artifact_refs}\n  }},\n  \
              \"per_op_ms_per_image\": {},\n  \
              \"per_op_pooled_ms_per_image\": {}\n}}\n",
             opts.smoke,

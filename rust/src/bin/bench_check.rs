@@ -4,7 +4,8 @@
 //! committed `BENCH_baseline.json`, then fails (exit 1) when:
 //!
 //! * the bench artifact is missing any field of its documented schema
-//!   (including the `scale_out` section) — schema drift vs README, or
+//!   (including the `scale_out` and shared-artifact `memory` sections)
+//!   — schema drift vs README, or
 //! * a gated throughput (pooled fabric, pipeline) fell below its
 //!   committed floor by more than the baseline's `tolerance`.
 //!

@@ -11,7 +11,10 @@
 //! spatial [`crate::runtime::ExecMode`] (lane-parallel or pipeline), and
 //! the **executor replica count** per model. [`Router`] fronts several
 //! `ModelServer`s, routing requests by model name with per-model (and
-//! per-replica) metrics export.
+//! per-replica) metrics export — and is a **hot model zoo**:
+//! [`Router::load`] / [`Router::unload`] / [`Router::swap`] change what
+//! one long-lived process serves, with versioned drain-then-swap
+//! semantics and per-version metrics.
 //!
 //! Scale-out: one model may run `RuntimeConfig::replicas` executor
 //! threads (the `--replicas` flag / `HGPIPE_REPLICAS` env fallback), all
@@ -36,11 +39,11 @@ pub mod queue;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::artifacts::Manifest;
-use crate::runtime::{self, BackendKind, Executor, RuntimeConfig};
+use crate::runtime::{self, BackendKind, Executor, ModelArtifact, RuntimeConfig};
 use batcher::BatchPolicy;
 use metrics::ServeMetrics;
 use queue::{FrontQueue, Pop};
@@ -91,6 +94,10 @@ pub struct ModelServer {
     tokens_per_image: usize,
     num_classes: usize,
     compile_ms: f64,
+    /// The immutable model (weights + packed panels + LUTs), loaded
+    /// once and shared by every replica behind an `Arc` (interpreter
+    /// backend; `None` on backends whose handles cannot cross threads).
+    artifact: Option<ModelArtifact>,
 }
 
 impl ModelServer {
@@ -128,6 +135,17 @@ impl ModelServer {
         config: RuntimeConfig,
     ) -> crate::Result<Self> {
         let replicas = config.resolve_replicas();
+        // the immutable half loads ONCE, on the starter thread: every
+        // interpreter replica shares the same `Arc`'d artifact, so N
+        // replicas hold one copy of the weight panels, not N. (A failed
+        // artifact load fails startup before any thread spawns — the
+        // same atomic-fleet guarantee as a failed replica.) PJRT's
+        // handles are `Rc`-based and not `Send`, so that backend keeps
+        // its per-thread load path.
+        let artifact = match config.backend {
+            BackendKind::Interpreter => Some(ModelArtifact::load(manifest, model)?),
+            _ => None,
+        };
         let front = Arc::new(FrontQueue::<Request>::new());
         let (init_tx, init_rx) = channel::<(usize, Result<(usize, usize, f64), String>)>();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
@@ -138,6 +156,7 @@ impl ModelServer {
         for ri in 0..replicas {
             let manifest = manifest.clone();
             let model_name = model.to_string();
+            let art = artifact.clone();
             let own = Arc::new(Mutex::new(ServeMetrics::default()));
             replica_metrics.push(own.clone());
             let sinks = MetricSinks { rollup: metrics.clone(), own };
@@ -145,9 +164,19 @@ impl ModelServer {
             let s2 = stop.clone();
             let itx = init_tx.clone();
             workers.push(std::thread::spawn(move || {
-                // load/compile all variants up front (the paper's
-                // bitstream load, once per replica engine)
-                match runtime::load_model(config, &manifest, &model_name) {
+                // build this replica's mutable runtime (fabric lanes or
+                // resident pipeline + scratch) — from the shared
+                // artifact when there is one, else a full per-thread
+                // load (the paper's bitstream load, once per engine)
+                let loaded = match &art {
+                    Some(a) => runtime::load_model_from_artifact(config, a),
+                    None => runtime::load_model(config, &manifest, &model_name),
+                };
+                // the executors hold their own handles now; dropping
+                // the spawn-time clone keeps artifact accounting tied
+                // to live executors, not parked threads
+                drop(art);
+                match loaded {
                     Err(e) => {
                         let _ = itx.send((ri, Err(format!("{e:#}"))));
                     }
@@ -235,6 +264,7 @@ impl ModelServer {
             tokens_per_image,
             num_classes,
             compile_ms,
+            artifact,
         })
     }
 
@@ -255,6 +285,16 @@ impl ModelServer {
     /// Number of executor replicas serving this model's queue.
     pub fn replicas(&self) -> usize {
         self.workers.len()
+    }
+
+    /// The shared immutable model artifact every replica borrows
+    /// (interpreter backend; `None` on per-thread-load backends).
+    /// Clone it to observe sharing from outside: `strong_count` grows
+    /// with the fleet and falls back to the callers' handles on drop,
+    /// and `footprint_bytes` is the whole fleet's weight memory — once,
+    /// not per replica.
+    pub fn artifact(&self) -> Option<&ModelArtifact> {
+        self.artifact.as_ref()
     }
 
     /// Per-replica metrics snapshot (same order as replica indices).
@@ -500,18 +540,65 @@ fn executor_loop(
     }
 }
 
+/// One model's slot in the [`Router`]'s zoo: the live server fleet,
+/// its monotonically increasing version, and the final metrics of
+/// every version that has been swapped out.
+struct ModelEntry {
+    name: String,
+    /// Starts at 1 on load; bumped by every successful swap.
+    version: u64,
+    server: Arc<ModelServer>,
+    /// `(version, final metrics)` of drained versions, oldest first.
+    /// A `ServeMetrics` Arc outlives its server by design (see
+    /// [`MetricSinks`]), so a retired version's counters — including
+    /// the requests its drain-then-swap failed — stay readable after
+    /// the fleet is joined, and stay *out* of the replacement's
+    /// counters: per-version lines decompose the total, never double
+    /// count it.
+    retired: Vec<(u64, Arc<Mutex<ServeMetrics>>)>,
+}
+
+fn serving_list(entries: &[ModelEntry]) -> String {
+    entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>().join(", ")
+}
+
 /// Route requests across several models (the vLLM-style front door):
 /// one [`ModelServer`] per model name — each with its own executor
-/// replica fleet, every replica owning its own fabric or pipeline —
-/// with submission routed by model name and per-model + per-replica
-/// metrics export. `hgpipe serve --models a,b` drives one of these.
+/// replica fleet, every replica borrowing one shared immutable
+/// [`ModelArtifact`] — with submission routed by model name and
+/// per-model + per-replica + per-version metrics export. `hgpipe serve
+/// --models a,b` drives one of these.
+///
+/// The zoo is **hot**: [`Router::load`] / [`Router::unload`] /
+/// [`Router::swap`] change what one long-lived process serves, with
+/// drain-then-swap semantics — a swapped-out version finishes its
+/// in-flight dispatches and fails whatever is still queued explicitly
+/// (the [`ModelServer`] delivery guarantee: every accepted request gets
+/// exactly one reply), and its weight memory is freed when the last
+/// `Arc` handle drops. Routing state lives behind a lock so swaps can
+/// happen while other threads submit; a submit that races a swap and
+/// lands on the closing queue gets an explicit "server stopped" error
+/// (never a silent drop) and can simply be resubmitted — it will route
+/// to the new version.
 pub struct Router {
-    servers: Vec<ModelServer>,
+    entries: RwLock<Vec<ModelEntry>>,
 }
 
 impl Router {
     pub fn new(servers: Vec<ModelServer>) -> Self {
-        Self { servers }
+        Self {
+            entries: RwLock::new(
+                servers
+                    .into_iter()
+                    .map(|s| ModelEntry {
+                        name: s.name().to_string(),
+                        version: 1,
+                        server: Arc::new(s),
+                        retired: Vec::new(),
+                    })
+                    .collect(),
+            ),
+        }
     }
 
     /// Start one server per model name, all on the same runtime config.
@@ -531,16 +618,29 @@ impl Router {
             );
             servers.push(ModelServer::start_with_config(manifest, m, policy_wait_ms, config)?);
         }
-        Ok(Self { servers })
+        Ok(Self::new(servers))
     }
 
-    pub fn server(&self, model: &str) -> Option<&ModelServer> {
-        self.servers.iter().find(|s| s.name() == model)
+    /// The live server fleet for `model` (its current version). The
+    /// returned handle pins that version: a concurrent swap retires it
+    /// from routing, but drain + join wait for the last handle.
+    pub fn server(&self, model: &str) -> Option<Arc<ModelServer>> {
+        self.entries
+            .read()
+            .unwrap()
+            .iter()
+            .find(|e| e.name == model)
+            .map(|e| e.server.clone())
+    }
+
+    /// The current version of `model` (1 until the first swap).
+    pub fn version(&self, model: &str) -> Option<u64> {
+        self.entries.read().unwrap().iter().find(|e| e.name == model).map(|e| e.version)
     }
 
     /// The server for `model`, or an actionable routing error naming
     /// what *is* being served.
-    fn routed(&self, model: &str) -> crate::Result<&ModelServer> {
+    fn routed(&self, model: &str) -> crate::Result<Arc<ModelServer>> {
         self.server(model).ok_or_else(|| {
             anyhow::anyhow!(
                 "no server for model '{model}' (serving: {})",
@@ -549,7 +649,11 @@ impl Router {
         })
     }
 
-    /// Route one request to `model`'s server.
+    /// Route one request to `model`'s current server. The request is
+    /// pinned to the version that accepted it; a swap racing this call
+    /// either queues it on the old version (which drains it — reply or
+    /// explicit failure) or surfaces an explicit "server stopped"
+    /// error, in which case resubmitting routes to the new version.
     pub fn submit(
         &self,
         model: &str,
@@ -563,35 +667,163 @@ impl Router {
         self.routed(model)?.infer_all(images)
     }
 
-    pub fn models(&self) -> Vec<&str> {
-        self.servers.iter().map(|s| s.name()).collect()
+    /// Add a model to the zoo at version 1. The fleet starts (and may
+    /// fail, atomically) *before* the routing table changes: a failed
+    /// load leaves the zoo serving exactly what it served before.
+    pub fn load(
+        &self,
+        manifest: &Manifest,
+        model: &str,
+        policy_wait_ms: u64,
+        config: RuntimeConfig,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.server(model).is_none(),
+            "model '{model}' is already served (swap it instead)"
+        );
+        let server = ModelServer::start_with_config(manifest, model, policy_wait_ms, config)?;
+        let mut entries = self.entries.write().unwrap();
+        // re-check under the write lock: a concurrent load may have won
+        anyhow::ensure!(
+            entries.iter().all(|e| e.name != model),
+            "model '{model}' is already served (swap it instead)"
+        );
+        entries.push(ModelEntry {
+            name: model.to_string(),
+            version: 1,
+            server: Arc::new(server),
+            retired: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Remove a model from the zoo: unroute it, then drain — queued and
+    /// in-flight requests complete or are failed explicitly (exactly
+    /// one reply each) — and join its fleet. The weight artifact is
+    /// freed when the last outside handle (if any) drops.
+    pub fn unload(&self, model: &str) -> crate::Result<()> {
+        let entry = {
+            let mut entries = self.entries.write().unwrap();
+            let Some(i) = entries.iter().position(|e| e.name == model) else {
+                let serving = serving_list(&entries);
+                anyhow::bail!("no server for model '{model}' to unload (serving: {serving})");
+            };
+            entries.remove(i)
+        };
+        // drain + join OUTSIDE the lock: unloading one model must not
+        // stall routing for the others
+        drop(entry);
+        Ok(())
+    }
+
+    /// Hot-swap `model` to a freshly loaded fleet (drain-then-swap);
+    /// returns the new version number.
+    ///
+    /// Order of operations is the whole guarantee:
+    /// 1. the replacement fleet starts first, atomically — a failed
+    ///    start returns the error and leaves the old version serving;
+    /// 2. the routing table flips to the new fleet and the old
+    ///    version's metrics are retired (they keep its counters, so
+    ///    per-version lines always sum to the total);
+    /// 3. the old fleet drains outside the lock: in-flight dispatches
+    ///    finish, still-queued requests are failed explicitly — every
+    ///    accepted request still gets exactly one reply, none are
+    ///    silently dropped — and the fleet joins. Its share of the old
+    ///    artifact drops with it.
+    pub fn swap(
+        &self,
+        manifest: &Manifest,
+        model: &str,
+        policy_wait_ms: u64,
+        config: RuntimeConfig,
+    ) -> crate::Result<u64> {
+        let fresh = Arc::new(ModelServer::start_with_config(
+            manifest,
+            model,
+            policy_wait_ms,
+            config,
+        )?);
+        let mut entries = self.entries.write().unwrap();
+        let Some(i) = entries.iter().position(|e| e.name == model) else {
+            let serving = serving_list(&entries);
+            drop(entries);
+            // `fresh` drops (and drains, trivially — it never served)
+            anyhow::bail!("no server for model '{model}' to swap (serving: {serving})");
+        };
+        let e = &mut entries[i];
+        e.retired.push((e.version, e.server.metrics.clone()));
+        e.version += 1;
+        let version = e.version;
+        let old = std::mem::replace(&mut e.server, fresh);
+        drop(entries); // new version routes before the old one drains
+        drop(old);
+        Ok(version)
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.entries.read().unwrap().iter().map(|e| e.name.clone()).collect()
     }
 
     /// Per-model metrics export: a `(model, metrics)` snapshot per
     /// served model (the front door's observability surface). The
-    /// snapshot is the cross-replica rollup; see
+    /// snapshot is the **current version's** cross-replica rollup; see
+    /// [`Self::version_metrics`] for retired versions and
     /// [`Self::metrics_lines`] / [`ModelServer::replica_metrics`] for
     /// the per-replica breakdown.
     pub fn metrics(&self) -> Vec<(String, ServeMetrics)> {
-        self.servers
+        self.entries
+            .read()
+            .unwrap()
             .iter()
-            .map(|s| (s.name().to_string(), s.metrics.lock().unwrap().clone()))
+            .map(|e| (e.name.clone(), e.server.metrics.lock().unwrap().clone()))
             .collect()
     }
 
-    /// Human-readable metric report: one rollup line per model, plus —
-    /// when a model runs more than one executor replica — one line per
-    /// replica with its queue/exec breakdown. The rollup line *is* the
-    /// total (each request is popped and recorded by exactly one
-    /// replica), so the replica lines are a decomposition of it, never
-    /// an addition to it — failed dispatches included.
+    /// Every version's metrics for `model`, oldest first, current last:
+    /// `(version, snapshot)`. Each request was recorded by exactly one
+    /// version (drain-then-swap failures land in the version that owned
+    /// the queue), so counts and failures sum to the model's lifetime
+    /// totals without double counting.
+    pub fn version_metrics(&self, model: &str) -> crate::Result<Vec<(u64, ServeMetrics)>> {
+        let entries = self.entries.read().unwrap();
+        let Some(e) = entries.iter().find(|e| e.name == model) else {
+            let serving = serving_list(&entries);
+            anyhow::bail!("no server for model '{model}' (serving: {serving})");
+        };
+        let mut out: Vec<(u64, ServeMetrics)> =
+            e.retired.iter().map(|(v, m)| (*v, m.lock().unwrap().clone())).collect();
+        out.push((e.version, e.server.metrics.lock().unwrap().clone()));
+        Ok(out)
+    }
+
+    /// Human-readable metric report: one rollup line per model version
+    /// plus — when the current fleet runs more than one executor
+    /// replica — one line per replica with its queue/exec breakdown.
+    /// The rollup line *is* that version's total (each request is
+    /// popped and recorded by exactly one replica of exactly one
+    /// version), so replica lines decompose their version line and
+    /// version lines decompose the model's lifetime — failed dispatches
+    /// and drain-then-swap failures included, each counted once.
+    ///
+    /// A never-swapped model keeps the unversioned `[model]` /
+    /// `[model/replicaN]` labels; after the first swap the lines are
+    /// versioned: `[model@v1]` (retired), `[model@v2]`,
+    /// `[model@v2/replica0]`, ...
     pub fn metrics_lines(&self) -> Vec<String> {
         let mut lines = Vec::new();
-        for s in &self.servers {
-            lines.push(format!("[{}] {}", s.name(), s.metrics.lock().unwrap().summary()));
-            if s.replicas() > 1 {
-                for (ri, m) in s.replica_metrics().into_iter().enumerate() {
-                    lines.push(format!("[{}/replica{}] {}", s.name(), ri, m.summary()));
+        for e in self.entries.read().unwrap().iter() {
+            let tag = if e.version == 1 && e.retired.is_empty() {
+                e.name.clone()
+            } else {
+                format!("{}@v{}", e.name, e.version)
+            };
+            for (v, m) in &e.retired {
+                lines.push(format!("[{}@v{}] {}", e.name, v, m.lock().unwrap().summary()));
+            }
+            lines.push(format!("[{tag}] {}", e.server.metrics.lock().unwrap().summary()));
+            if e.server.replicas() > 1 {
+                for (ri, m) in e.server.replica_metrics().into_iter().enumerate() {
+                    lines.push(format!("[{tag}/replica{ri}] {}", m.summary()));
                 }
             }
         }

@@ -53,6 +53,12 @@ impl LutTable {
         1usize << self.n_bits
     }
 
+    /// Resident bytes of the table's entry storage (the artifact-memory
+    /// accounting behind `ModelArtifact::footprint_bytes`).
+    pub fn footprint_bytes(&self) -> usize {
+        self.entries.len() * std::mem::size_of::<i64>()
+    }
+
     /// Integer-in integer-out table application.
     #[inline]
     pub fn lookup(&self, x: i64) -> i64 {
@@ -209,7 +215,22 @@ impl AnyTable {
     }
 }
 
+impl SegmentedTable {
+    /// Resident bytes across both segments' entry storage.
+    pub fn footprint_bytes(&self) -> usize {
+        self.steep.footprint_bytes() + self.flat.footprint_bytes()
+    }
+}
+
 impl AnyTable {
+    /// Resident bytes of the table's entry storage.
+    pub fn footprint_bytes(&self) -> usize {
+        match self {
+            AnyTable::Lut(t) => t.footprint_bytes(),
+            AnyTable::Segmented(s) => s.footprint_bytes(),
+        }
+    }
+
     pub fn entry_count(&self) -> usize {
         match self {
             AnyTable::Lut(t) => t.depth(),

@@ -362,7 +362,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let router = Router::start(&manifest, &models, 2, config)?;
     for model in router.models() {
-        let s = router.server(model).expect("router started this model");
+        let s = router.server(&model).expect("router started this model");
         println!(
             "serving '{}' on {} backend x{} executor replica(s) \
              ({} token values/img, {} classes, loaded in {:.0} ms)",
@@ -373,6 +373,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.num_classes(),
             s.compile_ms()
         );
+        if let Some(a) = s.artifact() {
+            println!(
+                "  weights: one shared artifact, {:.1} MiB across {} replica(s)",
+                a.footprint_bytes() as f64 / (1024.0 * 1024.0),
+                s.replicas()
+            );
+        }
     }
 
     let mut rng = Prng::new(7);

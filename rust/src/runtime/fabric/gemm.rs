@@ -143,6 +143,18 @@ impl PackedGemm {
         &self.bias
     }
 
+    /// Resident bytes of the packed weight panels + bias row, plus the
+    /// lazily-materialized row-major oracle copy if some caller forced
+    /// it ([`Self::raw`] — tests and the naive reference path only).
+    /// This is the immutable per-matrix share of a model artifact's
+    /// memory footprint; scratch is accounted separately (it is
+    /// per-replica, not per-artifact).
+    pub fn footprint_bytes(&self) -> usize {
+        self.panels.len() * std::mem::size_of::<i32>()
+            + self.bias.len() * std::mem::size_of::<i64>()
+            + self.raw.get().map_or(0, |r| r.len() * std::mem::size_of::<i32>())
+    }
+
     /// The activation-density check: should this row take the zero-skip
     /// scalar kernel instead of the dense unroll?
     #[inline]

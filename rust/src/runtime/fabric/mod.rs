@@ -36,9 +36,12 @@
 //! last handle drops, the pool flags shutdown, wakes every parked
 //! worker, and **joins** them — model unload never leaks threads (the
 //! lifecycle test asserts this via [`LanePool::live_workers`]). Under
-//! multi-executor scale-out (`RuntimeConfig::replicas`) each replica
-//! loads its own model and therefore owns its own pool: fabrics are
-//! never shared across replicas, mirroring one engine per feeder.
+//! multi-executor scale-out (`RuntimeConfig::replicas`) the fabric is
+//! the **per-replica mutable half** of a loaded model: every replica
+//! borrows the same immutable [`crate::runtime::ModelArtifact`]
+//! (weights, packed panels, LUTs) but owns its own pool and scratch —
+//! fabrics are never shared across replicas, mirroring one engine per
+//! feeder over a single-load weight store.
 //!
 //! ## Lane count
 //!

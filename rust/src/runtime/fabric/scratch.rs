@@ -1,7 +1,9 @@
 //! Per-lane scratch arena: every reusable buffer the interpreter's
 //! forward pass and band kernels need, recycled through a bag so
 //! steady-state serving does no per-image heap allocation in
-//! GEMM/attention scratch.
+//! GEMM/attention scratch. Scratch is always part of the
+//! **per-replica mutable half** of a loaded model — replicas share one
+//! immutable [`crate::runtime::ModelArtifact`], never an arena.
 //!
 //! A [`LaneScratch`] box is two disjoint halves that never alias:
 //!

@@ -34,6 +34,28 @@ pub(crate) struct BlockParams {
     pub(crate) mm2_rq: LutTable,
 }
 
+impl BlockParams {
+    /// Resident bytes of one encoder block's immutable parameters.
+    fn footprint_bytes(&self) -> usize {
+        self.qkv.footprint_bytes()
+            + self.proj.footprint_bytes()
+            + self.mm1.footprint_bytes()
+            + self.mm2.footprint_bytes()
+            + self.ln1_rsqrt.footprint_bytes()
+            + self.ln1_rq.footprint_bytes()
+            + self.qkv_rq.footprint_bytes()
+            + self.exp.footprint_bytes()
+            + self.recip.footprint_bytes()
+            + self.prob.footprint_bytes()
+            + self.rv_rq.footprint_bytes()
+            + self.proj_rq.footprint_bytes()
+            + self.ln2_rsqrt.footprint_bytes()
+            + self.ln2_rq.footprint_bytes()
+            + self.gelu.footprint_bytes()
+            + self.mm2_rq.footprint_bytes()
+    }
+}
+
 /// A fully-loaded quantized ViT, ready to execute.
 pub struct QuantViT {
     pub model: String,
@@ -240,6 +262,23 @@ impl QuantViT {
 
     pub fn tokens_per_image(&self) -> usize {
         self.tokens * self.patch_dim
+    }
+
+    /// Resident bytes of the immutable model: every packed GEMM panel
+    /// (`pe`, per-block `qkv/proj/mm1/mm2`), every requant/non-linear
+    /// LUT, the head weights and bias. This is the per-*artifact* cost
+    /// replicas share behind one `Arc` — per-replica scratch and fabric
+    /// state are deliberately excluded (see `LanePool::scratch_footprint`
+    /// for that half).
+    pub fn footprint_bytes(&self) -> usize {
+        let blocks: usize = self.blocks.iter().map(BlockParams::footprint_bytes).sum();
+        self.pe.footprint_bytes()
+            + self.pe_rq.footprint_bytes()
+            + blocks
+            + self.ln_f_rsqrt.footprint_bytes()
+            + self.ln_f_rq.footprint_bytes()
+            + self.head_w.len() * std::mem::size_of::<i32>()
+            + self.head_bias.len() * std::mem::size_of::<f64>()
     }
 
     /// Input quantization — `QuantParams.quantize` (round half away from

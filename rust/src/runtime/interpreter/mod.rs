@@ -54,7 +54,7 @@ use std::time::Instant;
 
 use crate::artifacts::{BundleInfo, Manifest};
 use crate::runtime::fabric::{Exec, LanePool, LaneScratch, PassScratch};
-use crate::runtime::{ExecStats, Executor, LoadedModel};
+use crate::runtime::{ExecStats, Executor, LoadedModel, ModelArtifact};
 use ops::lut_i32;
 
 /// Wall-clock milliseconds spent per kernel family during a forward
@@ -504,9 +504,21 @@ pub fn load_model_with_lanes(
     model: &str,
     lanes: usize,
 ) -> crate::Result<LoadedModel> {
-    let (net, batches, load_ms) = load_bundle(manifest, model)?;
+    let artifact = ModelArtifact::load(manifest, model)?;
+    Ok(executors_from_artifact(&artifact, lanes))
+}
+
+/// Build the lane-parallel executors for an already-loaded shared
+/// [`ModelArtifact`]: only the **mutable** per-replica half is created
+/// here (the persistent worker fabric and, lazily, its scratch arena) —
+/// the weights stay in the artifact's allocation, however many replicas
+/// call this.
+pub fn executors_from_artifact(artifact: &ModelArtifact, lanes: usize) -> LoadedModel {
+    let net = artifact.net().clone();
+    let load_ms = artifact.load_ms();
     let pool = LanePool::new(lanes);
-    let executors: Vec<Box<dyn Executor>> = batches
+    let executors: Vec<Box<dyn Executor>> = artifact
+        .batches()
         .iter()
         .map(|&b| {
             Box::new(InterpreterExecutor {
@@ -518,10 +530,10 @@ pub fn load_model_with_lanes(
             }) as Box<dyn Executor>
         })
         .collect();
-    Ok(LoadedModel {
+    LoadedModel {
         executors,
         tokens_per_image: net.tokens_per_image(),
         num_classes: net.num_classes,
         compile_ms: load_ms,
-    })
+    }
 }

@@ -251,12 +251,117 @@ pub trait Executor {
 }
 
 /// A loaded model: all batch-variant executors plus shape metadata.
+///
+/// This is the **mutable half** of a model's lifetime: executors own the
+/// per-replica runtime (the persistent fabric or resident pipeline and
+/// its scratch arenas). The **immutable half** — weights, packed GEMM
+/// panels, LUT tables — lives in a [`ModelArtifact`] that any number of
+/// `LoadedModel`s can share.
 pub struct LoadedModel {
     pub executors: Vec<Box<dyn Executor>>,
     pub tokens_per_image: usize,
     pub num_classes: usize,
     /// Total load/compile time across variants (the "bitstream load").
     pub compile_ms: f64,
+}
+
+/// The immutable half of a loaded model: the quantized network bundle
+/// ([`interpreter::QuantViT`] — weights re-packed into blocked GEMM
+/// panels plus every requant/non-linear LUT) behind one `Arc`, with the
+/// manifest's batch variants and the one-time load cost.
+///
+/// Loading is the expensive, read-only part of a model's lifetime
+/// (parse the bundle JSON, pack the panels) — so it happens **once per
+/// model**, and every executor replica built from the artifact borrows
+/// the same allocation: N replicas hold N scratch arenas but exactly
+/// one copy of the weight panels (ME-ViT's single-load-weights argument
+/// in software). `Clone` is an `Arc` bump; the weights are freed when
+/// the last holder — replica or caller — drops its handle.
+///
+/// Interpreter-backend only: PJRT handles are `Rc`-based and not
+/// `Send`, so that backend keeps its per-thread load path.
+#[derive(Clone)]
+pub struct ModelArtifact {
+    net: std::sync::Arc<interpreter::QuantViT>,
+    batches: Vec<usize>,
+    load_ms: f64,
+}
+
+impl ModelArtifact {
+    /// Load and validate `model`'s bundle once. The returned artifact is
+    /// the only copy of the weights however many replicas it later
+    /// feeds.
+    pub fn load(manifest: &Manifest, model: &str) -> crate::Result<Self> {
+        let (net, batches, load_ms) = interpreter::load_bundle(manifest, model)?;
+        Ok(Self { net, batches, load_ms })
+    }
+
+    /// The shared network. Cloning the `Arc` (not the network) is how
+    /// executors join the sharing.
+    pub fn net(&self) -> &std::sync::Arc<interpreter::QuantViT> {
+        &self.net
+    }
+
+    /// Batch variants the dynamic batcher may dispatch.
+    pub fn batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    /// One-time bundle parse + panel-pack cost.
+    pub fn load_ms(&self) -> f64 {
+        self.load_ms
+    }
+
+    pub fn tokens_per_image(&self) -> usize {
+        self.net.tokens_per_image()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.net.num_classes
+    }
+
+    /// Resident bytes of the immutable model (panels + LUTs + head).
+    /// Fleet memory for N sharing replicas is this value once, not N
+    /// times — the bench `memory` section and the scale-out tests pin
+    /// that.
+    pub fn footprint_bytes(&self) -> usize {
+        self.net.footprint_bytes()
+    }
+
+    /// How many handles currently share the weights (1 = this one).
+    /// Tests use this to prove replicas share (count grows with the
+    /// fleet) and that unload frees (count returns to 1).
+    pub fn strong_count(&self) -> usize {
+        std::sync::Arc::strong_count(&self.net)
+    }
+
+    /// Whether two artifacts are views of the same weight allocation.
+    pub fn shares_weights_with(&self, other: &ModelArtifact) -> bool {
+        std::sync::Arc::ptr_eq(&self.net, &other.net)
+    }
+}
+
+/// Build a model's batch-variant executors from an already-loaded
+/// shared [`ModelArtifact`] — the replica-side half of
+/// [`load_model`]: only the mutable runtime (fabric lanes or resident
+/// pipeline stages, scratch arenas) is created here; the weights are
+/// borrowed from the artifact. Interpreter-backend configs only.
+pub fn load_model_from_artifact(
+    cfg: RuntimeConfig,
+    artifact: &ModelArtifact,
+) -> crate::Result<LoadedModel> {
+    anyhow::ensure!(
+        matches!(cfg.backend, BackendKind::Interpreter),
+        "shared model artifacts require the interpreter backend (got '{}')",
+        cfg.backend.label()
+    );
+    let lanes = cfg.lanes.unwrap_or_else(fabric::LanePool::lanes_from_env);
+    match cfg.mode.resolve() {
+        ExecMode::Pipeline { stages, queue_depth } => {
+            Ok(pipeline::executors_from_artifact(artifact, lanes, stages, queue_depth))
+        }
+        _ => Ok(interpreter::executors_from_artifact(artifact, lanes)),
+    }
 }
 
 /// Load a model's batch variants on the configured backend. An explicit
@@ -281,13 +386,10 @@ pub fn load_model(
     }
     match cfg.backend {
         BackendKind::Interpreter => {
-            let lanes = cfg.lanes.unwrap_or_else(fabric::LanePool::lanes_from_env);
-            match cfg.mode.resolve() {
-                ExecMode::Pipeline { stages, queue_depth } => {
-                    pipeline::load_model(manifest, model, lanes, stages, queue_depth)
-                }
-                _ => interpreter::load_model_with_lanes(manifest, model, lanes),
-            }
+            // the standalone path is the shared path with a fleet of
+            // one: load the immutable artifact, build executors from it
+            let artifact = ModelArtifact::load(manifest, model)?;
+            load_model_from_artifact(cfg, &artifact)
         }
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => pjrt::load_model(manifest, model),

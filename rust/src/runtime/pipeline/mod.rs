@@ -53,8 +53,8 @@ use std::time::Instant;
 
 use crate::artifacts::Manifest;
 use crate::runtime::fabric::LanePool;
-use crate::runtime::interpreter::{self, QuantViT};
-use crate::runtime::{ExecStats, Executor, LoadedModel};
+use crate::runtime::interpreter::QuantViT;
+use crate::runtime::{ExecStats, Executor, LoadedModel, ModelArtifact};
 use channel::ChannelStats;
 use stage::{StageOut, StageShared, StageSpec, Work};
 
@@ -629,14 +629,30 @@ pub fn load_model(
     stages: usize,
     queue_depth: usize,
 ) -> crate::Result<LoadedModel> {
-    let (net, batches, bundle_ms) = interpreter::load_bundle(manifest, model)?;
+    let artifact = ModelArtifact::load(manifest, model)?;
+    Ok(executors_from_artifact(&artifact, lanes, stages, queue_depth))
+}
+
+/// Spatially unroll an already-loaded shared [`ModelArtifact`] into a
+/// resident-stage pipeline. Only the mutable per-replica half is built
+/// here — stage threads, bounded queues, stage-resident scratch; every
+/// stage borrows the artifact's weight allocation through the shared
+/// `Arc` (the N-replica fleet holds one copy of the panels).
+pub fn executors_from_artifact(
+    artifact: &ModelArtifact,
+    lanes: usize,
+    stages: usize,
+    queue_depth: usize,
+) -> LoadedModel {
+    let net = artifact.net().clone();
     let t0 = Instant::now();
     let pipe = Arc::new(Pipeline::new(
         net.clone(),
         PipelineConfig { stages, queue_depth, lanes, ..Default::default() },
     ));
-    let load_ms = bundle_ms + t0.elapsed().as_secs_f64() * 1e3;
-    let executors: Vec<Box<dyn Executor>> = batches
+    let load_ms = artifact.load_ms() + t0.elapsed().as_secs_f64() * 1e3;
+    let executors: Vec<Box<dyn Executor>> = artifact
+        .batches()
         .iter()
         .map(|&b| {
             Box::new(PipelineExecutor {
@@ -647,12 +663,12 @@ pub fn load_model(
             }) as Box<dyn Executor>
         })
         .collect();
-    Ok(LoadedModel {
+    LoadedModel {
         executors,
         tokens_per_image: net.tokens_per_image(),
         num_classes: net.num_classes,
         compile_ms: load_ms,
-    })
+    }
 }
 
 #[cfg(test)]

@@ -5,7 +5,8 @@
 //! Two independent checks:
 //!
 //! * [`schema_errors`] — the bench artifact must contain every field the
-//!   README documents (including the `scale_out` section), so the schema
+//!   README documents (including the `scale_out` and `memory` sections),
+//!   so the schema
 //!   cannot silently drift away from the docs: the bench emits its JSON
 //!   by hand (no serde offline), and a renamed or dropped key would
 //!   otherwise only be noticed by whoever next reads the artifact.
@@ -73,6 +74,12 @@ const REQUIRED_PATHS: &[&str] = &[
     "scale_out.partition.work_proportional.img_s",
     "scale_out.partition.work_proportional.per_stage_busy_ms",
     "scale_out.partition.work_proportional.max_min_busy_ratio",
+    "memory.artifact_footprint_bytes",
+    "memory.replicas",
+    "memory.unshared_bytes",
+    "memory.shared_bytes",
+    "memory.savings_ratio",
+    "memory.artifact_refs",
     "per_op_ms_per_image.gemm",
     "per_op_ms_per_image.attention",
     "per_op_ms_per_image.layernorm",
@@ -230,6 +237,9 @@ mod tests {
                             "per_stage_busy_ms": [22.0, 21.0], "max_min_busy_ratio": 3.0}
     }
   },
+  "memory": {"artifact_footprint_bytes": 1048576, "replicas": 4,
+             "unshared_bytes": 4194304, "shared_bytes": 1048576,
+             "savings_ratio": 4.0, "artifact_refs": 9},
   "per_op_ms_per_image": {"quantize": 0.1, "gemm": 2.0, "layernorm": 0.3,
                           "attention": 0.8, "requant": 0.0, "head": 0.1},
   "per_op_pooled_ms_per_image": {"quantize": 0.1, "gemm": 1.0, "layernorm": 0.2,
@@ -261,6 +271,19 @@ mod tests {
         assert!(
             errs.iter().any(|e| e.contains("scale_out")),
             "scale_out omission must be caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_memory_section_is_reported() {
+        let mut doc = sample();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("memory");
+        }
+        let errs = schema_errors(&doc);
+        assert!(
+            errs.iter().any(|e| e.contains("memory.artifact_footprint_bytes")),
+            "memory omission must be caught: {errs:?}"
         );
     }
 

@@ -1,0 +1,189 @@
+//! Hot model zoo behind the [`Router`]: versioned `load` / `swap` /
+//! `unload` against the golden fixture.
+//!
+//! 1. **leak regression** — repeated load/swap/unload cycles return the
+//!    shared [`ModelArtifact`]'s `Arc::strong_count` to 1 and the
+//!    process-wide `live_workers` / `live_stages` counters to their
+//!    baselines, in both execution modes;
+//! 2. **drain-then-swap delivery** — every request submitted across a
+//!    mid-stream swap receives exactly one reply (success or explicit
+//!    failure, never a silent drop), and the per-version metrics
+//!    decompose the lifetime total without double counting;
+//! 3. **explicit errors** — duplicate load, unknown unload/swap, and a
+//!    swap whose replacement fails to start all error out while leaving
+//!    the previously-serving fleet untouched.
+//!
+//! Tests serialize on a lock: `pipeline::live_stages` and
+//! `LanePool::live_workers` are process-wide counters, and concurrent
+//! replica-creating tests would make their baseline assertions racy.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::Router;
+use hgpipe::runtime::fabric::LanePool;
+use hgpipe::runtime::{pipeline, BackendKind, ExecMode, ModelArtifact, RuntimeConfig};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&fixture_dir()).expect("committed golden fixture")
+}
+
+fn config() -> RuntimeConfig {
+    RuntimeConfig::new(BackendKind::Interpreter).with_lanes(Some(1)).with_replicas(Some(2))
+}
+
+#[test]
+fn load_swap_unload_cycles_return_refcounts_and_threads_to_baseline() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let stage_baseline = pipeline::live_stages();
+    let worker_baseline = LanePool::live_workers();
+    for mode in [ExecMode::LaneParallel, ExecMode::Pipeline { stages: 0, queue_depth: 2 }] {
+        let cfg = config().with_mode(mode);
+        let router = Router::new(Vec::new());
+        for cycle in 0..3 {
+            router.load(&manifest, "tiny-synth", 2, cfg).unwrap();
+            assert_eq!(router.version("tiny-synth"), Some(1));
+            let per = router.server("tiny-synth").unwrap().tokens_per_image();
+            router.infer_all("tiny-synth", vec![vec![0.5; per]; 2]).unwrap();
+            assert_eq!(router.swap(&manifest, "tiny-synth", 2, cfg).unwrap(), 2);
+            router.infer_all("tiny-synth", vec![vec![0.5; per]; 2]).unwrap();
+            // hold one outside clone of the live artifact so the
+            // refcount stays observable across the unload
+            let held = {
+                let server = router.server("tiny-synth").unwrap();
+                server.artifact().expect("interpreter backend shares an artifact").clone()
+            };
+            assert!(held.strong_count() > 1, "the fleet holds shared references");
+            router.unload("tiny-synth").unwrap();
+            assert!(router.server("tiny-synth").is_none());
+            assert_eq!(
+                held.strong_count(),
+                1,
+                "{mode:?} cycle {cycle}: unload must free every fleet reference"
+            );
+            assert_eq!(
+                pipeline::live_stages(),
+                stage_baseline,
+                "{mode:?} cycle {cycle}: stage threads leaked"
+            );
+            assert_eq!(
+                LanePool::live_workers(),
+                worker_baseline,
+                "{mode:?} cycle {cycle}: fabric workers leaked"
+            );
+        }
+    }
+}
+
+#[test]
+fn mid_stream_swap_delivers_every_request_exactly_once() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let cfg = config();
+    let router = Router::start(&manifest, &["tiny-synth".to_string()], 2, cfg).unwrap();
+    let per = router.server("tiny-synth").unwrap().tokens_per_image();
+    let total = 32usize;
+    let mut rxs = Vec::with_capacity(total);
+    for i in 0..total {
+        if i == total / 2 {
+            // swap with half the traffic submitted: the old fleet
+            // drains (replies or fails explicitly), the new one takes
+            // the rest
+            assert_eq!(router.swap(&manifest, "tiny-synth", 2, cfg).unwrap(), 2);
+        }
+        let image = vec![0.25f32; per];
+        // a submit racing the closing queue errs explicitly; one
+        // resubmit routes it to the new version — nothing is dropped
+        let rx = match router.submit("tiny-synth", image.clone()) {
+            Ok(rx) => rx,
+            Err(_) => router.submit("tiny-synth", image).unwrap(),
+        };
+        rxs.push(rx);
+    }
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        // exactly one reply per accepted request: a dropped sender here
+        // would be a silently lost request
+        match rx.recv().unwrap_or_else(|_| panic!("request {i}: reply sender dropped")) {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    assert_eq!(ok + failed, total, "every request resolves exactly once");
+
+    // the per-version decomposition covers the lifetime totals: each
+    // request was recorded by exactly one version (drain failures land
+    // in the version that owned the queue), so the sums match with no
+    // double counting
+    let versions = router.version_metrics("tiny-synth").unwrap();
+    assert_eq!(versions.len(), 2);
+    assert_eq!(versions[0].0, 1);
+    assert_eq!(versions[1].0, 2);
+    let counted: usize = versions.iter().map(|(_, m)| m.count() + m.failed as usize).sum();
+    assert_eq!(counted, total, "per-version metrics must sum to the lifetime total");
+    let failed_sum: usize = versions.iter().map(|(_, m)| m.failed as usize).sum();
+    assert_eq!(failed_sum, failed, "per-version failures must sum to observed failures");
+
+    // versioned labels appear only once a swap happened: the retired
+    // version first, then the live fleet with its replica breakdown
+    let lines = router.metrics_lines();
+    assert!(lines[0].starts_with("[tiny-synth@v1] "), "retired line first: {}", lines[0]);
+    assert!(lines[1].starts_with("[tiny-synth@v2] "), "live rollup second: {}", lines[1]);
+    assert!(lines[2].starts_with("[tiny-synth@v2/replica0] "), "replica lines: {}", lines[2]);
+    assert_eq!(lines.len(), 2 + 2, "v1 rollup + v2 rollup + two v2 replica lines");
+}
+
+#[test]
+fn zoo_errors_are_explicit_and_leave_serving_untouched() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let cfg = config();
+    let router = Router::start(&manifest, &["tiny-synth".to_string()], 2, cfg).unwrap();
+
+    // duplicate load: the zoo already serves this name
+    let err = router.load(&manifest, "tiny-synth", 2, cfg).unwrap_err().to_string();
+    assert!(err.contains("already served"), "unexpected error: {err}");
+
+    // unknown unload: actionable error naming what is being served
+    let err = router.unload("nope").unwrap_err().to_string();
+    assert!(err.contains("no server") && err.contains("tiny-synth"), "unexpected error: {err}");
+
+    // a swap whose replacement cannot start fails before routing ever
+    // changes: version and serving stay exactly as they were
+    assert!(router.swap(&manifest, "nope", 2, cfg).is_err());
+    assert_eq!(router.version("tiny-synth"), Some(1));
+    let per = router.server("tiny-synth").unwrap().tokens_per_image();
+    router.infer_all("tiny-synth", vec![vec![0.5; per]; 1]).unwrap();
+    assert_eq!(router.version_metrics("tiny-synth").unwrap().len(), 1, "no retired versions");
+
+    // a swap for a name the zoo does not serve is rejected even when
+    // the replacement starts fine (the fresh fleet drains trivially)
+    let empty = Router::new(Vec::new());
+    let err = empty.swap(&manifest, "tiny-synth", 2, cfg).unwrap_err().to_string();
+    assert!(err.contains("to swap"), "unexpected error: {err}");
+    assert!(empty.models().is_empty());
+}
+
+#[test]
+fn distinct_loads_do_not_share_weights_but_a_fleet_does() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let a = ModelArtifact::load(&manifest, "tiny-synth").unwrap();
+    let b = ModelArtifact::load(&manifest, "tiny-synth").unwrap();
+    assert!(!a.shares_weights_with(&b), "independent loads are distinct copies");
+    let a2 = a.clone();
+    assert!(a.shares_weights_with(&a2), "clones share the same weights");
+    assert_eq!(a.strong_count(), 2);
+    drop(a2);
+    assert_eq!(a.strong_count(), 1);
+    assert_eq!(a.footprint_bytes(), b.footprint_bytes());
+    assert!(a.footprint_bytes() > 0, "footprint accounts for resident panels and tables");
+}

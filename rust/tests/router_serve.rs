@@ -6,7 +6,7 @@ use std::path::{Path, PathBuf};
 
 use hgpipe::artifacts::Manifest;
 use hgpipe::coordinator::Router;
-use hgpipe::runtime::{BackendKind, ExecMode, RuntimeConfig};
+use hgpipe::runtime::{faulty, BackendKind, ExecMode, RuntimeConfig};
 
 fn fixture_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
@@ -120,6 +120,51 @@ fn single_replica_metrics_lines_stay_one_per_model() {
         // and the line count is covered by the test above)
         assert_eq!(router.metrics_lines().len(), 1);
     }
+}
+
+#[test]
+fn drain_then_swap_failures_are_counted_exactly_once_across_versions() {
+    // every faulty dispatch fails, so each version's failure ledger is
+    // fully deterministic: after a hot swap, v1's retired metrics must
+    // keep exactly the failures it answered and the v2 lines must count
+    // only post-swap traffic — summing the report can never exceed the
+    // requests actually submitted
+    let cfg = RuntimeConfig::new(BackendKind::Faulty).with_replicas(Some(2));
+    let router = Router::start(&manifest(), &["any".to_string()], 1, cfg).unwrap();
+    let submit_n = |n: usize| -> usize {
+        let rxs: Vec<_> = (0..n)
+            .map(|_| router.submit("any", vec![0.5; faulty::TOKENS_PER_IMAGE]).unwrap())
+            .collect();
+        rxs.into_iter().filter(|rx| rx.recv().expect("exactly one reply").is_err()).count()
+    };
+    assert_eq!(submit_n(5), 5, "faulty backend fails every dispatch");
+    assert_eq!(router.swap(&manifest(), "any", 1, cfg).unwrap(), 2);
+    assert_eq!(submit_n(3), 3);
+
+    let versions = router.version_metrics("any").unwrap();
+    assert_eq!(versions.len(), 2);
+    assert_eq!(versions[0].1.failed, 5, "v1 keeps exactly its own failures after retiring");
+    assert_eq!(versions[1].1.failed, 3, "v2 counts only post-swap traffic");
+    assert_eq!(versions.iter().map(|(_, m)| m.failed).sum::<u64>(), 8);
+
+    // line-level decomposition: the failed= counts printed per version
+    // sum to the lifetime total (a failure appears on its version's
+    // line and nowhere else), and replica lines decompose their
+    // version's line, not the lifetime
+    let failed_of = |line: &str| -> u64 {
+        let rest = line.split("failed=").nth(1).expect("summary line has failed=");
+        rest.split_whitespace().next().unwrap().parse().unwrap()
+    };
+    let lines = router.metrics_lines();
+    let v1 = lines.iter().find(|l| l.starts_with("[any@v1] ")).expect("retired v1 line");
+    let v2 = lines.iter().find(|l| l.starts_with("[any@v2] ")).expect("live v2 line");
+    assert_eq!(failed_of(v1) + failed_of(v2), 8, "version lines decompose the total: {lines:?}");
+    let replica_sum: u64 = lines
+        .iter()
+        .filter(|l| l.contains("@v2/replica"))
+        .map(|l| failed_of(l.as_str()))
+        .sum();
+    assert_eq!(replica_sum, failed_of(v2), "replica lines decompose their version line");
 }
 
 #[test]

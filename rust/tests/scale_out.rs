@@ -177,6 +177,46 @@ fn successful_requests_decompose_across_replica_metrics() {
 }
 
 #[test]
+fn replicas_share_one_model_artifact() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let (net, tokens, _) = golden();
+    let per = net.tokens_per_image();
+    for mode in [ExecMode::LaneParallel, ExecMode::Pipeline { stages: 0, queue_depth: 2 }] {
+        let config = RuntimeConfig::new(BackendKind::Interpreter)
+            .with_lanes(Some(1))
+            .with_mode(mode)
+            .with_replicas(Some(4));
+        let server = ModelServer::start_with_config(&manifest, "tiny-synth", 2, config).unwrap();
+        let artifact = server.artifact().expect("interpreter backend shares an artifact");
+        // one weight copy for the whole fleet: every replica's
+        // executors hold Arc clones of the server's artifact, never a
+        // reload, so the refcount is bounded above the fleet size and
+        // the footprint is paid exactly once
+        assert!(
+            artifact.strong_count() >= 1 + 4,
+            "4 replicas must all hold the shared artifact (refs: {})",
+            artifact.strong_count()
+        );
+        let solo = hgpipe::runtime::ModelArtifact::load(&manifest, "tiny-synth").unwrap();
+        assert_eq!(
+            artifact.footprint_bytes(),
+            solo.footprint_bytes(),
+            "fleet footprint is one artifact, not replicas x artifact"
+        );
+        assert!(!artifact.shares_weights_with(&solo), "independent loads are distinct");
+        // sharing must not change the numbers: still bit-stable across
+        // the replicated fleet
+        let responses = server.infer_all(vec![tokens[..per].to_vec(); 4]).unwrap();
+        let first = &responses[0].logits;
+        for r in &responses[1..] {
+            assert_eq!(&r.logits, first, "shared-artifact replicas disagree");
+        }
+        drop(server);
+    }
+}
+
+#[test]
 fn explicit_replicas_beat_the_env_fallback_and_clamp_to_one() {
     // resolution only (no server): explicit wins over HGPIPE_REPLICAS,
     // zero clamps to one; the CI matrix exercises the env route itself
