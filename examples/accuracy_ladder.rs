@@ -4,6 +4,8 @@
 //! bit-exact integer model over the trained tiny-ViT).
 //!
 //! Run: `cargo run --release --example accuracy_ladder`
+//! (`-- --smoke` prints the DSP ladder only — no artifact reads — so CI
+//! and quick demos complete in well under a second)
 
 use hgpipe::arch::dsp::dsp_ladder;
 use hgpipe::arch::parallelism::design_network;
@@ -11,11 +13,14 @@ use hgpipe::model::{Precision, ViTConfig};
 use hgpipe::util::json::Json;
 
 fn main() -> hgpipe::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let cfg = ViTConfig::deit_tiny();
     let d = design_network(&cfg, Precision::A4W3, 2);
 
     let path = std::path::Path::new("artifacts/accuracy_ladder.json");
-    let acc = if path.exists() {
+    let acc = if smoke {
+        None // smoke mode: resource ladder only, no artifact dependency
+    } else if path.exists() {
         Some(Json::parse(&std::fs::read_to_string(path)?).map_err(|e| anyhow::anyhow!(e))?)
     } else {
         println!("(accuracy_ladder.json missing — showing DSP ladder only; run `make artifacts`)");

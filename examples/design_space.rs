@@ -3,6 +3,8 @@
 //! DESIGN.md calls out: what the hand-crafted Table-1 point trades).
 //!
 //! Run: `cargo run --release --example design_space`
+//! (`-- --smoke` trims every sweep to its smallest point — one network,
+//! two precisions, two TP values, one deployment — for CI/quick demos)
 
 use hgpipe::arch::parallelism::{balance_target, design_network};
 use hgpipe::metrics::{datapath_luts, deploy};
@@ -10,13 +12,24 @@ use hgpipe::model::{Precision, ViTConfig};
 use hgpipe::platform::Fpga;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let networks = if smoke {
+        vec![ViTConfig::tiny_synth()]
+    } else {
+        vec![ViTConfig::tiny_synth(), ViTConfig::deit_tiny(), ViTConfig::deit_small()]
+    };
+    let precisions: &[Precision] = if smoke {
+        &[Precision::A8W8, Precision::A4W4]
+    } else {
+        &[Precision::A8W8, Precision::A4W4, Precision::A4W3, Precision::A3W3]
+    };
     println!("=== designer sweep: network x precision ===");
     println!(
         "{:<12} {:<6} {:>9} {:>10} {:>11} {:>12}",
         "network", "prec", "MACs", "wBRAMs", "target II", "datapath LUT"
     );
-    for cfg in [ViTConfig::tiny_synth(), ViTConfig::deit_tiny(), ViTConfig::deit_small()] {
-        for prec in [Precision::A8W8, Precision::A4W4, Precision::A4W3, Precision::A3W3] {
+    for cfg in networks {
+        for &prec in precisions {
             let d = design_network(&cfg, prec, 2);
             println!(
                 "{:<12} {:<6} {:>9} {:>10} {:>11} {:>12}",
@@ -32,7 +45,8 @@ fn main() {
 
     println!("\n=== TP sweep: balance target vs token parallelism (deit-tiny) ===");
     let cfg = ViTConfig::deit_tiny();
-    for tp in [1u64, 2, 4, 7] {
+    let tps: &[u64] = if smoke { &[1, 2] } else { &[1, 2, 4, 7] };
+    for &tp in tps {
         let d = design_network(&cfg, Precision::A4W3, tp);
         println!(
             "TP={tp}: target II {:>7}  MACs {:>7}  ideal fps@425MHz {:>6.0}",
@@ -47,13 +61,18 @@ fn main() {
         "{:<12} {:<6} {:<8} {:>6} {:>8} {:>9} {:>8}",
         "network", "prec", "device", "scale", "FPS", "GOPs", "GOPs/kLUT"
     );
-    for (cfg, prec, fpga, freq) in [
-        (ViTConfig::deit_tiny(), Precision::A4W4, Fpga::zcu102(), 375e6),
-        (ViTConfig::deit_tiny(), Precision::A4W4, Fpga::vck190(), 425e6),
-        (ViTConfig::deit_tiny(), Precision::A3W3, Fpga::vck190(), 425e6),
-        (ViTConfig::deit_small(), Precision::A3W3, Fpga::vck190(), 350e6),
-        (ViTConfig::deit_small(), Precision::A4W4, Fpga::vck190(), 350e6),
-    ] {
+    let deployments = if smoke {
+        vec![(ViTConfig::deit_tiny(), Precision::A4W4, Fpga::zcu102(), 375e6)]
+    } else {
+        vec![
+            (ViTConfig::deit_tiny(), Precision::A4W4, Fpga::zcu102(), 375e6),
+            (ViTConfig::deit_tiny(), Precision::A4W4, Fpga::vck190(), 425e6),
+            (ViTConfig::deit_tiny(), Precision::A3W3, Fpga::vck190(), 425e6),
+            (ViTConfig::deit_small(), Precision::A3W3, Fpga::vck190(), 350e6),
+            (ViTConfig::deit_small(), Precision::A4W4, Fpga::vck190(), 350e6),
+        ]
+    };
+    for (cfg, prec, fpga, freq) in deployments {
         let r = deploy(&cfg, prec, &fpga, freq);
         println!(
             "{:<12} {:<6} {:<8} {:>6} {:>8.0} {:>9.0} {:>8.2}",

@@ -33,6 +33,9 @@
 //!                           per-replica occupancy), and the near-even
 //!                           vs work-proportional partition compared by
 //!                           per-stage busy_ms at stages = max
+//!   kernels                 SIMD kernel dispatch: detected backend name,
+//!                           scalar-oracle vs detected-backend img/s at
+//!                           one lane, and per-op breakdowns under each
 //!   memory                  shared-artifact accounting: the weight/LUT
 //!                           footprint of one `ModelArtifact`, what a
 //!                           4-replica fleet would cost unshared, and
@@ -49,6 +52,7 @@ use hgpipe::coordinator::ModelServer;
 use hgpipe::runtime::fabric::gemm::PackedGemm;
 use hgpipe::runtime::fabric::LanePool;
 use hgpipe::runtime::interpreter::{self, OpProfile, QuantViT};
+use hgpipe::runtime::kernels;
 use hgpipe::runtime::pipeline::{
     PartitionStrategy, Pipeline, PipelineConfig, DEFAULT_QUEUE_DEPTH,
 };
@@ -397,7 +401,13 @@ fn main() {
     ] {
         let pipe = Pipeline::new(
             net.clone(),
-            PipelineConfig { stages: req_stages, queue_depth, lanes: 1, partition: strategy },
+            PipelineConfig {
+                stages: req_stages,
+                queue_depth,
+                lanes: 1,
+                partition: strategy,
+                ..Default::default()
+            },
         );
         pipe.run_batch(&flat, n_images).expect("partition warm-up");
         let s0 = pipe.stats();
@@ -452,6 +462,40 @@ fn main() {
     let memory_savings = unshared_bytes as f64 / artifact_footprint as f64;
     drop(mem_server);
 
+    // 11. SIMD kernel dispatch: the scalar oracle vs whatever backend
+    // CPU detection picked, pinned through single-lane pools so the
+    // comparison isolates the vectorized kernels from threading. Logits
+    // are asserted bit-identical before timing (the vtable contract).
+    let kern_scalar = kernels::scalar();
+    let kern_simd = kernels::detect();
+    let kpool_scalar = LanePool::with_kernels(1, kern_scalar);
+    let kpool_simd = LanePool::with_kernels(1, kern_simd);
+    {
+        let got = net.forward_image_pooled(&flat[..per], &kpool_simd).unwrap();
+        assert_eq!(
+            want.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            "{} kernel backend diverged from the naive baseline",
+            kern_simd.name
+        );
+    }
+    let r_kscalar = bench("kernels: scalar oracle, 1 lane", sweep_budget, || {
+        for img in flat.chunks_exact(per) {
+            black_box(net.forward_image_pooled(img, &kpool_scalar).unwrap());
+        }
+    });
+    println!("{r_kscalar}");
+    let kscalar_ips = n_images as f64 / r_kscalar.mean.as_secs_f64();
+    let r_ksimd =
+        bench(&format!("kernels: {} backend, 1 lane", kern_simd.name), sweep_budget, || {
+            for img in flat.chunks_exact(per) {
+                black_box(net.forward_image_pooled(img, &kpool_simd).unwrap());
+            }
+        });
+    println!("{r_ksimd}");
+    let ksimd_ips = n_images as f64 / r_ksimd.mean.as_secs_f64();
+    let kernel_speedup = ksimd_ips / kscalar_ips;
+
     // per-op breakdowns: serial (clean attribution) and pooled (what the
     // serving path actually spends per op at the headline lane count)
     let prof_images = n_images.min(8);
@@ -465,6 +509,15 @@ fn main() {
     for img in flat.chunks_exact(per).take(prof_images) {
         let (_, p) = net.forward_profiled(img, &pooled_pool).unwrap();
         prof_pooled.merge(&p);
+    }
+    // per-op under each kernel backend: where the SIMD time goes
+    let mut prof_kscalar = OpProfile::default();
+    let mut prof_ksimd = OpProfile::default();
+    for img in flat.chunks_exact(per).take(prof_images) {
+        let (_, p) = net.forward_profiled(img, &kpool_scalar).unwrap();
+        prof_kscalar.merge(&p);
+        let (_, p) = net.forward_profiled(img, &kpool_simd).unwrap();
+        prof_ksimd.merge(&p);
     }
     let scale = 1.0 / prof_images as f64;
     let total = prof.total_ms().max(1e-12);
@@ -486,6 +539,11 @@ fn main() {
         pooled_ips / spawn_ips
     );
     println!("    gemm microkernel     {gemm_dense_speedup:.2}x dense, {gemm_sparse_speedup:.2}x sparse (vs naive)");
+    println!(
+        "    kernels ({:<6})     {ksimd_ips:8.1} img/s vs scalar {kscalar_ips:8.1} \
+         ({kernel_speedup:.2}x, 1 lane)",
+        kern_simd.name
+    );
     println!(
         "    pipeline {:2} stages  {pipeline_ips:8.1} img/s   ({:.2}x vs lane-parallel fabric)",
         pipe.stage_count(),
@@ -652,6 +710,15 @@ fn main() {
                 p.head_ms * scale,
             )
         };
+        let kernels_json = format!(
+            "{{\n    \"detected\": \"{}\",\n    \"scalar_img_s\": {kscalar_ips:.3},\n    \
+             \"simd_img_s\": {ksimd_ips:.3},\n    \"speedup\": {kernel_speedup:.3},\n    \
+             \"per_op_scalar_ms_per_image\": {},\n    \
+             \"per_op_simd_ms_per_image\": {}\n  }}",
+            kern_simd.name,
+            per_op(&prof_kscalar),
+            per_op(&prof_ksimd),
+        );
         let json = format!(
             "{{\n  \"model\": \"tiny-synth\",\n  \"smoke\": {},\n  \"images\": {},\n  \
              \"lanes\": {},\n  \"scalar_naive_img_s\": {:.3},\n  \
@@ -664,6 +731,7 @@ fn main() {
              \"lane_sweep\": [{}\n  ],\n  \
              \"pipeline\": {},\n  \
              \"scale_out\": {},\n  \
+             \"kernels\": {},\n  \
              \"memory\": {{\n    \"artifact_footprint_bytes\": {artifact_footprint},\n    \
              \"replicas\": {mem_replicas},\n    \
              \"unshared_bytes\": {unshared_bytes},\n    \
@@ -690,6 +758,7 @@ fn main() {
             sweep_json,
             pipeline_json,
             scale_out_json,
+            kernels_json,
             per_op(&prof),
             per_op(&prof_pooled),
         );

@@ -15,6 +15,7 @@ use hgpipe::arch::parallelism::design_network;
 use hgpipe::artifacts::Manifest;
 use hgpipe::coordinator::{ModelServer, Router};
 use hgpipe::model::{Precision, ViTConfig};
+use hgpipe::runtime::kernels::KernelPref;
 use hgpipe::runtime::{pipeline, BackendKind, ExecMode, RuntimeConfig};
 use hgpipe::sim::{self, builder::Paradigm, SimConfig};
 use hgpipe::util::prng::Prng;
@@ -83,11 +84,12 @@ impl Args {
     }
 
     /// The full runtime configuration: backend, the `--lanes` flag, the
-    /// execution mode, and the `--replicas` executor count, all threaded
-    /// through explicitly. `--lanes` beats `HGPIPE_LANES`, `--pipeline`
-    /// beats `HGPIPE_MODE`, `--replicas` beats `HGPIPE_REPLICAS` — the
-    /// binary never mutates its own environment (`set_var` is unsound
-    /// once threads exist).
+    /// execution mode, the `--replicas` executor count and the
+    /// `--kernels` backend preference, all threaded through explicitly.
+    /// `--lanes` beats `HGPIPE_LANES`, `--pipeline` beats `HGPIPE_MODE`,
+    /// `--replicas` beats `HGPIPE_REPLICAS`, `--kernels` beats
+    /// `HGPIPE_KERNELS` — the binary never mutates its own environment
+    /// (`set_var` is unsound once threads exist).
     fn runtime_config(&self) -> Result<RuntimeConfig> {
         let lanes = match self.flags.get("lanes") {
             None => None,
@@ -108,6 +110,10 @@ impl Args {
                 anyhow::ensure!(n >= 1, "--replicas must be at least 1");
                 Some(n)
             }
+        };
+        let kernels = match self.flags.get("kernels") {
+            None => None,
+            Some(v) => Some(KernelPref::parse(v)?),
         };
         let backend = self.backend()?;
         let mode = if let Some(v) = self.flags.get("pipeline") {
@@ -148,7 +154,8 @@ impl Args {
         Ok(RuntimeConfig::new(backend)
             .with_lanes(lanes)
             .with_mode(mode)
-            .with_replicas(replicas))
+            .with_replicas(replicas)
+            .with_kernels(kernels))
     }
 }
 
@@ -200,12 +207,12 @@ COMMANDS:
                            [--model tiny-synth | --models a,b] [--requests N]
                            [--rate R/s] [--artifacts DIR]
                            [--backend interpreter|pjrt] [--lanes N]
-                           [--replicas N]
+                           [--replicas N] [--kernels scalar|avx2|neon|auto]
                            [--pipeline [--stages N] [--queue-depth N]]
   eval                     eval-batch accuracy of a quantized model
                            [--model tiny-synth] [--artifacts DIR]
                            [--backend interpreter|pjrt] [--lanes N]
-                           [--replicas N]
+                           [--replicas N] [--kernels scalar|avx2|neon|auto]
                            [--pipeline [--stages N] [--queue-depth N]]
   artifacts                list the artifact manifest [--artifacts DIR]
 
@@ -223,8 +230,12 @@ unset, the HGPIPE_MODE env var is consulted (`pipeline` |
 replicas pulling from one shared queue, each owning its own fabric or
 pipeline (env fallback: HGPIPE_REPLICAS). `--models a,b` serves several
 models behind one router with per-model and per-replica metrics.
-Results are bit-identical at every lane count, stage count, queue depth
-and replica count.
+`--kernels` pins the SIMD kernel backend every hot inner loop dispatches
+through (selected once at model load; env fallback: HGPIPE_KERNELS;
+default auto-detects avx2/neon, falling back to scalar); naming a
+backend the host cannot run is an error. Results are bit-identical at
+every lane count, stage count, queue depth, replica count and kernel
+backend.
 ";
 
 fn cmd_report(args: &Args) -> Result<()> {
@@ -361,14 +372,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => vec![args.flag("model", "tiny-synth")],
     };
     let router = Router::start(&manifest, &models, 2, config)?;
+    // the backend every fleet's fabric/pipeline was pinned to at load
+    // (resolve_kernels is deterministic, so this matches what the
+    // router's executors selected)
+    let kern = config.resolve_kernels()?;
     for model in router.models() {
         let s = router.server(&model).expect("router started this model");
         println!(
-            "serving '{}' on {} backend x{} executor replica(s) \
+            "serving '{}' on {} backend x{} executor replica(s), {} kernels \
              ({} token values/img, {} classes, loaded in {:.0} ms)",
             model,
             config.backend.label(),
             s.replicas(),
+            kern.name,
             s.tokens_per_image(),
             s.num_classes(),
             s.compile_ms()

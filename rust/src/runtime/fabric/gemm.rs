@@ -13,13 +13,10 @@
 //! row by an activation-density check ([`PackedGemm::row_is_sparse`]):
 //!
 //! * [`rows4`](PackedGemm::rows4_into) — the register-blocked
-//!   microkernel: **4 output rows × 8-wide fixed-unrolled columns**.
-//!   Each packed panel row is loaded once and multiplied into four
-//!   accumulator tiles, and the 8-wide unroll gives the compiler
-//!   straight-line i32×i32→i64 multiply-add chains it can schedule (and,
-//!   where profitable, vectorize) — the scalar per-element loop could
-//!   not be.
-//! * a single-row dense kernel (same 8-wide unroll) for the 1–3-row
+//!   microkernel: **4 output rows sharing each panel-row load** through
+//!   the backend's `axpy4` (8-wide unrolled multiply-add chains on the
+//!   scalar oracle, widening-multiply vectors on SIMD backends).
+//! * a single-row dense kernel (the backend's `axpy`) for the 1–3-row
 //!   remainder of a dense run.
 //! * the original zero-skip scalar kernel ([`PackedGemm::row_into`]) for
 //!   **sparse** rows: quantized activations — GELU outputs especially —
@@ -32,8 +29,16 @@
 //! associative anyway — so results are identical to the scalar reference
 //! on every input, including wrap-around corner cases. The zero skip
 //! contributes nothing by construction (`0 * w == 0`).
+//!
+//! The panel-row inner loop itself (`o[j] += a * w[j]`) lives in the
+//! [`Kernels`] vtable (`kernels::axpy`/`axpy4`): the pool's selected
+//! backend — scalar oracle or SIMD — is threaded into every row kernel,
+//! so all three dispatch arms (microkernel, dense remainder, zero-skip)
+//! hit the same vectorized code. [`Self::matmul_naive`] stays a pure
+//! scalar walk over the row-major weights, independent of the vtable.
 
 use super::LanePool;
+use crate::runtime::kernels::Kernels;
 
 /// Output-column panel width. 64 i64 accumulators = one 512-byte hot
 /// tile; panels of `ci x 64` i32 weights stay well inside L2 for every
@@ -48,32 +53,6 @@ pub const TILE_CO: usize = 64;
 pub const SPARSE_NUM: usize = 3;
 /// See [`SPARSE_NUM`].
 pub const SPARSE_DEN: usize = 8;
-
-/// `o[j] += a * w[j]` over one packed panel row, 8-wide fixed-unrolled.
-///
-/// The explicit unroll keeps eight independent multiply-accumulate
-/// chains in flight per iteration; the i64-widening multiply blocked
-/// rustc's autovectorizer on the old per-element loop.
-#[inline(always)]
-fn axpy8(a: i64, w: &[i32], o: &mut [i64]) {
-    debug_assert_eq!(w.len(), o.len());
-    let n8 = w.len() & !7;
-    let (w8, w_tail) = w.split_at(n8);
-    let (o8, o_tail) = o.split_at_mut(n8);
-    for (oc, wc) in o8.chunks_exact_mut(8).zip(w8.chunks_exact(8)) {
-        oc[0] += a * wc[0] as i64;
-        oc[1] += a * wc[1] as i64;
-        oc[2] += a * wc[2] as i64;
-        oc[3] += a * wc[3] as i64;
-        oc[4] += a * wc[4] as i64;
-        oc[5] += a * wc[5] as i64;
-        oc[6] += a * wc[6] as i64;
-        oc[7] += a * wc[7] as i64;
-    }
-    for (ov, &wv) in o_tail.iter_mut().zip(w_tail) {
-        *ov += a * wv as i64;
-    }
-}
 
 /// A weight matrix packed for the blocked kernels, plus its bias row.
 ///
@@ -163,10 +142,12 @@ impl PackedGemm {
         zeros * SPARSE_DEN >= xrow.len() * SPARSE_NUM
     }
 
-    /// One output row, zero-skip scalar: `orow = bias + xrow @ W`. The
-    /// sparse-row kernel (and the pre-microkernel baseline): a zero
-    /// activation skips its whole panel row.
-    pub fn row_into(&self, xrow: &[i32], orow: &mut [i64]) {
+    /// One output row, zero-skip: `orow = bias + xrow @ W`. The
+    /// sparse-row kernel: a zero activation skips its whole panel row;
+    /// the surviving panel rows still go through the backend's
+    /// `axpy` (bit-identical — each output element receives exactly one
+    /// product per nonzero `k` either way).
+    pub fn row_into(&self, xrow: &[i32], orow: &mut [i64], kern: &Kernels) {
         debug_assert_eq!(xrow.len(), self.ci);
         debug_assert_eq!(orow.len(), self.co);
         orow.copy_from_slice(&self.bias);
@@ -176,12 +157,9 @@ impl PackedGemm {
             let nbe = TILE_CO.min(self.co - cb);
             let otile = &mut orow[cb..cb + nbe];
             for (k, &xr) in xrow.iter().enumerate() {
-                let xv = xr as i64;
-                if xv != 0 {
+                if xr != 0 {
                     let wrow = &self.panels[poff + k * nbe..poff + (k + 1) * nbe];
-                    for (o, &wv) in otile.iter_mut().zip(wrow) {
-                        *o += xv * wv as i64;
-                    }
+                    (kern.axpy)(xr, wrow, otile);
                 }
             }
             poff += self.ci * nbe;
@@ -189,9 +167,9 @@ impl PackedGemm {
         }
     }
 
-    /// One output row, dense 8-wide unrolled (no zero skip) — the
-    /// 1–3-row remainder of a dense run.
-    fn row_into_dense(&self, xrow: &[i32], orow: &mut [i64]) {
+    /// One output row, dense (no zero skip) — the 1–3-row remainder of
+    /// a dense run.
+    fn row_into_dense(&self, xrow: &[i32], orow: &mut [i64], kern: &Kernels) {
         debug_assert_eq!(xrow.len(), self.ci);
         debug_assert_eq!(orow.len(), self.co);
         orow.copy_from_slice(&self.bias);
@@ -202,18 +180,26 @@ impl PackedGemm {
             let otile = &mut orow[cb..cb + nbe];
             for (k, &xr) in xrow.iter().enumerate() {
                 let wrow = &self.panels[poff + k * nbe..poff + (k + 1) * nbe];
-                axpy8(xr as i64, wrow, otile);
+                (kern.axpy)(xr, wrow, otile);
             }
             poff += self.ci * nbe;
             cb += nbe;
         }
     }
 
-    /// The register-blocked microkernel: four output rows at once,
-    /// 8-wide unrolled columns. `o` is the four rows, contiguous
+    /// The register-blocked microkernel: four output rows at once via
+    /// the backend's `axpy4`. `o` is the four rows, contiguous
     /// (`4 * co` values). Each packed panel row is read once and
     /// multiplied into all four accumulator tiles.
-    fn rows4_into(&self, x0: &[i32], x1: &[i32], x2: &[i32], x3: &[i32], o: &mut [i64]) {
+    fn rows4_into(
+        &self,
+        x0: &[i32],
+        x1: &[i32],
+        x2: &[i32],
+        x3: &[i32],
+        o: &mut [i64],
+        kern: &Kernels,
+    ) {
         let co = self.co;
         debug_assert_eq!(o.len(), 4 * co);
         let (o0, rest) = o.split_at_mut(co);
@@ -233,10 +219,7 @@ impl PackedGemm {
             let t3 = &mut o3[cb..cb + nbe];
             for k in 0..self.ci {
                 let wrow = &self.panels[poff + k * nbe..poff + (k + 1) * nbe];
-                axpy8(x0[k] as i64, wrow, t0);
-                axpy8(x1[k] as i64, wrow, t1);
-                axpy8(x2[k] as i64, wrow, t2);
-                axpy8(x3[k] as i64, wrow, t3);
+                (kern.axpy4)([x0[k], x1[k], x2[k], x3[k]], wrow, t0, t1, t2, t3);
             }
             poff += self.ci * nbe;
             cb += nbe;
@@ -248,7 +231,7 @@ impl PackedGemm {
     /// runs (microkernel in groups of 4, dense single-row for the
     /// remainder) and sparse rows (zero-skip), by the per-row density
     /// check.
-    pub(crate) fn band_into(&self, x: &[i32], r0: usize, band: &mut [i64]) {
+    pub(crate) fn band_into(&self, x: &[i32], r0: usize, band: &mut [i64], kern: &Kernels) {
         let (ci, co) = (self.ci, self.co);
         debug_assert_eq!(band.len() % co, 0);
         let rows = band.len() / co;
@@ -256,7 +239,7 @@ impl PackedGemm {
         let mut i = 0usize;
         while i < rows {
             if Self::row_is_sparse(xrow(i)) {
-                self.row_into(xrow(i), &mut band[i * co..(i + 1) * co]);
+                self.row_into(xrow(i), &mut band[i * co..(i + 1) * co], kern);
                 i += 1;
                 continue;
             }
@@ -271,10 +254,15 @@ impl PackedGemm {
                     xrow(i + 2),
                     xrow(i + 3),
                     &mut band[i * co..(i + 4) * co],
+                    kern,
                 );
             } else {
                 for j in 0..run {
-                    self.row_into_dense(xrow(i + j), &mut band[(i + j) * co..(i + j + 1) * co]);
+                    self.row_into_dense(
+                        xrow(i + j),
+                        &mut band[(i + j) * co..(i + j + 1) * co],
+                        kern,
+                    );
                 }
             }
             i += run;
@@ -290,8 +278,9 @@ impl PackedGemm {
         // values from the previous (possibly different-shape) matmul are
         // fully overwritten — resize only zero-fills newly grown tail
         out.resize(t * self.co, 0);
+        let kern = pool.kernels();
         pool.par_chunks_mut(out.as_mut_slice(), self.co, |_s, r0, band| {
-            self.band_into(x, r0, band);
+            self.band_into(x, r0, band, kern);
         });
     }
 

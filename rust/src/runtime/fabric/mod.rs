@@ -62,6 +62,8 @@ use std::sync::{Arc, Condvar, Mutex};
 pub use scratch::{BandScratch, LaneScratch, PassScratch};
 use scratch::ScratchArena;
 
+use crate::runtime::kernels::{self, Kernels};
+
 /// How a kernel's output-row bands execute: inline with an explicitly
 /// provided band scratch, or spread across a [`LanePool`]'s lanes.
 ///
@@ -71,7 +73,18 @@ use scratch::ScratchArena;
 /// caller's [`BandScratch`] instead of checking a box out of the arena
 /// per parallel region. Both variants are bit-exact — the banding never
 /// changes a kernel's per-row arithmetic.
-pub enum Exec<'a> {
+///
+/// An `Exec` also carries the [`Kernels`] vtable the ops layer drives
+/// its inner loops through (see [`crate::runtime::kernels`]): pool
+/// execs inherit their pool's backend, serial execs take one
+/// explicitly, so lane-parallel and resident-pipeline forwards hit the
+/// same vectorized code paths.
+pub struct Exec<'a> {
+    kernels: &'static Kernels,
+    inner: ExecInner<'a>,
+}
+
+enum ExecInner<'a> {
     /// Fully serial on the caller thread, band buffers provided
     /// explicitly — no arena traffic, no job-queue traffic.
     Serial(&'a mut BandScratch),
@@ -80,7 +93,23 @@ pub enum Exec<'a> {
     Pool(&'a LanePool),
 }
 
-impl Exec<'_> {
+impl<'a> Exec<'a> {
+    /// A serial exec over the caller's band scratch, driving the given
+    /// kernel backend.
+    pub fn serial(band: &'a mut BandScratch, kernels: &'static Kernels) -> Self {
+        Self { kernels, inner: ExecInner::Serial(band) }
+    }
+
+    /// A pool-dispatched exec; inherits the pool's kernel backend.
+    pub fn pool(pool: &'a LanePool) -> Self {
+        Self { kernels: pool.kernels(), inner: ExecInner::Pool(pool) }
+    }
+
+    /// The kernel backend this exec's band closures should drive.
+    pub(crate) fn kernels(&self) -> &'static Kernels {
+        self.kernels
+    }
+
     /// Run `f(band_scratch, first_row_index, band)` over `data` split
     /// into bands of whole `chunk`-sized rows: one band inline (serial),
     /// or one per lane (pool). Same banding contract as
@@ -93,8 +122,8 @@ impl Exec<'_> {
         T: Send,
         F: Fn(&mut BandScratch, usize, &mut [T]) + Sync,
     {
-        match self {
-            Exec::Serial(band) => {
+        match &mut self.inner {
+            ExecInner::Serial(band) => {
                 // same hard asserts as par_chunks_mut, so a malformed
                 // caller fails identically at every lane count (a
                 // debug-only check would let release builds silently
@@ -103,7 +132,9 @@ impl Exec<'_> {
                 assert_eq!(data.len() % chunk, 0, "data length must be a multiple of chunk");
                 f(&mut **band, 0, data)
             }
-            Exec::Pool(pool) => pool.par_chunks_mut(data, chunk, |s, r0, b| f(&mut s.band, r0, b)),
+            ExecInner::Pool(pool) => {
+                pool.par_chunks_mut(data, chunk, |s, r0, b| f(&mut s.band, r0, b))
+            }
         }
     }
 }
@@ -250,6 +281,7 @@ fn worker_loop(shared: Arc<PoolShared>) {
 /// handle goes away.
 struct PoolInner {
     lanes: usize,
+    kernels: &'static Kernels,
     shared: Arc<PoolShared>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -280,14 +312,30 @@ pub struct LanePool {
 
 impl std::fmt::Debug for LanePool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "LanePool({} lanes, {} workers)", self.inner.lanes, self.inner.workers.len())
+        write!(
+            f,
+            "LanePool({} lanes, {} workers, {} kernels)",
+            self.inner.lanes,
+            self.inner.workers.len(),
+            self.inner.kernels.name
+        )
     }
 }
 
 impl LanePool {
     /// A pool with an explicit lane count (clamped to at least 1). Parks
-    /// `lanes - 1` workers immediately; lane 0 is always the caller.
+    /// `lanes - 1` workers immediately; lane 0 is always the caller. The
+    /// kernel backend is resolved once here via
+    /// [`kernels::from_env`] (auto-detect unless `HGPIPE_KERNELS`
+    /// forces one); use [`Self::with_kernels`] for an explicit backend.
     pub fn new(lanes: usize) -> Self {
+        Self::with_kernels(lanes, kernels::from_env())
+    }
+
+    /// A pool pinned to an explicit kernel backend. Every band closure
+    /// dispatched through this pool (and every [`Exec::pool`] built on
+    /// it) drives its inner loops through this vtable.
+    pub fn with_kernels(lanes: usize, kernels: &'static Kernels) -> Self {
         let lanes = lanes.max(1);
         let shared = Arc::new(PoolShared {
             queue: Mutex::new(JobQueue { jobs: VecDeque::new(), shutdown: false }),
@@ -308,12 +356,12 @@ impl LanePool {
                     // shut down + join the lanes already spawned before
                     // propagating, so a failed spawn never leaks parked
                     // workers for the process lifetime
-                    drop(PoolInner { lanes, shared, workers });
+                    drop(PoolInner { lanes, kernels, shared, workers });
                     panic!("failed to spawn fabric worker lane {i}: {e}");
                 }
             }
         }
-        Self { inner: Arc::new(PoolInner { lanes, shared, workers }) }
+        Self { inner: Arc::new(PoolInner { lanes, kernels, shared, workers }) }
     }
 
     /// A single-lane pool: every region runs inline on the caller, no
@@ -356,6 +404,12 @@ impl LanePool {
 
     pub fn lanes(&self) -> usize {
         self.inner.lanes
+    }
+
+    /// The kernel backend this pool was built with (fixed for the
+    /// pool's lifetime — backends are selected once at model load).
+    pub fn kernels(&self) -> &'static Kernels {
+        self.inner.kernels
     }
 
     /// Process-wide count of live fabric worker threads. After the last

@@ -54,6 +54,7 @@ use std::time::Instant;
 
 use crate::artifacts::{BundleInfo, Manifest};
 use crate::runtime::fabric::{Exec, LanePool, LaneScratch, PassScratch};
+use crate::runtime::kernels::{self, Kernels};
 use crate::runtime::{ExecStats, Executor, LoadedModel, ModelArtifact};
 use ops::lut_i32;
 
@@ -164,9 +165,9 @@ impl QuantViT {
         let mut clk = OpClock::attached(&mut prof);
         let logits = if pool.lanes() <= 1 {
             let LaneScratch { band, pass } = &mut *fs;
-            self.forward_core(tokens, pass, &mut Exec::Serial(band), &mut clk)
+            self.forward_core(tokens, pass, &mut Exec::serial(band, pool.kernels()), &mut clk)
         } else {
-            self.forward_core(tokens, &mut fs.pass, &mut Exec::Pool(pool), &mut clk)
+            self.forward_core(tokens, &mut fs.pass, &mut Exec::pool(pool), &mut clk)
         };
         drop(clk);
         pool.restore_scratch(fs);
@@ -180,11 +181,19 @@ impl QuantViT {
     /// retiring the old `inline_pool` arena mutex) and how a pipeline
     /// stage runs its block slice. Nobody here reads a per-op profile,
     /// so the clock stays detached (zero clock reads). Input length must
-    /// already be validated (`tokens_per_image` values).
-    pub(crate) fn forward_in_scratch(&self, tokens: &[f32], fs: &mut LaneScratch) -> Vec<f64> {
+    /// already be validated (`tokens_per_image` values). The caller
+    /// names the kernel backend explicitly (its pool's or stage's), so
+    /// serial nested forwards drive the same vectorized inner loops as
+    /// lane-parallel ones.
+    pub(crate) fn forward_in_scratch(
+        &self,
+        tokens: &[f32],
+        fs: &mut LaneScratch,
+        kernels: &'static Kernels,
+    ) -> Vec<f64> {
         debug_assert_eq!(tokens.len(), self.tokens_per_image());
         let LaneScratch { band, pass } = fs;
-        self.forward_core(tokens, pass, &mut Exec::Serial(band), &mut OpClock::detached())
+        self.forward_core(tokens, pass, &mut Exec::serial(band, kernels), &mut OpClock::detached())
     }
 
     /// The one forward-pass implementation both dispatches share:
@@ -430,10 +439,12 @@ impl Executor for InterpreterExecutor {
         if self.pool.lanes() > 1 && self.batch >= self.pool.lanes() {
             // batch-lane grain: a band of whole images per worker, each
             // image's forward running serially in the band's own scratch
+            let kern = self.pool.kernels();
             self.pool.par_chunks_mut(&mut out, nc, |s, i0, band| {
                 for (j, orow) in band.chunks_exact_mut(nc).enumerate() {
                     let i = i0 + j;
-                    let logits = self.net.forward_in_scratch(&input[i * per..(i + 1) * per], s);
+                    let logits =
+                        self.net.forward_in_scratch(&input[i * per..(i + 1) * per], s, kern);
                     for (o, &v) in orow.iter_mut().zip(&logits) {
                         *o = v as f32;
                     }
@@ -505,18 +516,24 @@ pub fn load_model_with_lanes(
     lanes: usize,
 ) -> crate::Result<LoadedModel> {
     let artifact = ModelArtifact::load(manifest, model)?;
-    Ok(executors_from_artifact(&artifact, lanes))
+    Ok(executors_from_artifact(&artifact, lanes, kernels::from_env()))
 }
 
 /// Build the lane-parallel executors for an already-loaded shared
 /// [`ModelArtifact`]: only the **mutable** per-replica half is created
 /// here (the persistent worker fabric and, lazily, its scratch arena) —
 /// the weights stay in the artifact's allocation, however many replicas
-/// call this.
-pub fn executors_from_artifact(artifact: &ModelArtifact, lanes: usize) -> LoadedModel {
+/// call this. The kernel backend was resolved once by the caller
+/// ([`crate::runtime::RuntimeConfig::resolve_kernels`]) and is pinned
+/// into the replica's fabric here.
+pub fn executors_from_artifact(
+    artifact: &ModelArtifact,
+    lanes: usize,
+    kern: &'static Kernels,
+) -> LoadedModel {
     let net = artifact.net().clone();
     let load_ms = artifact.load_ms();
-    let pool = LanePool::new(lanes);
+    let pool = LanePool::with_kernels(lanes, kern);
     let executors: Vec<Box<dyn Executor>> = artifact
         .batches()
         .iter()

@@ -24,12 +24,22 @@
 //! The `*_naive` variants preserve the pre-fabric scalar structure
 //! (per-row scratch allocations, per-head probability matrix,
 //! column-outer `R @ V`). They are the differential-testing oracle and
-//! the baseline `benches/interpreter.rs` measures the fabric against.
+//! the baseline `benches/interpreter.rs` measures the fabric against —
+//! they never touch the dispatched vtable ([`attention_naive`] pins the
+//! scalar table explicitly), so the oracle stays oracle even when the
+//! process auto-detected a SIMD backend.
+//!
+//! The inner loops themselves live in
+//! [`kernels`](crate::runtime::kernels): each `*_into` kernel reads the
+//! [`Kernels`] vtable off its [`Exec`] dispatch (which carries the
+//! backend selected at model load) and drives the band-level ops
+//! through it.
 
 use crate::lut::{AnyTable, LutTable, SegmentedTable};
 use crate::runtime::fabric::gemm::PackedGemm;
 use crate::runtime::fabric::scratch::SoftmaxScratch;
 use crate::runtime::fabric::Exec;
+use crate::runtime::kernels::{self, Kernels};
 
 use super::bundle::BlockParams;
 
@@ -37,15 +47,10 @@ use super::bundle::BlockParams;
 // integer LUT application — the rust twin of model.LutExec._lut / _seg
 // ---------------------------------------------------------------------------
 
-/// `LutExec._lut`: int32-domain PoT-indexed lookup.
-#[inline]
-pub(crate) fn lut_i32(t: &LutTable, x: i32) -> i32 {
-    let alpha = t.alpha as i32;
-    let diff = if t.inverted { alpha.wrapping_sub(x) } else { x.wrapping_sub(alpha) };
-    let raw = diff >> t.shift;
-    let hi = (1i32 << t.n_bits) - 1;
-    t.entries[raw.clamp(0, hi) as usize] as i32
-}
+// `LutExec._lut` itself (`lut_i32`) moved into the kernels layer, where
+// the SIMD backends share its definition; re-exported here because it
+// is this module's vocabulary (every op above is built from it).
+pub(crate) use crate::runtime::kernels::lut_i32;
 
 /// `LutExec._seg`: segmented lookup in the common (flat) output scale.
 #[inline]
@@ -85,12 +90,11 @@ pub(crate) fn gemm_rq_into(
     let co = g.co();
     // no clear(): every element is written by the band epilogue below
     out.resize(t * co, 0);
+    let kern = exec.kernels();
     exec.run(out.as_mut_slice(), co, |s, r0, band| {
         s.acc.resize(band.len(), 0); // fully overwritten by band_into
-        g.band_into(x, r0, &mut s.acc[..band.len()]);
-        for (o, &a) in band.iter_mut().zip(s.acc.iter()) {
-            *o = lut_i32(rq, a as i32);
-        }
+        g.band_into(x, r0, &mut s.acc[..band.len()], kern);
+        (kern.requant)(rq, &s.acc[..band.len()], band);
     });
 }
 
@@ -108,12 +112,11 @@ pub(crate) fn gemm_rq_add_into(
     assert_eq!(xin.len(), t * g.ci(), "input shape mismatch");
     let co = g.co();
     assert_eq!(xio.len(), t * co, "residual shape mismatch");
+    let kern = exec.kernels();
     exec.run(xio, co, |s, r0, band| {
         s.acc.resize(band.len(), 0);
-        g.band_into(xin, r0, &mut s.acc[..band.len()]);
-        for (o, &a) in band.iter_mut().zip(s.acc.iter()) {
-            *o = o.wrapping_add(lut_i32(rq, a as i32));
-        }
+        g.band_into(xin, r0, &mut s.acc[..band.len()], kern);
+        (kern.requant_add)(rq, &s.acc[..band.len()], band);
     });
 }
 
@@ -137,24 +140,18 @@ pub(crate) fn layernorm_into(
     // no clear(): every element of every row is written below, so
     // resize only pays for newly grown capacity
     out.resize(x.len(), 0);
+    let kern = exec.kernels();
     exec.run(out.as_mut_slice(), d, |s, r0, band| {
         s.ln_c.resize(d, 0); // fully overwritten per row
 
         for (i, orow) in band.chunks_exact_mut(d).enumerate() {
             let row = &x[(r0 + i) * d..(r0 + i + 1) * d];
-            let sum: i64 = row.iter().map(|&v| v as i64).sum();
-            let mut v: i64 = 0;
-            for (cj, &xv) in s.ln_c.iter_mut().zip(row) {
-                // numpy: `ci * x` runs in int32 (wrapping) before the
-                // int64 subtraction widens it
-                *cj = (d as i32).wrapping_mul(xv) as i64 - sum;
-                let cg = *cj >> guard;
-                v += cg * cg;
-            }
+            let sum = (kern.sum_i32)(row);
+            // numpy: `ci * x` runs in int32 (wrapping) before the int64
+            // subtraction widens it — ln_center keeps that narrowing
+            let v = (kern.ln_center)(d as i32, sum, guard, row, &mut s.ln_c);
             let r = lut_i32(rsqrt, v as i32) as i64;
-            for (o, &cj) in orow.iter_mut().zip(s.ln_c.iter()) {
-                *o = lut_i32(rq, (cj * r) as i32);
-            }
+            (kern.ln_finish)(rq, r, &s.ln_c, orow);
         }
     });
 }
@@ -164,8 +161,11 @@ pub(crate) fn layernorm_into(
 // ---------------------------------------------------------------------------
 
 /// Integer Softmax over one score row (`LutExec.softmax`): max-subtract,
-/// inverted Exp LUT, (segmented) Recip, prob ReQuant.
+/// inverted Exp LUT, (segmented) Recip, prob ReQuant — the three row
+/// passes driven through the given kernel backend (the recip is a
+/// single scalar lookup, not a loop, so it stays here).
 pub(crate) fn softmax_row(
+    kern: &Kernels,
     exp: &LutTable,
     recip: &AnyTable,
     prob: &LutTable,
@@ -177,16 +177,10 @@ pub(crate) fn softmax_row(
     for (s, &a) in scratch.sc.iter_mut().zip(scores) {
         *s = a as i32;
     }
-    let m = *scratch.sc.iter().max().unwrap();
-    let mut tot: i64 = 0;
-    for (ev, &s) in scratch.e.iter_mut().zip(scratch.sc.iter()) {
-        *ev = lut_i32(exp, s.wrapping_sub(m));
-        tot += *ev as i64;
-    }
+    let m = (kern.max_i32)(&scratch.sc);
+    let tot = (kern.exp_lut_sum)(exp, m, &scratch.sc, &mut scratch.e);
     let r = any_i32(recip, tot as i32);
-    for (p, &ev) in probs.iter_mut().zip(scratch.e.iter()) {
-        *p = lut_i32(prob, ev.wrapping_mul(r));
-    }
+    (kern.prob_lut)(prob, r, &scratch.e, probs);
 }
 
 // ---------------------------------------------------------------------------
@@ -216,6 +210,7 @@ pub(crate) fn attention_into(
     // no clear(): `d % h == 0` (validated at bundle load), so the head
     // slices cover every element of every row — stale values never leak
     out.resize(t * d, 0);
+    let kern = exec.kernels();
     exec.run(out.as_mut_slice(), d, |s, t1_0, band| {
         s.scores.resize(t, 0); // fully overwritten per (t1, head)
         s.prob.resize(t, 0); // ditto (softmax writes all t entries)
@@ -230,23 +225,26 @@ pub(crate) fn attention_into(
                 let q = &qkv[qrow + qof..qrow + qof + dh];
                 for (t2, sc) in s.scores.iter_mut().enumerate() {
                     let k = &qkv[t2 * 3 * d + kof..t2 * 3 * d + kof + dh];
-                    *sc = q.iter().zip(k).map(|(&a, &b)| a as i64 * b as i64).sum();
+                    *sc = (kern.dot_i32)(q, k);
                 }
-                softmax_row(&blk.exp, &blk.recip, &blk.prob, &s.scores, &mut s.prob, &mut s.softmax);
+                softmax_row(
+                    kern,
+                    &blk.exp,
+                    &blk.recip,
+                    &blk.prob,
+                    &s.scores,
+                    &mut s.prob,
+                    &mut s.softmax,
+                );
                 // DyMM 2: R @ V, t2-outer so V rows stream contiguously
                 s.rv.fill(0);
                 for (t2, &p) in s.prob.iter().enumerate() {
-                    let p = p as i64;
                     if p != 0 {
                         let v = &qkv[t2 * 3 * d + vof..t2 * 3 * d + vof + dh];
-                        for (a, &vv) in s.rv.iter_mut().zip(v) {
-                            *a += p * vv as i64;
-                        }
+                        (kern.axpy)(p, v, &mut s.rv);
                     }
                 }
-                for (o, &acc) in orow[hh * dh..(hh + 1) * dh].iter_mut().zip(s.rv.iter()) {
-                    *o = lut_i32(&blk.rv_rq, acc as i32);
-                }
+                (kern.requant)(&blk.rv_rq, &s.rv, &mut orow[hh * dh..(hh + 1) * dh]);
             }
         }
     });
@@ -270,6 +268,7 @@ pub(crate) fn attention_naive(blk: &BlockParams, qkv: &[i32], t: usize, d: usize
             }
             let mut scratch = SoftmaxScratch::new(t); // per-row, like the old code
             softmax_row(
+                kernels::scalar(), // the oracle stays pure scalar
                 &blk.exp,
                 &blk.recip,
                 &blk.prob,
@@ -354,12 +353,12 @@ mod tests {
         let x: Vec<i32> = (0..5 * d as i32).map(|i| (i * 37 % 113) - 56).collect();
         let mut serial = Vec::new();
         let mut band = BandScratch::default();
-        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut serial, &mut Exec::Serial(&mut band));
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut serial, &mut Exec::serial(&mut band, kernels::scalar()));
         assert_eq!(serial.len(), x.len());
         for lanes in [1usize, 2, 3, 7] {
             let pool = LanePool::new(lanes);
             let mut pooled = Vec::new();
-            layernorm_into(&x, d, 2, &rsqrt, &rq, &mut pooled, &mut Exec::Pool(&pool));
+            layernorm_into(&x, d, 2, &rsqrt, &rq, &mut pooled, &mut Exec::pool(&pool));
             assert_eq!(pooled, serial, "lanes={lanes}");
         }
     }
@@ -372,10 +371,10 @@ mod tests {
         let x: Vec<i32> = (0..4 * d as i32).map(|i| (i * 11 % 37) - 18).collect();
         let mut band = BandScratch::default();
         let mut out = Vec::new();
-        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut Exec::Serial(&mut band));
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut Exec::serial(&mut band, kernels::scalar()));
         let want = out.clone();
         let ptr = out.as_ptr();
-        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut Exec::Serial(&mut band));
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut Exec::serial(&mut band, kernels::scalar()));
         assert_eq!(out, want);
         assert_eq!(out.as_ptr(), ptr, "steady-state layernorm must not reallocate");
     }
@@ -401,12 +400,12 @@ mod tests {
 
             let mut band = BandScratch::default();
             let mut got = Vec::new();
-            gemm_rq_into(&g, &x, t, &rq, &mut got, &mut Exec::Serial(&mut band));
+            gemm_rq_into(&g, &x, t, &rq, &mut got, &mut Exec::serial(&mut band, kernels::scalar()));
             assert_eq!(got, want, "serial ({t},{ci},{co})");
             for lanes in [2usize, 3, 7] {
                 let pool = LanePool::new(lanes);
                 let mut got = Vec::new();
-                gemm_rq_into(&g, &x, t, &rq, &mut got, &mut Exec::Pool(&pool));
+                gemm_rq_into(&g, &x, t, &rq, &mut got, &mut Exec::pool(&pool));
                 assert_eq!(got, want, "lanes={lanes} ({t},{ci},{co})");
             }
         }
@@ -429,12 +428,12 @@ mod tests {
 
         let mut band = BandScratch::default();
         let mut got = residual.clone();
-        gemm_rq_add_into(&g, &x, t, &rq, &mut got, &mut Exec::Serial(&mut band));
+        gemm_rq_add_into(&g, &x, t, &rq, &mut got, &mut Exec::serial(&mut band, kernels::scalar()));
         assert_eq!(got, want, "serial");
         for lanes in [2usize, 5] {
             let pool = LanePool::new(lanes);
             let mut got = residual.clone();
-            gemm_rq_add_into(&g, &x, t, &rq, &mut got, &mut Exec::Pool(&pool));
+            gemm_rq_add_into(&g, &x, t, &rq, &mut got, &mut Exec::pool(&pool));
             assert_eq!(got, want, "lanes={lanes}");
         }
     }

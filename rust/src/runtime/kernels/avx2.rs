@@ -1,0 +1,469 @@
+//! AVX2 kernel backend (x86_64). Reached only through
+//! `super::detect()` / `super::select()`, which gate this table behind
+//! `is_x86_feature_detected!("avx2")` — that runtime check is the one
+//! safety precondition every `unsafe` block in this file relies on.
+//!
+//! Bit-exactness with the scalar oracle comes from staying in exact
+//! integer arithmetic end to end:
+//!
+//! * `o += a * w` accumulators use `_mm256_mul_epi32` (signed low-32 ×
+//!   low-32 → full 64-bit product) on sign-extended lanes, then
+//!   `_mm256_add_epi64` — i64 addition is associative mod 2^64, and
+//!   each output element receives exactly one product per `k`, so lane
+//!   order never changes the result.
+//! * The LUT index path (wrapping subtract, arithmetic shift by the
+//!   table's PoT constant, clamp to `[0, 2^n_bits - 1]`) maps
+//!   lane-for-lane onto `sub/sra/max/min`; the table gather itself
+//!   stays scalar through a spilled index block (entries are i64 and
+//!   tables are tiny — the index math is the vectorizable part).
+//! * Narrowings like `acc as i32` and `(c * r) as i32` keep only the
+//!   low 32 bits, so packing the low halves of i64 lanes and using
+//!   `_mm256_mullo_epi32` (wrapping) reproduces them verbatim.
+//! * AVX2 has no 64-bit arithmetic right shift or 64×64 multiply; the
+//!   LayerNorm variance pass uses the sign-bias trick
+//!   `((c + 2^63) >>logical g) - (2^63 >>logical g)` and the squaring
+//!   identity `x² mod 2^64 = lo² + ((hi·lo) << 33)`.
+
+use std::arch::x86_64::*;
+
+use crate::lut::LutTable;
+
+use super::{lut_i32, Kernels};
+
+pub(super) static KERNELS: Kernels = Kernels {
+    name: "avx2",
+    axpy,
+    axpy4,
+    requant,
+    requant_add,
+    dot_i32,
+    max_i32,
+    exp_lut_sum,
+    prob_lut,
+    sum_i32,
+    ln_center,
+    ln_finish,
+};
+
+// SAFETY (every wrapper below): this vtable is only handed out by
+// detect()/select() after is_x86_feature_detected!("avx2") confirmed
+// the CPU executes AVX2, which is the sole precondition of the
+// #[target_feature(enable = "avx2")] implementations.
+
+fn axpy(a: i32, w: &[i32], o: &mut [i64]) {
+    unsafe { axpy_impl(a, w, o) }
+}
+
+fn axpy4(a: [i32; 4], w: &[i32], o0: &mut [i64], o1: &mut [i64], o2: &mut [i64], o3: &mut [i64]) {
+    unsafe { axpy4_impl(a, w, o0, o1, o2, o3) }
+}
+
+fn requant(rq: &LutTable, acc: &[i64], out: &mut [i32]) {
+    unsafe { requant_impl(rq, acc, out) }
+}
+
+fn requant_add(rq: &LutTable, acc: &[i64], out: &mut [i32]) {
+    unsafe { requant_add_impl(rq, acc, out) }
+}
+
+fn dot_i32(a: &[i32], b: &[i32]) -> i64 {
+    unsafe { dot_impl(a, b) }
+}
+
+fn max_i32(x: &[i32]) -> i32 {
+    unsafe { max_impl(x) }
+}
+
+fn exp_lut_sum(exp: &LutTable, m: i32, sc: &[i32], e: &mut [i32]) -> i64 {
+    unsafe { exp_lut_sum_impl(exp, m, sc, e) }
+}
+
+fn prob_lut(prob: &LutTable, r: i32, e: &[i32], p: &mut [i32]) {
+    unsafe { prob_lut_impl(prob, r, e, p) }
+}
+
+fn sum_i32(row: &[i32]) -> i64 {
+    unsafe { sum_impl(row) }
+}
+
+fn ln_center(d: i32, sum: i64, guard: u32, row: &[i32], c: &mut [i64]) -> i64 {
+    unsafe { ln_center_impl(d, sum, guard, row, c) }
+}
+
+fn ln_finish(rq: &LutTable, r: i64, c: &[i64], out: &mut [i32]) {
+    unsafe { ln_finish_impl(rq, r, c, out) }
+}
+
+/// Vectorized LUT index computation: the `(x -/~ alpha) >> shift`
+/// clamp-to-range half of [`lut_i32`], eight lanes at a time.
+struct LutIdx {
+    alpha: __m256i,
+    hi: __m256i,
+    lo: __m256i,
+    shift: __m128i,
+    inverted: bool,
+}
+
+impl LutIdx {
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn new(t: &LutTable) -> Self {
+        Self {
+            alpha: _mm256_set1_epi32(t.alpha as i32),
+            hi: _mm256_set1_epi32((1i32 << t.n_bits) - 1),
+            lo: _mm256_setzero_si256(),
+            shift: _mm_cvtsi32_si128(t.shift as i32),
+            inverted: t.inverted,
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn idx(&self, x: __m256i) -> __m256i {
+        let diff = if self.inverted {
+            _mm256_sub_epi32(self.alpha, x)
+        } else {
+            _mm256_sub_epi32(x, self.alpha)
+        };
+        let raw = _mm256_sra_epi32(diff, self.shift);
+        _mm256_min_epi32(_mm256_max_epi32(raw, self.lo), self.hi)
+    }
+}
+
+/// Pack the low 32 bits of eight i64 lanes (`a` then `b`) into one
+/// ordered 8×i32 vector — the vector form of `acc as i32`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn pack_lo32(a: __m256i, b: __m256i) -> __m256i {
+    // per 128-bit half: [q0_lo, q1_lo, q0_lo, q1_lo]
+    let a32 = _mm256_shuffle_epi32::<0b10_00_10_00>(a);
+    let b32 = _mm256_shuffle_epi32::<0b10_00_10_00>(b);
+    // qwords: [a0a1, b0b1 | a2a3, b2b3]
+    let packed = _mm256_unpacklo_epi64(a32, b32);
+    // reorder qwords [0,2,1,3] -> [a0a1, a2a3, b0b1, b2b3]
+    _mm256_permute4x64_epi64::<0b11_01_10_00>(packed)
+}
+
+/// `x² mod 2^64` per i64 lane: `lo² + ((hi·lo) << 33)` with `lo` the
+/// unsigned low 32 bits and `hi` the logical high 32 bits.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn sq64(x: __m256i) -> __m256i {
+    let lo_sq = _mm256_mul_epu32(x, x);
+    let cross = _mm256_mul_epu32(_mm256_srli_epi64::<32>(x), x);
+    _mm256_add_epi64(lo_sq, _mm256_slli_epi64::<33>(cross))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi64(v: __m256i) -> i64 {
+    let mut lanes = [0i64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes[0]
+        .wrapping_add(lanes[1])
+        .wrapping_add(lanes[2])
+        .wrapping_add(lanes[3])
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_impl(a: i32, w: &[i32], o: &mut [i64]) {
+    debug_assert_eq!(w.len(), o.len());
+    let av = _mm256_set1_epi64x(a as i64);
+    let n8 = w.len() & !7;
+    let mut j = 0usize;
+    while j < n8 {
+        let w8 = _mm256_loadu_si256(w.as_ptr().add(j) as *const __m256i);
+        let wlo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(w8));
+        let whi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(w8));
+        let olo = _mm256_loadu_si256(o.as_ptr().add(j) as *const __m256i);
+        let ohi = _mm256_loadu_si256(o.as_ptr().add(j + 4) as *const __m256i);
+        _mm256_storeu_si256(
+            o.as_mut_ptr().add(j) as *mut __m256i,
+            _mm256_add_epi64(olo, _mm256_mul_epi32(wlo, av)),
+        );
+        _mm256_storeu_si256(
+            o.as_mut_ptr().add(j + 4) as *mut __m256i,
+            _mm256_add_epi64(ohi, _mm256_mul_epi32(whi, av)),
+        );
+        j += 8;
+    }
+    let a = a as i64;
+    for jj in n8..w.len() {
+        o[jj] += a * w[jj] as i64;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy4_impl(
+    a: [i32; 4],
+    w: &[i32],
+    o0: &mut [i64],
+    o1: &mut [i64],
+    o2: &mut [i64],
+    o3: &mut [i64],
+) {
+    debug_assert!(w.len() == o0.len() && w.len() == o1.len());
+    debug_assert!(w.len() == o2.len() && w.len() == o3.len());
+    let a0 = _mm256_set1_epi64x(a[0] as i64);
+    let a1 = _mm256_set1_epi64x(a[1] as i64);
+    let a2 = _mm256_set1_epi64x(a[2] as i64);
+    let a3 = _mm256_set1_epi64x(a[3] as i64);
+    let n4 = w.len() & !3;
+    let mut j = 0usize;
+    while j < n4 {
+        // one widened weight load shared by all four output rows — the
+        // register-blocked microkernel body
+        let wv = _mm256_cvtepi32_epi64(_mm_loadu_si128(w.as_ptr().add(j) as *const __m128i));
+        let t0 = _mm256_loadu_si256(o0.as_ptr().add(j) as *const __m256i);
+        _mm256_storeu_si256(
+            o0.as_mut_ptr().add(j) as *mut __m256i,
+            _mm256_add_epi64(t0, _mm256_mul_epi32(wv, a0)),
+        );
+        let t1 = _mm256_loadu_si256(o1.as_ptr().add(j) as *const __m256i);
+        _mm256_storeu_si256(
+            o1.as_mut_ptr().add(j) as *mut __m256i,
+            _mm256_add_epi64(t1, _mm256_mul_epi32(wv, a1)),
+        );
+        let t2 = _mm256_loadu_si256(o2.as_ptr().add(j) as *const __m256i);
+        _mm256_storeu_si256(
+            o2.as_mut_ptr().add(j) as *mut __m256i,
+            _mm256_add_epi64(t2, _mm256_mul_epi32(wv, a2)),
+        );
+        let t3 = _mm256_loadu_si256(o3.as_ptr().add(j) as *const __m256i);
+        _mm256_storeu_si256(
+            o3.as_mut_ptr().add(j) as *mut __m256i,
+            _mm256_add_epi64(t3, _mm256_mul_epi32(wv, a3)),
+        );
+        j += 4;
+    }
+    for jj in n4..w.len() {
+        let wv = w[jj] as i64;
+        o0[jj] += a[0] as i64 * wv;
+        o1[jj] += a[1] as i64 * wv;
+        o2[jj] += a[2] as i64 * wv;
+        o3[jj] += a[3] as i64 * wv;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn requant_impl(rq: &LutTable, acc: &[i64], out: &mut [i32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    let li = LutIdx::new(rq);
+    let mut idx = [0i32; 8];
+    let n8 = acc.len() & !7;
+    let mut j = 0usize;
+    while j < n8 {
+        let lo = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+        let hi = _mm256_loadu_si256(acc.as_ptr().add(j + 4) as *const __m256i);
+        let id = li.idx(pack_lo32(lo, hi));
+        _mm256_storeu_si256(idx.as_mut_ptr() as *mut __m256i, id);
+        for t in 0..8 {
+            out[j + t] = rq.entries[idx[t] as usize] as i32;
+        }
+        j += 8;
+    }
+    for t in n8..acc.len() {
+        out[t] = lut_i32(rq, acc[t] as i32);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn requant_add_impl(rq: &LutTable, acc: &[i64], out: &mut [i32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    let li = LutIdx::new(rq);
+    let mut idx = [0i32; 8];
+    let n8 = acc.len() & !7;
+    let mut j = 0usize;
+    while j < n8 {
+        let lo = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+        let hi = _mm256_loadu_si256(acc.as_ptr().add(j + 4) as *const __m256i);
+        let id = li.idx(pack_lo32(lo, hi));
+        _mm256_storeu_si256(idx.as_mut_ptr() as *mut __m256i, id);
+        for t in 0..8 {
+            out[j + t] = out[j + t].wrapping_add(rq.entries[idx[t] as usize] as i32);
+        }
+        j += 8;
+    }
+    for t in n8..acc.len() {
+        out[t] = out[t].wrapping_add(lut_i32(rq, acc[t] as i32));
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_impl(a: &[i32], b: &[i32]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = _mm256_setzero_si256();
+    let n8 = a.len() & !7;
+    let mut j = 0usize;
+    while j < n8 {
+        let av = _mm256_loadu_si256(a.as_ptr().add(j) as *const __m256i);
+        let bv = _mm256_loadu_si256(b.as_ptr().add(j) as *const __m256i);
+        // even i32 lanes sit in the low halves of the i64 lanes
+        let even = _mm256_mul_epi32(av, bv);
+        // odd lanes shifted down (mul_epi32 reads only the low 32 bits)
+        let odd = _mm256_mul_epi32(_mm256_srli_epi64::<32>(av), _mm256_srli_epi64::<32>(bv));
+        acc = _mm256_add_epi64(acc, _mm256_add_epi64(even, odd));
+        j += 8;
+    }
+    let mut tot = hsum_epi64(acc);
+    for t in n8..a.len() {
+        tot += a[t] as i64 * b[t] as i64;
+    }
+    tot
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn max_impl(x: &[i32]) -> i32 {
+    assert!(!x.is_empty(), "max_i32 over an empty row");
+    let mut best = i32::MIN;
+    let n8 = x.len() & !7;
+    if n8 != 0 {
+        let mut m = _mm256_loadu_si256(x.as_ptr() as *const __m256i);
+        let mut j = 8usize;
+        while j < n8 {
+            m = _mm256_max_epi32(m, _mm256_loadu_si256(x.as_ptr().add(j) as *const __m256i));
+            j += 8;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, m);
+        for &l in &lanes {
+            best = best.max(l);
+        }
+    }
+    for &v in &x[n8..] {
+        best = best.max(v);
+    }
+    best
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn exp_lut_sum_impl(exp: &LutTable, m: i32, sc: &[i32], e: &mut [i32]) -> i64 {
+    debug_assert_eq!(sc.len(), e.len());
+    let li = LutIdx::new(exp);
+    let mv = _mm256_set1_epi32(m);
+    let mut idx = [0i32; 8];
+    let mut tot: i64 = 0;
+    let n8 = sc.len() & !7;
+    let mut j = 0usize;
+    while j < n8 {
+        let x = _mm256_loadu_si256(sc.as_ptr().add(j) as *const __m256i);
+        let id = li.idx(_mm256_sub_epi32(x, mv));
+        _mm256_storeu_si256(idx.as_mut_ptr() as *mut __m256i, id);
+        for t in 0..8 {
+            let v = exp.entries[idx[t] as usize] as i32;
+            e[j + t] = v;
+            tot += v as i64;
+        }
+        j += 8;
+    }
+    for t in n8..sc.len() {
+        let v = lut_i32(exp, sc[t].wrapping_sub(m));
+        e[t] = v;
+        tot += v as i64;
+    }
+    tot
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn prob_lut_impl(prob: &LutTable, r: i32, e: &[i32], p: &mut [i32]) {
+    debug_assert_eq!(e.len(), p.len());
+    let li = LutIdx::new(prob);
+    let rv = _mm256_set1_epi32(r);
+    let mut idx = [0i32; 8];
+    let n8 = e.len() & !7;
+    let mut j = 0usize;
+    while j < n8 {
+        let x = _mm256_loadu_si256(e.as_ptr().add(j) as *const __m256i);
+        let id = li.idx(_mm256_mullo_epi32(x, rv));
+        _mm256_storeu_si256(idx.as_mut_ptr() as *mut __m256i, id);
+        for t in 0..8 {
+            p[j + t] = prob.entries[idx[t] as usize] as i32;
+        }
+        j += 8;
+    }
+    for t in n8..e.len() {
+        p[t] = lut_i32(prob, e[t].wrapping_mul(r));
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sum_impl(row: &[i32]) -> i64 {
+    let mut acc = _mm256_setzero_si256();
+    let n8 = row.len() & !7;
+    let mut j = 0usize;
+    while j < n8 {
+        let x8 = _mm256_loadu_si256(row.as_ptr().add(j) as *const __m256i);
+        let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(x8));
+        let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(x8));
+        acc = _mm256_add_epi64(acc, _mm256_add_epi64(lo, hi));
+        j += 8;
+    }
+    let mut tot = hsum_epi64(acc);
+    for &v in &row[n8..] {
+        tot += v as i64;
+    }
+    tot
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn ln_center_impl(d: i32, sum: i64, guard: u32, row: &[i32], c: &mut [i64]) -> i64 {
+    debug_assert_eq!(row.len(), c.len());
+    let dv = _mm256_set1_epi32(d);
+    let sv = _mm256_set1_epi64x(sum);
+    // AVX2 has no 64-bit arithmetic shift: bias into the unsigned range,
+    // shift logically, subtract the shifted bias
+    let bias = _mm256_set1_epi64x(i64::MIN);
+    let cnt = _mm_cvtsi32_si128(guard as i32);
+    let bias_s = _mm256_srl_epi64(bias, cnt);
+    let mut vacc = _mm256_setzero_si256();
+    let n8 = row.len() & !7;
+    let mut j = 0usize;
+    while j < n8 {
+        let x8 = _mm256_loadu_si256(row.as_ptr().add(j) as *const __m256i);
+        let prod = _mm256_mullo_epi32(x8, dv);
+        let plo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(prod));
+        let phi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(prod));
+        let clo = _mm256_sub_epi64(plo, sv);
+        let chi = _mm256_sub_epi64(phi, sv);
+        _mm256_storeu_si256(c.as_mut_ptr().add(j) as *mut __m256i, clo);
+        _mm256_storeu_si256(c.as_mut_ptr().add(j + 4) as *mut __m256i, chi);
+        let glo = _mm256_sub_epi64(_mm256_srl_epi64(_mm256_add_epi64(clo, bias), cnt), bias_s);
+        let ghi = _mm256_sub_epi64(_mm256_srl_epi64(_mm256_add_epi64(chi, bias), cnt), bias_s);
+        vacc = _mm256_add_epi64(vacc, sq64(glo));
+        vacc = _mm256_add_epi64(vacc, sq64(ghi));
+        j += 8;
+    }
+    let mut v = hsum_epi64(vacc);
+    for jj in n8..row.len() {
+        let cj = d.wrapping_mul(row[jj]) as i64 - sum;
+        c[jj] = cj;
+        let cg = cj >> guard;
+        v += cg * cg;
+    }
+    v
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn ln_finish_impl(rq: &LutTable, r: i64, c: &[i64], out: &mut [i32]) {
+    debug_assert_eq!(c.len(), out.len());
+    let li = LutIdx::new(rq);
+    // only the low 32 bits of c[j] * r survive the `as i32` narrowing
+    let rv = _mm256_set1_epi32(r as i32);
+    let mut idx = [0i32; 8];
+    let n8 = c.len() & !7;
+    let mut j = 0usize;
+    while j < n8 {
+        let lo = _mm256_loadu_si256(c.as_ptr().add(j) as *const __m256i);
+        let hi = _mm256_loadu_si256(c.as_ptr().add(j + 4) as *const __m256i);
+        let prod = _mm256_mullo_epi32(pack_lo32(lo, hi), rv);
+        let id = li.idx(prod);
+        _mm256_storeu_si256(idx.as_mut_ptr() as *mut __m256i, id);
+        for t in 0..8 {
+            out[j + t] = rq.entries[idx[t] as usize] as i32;
+        }
+        j += 8;
+    }
+    for t in n8..c.len() {
+        out[t] = lut_i32(rq, (c[t] as i32).wrapping_mul(r as i32));
+    }
+}

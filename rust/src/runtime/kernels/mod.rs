@@ -1,0 +1,345 @@
+//! Runtime-dispatched SIMD kernel layer: every scalar hot loop of the
+//! interpreter, behind one [`Kernels`] vtable.
+//!
+//! HG-PIPE's resource argument is that linear *and* non-linear operators
+//! should run on the cheap, abundant compute substrate (LUTs on the
+//! FPGA); on a CPU that substrate is the vector unit. This module lifts
+//! the hot inner loops that used to live in `fabric/gemm.rs` (the GEMM
+//! microkernel), `interpreter/ops.rs` (softmax, LayerNorm, the attention
+//! score loop) and the requant LUT application into a table of plain
+//! `fn` pointers with three backends:
+//!
+//! * [`scalar`] — bit-for-bit the pre-refactor code, kept as the
+//!   **oracle**: every other backend is differentially tested against it
+//!   (`tests/kernel_dispatch.rs`), and `HGPIPE_KERNELS=scalar` forces it
+//!   everywhere (the CI matrix runs the whole suite that way).
+//! * `avx2` — x86_64, selected when `is_x86_feature_detected!("avx2")`
+//!   holds: widening 32×32→64 multiplies for the GEMM/attention
+//!   accumulators, vectorized LUT index computation (wrapping subtract,
+//!   arithmetic shift, clamp) with scalar table gathers.
+//! * `neon` — aarch64 (`vmull_s32` widening multiply-accumulate and
+//!   vectorized LUT indexing); the i64-squaring LayerNorm reduction
+//!   delegates to the scalar oracle.
+//!
+//! Selection happens **once at model load** ([`detect`] / [`select`] /
+//! [`from_env`]) and the chosen table threads through
+//! [`Exec`](crate::runtime::fabric::Exec), the
+//! [`LanePool`](crate::runtime::fabric::LanePool) band workers and the
+//! resident pipeline stages, so lane-parallel and pipeline modes hit the
+//! same vectorized code. Precedence mirrors the lane/mode/replica flags:
+//! an explicit `RuntimeConfig::kernels` / `--kernels` wins, then the
+//! read-only `HGPIPE_KERNELS` env fallback, then auto-detection.
+//!
+//! ## Bit-exactness contract
+//!
+//! Every op is defined over integer arithmetic that vectorizes
+//! *exactly*: i64 accumulator addition is associative mod 2^64, the
+//! `as i32` narrowings keep only the low 32 bits (so a vector that
+//! multiplies low-32×low-32 reproduces `(a * b) as i32` verbatim), and
+//! the LUT index path (wrapping subtract, arithmetic shift by a table
+//! constant `< 32`, clamp to `[0, 2^n_bits - 1]`) maps lane-for-lane
+//! onto vector min/max/shift instructions. The golden fixture and the
+//! randomized differential tests pin equality on every backend, in both
+//! exec modes. `unsafe` lives only in this directory — the backend
+//! tables are plain safe `fn`s whose bodies prove the single
+//! feature-detection precondition.
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use crate::lut::LutTable;
+
+/// `LutExec._lut`: int32-domain PoT-indexed lookup — the one table
+/// application every requant/exp/prob op is built from. Lives here so
+/// the backends and the scalar oracle share a single definition;
+/// `interpreter::ops` re-exports it.
+#[inline]
+pub(crate) fn lut_i32(t: &LutTable, x: i32) -> i32 {
+    let alpha = t.alpha as i32;
+    let diff = if t.inverted { alpha.wrapping_sub(x) } else { x.wrapping_sub(alpha) };
+    let raw = diff >> t.shift;
+    let hi = (1i32 << t.n_bits) - 1;
+    t.entries[raw.clamp(0, hi) as usize] as i32
+}
+
+/// The kernel vtable: one `fn` pointer per hot loop. A backend is a
+/// `static` instance of this struct; dispatch is one indirect call per
+/// *band-level* loop (never per element), selected once at model load.
+///
+/// All ops share the oracle's semantics exactly — wrapping `as i32`
+/// narrowings, arithmetic shifts, ascending-index i64 accumulation —
+/// so any two backends produce identical bytes on identical inputs.
+pub struct Kernels {
+    /// Backend name, as printed by `hgpipe serve` and the bench report.
+    pub name: &'static str,
+    /// `o[j] += a * w[j]` (i64 accumulate over one packed panel row) —
+    /// the GEMM microkernel's inner loop and the attention `R @ V`
+    /// accumulate. `w.len() == o.len()`.
+    pub axpy: fn(a: i32, w: &[i32], o: &mut [i64]),
+    /// Four [`Kernels::axpy`]s sharing one weight row: the 4-row
+    /// register-blocked GEMM microkernel body. Each output tile has
+    /// `w.len()` elements.
+    pub axpy4: fn(a: [i32; 4], w: &[i32], o0: &mut [i64], o1: &mut [i64], o2: &mut [i64], o3: &mut [i64]),
+    /// `out[j] = lut(rq, acc[j] as i32)` — the fused requant epilogue
+    /// applied to a GEMM/attention accumulator band. Lengths equal.
+    pub requant: fn(rq: &LutTable, acc: &[i64], out: &mut [i32]),
+    /// `out[j] = out[j].wrapping_add(lut(rq, acc[j] as i32))` — the
+    /// requant epilogue fused with the residual add. Lengths equal.
+    pub requant_add: fn(rq: &LutTable, acc: &[i64], out: &mut [i32]),
+    /// `Σ a[i] * b[i]` with exact i64 accumulation — one attention
+    /// score. `a.len() == b.len()`.
+    pub dot_i32: fn(a: &[i32], b: &[i32]) -> i64,
+    /// Max over a **non-empty** slice — the softmax max-subtract.
+    pub max_i32: fn(x: &[i32]) -> i32,
+    /// `e[i] = lut(exp, sc[i].wrapping_sub(m))`, returning `Σ e[i]` as
+    /// i64 — the softmax exp pass. Lengths equal.
+    pub exp_lut_sum: fn(exp: &LutTable, m: i32, sc: &[i32], e: &mut [i32]) -> i64,
+    /// `p[i] = lut(prob, e[i].wrapping_mul(r))` — the softmax
+    /// probability requant. Lengths equal.
+    pub prob_lut: fn(prob: &LutTable, r: i32, e: &[i32], p: &mut [i32]),
+    /// `Σ row[i]` as i64 — the LayerNorm row sum.
+    pub sum_i32: fn(row: &[i32]) -> i64,
+    /// LayerNorm center pass: `c[j] = d.wrapping_mul(row[j]) as i64 -
+    /// sum`, returning `Σ (c[j] >> guard)²` (the variance accumulator).
+    /// `row.len() == c.len()`.
+    pub ln_center: fn(d: i32, sum: i64, guard: u32, row: &[i32], c: &mut [i64]) -> i64,
+    /// LayerNorm output pass: `out[j] = lut(rq, (c[j] * r) as i32)`.
+    /// Only the low 32 bits of the product survive the narrowing, so
+    /// backends may multiply low-32×low-32. Lengths equal.
+    pub ln_finish: fn(rq: &LutTable, r: i64, c: &[i64], out: &mut [i32]),
+}
+
+impl std::fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernels").field("name", &self.name).finish_non_exhaustive()
+    }
+}
+
+impl PartialEq for Kernels {
+    /// Two kernel tables are the same backend iff they have the same
+    /// name (backends are singleton statics).
+    fn eq(&self, other: &Self) -> bool {
+        std::ptr::eq(self, other) || self.name == other.name
+    }
+}
+
+/// Which kernel backend a config asks for — the CLI's `--kernels` and
+/// `RuntimeConfig::kernels` speak this; [`select`] turns it into a
+/// table or an error when the host can't run it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelPref {
+    /// Auto-detect the best backend for this host ([`detect`]).
+    #[default]
+    Auto,
+    /// Force the scalar oracle.
+    Scalar,
+    /// Require AVX2 (x86_64 hosts with the feature only).
+    Avx2,
+    /// Require NEON (aarch64 hosts only).
+    Neon,
+}
+
+impl KernelPref {
+    /// Parse a CLI flag / env value. Unknown names are an error — a
+    /// typo'd backend must never silently change the compute substrate.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "scalar" => Ok(Self::Scalar),
+            "avx2" => Ok(Self::Avx2),
+            "neon" => Ok(Self::Neon),
+            other => anyhow::bail!(
+                "unknown kernel backend '{other}' (scalar | avx2 | neon | auto)"
+            ),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Scalar => "scalar",
+            Self::Avx2 => "avx2",
+            Self::Neon => "neon",
+        }
+    }
+}
+
+/// The scalar oracle backend — always available, bit-for-bit the
+/// pre-refactor code.
+pub fn scalar() -> &'static Kernels {
+    &scalar::KERNELS
+}
+
+/// Auto-detect the best backend for this host: AVX2 on x86_64 CPUs that
+/// report the feature, NEON on aarch64, the scalar oracle otherwise.
+/// Pure detection — no env consultation (that is [`from_env`]'s job).
+pub fn detect() -> &'static Kernels {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return &avx2::KERNELS;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return &neon::KERNELS;
+    }
+    &scalar::KERNELS
+}
+
+/// Resolve an explicit preference to a kernel table. Asking for a
+/// backend the host cannot execute is an **error**, not a silent
+/// fallback — like requesting the pjrt backend without the feature.
+pub fn select(pref: KernelPref) -> crate::Result<&'static Kernels> {
+    match pref {
+        KernelPref::Auto => return Ok(detect()),
+        KernelPref::Scalar => return Ok(&scalar::KERNELS),
+        KernelPref::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Ok(&avx2::KERNELS);
+            }
+        }
+        KernelPref::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Ok(&neon::KERNELS);
+            }
+        }
+    }
+    anyhow::bail!(
+        "kernel backend '{}' is unavailable on this host (arch {}); \
+         use `--kernels scalar` or `--kernels auto`",
+        pref.label(),
+        std::env::consts::ARCH
+    )
+}
+
+/// The backend [`detect`] would be overridden to by the read-only
+/// `HGPIPE_KERNELS` env var (mirrors `HGPIPE_LANES` / `HGPIPE_MODE` /
+/// `HGPIPE_REPLICAS`: nothing in this crate mutates it; the CLI's
+/// `--kernels` is threaded through `RuntimeConfig` instead). A value
+/// naming an unavailable or unknown backend warns on stderr and falls
+/// back to auto-detection — an env typo must never silently change (or
+/// crash) a serving process that never asked for a specific backend.
+pub fn from_env() -> &'static Kernels {
+    match std::env::var("HGPIPE_KERNELS") {
+        Ok(v) => match KernelPref::parse(v.trim()) {
+            Ok(pref) => match select(pref) {
+                Ok(k) => k,
+                Err(e) => {
+                    eprintln!("warning: HGPIPE_KERNELS='{v}': {e:#}; using auto-detection");
+                    detect()
+                }
+            },
+            Err(_) => {
+                eprintln!(
+                    "warning: HGPIPE_KERNELS='{v}' is not a kernel backend \
+                     (scalar | avx2 | neon | auto); using auto-detection"
+                );
+                detect()
+            }
+        },
+        Err(_) => detect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn mk_lut(alpha: i64, shift: u32, n_bits: u32, inverted: bool, entries: Vec<i64>) -> LutTable {
+        LutTable {
+            name: "t".into(),
+            alpha,
+            shift,
+            n_bits,
+            inverted,
+            out_scale: 1.0,
+            out_zp: 0,
+            entries,
+        }
+    }
+
+    #[test]
+    fn scalar_is_always_selectable_and_named() {
+        assert_eq!(scalar().name, "scalar");
+        assert_eq!(select(KernelPref::Scalar).unwrap().name, "scalar");
+        assert_eq!(select(KernelPref::Auto).unwrap().name, detect().name);
+    }
+
+    #[test]
+    fn pref_parse_round_trips_and_rejects_unknown() {
+        for p in [KernelPref::Auto, KernelPref::Scalar, KernelPref::Avx2, KernelPref::Neon] {
+            assert_eq!(KernelPref::parse(p.label()).unwrap(), p);
+        }
+        assert!(KernelPref::parse("sse9").is_err());
+        assert!(KernelPref::parse("").is_err());
+    }
+
+    #[test]
+    fn selecting_a_foreign_arch_backend_is_an_error() {
+        // at most one of avx2/neon can be available on any one host
+        let avx2 = select(KernelPref::Avx2);
+        let neon = select(KernelPref::Neon);
+        assert!(avx2.is_err() || neon.is_err());
+    }
+
+    #[test]
+    fn detected_backend_agrees_with_scalar_on_random_ops() {
+        // a compact in-module differential check (the exhaustive sweeps
+        // live in tests/kernel_dispatch.rs): every vtable op, detected
+        // backend vs the scalar oracle, across awkward lengths
+        let s = scalar();
+        let d = detect();
+        let mut rng = Prng::new(0x5EED);
+        let rq = mk_lut(-300, 3, 6, false, (0..64).map(|i| i * 7 - 200).collect());
+        let exp = mk_lut(0, 2, 5, true, (0..32).map(|i| 1000 - i * 31).collect());
+        for n in [1usize, 2, 3, 4, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100] {
+            let w: Vec<i32> = (0..n).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+            let x: Vec<i32> = (0..n).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+            let acc: Vec<i64> = (0..n).map(|_| rng.range_i64(-1 << 40, 1 << 40)).collect();
+
+            let (mut o1, mut o2) = (acc.clone(), acc.clone());
+            (s.axpy)(-37, &w, &mut o1);
+            (d.axpy)(-37, &w, &mut o2);
+            assert_eq!(o1, o2, "axpy n={n}");
+
+            assert_eq!((s.dot_i32)(&x, &w), (d.dot_i32)(&x, &w), "dot n={n}");
+            assert_eq!((s.max_i32)(&x), (d.max_i32)(&x), "max n={n}");
+            assert_eq!((s.sum_i32)(&x), (d.sum_i32)(&x), "sum n={n}");
+
+            let (mut r1, mut r2) = (vec![0i32; n], vec![0i32; n]);
+            (s.requant)(&rq, &acc, &mut r1);
+            (d.requant)(&rq, &acc, &mut r2);
+            assert_eq!(r1, r2, "requant n={n}");
+            (s.requant_add)(&rq, &acc, &mut r1);
+            (d.requant_add)(&rq, &acc, &mut r2);
+            assert_eq!(r1, r2, "requant_add n={n}");
+
+            let (mut e1, mut e2) = (vec![0i32; n], vec![0i32; n]);
+            let m = (s.max_i32)(&x);
+            let t1 = (s.exp_lut_sum)(&exp, m, &x, &mut e1);
+            let t2 = (d.exp_lut_sum)(&exp, m, &x, &mut e2);
+            assert_eq!((t1, &e1), (t2, &e2), "exp_lut_sum n={n}");
+
+            let (mut p1, mut p2) = (vec![0i32; n], vec![0i32; n]);
+            (s.prob_lut)(&rq, 77, &e1, &mut p1);
+            (d.prob_lut)(&rq, 77, &e2, &mut p2);
+            assert_eq!(p1, p2, "prob_lut n={n}");
+
+            let (mut c1, mut c2) = (vec![0i64; n], vec![0i64; n]);
+            let v1 = (s.ln_center)(n as i32, (s.sum_i32)(&x), 2, &x, &mut c1);
+            let v2 = (d.ln_center)(n as i32, (s.sum_i32)(&x), 2, &x, &mut c2);
+            assert_eq!((v1, &c1), (v2, &c2), "ln_center n={n}");
+
+            let (mut f1, mut f2) = (vec![0i32; n], vec![0i32; n]);
+            (s.ln_finish)(&rq, 123, &c1, &mut f1);
+            (d.ln_finish)(&rq, 123, &c2, &mut f2);
+            assert_eq!(f1, f2, "ln_finish n={n}");
+        }
+    }
+}

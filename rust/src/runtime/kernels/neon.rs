@@ -1,0 +1,294 @@
+//! NEON kernel backend (aarch64). Reached only through
+//! `super::detect()` / `super::select()`, which gate this table behind
+//! `is_aarch64_feature_detected!("neon")` — the one precondition every
+//! `unsafe` block here relies on.
+//!
+//! Same exact-integer-arithmetic contract as the AVX2 backend:
+//! `vmull_s32` produces full 64-bit products of 32-bit lanes, i64
+//! accumulator addition is associative mod 2^64, and the LUT index path
+//! (wrapping subtract, arithmetic shift, clamp) maps lane-for-lane onto
+//! `vsub/vshl(-n)/vmax/vmin` with scalar table gathers. The LayerNorm
+//! variance pass needs a 64×64 low multiply NEON doesn't have, so
+//! [`Kernels::ln_center`] delegates to the scalar oracle — bit-exact by
+//! construction.
+
+use std::arch::aarch64::*;
+
+use crate::lut::LutTable;
+
+use super::{lut_i32, Kernels};
+
+pub(super) static KERNELS: Kernels = Kernels {
+    name: "neon",
+    axpy,
+    axpy4,
+    requant,
+    requant_add,
+    dot_i32,
+    max_i32,
+    exp_lut_sum,
+    prob_lut,
+    sum_i32,
+    // no 64-bit low multiply on NEON: the scalar oracle IS the impl
+    ln_center: super::scalar::ln_center,
+    ln_finish,
+};
+
+// SAFETY (every wrapper below): this vtable is only handed out by
+// detect()/select() after is_aarch64_feature_detected!("neon")
+// confirmed the CPU executes NEON, which is the sole precondition of
+// the #[target_feature(enable = "neon")] implementations.
+
+fn axpy(a: i32, w: &[i32], o: &mut [i64]) {
+    unsafe { axpy_impl(a, w, o) }
+}
+
+fn axpy4(a: [i32; 4], w: &[i32], o0: &mut [i64], o1: &mut [i64], o2: &mut [i64], o3: &mut [i64]) {
+    unsafe {
+        axpy_impl(a[0], w, o0);
+        axpy_impl(a[1], w, o1);
+        axpy_impl(a[2], w, o2);
+        axpy_impl(a[3], w, o3);
+    }
+}
+
+fn requant(rq: &LutTable, acc: &[i64], out: &mut [i32]) {
+    unsafe { requant_impl(rq, acc, out, false) }
+}
+
+fn requant_add(rq: &LutTable, acc: &[i64], out: &mut [i32]) {
+    unsafe { requant_impl(rq, acc, out, true) }
+}
+
+fn dot_i32(a: &[i32], b: &[i32]) -> i64 {
+    unsafe { dot_impl(a, b) }
+}
+
+fn max_i32(x: &[i32]) -> i32 {
+    unsafe { max_impl(x) }
+}
+
+fn exp_lut_sum(exp: &LutTable, m: i32, sc: &[i32], e: &mut [i32]) -> i64 {
+    unsafe { exp_lut_sum_impl(exp, m, sc, e) }
+}
+
+fn prob_lut(prob: &LutTable, r: i32, e: &[i32], p: &mut [i32]) {
+    unsafe { prob_lut_impl(prob, r, e, p) }
+}
+
+fn sum_i32(row: &[i32]) -> i64 {
+    unsafe { sum_impl(row) }
+}
+
+fn ln_finish(rq: &LutTable, r: i64, c: &[i64], out: &mut [i32]) {
+    unsafe { ln_finish_impl(rq, r, c, out) }
+}
+
+/// Vectorized LUT index computation, four lanes at a time.
+struct LutIdx {
+    alpha: int32x4_t,
+    hi: int32x4_t,
+    lo: int32x4_t,
+    /// Negative shift count: signed `vshl` by a negative amount is a
+    /// truncating arithmetic right shift, matching `>>`.
+    nshift: int32x4_t,
+    inverted: bool,
+}
+
+impl LutIdx {
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn new(t: &LutTable) -> Self {
+        Self {
+            alpha: vdupq_n_s32(t.alpha as i32),
+            hi: vdupq_n_s32((1i32 << t.n_bits) - 1),
+            lo: vdupq_n_s32(0),
+            nshift: vdupq_n_s32(-(t.shift as i32)),
+            inverted: t.inverted,
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn idx(&self, x: int32x4_t) -> int32x4_t {
+        let diff = if self.inverted { vsubq_s32(self.alpha, x) } else { vsubq_s32(x, self.alpha) };
+        let raw = vshlq_s32(diff, self.nshift);
+        vminq_s32(vmaxq_s32(raw, self.lo), self.hi)
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_impl(a: i32, w: &[i32], o: &mut [i64]) {
+    debug_assert_eq!(w.len(), o.len());
+    let n4 = w.len() & !3;
+    let mut j = 0usize;
+    while j < n4 {
+        let w4 = vld1q_s32(w.as_ptr().add(j));
+        let plo = vmull_n_s32(vget_low_s32(w4), a);
+        let phi = vmull_n_s32(vget_high_s32(w4), a);
+        let olo = vld1q_s64(o.as_ptr().add(j));
+        vst1q_s64(o.as_mut_ptr().add(j), vaddq_s64(olo, plo));
+        let ohi = vld1q_s64(o.as_ptr().add(j + 2));
+        vst1q_s64(o.as_mut_ptr().add(j + 2), vaddq_s64(ohi, phi));
+        j += 4;
+    }
+    let a = a as i64;
+    for jj in n4..w.len() {
+        o[jj] += a * w[jj] as i64;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn requant_impl(rq: &LutTable, acc: &[i64], out: &mut [i32], add: bool) {
+    debug_assert_eq!(acc.len(), out.len());
+    let li = LutIdx::new(rq);
+    let mut idx = [0i32; 4];
+    let n4 = acc.len() & !3;
+    let mut j = 0usize;
+    while j < n4 {
+        // `acc as i32` is the low 32 bits of each lane: narrow + combine
+        let lo = vmovn_s64(vld1q_s64(acc.as_ptr().add(j)));
+        let hi = vmovn_s64(vld1q_s64(acc.as_ptr().add(j + 2)));
+        let id = li.idx(vcombine_s32(lo, hi));
+        vst1q_s32(idx.as_mut_ptr(), id);
+        for t in 0..4 {
+            let v = rq.entries[idx[t] as usize] as i32;
+            out[j + t] = if add { out[j + t].wrapping_add(v) } else { v };
+        }
+        j += 4;
+    }
+    for t in n4..acc.len() {
+        let v = lut_i32(rq, acc[t] as i32);
+        out[t] = if add { out[t].wrapping_add(v) } else { v };
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_impl(a: &[i32], b: &[i32]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = vdupq_n_s64(0);
+    let n4 = a.len() & !3;
+    let mut j = 0usize;
+    while j < n4 {
+        let a4 = vld1q_s32(a.as_ptr().add(j));
+        let b4 = vld1q_s32(b.as_ptr().add(j));
+        acc = vmlal_s32(acc, vget_low_s32(a4), vget_low_s32(b4));
+        acc = vmlal_s32(acc, vget_high_s32(a4), vget_high_s32(b4));
+        j += 4;
+    }
+    let mut tot = vaddvq_s64(acc);
+    for t in n4..a.len() {
+        tot += a[t] as i64 * b[t] as i64;
+    }
+    tot
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn max_impl(x: &[i32]) -> i32 {
+    assert!(!x.is_empty(), "max_i32 over an empty row");
+    let mut best = i32::MIN;
+    let n4 = x.len() & !3;
+    if n4 != 0 {
+        let mut m = vld1q_s32(x.as_ptr());
+        let mut j = 4usize;
+        while j < n4 {
+            m = vmaxq_s32(m, vld1q_s32(x.as_ptr().add(j)));
+            j += 4;
+        }
+        best = vmaxvq_s32(m);
+    }
+    for &v in &x[n4..] {
+        best = best.max(v);
+    }
+    best
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn exp_lut_sum_impl(exp: &LutTable, m: i32, sc: &[i32], e: &mut [i32]) -> i64 {
+    debug_assert_eq!(sc.len(), e.len());
+    let li = LutIdx::new(exp);
+    let mv = vdupq_n_s32(m);
+    let mut idx = [0i32; 4];
+    let mut tot: i64 = 0;
+    let n4 = sc.len() & !3;
+    let mut j = 0usize;
+    while j < n4 {
+        let x = vld1q_s32(sc.as_ptr().add(j));
+        let id = li.idx(vsubq_s32(x, mv));
+        vst1q_s32(idx.as_mut_ptr(), id);
+        for t in 0..4 {
+            let v = exp.entries[idx[t] as usize] as i32;
+            e[j + t] = v;
+            tot += v as i64;
+        }
+        j += 4;
+    }
+    for t in n4..sc.len() {
+        let v = lut_i32(exp, sc[t].wrapping_sub(m));
+        e[t] = v;
+        tot += v as i64;
+    }
+    tot
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn prob_lut_impl(prob: &LutTable, r: i32, e: &[i32], p: &mut [i32]) {
+    debug_assert_eq!(e.len(), p.len());
+    let li = LutIdx::new(prob);
+    let rv = vdupq_n_s32(r);
+    let mut idx = [0i32; 4];
+    let n4 = e.len() & !3;
+    let mut j = 0usize;
+    while j < n4 {
+        let x = vld1q_s32(e.as_ptr().add(j));
+        let id = li.idx(vmulq_s32(x, rv));
+        vst1q_s32(idx.as_mut_ptr(), id);
+        for t in 0..4 {
+            p[j + t] = prob.entries[idx[t] as usize] as i32;
+        }
+        j += 4;
+    }
+    for t in n4..e.len() {
+        p[t] = lut_i32(prob, e[t].wrapping_mul(r));
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sum_impl(row: &[i32]) -> i64 {
+    let mut tot: i64 = 0;
+    let n4 = row.len() & !3;
+    let mut j = 0usize;
+    while j < n4 {
+        tot += vaddlvq_s32(vld1q_s32(row.as_ptr().add(j)));
+        j += 4;
+    }
+    for &v in &row[n4..] {
+        tot += v as i64;
+    }
+    tot
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn ln_finish_impl(rq: &LutTable, r: i64, c: &[i64], out: &mut [i32]) {
+    debug_assert_eq!(c.len(), out.len());
+    let li = LutIdx::new(rq);
+    // only the low 32 bits of c[j] * r survive the `as i32` narrowing
+    let rv = vdupq_n_s32(r as i32);
+    let mut idx = [0i32; 4];
+    let n4 = c.len() & !3;
+    let mut j = 0usize;
+    while j < n4 {
+        let lo = vmovn_s64(vld1q_s64(c.as_ptr().add(j)));
+        let hi = vmovn_s64(vld1q_s64(c.as_ptr().add(j + 2)));
+        let prod = vmulq_s32(vcombine_s32(lo, hi), rv);
+        let id = li.idx(prod);
+        vst1q_s32(idx.as_mut_ptr(), id);
+        for t in 0..4 {
+            out[j + t] = rq.entries[idx[t] as usize] as i32;
+        }
+        j += 4;
+    }
+    for t in n4..c.len() {
+        out[t] = lut_i32(rq, (c[t] as i32).wrapping_mul(r as i32));
+    }
+}

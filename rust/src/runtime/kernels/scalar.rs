@@ -1,0 +1,148 @@
+//! The scalar kernel backend — bit-for-bit the pre-refactor inner
+//! loops, kept forever as the **oracle** every SIMD backend is
+//! differentially tested against (and the forced backend under
+//! `HGPIPE_KERNELS=scalar`). No `unsafe`, no intrinsics; the fixed
+//! 8-wide unroll in [`axpy`] is the only concession to the optimizer.
+
+use crate::lut::LutTable;
+
+use super::{lut_i32, Kernels};
+
+pub(super) static KERNELS: Kernels = Kernels {
+    name: "scalar",
+    axpy,
+    axpy4,
+    requant,
+    requant_add,
+    dot_i32,
+    max_i32,
+    exp_lut_sum,
+    prob_lut,
+    sum_i32,
+    ln_center,
+    ln_finish,
+};
+
+/// `o[j] += a * w[j]` over one packed panel row, fixed 8-wide unroll —
+/// the GEMM microkernel's inner loop (formerly `gemm::axpy8`).
+#[inline(always)]
+pub(super) fn axpy(a: i32, w: &[i32], o: &mut [i64]) {
+    debug_assert_eq!(w.len(), o.len());
+    let a = a as i64;
+    let n8 = w.len() & !7;
+    let (w8, w_tail) = w.split_at(n8);
+    let (o8, o_tail) = o.split_at_mut(n8);
+    for (oc, wc) in o8.chunks_exact_mut(8).zip(w8.chunks_exact(8)) {
+        oc[0] += a * wc[0] as i64;
+        oc[1] += a * wc[1] as i64;
+        oc[2] += a * wc[2] as i64;
+        oc[3] += a * wc[3] as i64;
+        oc[4] += a * wc[4] as i64;
+        oc[5] += a * wc[5] as i64;
+        oc[6] += a * wc[6] as i64;
+        oc[7] += a * wc[7] as i64;
+    }
+    for (ov, &wv) in o_tail.iter_mut().zip(w_tail) {
+        *ov += a * wv as i64;
+    }
+}
+
+/// Four [`axpy`]s sharing one weight row — the 4-row register-blocked
+/// microkernel body (formerly the inner loop of `gemm::rows4_into`).
+#[inline(always)]
+pub(super) fn axpy4(
+    a: [i32; 4],
+    w: &[i32],
+    o0: &mut [i64],
+    o1: &mut [i64],
+    o2: &mut [i64],
+    o3: &mut [i64],
+) {
+    axpy(a[0], w, o0);
+    axpy(a[1], w, o1);
+    axpy(a[2], w, o2);
+    axpy(a[3], w, o3);
+}
+
+/// Fused requant epilogue over one accumulator band (formerly the tail
+/// loop of `ops::gemm_rq_into`).
+#[inline(always)]
+pub(super) fn requant(rq: &LutTable, acc: &[i64], out: &mut [i32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = lut_i32(rq, a as i32);
+    }
+}
+
+/// Requant epilogue fused with the residual add (formerly the tail loop
+/// of `ops::gemm_rq_add_into`).
+#[inline(always)]
+pub(super) fn requant_add(rq: &LutTable, acc: &[i64], out: &mut [i32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = o.wrapping_add(lut_i32(rq, a as i32));
+    }
+}
+
+/// One attention score: `Σ q[i] * k[i]` with exact i64 accumulation.
+#[inline(always)]
+pub(super) fn dot_i32(a: &[i32], b: &[i32]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as i64 * y as i64).sum()
+}
+
+/// Max over a non-empty slice — the softmax max-subtract.
+#[inline(always)]
+pub(super) fn max_i32(x: &[i32]) -> i32 {
+    *x.iter().max().expect("max_i32 over an empty row")
+}
+
+/// Softmax exp pass: `e[i] = lut(exp, sc[i] - m)`, returns `Σ e[i]`.
+#[inline(always)]
+pub(super) fn exp_lut_sum(exp: &LutTable, m: i32, sc: &[i32], e: &mut [i32]) -> i64 {
+    debug_assert_eq!(sc.len(), e.len());
+    let mut tot: i64 = 0;
+    for (ev, &s) in e.iter_mut().zip(sc) {
+        *ev = lut_i32(exp, s.wrapping_sub(m));
+        tot += *ev as i64;
+    }
+    tot
+}
+
+/// Softmax probability requant: `p[i] = lut(prob, e[i] * r)`.
+#[inline(always)]
+pub(super) fn prob_lut(prob: &LutTable, r: i32, e: &[i32], p: &mut [i32]) {
+    debug_assert_eq!(e.len(), p.len());
+    for (pv, &ev) in p.iter_mut().zip(e) {
+        *pv = lut_i32(prob, ev.wrapping_mul(r));
+    }
+}
+
+/// LayerNorm row sum.
+#[inline(always)]
+pub(super) fn sum_i32(row: &[i32]) -> i64 {
+    row.iter().map(|&v| v as i64).sum()
+}
+
+/// LayerNorm center pass: fills `c[j] = d*row[j] - sum` and returns the
+/// guarded variance accumulator `Σ (c[j] >> guard)²`.
+#[inline(always)]
+pub(super) fn ln_center(d: i32, sum: i64, guard: u32, row: &[i32], c: &mut [i64]) -> i64 {
+    debug_assert_eq!(row.len(), c.len());
+    let mut v: i64 = 0;
+    for (cj, &xv) in c.iter_mut().zip(row) {
+        *cj = d.wrapping_mul(xv) as i64 - sum;
+        let cg = *cj >> guard;
+        v += cg * cg;
+    }
+    v
+}
+
+/// LayerNorm output pass: `out[j] = lut(rq, (c[j] * r) as i32)`.
+#[inline(always)]
+pub(super) fn ln_finish(rq: &LutTable, r: i64, c: &[i64], out: &mut [i32]) {
+    debug_assert_eq!(c.len(), out.len());
+    for (o, &cj) in out.iter_mut().zip(c) {
+        *o = lut_i32(rq, (cj * r) as i32);
+    }
+}

@@ -13,6 +13,12 @@
 //!   once per loaded model), a per-lane scratch arena, and the
 //!   panel-packed integer GEMM with its register-blocked microkernel.
 //!   Bit-exactness-preserving.
+//! * [`kernels`] — the runtime-dispatched SIMD kernel layer: every hot
+//!   inner loop (GEMM axpy, requant LUT application, softmax, LayerNorm)
+//!   behind one [`kernels::Kernels`] fn-pointer vtable with `scalar`,
+//!   `avx2` and `neon` backends, selected **once at model load** and
+//!   threaded through both execution modes. All backends are bit-exact;
+//!   the scalar table is the differential-testing oracle.
 //! * [`pipeline`] — the hybrid-grained **spatial** executor
 //!   ([`ExecMode::Pipeline`]): the model unrolled into resident stages,
 //!   each pinned to its own persistent worker with stage-resident
@@ -30,6 +36,7 @@
 
 pub mod fabric;
 pub mod interpreter;
+pub mod kernels;
 pub mod pipeline;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -146,11 +153,17 @@ pub struct RuntimeConfig {
     /// the pipeline boundary, not inside it), all pulling from one
     /// shared front queue. `None` defers to `HGPIPE_REPLICAS`, then 1.
     pub replicas: Option<usize>,
+    /// Explicit kernel-backend preference (`--kernels`). `None` defers
+    /// to the `HGPIPE_KERNELS` read-only env fallback, then to CPU
+    /// feature auto-detection (see [`kernels::from_env`]). An explicit
+    /// preference that names a backend this host cannot run is a load
+    /// **error**, never a silent downgrade.
+    pub kernels: Option<kernels::KernelPref>,
 }
 
 impl RuntimeConfig {
     pub fn new(backend: BackendKind) -> Self {
-        Self { backend, lanes: None, mode: ExecMode::Auto, replicas: None }
+        Self { backend, lanes: None, mode: ExecMode::Auto, replicas: None, kernels: None }
     }
 
     /// Set (or clear) the explicit lane count.
@@ -177,6 +190,24 @@ impl RuntimeConfig {
     /// Always at least 1.
     pub fn resolve_replicas(&self) -> usize {
         self.replicas.unwrap_or_else(Self::replicas_from_env).max(1)
+    }
+
+    /// Set (or clear) the explicit kernel-backend preference (beats
+    /// `HGPIPE_KERNELS`).
+    pub fn with_kernels(mut self, kernels: Option<kernels::KernelPref>) -> Self {
+        self.kernels = kernels;
+        self
+    }
+
+    /// The kernel backend this config resolves to: an explicit
+    /// preference must be satisfiable (an unavailable backend is an
+    /// error), else the `HGPIPE_KERNELS` env fallback / auto-detection
+    /// via [`kernels::from_env`].
+    pub fn resolve_kernels(&self) -> crate::Result<&'static kernels::Kernels> {
+        match self.kernels {
+            Some(pref) => kernels::select(pref),
+            None => Ok(kernels::from_env()),
+        }
     }
 
     /// The `HGPIPE_REPLICAS` read-only env fallback (mirrors
@@ -356,11 +387,14 @@ pub fn load_model_from_artifact(
         cfg.backend.label()
     );
     let lanes = cfg.lanes.unwrap_or_else(fabric::LanePool::lanes_from_env);
+    // resolve the kernel backend ONCE per load; every replica fabric and
+    // every resident pipeline stage built below inherits this vtable
+    let kern = cfg.resolve_kernels()?;
     match cfg.mode.resolve() {
         ExecMode::Pipeline { stages, queue_depth } => {
-            Ok(pipeline::executors_from_artifact(artifact, lanes, stages, queue_depth))
+            Ok(pipeline::executors_from_artifact(artifact, lanes, stages, queue_depth, kern))
         }
-        _ => Ok(interpreter::executors_from_artifact(artifact, lanes)),
+        _ => Ok(interpreter::executors_from_artifact(artifact, lanes, kern)),
     }
 }
 

@@ -54,6 +54,7 @@ use std::time::Instant;
 use crate::artifacts::Manifest;
 use crate::runtime::fabric::LanePool;
 use crate::runtime::interpreter::QuantViT;
+use crate::runtime::kernels::{self, Kernels};
 use crate::runtime::{ExecStats, Executor, LoadedModel, ModelArtifact};
 use channel::ChannelStats;
 use stage::{StageOut, StageShared, StageSpec, Work};
@@ -105,6 +106,11 @@ pub struct PipelineConfig {
     pub lanes: usize,
     /// Near-even block slicing vs the work-proportional cost model.
     pub partition: PartitionStrategy,
+    /// The kernel backend every resident stage (and each stage's
+    /// private lane-pool share) drives its inner loops through.
+    /// Resolved once at model load; the default defers to
+    /// `HGPIPE_KERNELS` / auto-detection.
+    pub kernels: &'static Kernels,
 }
 
 impl Default for PipelineConfig {
@@ -114,6 +120,7 @@ impl Default for PipelineConfig {
             queue_depth: DEFAULT_QUEUE_DEPTH,
             lanes: 1,
             partition: PartitionStrategy::default(),
+            kernels: kernels::from_env(),
         }
     }
 }
@@ -322,6 +329,7 @@ impl Pipeline {
         let stages = resolve_stage_count(depth, cfg.stages);
         let queue_depth = cfg.queue_depth.max(1);
         let per_stage_lanes = (cfg.lanes / stages).max(1);
+        let kern = cfg.kernels;
         let parts = match cfg.partition {
             PartitionStrategy::NearEven => partition_near_even(depth, stages),
             PartitionStrategy::WorkProportional => {
@@ -345,7 +353,7 @@ impl Pipeline {
             // death after the load reported success. On panic, close
             // the feed and join the stages spawned so far first.
             let stage_pool = match std::panic::catch_unwind(|| {
-                (per_stage_lanes > 1).then(|| LanePool::new(per_stage_lanes))
+                (per_stage_lanes > 1).then(|| LanePool::with_kernels(per_stage_lanes, kern))
             }) {
                 Ok(p) => p,
                 Err(payload) => {
@@ -388,7 +396,7 @@ impl Pipeline {
                         }
                     }
                     let _live = Live;
-                    stage::stage_loop(net2, spec, rx_stage, out, shared2, stage_pool);
+                    stage::stage_loop(net2, spec, rx_stage, out, shared2, stage_pool, kern);
                 });
             let handle = match handle {
                 Ok(h) => h,
@@ -630,7 +638,7 @@ pub fn load_model(
     queue_depth: usize,
 ) -> crate::Result<LoadedModel> {
     let artifact = ModelArtifact::load(manifest, model)?;
-    Ok(executors_from_artifact(&artifact, lanes, stages, queue_depth))
+    Ok(executors_from_artifact(&artifact, lanes, stages, queue_depth, kernels::from_env()))
 }
 
 /// Spatially unroll an already-loaded shared [`ModelArtifact`] into a
@@ -643,12 +651,13 @@ pub fn executors_from_artifact(
     lanes: usize,
     stages: usize,
     queue_depth: usize,
+    kern: &'static Kernels,
 ) -> LoadedModel {
     let net = artifact.net().clone();
     let t0 = Instant::now();
     let pipe = Arc::new(Pipeline::new(
         net.clone(),
-        PipelineConfig { stages, queue_depth, lanes, ..Default::default() },
+        PipelineConfig { stages, queue_depth, lanes, kernels: kern, ..Default::default() },
     ));
     let load_ms = artifact.load_ms() + t0.elapsed().as_secs_f64() * 1e3;
     let executors: Vec<Box<dyn Executor>> = artifact

@@ -16,6 +16,7 @@ use std::time::Instant;
 
 use crate::runtime::fabric::{Exec, LanePool, LaneScratch};
 use crate::runtime::interpreter::{OpClock, QuantViT};
+use crate::runtime::kernels::Kernels;
 
 use super::channel;
 
@@ -83,6 +84,9 @@ pub(crate) fn stage_loop(
     // the loading thread so a worker-spawn failure is a *load* error,
     // not a silent post-load stage death
     pool: Option<LanePool>,
+    // the kernel backend resolved once at model load; serial stages
+    // drive it directly, pooled stages carry it inside their pool
+    kernels: &'static Kernels,
 ) {
     // stage-resident state: the scratch box and a detached op clock —
     // nobody reads a per-op profile here, so the segments' lap calls
@@ -98,8 +102,8 @@ pub(crate) fn stage_loop(
         let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let LaneScratch { band, pass } = &mut *scratch;
             let mut exec = match &pool {
-                Some(p) => Exec::Pool(p),
-                None => Exec::Serial(band),
+                Some(p) => Exec::pool(p),
+                None => Exec::serial(band, kernels),
             };
             if spec.embed {
                 net.embed_into(&w.tokens, &mut w.x, pass, &mut exec, &mut clk);

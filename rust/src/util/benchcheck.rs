@@ -5,8 +5,8 @@
 //! Two independent checks:
 //!
 //! * [`schema_errors`] — the bench artifact must contain every field the
-//!   README documents (including the `scale_out` and `memory` sections),
-//!   so the schema
+//!   README documents (including the `scale_out`, `kernels` and `memory`
+//!   sections), so the schema
 //!   cannot silently drift away from the docs: the bench emits its JSON
 //!   by hand (no serde offline), and a renamed or dropped key would
 //!   otherwise only be noticed by whoever next reads the artifact.
@@ -74,6 +74,18 @@ const REQUIRED_PATHS: &[&str] = &[
     "scale_out.partition.work_proportional.img_s",
     "scale_out.partition.work_proportional.per_stage_busy_ms",
     "scale_out.partition.work_proportional.max_min_busy_ratio",
+    "kernels.detected",
+    "kernels.scalar_img_s",
+    "kernels.simd_img_s",
+    "kernels.speedup",
+    "kernels.per_op_scalar_ms_per_image.gemm",
+    "kernels.per_op_scalar_ms_per_image.attention",
+    "kernels.per_op_scalar_ms_per_image.layernorm",
+    "kernels.per_op_scalar_ms_per_image.requant",
+    "kernels.per_op_simd_ms_per_image.gemm",
+    "kernels.per_op_simd_ms_per_image.attention",
+    "kernels.per_op_simd_ms_per_image.layernorm",
+    "kernels.per_op_simd_ms_per_image.requant",
     "memory.artifact_footprint_bytes",
     "memory.replicas",
     "memory.unshared_bytes",
@@ -237,6 +249,13 @@ mod tests {
                             "per_stage_busy_ms": [22.0, 21.0], "max_min_busy_ratio": 3.0}
     }
   },
+  "kernels": {
+    "detected": "avx2", "scalar_img_s": 150.0, "simd_img_s": 450.0, "speedup": 3.0,
+    "per_op_scalar_ms_per_image": {"quantize": 0.1, "gemm": 3.0, "layernorm": 0.4,
+                                   "attention": 1.2, "requant": 0.1, "head": 0.1},
+    "per_op_simd_ms_per_image": {"quantize": 0.1, "gemm": 1.0, "layernorm": 0.2,
+                                 "attention": 0.4, "requant": 0.0, "head": 0.1}
+  },
   "memory": {"artifact_footprint_bytes": 1048576, "replicas": 4,
              "unshared_bytes": 4194304, "shared_bytes": 1048576,
              "savings_ratio": 4.0, "artifact_refs": 9},
@@ -271,6 +290,19 @@ mod tests {
         assert!(
             errs.iter().any(|e| e.contains("scale_out")),
             "scale_out omission must be caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_kernels_section_is_reported() {
+        let mut doc = sample();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("kernels");
+        }
+        let errs = schema_errors(&doc);
+        assert!(
+            errs.iter().any(|e| e.contains("kernels.detected")),
+            "kernels omission must be caught: {errs:?}"
         );
     }
 

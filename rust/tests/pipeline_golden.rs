@@ -22,6 +22,7 @@ use hgpipe::artifacts::Manifest;
 use hgpipe::coordinator::ModelServer;
 use hgpipe::runtime::fabric::LanePool;
 use hgpipe::runtime::interpreter::QuantViT;
+use hgpipe::runtime::kernels;
 use hgpipe::runtime::pipeline::{self, PartitionStrategy, Pipeline, PipelineConfig};
 use hgpipe::runtime::{BackendKind, ExecMode, RuntimeConfig};
 
@@ -106,6 +107,41 @@ fn pipeline_bit_exact_with_fine_grained_lanes_inside_stages() {
 }
 
 #[test]
+fn pipeline_bit_exact_under_scalar_and_detected_kernels() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    let n = 8usize;
+    // scalar oracle vs whatever CPU detection picks, at stage counts
+    // 1 (monolithic) and 0 = max (fully unrolled, one segment per
+    // stage), with fine-grained lanes active inside the stages — every
+    // combination must reproduce the python logits bit-for-bit
+    for kern in [kernels::scalar(), kernels::detect()] {
+        for &stages in &[1usize, 0] {
+            let pipe = Pipeline::new(
+                net.clone(),
+                PipelineConfig {
+                    stages,
+                    queue_depth: 2,
+                    lanes: 4,
+                    kernels: kern,
+                    ..Default::default()
+                },
+            );
+            let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
+            for i in 0..n {
+                assert_logits(
+                    &out[i * nc..(i + 1) * nc],
+                    &expected[i * nc..(i + 1) * nc],
+                    &format!("kernels {} stages {stages} img {i}", kern.name),
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn excess_stage_request_clamps_to_depth_plus_embed() {
     let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
     let (net, tokens, expected) = golden();
@@ -135,7 +171,7 @@ fn both_partition_strategies_are_bit_exact_and_embed_stage_is_dedicated() {
     for strategy in [PartitionStrategy::WorkProportional, PartitionStrategy::NearEven] {
         let pipe = Pipeline::new(
             net.clone(),
-            PipelineConfig { stages: 0, queue_depth: 2, lanes: 1, partition: strategy },
+            PipelineConfig { stages: 0, queue_depth: 2, lanes: 1, partition: strategy, ..Default::default() },
         );
         assert_eq!(pipe.partition_strategy(), strategy);
         let out = pipe.run_batch(&tokens[..n * per], n).unwrap();
