@@ -13,7 +13,7 @@ fn main() {
     println!("=== coordinator benches ===\n");
 
     // pure policy micro-bench (the per-request decision cost)
-    let policy = BatchPolicy::new(vec![1, 8], Duration::from_millis(2));
+    let policy = BatchPolicy::new(vec![1, 8], Duration::from_millis(2)).unwrap();
     let r = bench("batch policy decide() x1000", Duration::from_millis(300), || {
         for q in 0..1000usize {
             black_box(policy.decide(q % 17, Duration::from_micros((q % 3000) as u64)));

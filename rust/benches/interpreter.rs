@@ -337,6 +337,13 @@ fn main() {
         per_replica: Vec<(u64, f64, f64)>,
     }
     let mut replica_sweep: Vec<ReplicaPoint> = Vec::new();
+    // fault-tolerance counters aggregated across the sweep's servers:
+    // all zero in a clean run, non-zero when the run is executed under
+    // HGPIPE_FAULTS (the chaos CI lane) — the JSON records both so a
+    // perf regression can be told apart from a perf-under-chaos number
+    let faults_enabled =
+        hgpipe::coordinator::faults::FaultPlan::from_env().is_some();
+    let (mut f_restarts, mut f_retried, mut f_shed, mut f_expired) = (0u64, 0u64, 0u64, 0u64);
     for &replicas in &[1usize, 2, 4] {
         let cfg = RuntimeConfig::new(BackendKind::Interpreter)
             .with_lanes(Some(1))
@@ -375,6 +382,13 @@ fn main() {
             })
             .collect();
         println!("  scale-out: {replicas} replica(s), 1 lane each   {img_s:8.1} img/s");
+        {
+            let m = server.metrics.lock().unwrap();
+            f_restarts += m.restarts;
+            f_retried += m.retried;
+            f_shed += m.shed;
+            f_expired += m.expired;
+        }
         replica_sweep.push(ReplicaPoint { replicas, img_s, per_replica });
     }
     let scale_base_ips = replica_sweep[0].img_s;
@@ -580,6 +594,12 @@ fn main() {
             p.img_s / scale_base_ips
         );
     }
+    if faults_enabled {
+        println!(
+            "    fault injection ON (HGPIPE_FAULTS): restarts={f_restarts} \
+             retried={f_retried} shed={f_shed} expired={f_expired}"
+        );
+    }
     println!(
         "    partition busy max/min @ {} stages: near-even {:.1}x -> work-proportional {:.1}x \
          (PR-4 near-even @ {} stages: {:.1}x)",
@@ -738,6 +758,9 @@ fn main() {
              \"shared_bytes\": {artifact_footprint},\n    \
              \"savings_ratio\": {memory_savings:.3},\n    \
              \"artifact_refs\": {artifact_refs}\n  }},\n  \
+             \"faults\": {{\n    \"enabled\": {faults_enabled},\n    \
+             \"restarts\": {f_restarts},\n    \"retried\": {f_retried},\n    \
+             \"shed\": {f_shed},\n    \"expired\": {f_expired}\n  }},\n  \
              \"per_op_ms_per_image\": {},\n  \
              \"per_op_pooled_ms_per_image\": {}\n}}\n",
             opts.smoke,

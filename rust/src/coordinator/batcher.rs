@@ -18,11 +18,19 @@ pub struct BatchPolicy {
 }
 
 impl BatchPolicy {
-    pub fn new(mut variants: Vec<usize>, max_wait: Duration) -> Self {
+    /// Construct-time validation instead of latent panics downstream:
+    /// an empty or zero-containing variant set would make `largest()` /
+    /// the executor's lane padding blow up mid-serve.
+    pub fn new(mut variants: Vec<usize>, max_wait: Duration) -> crate::Result<Self> {
         variants.sort_unstable();
         variants.dedup();
-        assert!(!variants.is_empty(), "need at least one batch variant");
-        Self { variants, max_wait }
+        anyhow::ensure!(!variants.is_empty(), "batch policy needs at least one batch variant");
+        anyhow::ensure!(
+            variants[0] >= 1,
+            "batch variants must be >= 1, got {:?}",
+            variants
+        );
+        Ok(Self { variants, max_wait })
     }
 
     pub fn largest(&self) -> usize {
@@ -72,12 +80,18 @@ mod tests {
     use super::*;
 
     fn policy() -> BatchPolicy {
-        BatchPolicy::new(vec![8, 1], Duration::from_millis(2))
+        BatchPolicy::new(vec![8, 1], Duration::from_millis(2)).unwrap()
+    }
+
+    #[test]
+    fn empty_or_zero_variants_are_construction_errors() {
+        assert!(BatchPolicy::new(vec![], Duration::ZERO).is_err());
+        assert!(BatchPolicy::new(vec![0, 4], Duration::ZERO).is_err());
     }
 
     #[test]
     fn variants_sorted_deduped() {
-        let p = BatchPolicy::new(vec![8, 1, 8], Duration::ZERO);
+        let p = BatchPolicy::new(vec![8, 1, 8], Duration::ZERO).unwrap();
         assert_eq!(p.variants, vec![1, 8]);
     }
 
@@ -101,7 +115,7 @@ mod tests {
 
     #[test]
     fn picks_largest_variant_fitting_queue() {
-        let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(1));
+        let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(1)).unwrap();
         assert_eq!(p.decide(5, Duration::from_millis(2)), Some(4));
         assert_eq!(p.decide(2, Duration::from_millis(2)), Some(1));
     }
@@ -131,7 +145,7 @@ mod tests {
     fn whenever_decide_waits_residual_is_positive() {
         // invariant the executor loop relies on: a None decision on a
         // non-empty queue always leaves a positive residual to block on
-        let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(3));
+        let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(3)).unwrap();
         for q in 1..20usize {
             for us in [0u64, 1, 500, 2999, 3000, 3001, 10_000] {
                 let waited = Duration::from_micros(us);

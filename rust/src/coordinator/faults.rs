@@ -1,0 +1,260 @@
+//! Deterministic fault injection for the serving layer.
+//!
+//! A [`FaultPlan`] describes *which* faults to inject and *how often*;
+//! a per-replica [`FaultInjector`] (seeded from the plan seed XOR'd
+//! with the replica index) decides *when*. All randomness flows through
+//! the in-repo xoshiro256** [`crate::util::prng::Prng`], so a given
+//! (plan, replica, dispatch-sequence) triple always produces the same
+//! fault schedule — chaos tests are reproducible, not flaky.
+//!
+//! The harness is off by default and zero-cost when off: the serving
+//! path carries an `Option<FaultInjector>` that is `None` unless a plan
+//! was supplied via [`crate::runtime::RuntimeConfig::faults`] or the
+//! `HGPIPE_FAULTS` environment variable (explicit config wins, the
+//! repo-wide precedence rule).
+//!
+//! Spec grammar (comma-separated, any order, all parts optional):
+//!
+//! ```text
+//! panic:RATE            probability a dispatch panics the replica thread
+//! stall:RATE[:MS]       probability a dispatch stalls MS ms first (default 10)
+//! load:RATE             probability an artifact load / replica (re)build fails
+//! seed:N                PRNG seed (default 0x4847_5049, "HGPI")
+//! ```
+//!
+//! Example: `HGPIPE_FAULTS=panic:0.05,stall:0.01:20,seed:42`.
+
+use crate::util::prng::Prng;
+use std::time::Duration;
+
+/// Default seed: ASCII "HGPI".
+pub const DEFAULT_SEED: u64 = 0x4847_5049;
+/// Default stall duration when `stall:RATE` omits the millisecond part.
+pub const DEFAULT_STALL_MS: u64 = 10;
+
+/// A fault to act on at a replica dispatch point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic the replica thread (simulates a crashed executor).
+    Panic,
+    /// Sleep before executing (simulates a wedged/slow stage).
+    Stall(Duration),
+}
+
+/// Declarative description of the faults to inject. `Copy` so it can
+/// ride inside [`crate::runtime::RuntimeConfig`] without breaking its
+/// `Copy` derive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Per-dispatch probability of a replica panic, in `[0, 1]`.
+    pub panic_rate: f64,
+    /// Per-dispatch probability of a stall, in `[0, 1]`.
+    pub stall_rate: f64,
+    /// How long an injected stall sleeps.
+    pub stall_ms: u64,
+    /// Per-load probability that building a replica runtime fails, in
+    /// `[0, 1]` (exercises both fleet-startup and restart paths).
+    pub load_fail_rate: f64,
+    /// Base PRNG seed; each replica derives its own stream from it.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            panic_rate: 0.0,
+            stall_rate: 0.0,
+            stall_ms: DEFAULT_STALL_MS,
+            load_fail_rate: 0.0,
+            seed: DEFAULT_SEED,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see module docs for the grammar).
+    pub fn parse(spec: &str) -> crate::Result<Self> {
+        let mut plan = FaultPlan::default();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let mut parts = item.split(':');
+            let key = parts.next().unwrap_or("");
+            let rate = |s: Option<&str>| -> crate::Result<f64> {
+                let raw = s.ok_or_else(|| {
+                    anyhow::anyhow!("fault spec item '{item}' is missing a rate")
+                })?;
+                let v: f64 = raw
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad rate '{raw}' in fault spec item '{item}'"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&v),
+                    "rate {v} in fault spec item '{item}' is outside [0, 1]"
+                );
+                Ok(v)
+            };
+            match key {
+                "panic" => plan.panic_rate = rate(parts.next())?,
+                "stall" => {
+                    plan.stall_rate = rate(parts.next())?;
+                    if let Some(ms) = parts.next() {
+                        plan.stall_ms = ms.parse().map_err(|_| {
+                            anyhow::anyhow!("bad stall ms '{ms}' in fault spec item '{item}'")
+                        })?;
+                    }
+                }
+                "load" => plan.load_fail_rate = rate(parts.next())?,
+                "seed" => {
+                    let raw = parts.next().ok_or_else(|| {
+                        anyhow::anyhow!("fault spec item '{item}' is missing a seed value")
+                    })?;
+                    plan.seed = raw.parse().map_err(|_| {
+                        anyhow::anyhow!("bad seed '{raw}' in fault spec item '{item}'")
+                    })?;
+                }
+                other => anyhow::bail!(
+                    "unknown fault spec key '{other}' (expected panic/stall/load/seed)"
+                ),
+            }
+            anyhow::ensure!(
+                parts.next().is_none(),
+                "trailing garbage in fault spec item '{item}'"
+            );
+        }
+        Ok(plan)
+    }
+
+    /// Read `HGPIPE_FAULTS`. Mirrors the other env fallbacks: unset or
+    /// unparsable (with a warning) means no injection.
+    pub fn from_env() -> Option<Self> {
+        let raw = std::env::var("HGPIPE_FAULTS").ok()?;
+        match FaultPlan::parse(&raw) {
+            Ok(plan) if plan.is_off() => None,
+            Ok(plan) => Some(plan),
+            Err(e) => {
+                eprintln!("warning: ignoring HGPIPE_FAULTS={raw:?}: {e}");
+                None
+            }
+        }
+    }
+
+    /// True when no fault can ever fire — callers treat an off plan the
+    /// same as no plan so the hot path stays untouched.
+    pub fn is_off(&self) -> bool {
+        self.panic_rate <= 0.0 && self.stall_rate <= 0.0 && self.load_fail_rate <= 0.0
+    }
+
+    /// Per-replica injector with its own deterministic PRNG stream.
+    pub fn injector(&self, replica: usize) -> FaultInjector {
+        // golden-ratio multiply decorrelates adjacent replica indices
+        let stream = (replica as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        FaultInjector { plan: *self, rng: Prng::new(self.seed ^ stream) }
+    }
+}
+
+/// Stateful per-replica fault source. One PRNG draw per configured
+/// fault class per decision point keeps the stream aligned regardless
+/// of which faults actually fire.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: Prng,
+}
+
+impl FaultInjector {
+    /// Called once per dispatch, right before the forward pass.
+    pub fn dispatch_fault(&mut self) -> Option<Fault> {
+        if self.plan.panic_rate > 0.0 && self.rng.f64() < self.plan.panic_rate {
+            return Some(Fault::Panic);
+        }
+        if self.plan.stall_rate > 0.0 && self.rng.f64() < self.plan.stall_rate {
+            return Some(Fault::Stall(Duration::from_millis(self.plan.stall_ms)));
+        }
+        None
+    }
+
+    /// Called once per replica-runtime build (initial load and every
+    /// supervised restart).
+    pub fn load_fails(&mut self) -> bool {
+        self.plan.load_fail_rate > 0.0 && self.rng.f64() < self.plan.load_fail_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse("panic:0.05,stall:0.1:25,load:0.2,seed:42").unwrap();
+        assert_eq!(p.panic_rate, 0.05);
+        assert_eq!(p.stall_rate, 0.1);
+        assert_eq!(p.stall_ms, 25);
+        assert_eq!(p.load_fail_rate, 0.2);
+        assert_eq!(p.seed, 42);
+    }
+
+    #[test]
+    fn parse_defaults_and_partial_specs() {
+        let p = FaultPlan::parse("panic:0.5").unwrap();
+        assert_eq!(p.stall_rate, 0.0);
+        assert_eq!(p.stall_ms, DEFAULT_STALL_MS);
+        assert_eq!(p.seed, DEFAULT_SEED);
+        let p = FaultPlan::parse("stall:0.3").unwrap();
+        assert_eq!(p.stall_ms, DEFAULT_STALL_MS);
+        assert!(FaultPlan::parse("").unwrap().is_off());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "panic",            // missing rate
+            "panic:two",        // non-numeric rate
+            "panic:1.5",        // rate out of range
+            "stall:0.1:fast",   // non-numeric ms
+            "jitter:0.1",       // unknown key
+            "seed:0x2a",        // non-decimal seed
+            "panic:0.1:extra",  // trailing part
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec {bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn injector_streams_are_deterministic_and_per_replica() {
+        let plan = FaultPlan::parse("panic:0.3,stall:0.3,seed:7").unwrap();
+        let seq = |replica| {
+            let mut inj = plan.injector(replica);
+            (0..64).map(|_| inj.dispatch_fault()).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(0), seq(0), "same replica, same stream");
+        assert_ne!(seq(0), seq(1), "replicas draw decorrelated streams");
+        assert!(
+            seq(0).iter().any(|f| f.is_some()),
+            "a 30%+30% plan must fire within 64 draws"
+        );
+    }
+
+    #[test]
+    fn off_plan_never_fires() {
+        let mut inj = FaultPlan::default().injector(3);
+        for _ in 0..256 {
+            assert_eq!(inj.dispatch_fault(), None);
+            assert!(!inj.load_fails());
+        }
+        assert!(FaultPlan::default().is_off());
+    }
+
+    #[test]
+    fn certain_rates_always_fire() {
+        let mut inj = FaultPlan::parse("panic:1.0").unwrap().injector(0);
+        for _ in 0..16 {
+            assert_eq!(inj.dispatch_fault(), Some(Fault::Panic));
+        }
+        let mut inj = FaultPlan::parse("stall:1.0:5,load:1.0").unwrap().injector(0);
+        assert_eq!(inj.dispatch_fault(), Some(Fault::Stall(Duration::from_millis(5))));
+        assert!(inj.load_fails());
+    }
+}

@@ -11,6 +11,22 @@ pub struct ServeMetrics {
     /// Requests answered with an error: dispatch failures plus requests
     /// still queued/pending when the server shut down.
     pub failed: u64,
+    /// Submits rejected at the bounded front door (`Overloaded`). Shed
+    /// requests never reach a replica, so this counter lives only in
+    /// the rollup — per-replica copies stay 0.
+    pub shed: u64,
+    /// Requests answered with `DeadlineExceeded` at pop time, without
+    /// ever executing a forward pass.
+    pub expired: u64,
+    /// Requests returned to the front queue after their replica died
+    /// mid-dispatch (each such request is counted once per retry).
+    pub retried: u64,
+    /// Replica deaths survived via supervised restart (each
+    /// `executor_loop` panic increments this once).
+    pub restarts: u64,
+    /// Replicas retired permanently after flapping (consecutive deaths
+    /// without a completed dispatch in between).
+    pub retired: u64,
     pub started: Option<std::time::Instant>,
     pub finished: Option<std::time::Instant>,
 }
@@ -59,13 +75,18 @@ impl ServeMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} failed={} throughput={:.1}/s p50={:?} p95={:?} p99={:?} mean_batch={:.2} exec={:.0}ms queue={:.0}ms",
+            "requests={} failed={} shed={} expired={} retried={} restarts={} throughput={:.1}/s p50={:?} p95={:?} p99={:?} p999={:?} mean_batch={:.2} exec={:.0}ms queue={:.0}ms",
             self.count(),
             self.failed,
+            self.shed,
+            self.expired,
+            self.retried,
+            self.restarts,
             self.throughput().unwrap_or(0.0),
             self.percentile(0.50).unwrap_or_default(),
             self.percentile(0.95).unwrap_or_default(),
             self.percentile(0.99).unwrap_or_default(),
+            self.percentile(0.999).unwrap_or_default(),
             self.mean_batch(),
             self.exec_ms_total,
             self.queue_ms_total,
@@ -85,6 +106,30 @@ mod tests {
         }
         assert!(m.percentile(0.5).unwrap() <= m.percentile(0.95).unwrap());
         assert!(m.percentile(0.95).unwrap() <= m.percentile(0.99).unwrap());
+    }
+
+    #[test]
+    fn p999_tracks_the_tail() {
+        let mut m = ServeMetrics::default();
+        for _ in 0..999 {
+            m.record(Duration::from_micros(100), 1, 0.0, 0.0);
+        }
+        m.record(Duration::from_millis(50), 1, 0.0, 0.0);
+        assert!(m.percentile(0.99).unwrap() <= m.percentile(0.999).unwrap());
+        assert_eq!(m.percentile(0.999).unwrap(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn summary_surfaces_fault_counters() {
+        let mut m = ServeMetrics::default();
+        m.shed = 3;
+        m.expired = 2;
+        m.retried = 5;
+        m.restarts = 1;
+        let s = m.summary();
+        for token in ["shed=3", "expired=2", "retried=5", "restarts=1", "p999="] {
+            assert!(s.contains(token), "summary {s:?} missing {token}");
+        }
     }
 
     #[test]

@@ -32,21 +32,44 @@
 //! While a partial batch waits out the batching deadline the executor
 //! blocks in a timed pop for the residual head-of-line wait rather than
 //! spinning.
+//!
+//! Fault tolerance: each replica's [`executor_loop`] runs under a
+//! supervisor (`catch_unwind`) — a panicking replica returns its
+//! accepted requests to the front of the shared queue (counted as
+//! `retried`; the forward pass is pure and no reply has been sent, so
+//! re-execution preserves exactly-once replies), rebuilds its runtime
+//! from the shared [`ModelArtifact`] with capped exponential backoff,
+//! and resumes. A replica that keeps dying without completing a single
+//! dispatch is retired permanently — the fleet degrades to fewer
+//! replicas, and when the *last* replica retires the queue closes so
+//! every remaining request is failed explicitly instead of hanging.
+//! The front door can be **bounded** ([`RuntimeConfig::queue_capacity`]
+//! / `HGPIPE_QUEUE_CAP`): at capacity, [`ModelServer::submit`] rejects
+//! with a typed [`Overloaded`] error (counted as `shed`) instead of
+//! queueing doomed work without limit. Requests may carry a deadline
+//! ([`ModelServer::submit_with_deadline`]): an expired request is
+//! answered with a typed [`DeadlineExceeded`] at pop time, without
+//! computing its forward pass (counted as `expired`). The [`faults`]
+//! harness injects replica panics / stalls / load failures
+//! deterministically so all of the above is pinned by reproducible
+//! chaos tests (`tests/fault_tolerance.rs`).
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod queue;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::artifacts::Manifest;
-use crate::runtime::{self, BackendKind, Executor, ModelArtifact, RuntimeConfig};
+use crate::runtime::{self, BackendKind, Executor, LoadedModel, ModelArtifact, RuntimeConfig};
 use batcher::BatchPolicy;
+use faults::{Fault, FaultInjector};
 use metrics::ServeMetrics;
-use queue::{FrontQueue, Pop};
+use queue::{FrontQueue, Pop, Rejected};
 
 /// One inference request: a patchified image (flat T*P f32 tokens).
 ///
@@ -58,8 +81,52 @@ pub struct Request {
     pub id: u64,
     pub tokens: Vec<f32>,
     pub enqueued: Instant,
+    /// Answer-by time. A request found expired at pop time is answered
+    /// with [`DeadlineExceeded`] without computing its forward pass.
+    pub deadline: Option<Instant>,
     pub reply: Sender<crate::Result<Response>>,
 }
+
+impl Request {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Typed admission-rejection error: the bounded front queue is at
+/// capacity. Downcast from the anyhow error returned by
+/// [`ModelServer::submit`] to distinguish overload (retry later /
+/// back off) from shutdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded {
+    /// The queue bound that was hit.
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "overloaded: front queue at capacity {} — request shed", self.capacity)
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Typed deadline-expiry error: the request's deadline passed before an
+/// executor picked it up, so it was answered without running (no
+/// compute wasted on a doomed reply).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadlineExceeded {
+    /// Id of the expired request.
+    pub id: u64,
+}
+
+impl std::fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "deadline exceeded before request {} was executed", self.id)
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
 
 /// The reply: logits + timing.
 #[derive(Debug, Clone)]
@@ -90,6 +157,8 @@ pub struct ModelServer {
     pub metrics: Arc<Mutex<ServeMetrics>>,
     replica_metrics: Vec<Arc<Mutex<ServeMetrics>>>,
     stop: Arc<AtomicBool>,
+    /// Replicas currently serving (started minus permanently retired).
+    live: Arc<AtomicUsize>,
     workers: Vec<std::thread::JoinHandle<()>>,
     tokens_per_image: usize,
     num_classes: usize,
@@ -135,6 +204,11 @@ impl ModelServer {
         config: RuntimeConfig,
     ) -> crate::Result<Self> {
         let replicas = config.resolve_replicas();
+        let queue_capacity = config.resolve_queue_capacity();
+        // resolved ONCE on the starter thread (explicit config beats
+        // HGPIPE_FAULTS, the repo-wide precedence); each replica derives
+        // its own deterministic injector stream from the shared plan
+        let fault_plan = config.resolve_faults();
         // the immutable half loads ONCE, on the starter thread: every
         // interpreter replica shares the same `Arc`'d artifact, so N
         // replicas hold one copy of the weight panels, not N. (A failed
@@ -146,68 +220,32 @@ impl ModelServer {
             BackendKind::Interpreter => Some(ModelArtifact::load(manifest, model)?),
             _ => None,
         };
-        let front = Arc::new(FrontQueue::<Request>::new());
-        let (init_tx, init_rx) = channel::<(usize, Result<(usize, usize, f64), String>)>();
+        let front = Arc::new(FrontQueue::<Request>::with_capacity(queue_capacity));
+        let (init_tx, init_rx) = channel::<InitResult>();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let stop = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(replicas));
         let wait = std::time::Duration::from_millis(policy_wait_ms);
         let mut workers = Vec::with_capacity(replicas);
         let mut replica_metrics = Vec::with_capacity(replicas);
         for ri in 0..replicas {
-            let manifest = manifest.clone();
-            let model_name = model.to_string();
-            let art = artifact.clone();
             let own = Arc::new(Mutex::new(ServeMetrics::default()));
             replica_metrics.push(own.clone());
-            let sinks = MetricSinks { rollup: metrics.clone(), own };
-            let q = front.clone();
-            let s2 = stop.clone();
+            let harness = ReplicaHarness {
+                ri,
+                config,
+                manifest: manifest.clone(),
+                model: model.to_string(),
+                artifact: artifact.clone(),
+                front: front.clone(),
+                sinks: MetricSinks { rollup: metrics.clone(), own },
+                stop: stop.clone(),
+                live: live.clone(),
+                wait,
+                plan: fault_plan,
+            };
             let itx = init_tx.clone();
-            workers.push(std::thread::spawn(move || {
-                // build this replica's mutable runtime (fabric lanes or
-                // resident pipeline + scratch) — from the shared
-                // artifact when there is one, else a full per-thread
-                // load (the paper's bitstream load, once per engine)
-                let loaded = match &art {
-                    Some(a) => runtime::load_model_from_artifact(config, a),
-                    None => runtime::load_model(config, &manifest, &model_name),
-                };
-                // the executors hold their own handles now; dropping
-                // the spawn-time clone keeps artifact accounting tied
-                // to live executors, not parked threads
-                drop(art);
-                match loaded {
-                    Err(e) => {
-                        let _ = itx.send((ri, Err(format!("{e:#}"))));
-                    }
-                    Ok(loaded) => {
-                        let _ = itx.send((
-                            ri,
-                            Ok((loaded.tokens_per_image, loaded.num_classes, loaded.compile_ms)),
-                        ));
-                        // release the init sender BEFORE serving: if a
-                        // sibling replica panics inside load_model (no
-                        // message sent), the starter's recv must observe
-                        // disconnection rather than block behind this
-                        // replica's still-alive sender for the whole
-                        // serve lifetime
-                        drop(itx);
-                        let policy = BatchPolicy::new(
-                            loaded.executors.iter().map(|e| e.batch()).collect(),
-                            wait,
-                        );
-                        executor_loop(
-                            q,
-                            loaded.executors,
-                            policy,
-                            loaded.tokens_per_image,
-                            loaded.num_classes,
-                            sinks,
-                            s2,
-                        );
-                    }
-                }
-            }));
+            workers.push(std::thread::spawn(move || replica_supervisor(harness, itx)));
         }
         drop(init_tx);
 
@@ -260,6 +298,7 @@ impl ModelServer {
             metrics,
             replica_metrics,
             stop,
+            live,
             workers,
             tokens_per_image,
             num_classes,
@@ -285,6 +324,23 @@ impl ModelServer {
     /// Number of executor replicas serving this model's queue.
     pub fn replicas(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Replicas currently serving: started minus permanently retired.
+    /// Equals [`Self::replicas`] unless supervision gave up on a
+    /// flapping replica and degraded the fleet.
+    pub fn live_replicas(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// The front queue's admission bound (`None` = unbounded).
+    pub fn queue_capacity(&self) -> Option<usize> {
+        self.front.capacity()
+    }
+
+    /// Requests currently queued at the front door (snapshot).
+    pub fn queue_len(&self) -> usize {
+        self.front.len()
     }
 
     /// The shared immutable model artifact every replica borrows
@@ -322,6 +378,21 @@ impl ModelServer {
     /// delivered: `Ok(Response)` with the logits, or `Err` if the
     /// dispatch failed or the server shut down before the request ran.
     pub fn submit(&self, tokens: Vec<f32>) -> crate::Result<Receiver<crate::Result<Response>>> {
+        self.submit_with_deadline(tokens, None)
+    }
+
+    /// [`Self::submit`] with an answer-by budget. If no executor picks
+    /// the request up before `deadline` elapses, it is answered with a
+    /// downcastable [`DeadlineExceeded`] error *without* computing its
+    /// forward pass. On a bounded queue at capacity, admission itself
+    /// fails with a downcastable [`Overloaded`] error (counted as
+    /// `shed` in the rollup metrics) — the request was never accepted,
+    /// so there is no reply channel to wait on.
+    pub fn submit_with_deadline(
+        &self,
+        tokens: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> crate::Result<Receiver<crate::Result<Response>>> {
         anyhow::ensure!(
             tokens.len() == self.tokens_per_image,
             "expected {} token values, got {}",
@@ -329,14 +400,26 @@ impl ModelServer {
             tokens.len()
         );
         let (tx, rx) = channel();
+        let now = Instant::now();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             tokens,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
             reply: tx,
         };
-        self.front.push(req).map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rx)
+        match self.front.push(req) {
+            Ok(()) => Ok(rx),
+            Err(Rejected::Closed(_)) => Err(anyhow::anyhow!("server stopped")),
+            Err(Rejected::Overloaded(_)) => {
+                // shed requests never reach a replica: the rollup is the
+                // only sink that sees them (replica sums exclude shed by
+                // design — documented on `ServeMetrics::shed`)
+                self.metrics.lock().unwrap().shed += 1;
+                let capacity = self.front.capacity().expect("overload implies a bound");
+                Err(anyhow::Error::new(Overloaded { capacity }))
+            }
+        }
     }
 
     /// Submit a set of images and wait for all replies (offline driver).
@@ -387,16 +470,255 @@ impl MetricSinks {
     }
 }
 
-fn executor_loop(
+/// What a replica reports back to the fleet starter: its index plus
+/// either `(tokens_per_image, num_classes, compile_ms)` or the build
+/// error.
+type InitResult = (usize, Result<(usize, usize, f64), String>);
+
+/// Everything one replica's supervisor needs to build, run, and rebuild
+/// its executor runtime.
+struct ReplicaHarness {
+    ri: usize,
+    config: RuntimeConfig,
+    manifest: Manifest,
+    model: String,
+    artifact: Option<ModelArtifact>,
     front: Arc<FrontQueue<Request>>,
-    executables: Vec<Box<dyn Executor>>,
-    policy: BatchPolicy,
-    tokens_per_image: usize,
-    num_classes: usize,
     sinks: MetricSinks,
     stop: Arc<AtomicBool>,
-) {
+    live: Arc<AtomicUsize>,
+    wait: Duration,
+    plan: Option<faults::FaultPlan>,
+}
+
+/// A flapping replica — this many consecutive deaths without a single
+/// completed dispatch in between — is retired permanently: restarting a
+/// deterministically-crashing replica forever would burn a core
+/// reloading weights.
+const MAX_CONSECUTIVE_DEATHS: u32 = 6;
+/// Exponential restart backoff: `BASE << (deaths - 1)`, capped.
+const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(1);
+const RESTART_BACKOFF_CAP: Duration = Duration::from_millis(64);
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one replica under supervision: build the runtime (reporting the
+/// result over `init_tx`), serve, and on a panic inside the serve loop
+/// requeue the replica's accepted requests, rebuild the runtime from
+/// the shared artifact with capped exponential backoff, and resume.
+/// The `pending`/`inflight` vectors live HERE, outside the unwind
+/// boundary, so a panic can never drop a reply sender silently.
+fn replica_supervisor(h: ReplicaHarness, init_tx: Sender<InitResult>) {
+    let mut injector = h.plan.map(|p| p.injector(h.ri));
+    // build this replica's mutable runtime (fabric lanes or resident
+    // pipeline + scratch) — from the shared artifact when there is one,
+    // else a full per-thread load (the paper's bitstream load, once per
+    // engine). Used for the initial build and every supervised rebuild.
+    let build = |inj: &mut Option<FaultInjector>| -> Result<(LoadedModel, BatchPolicy), String> {
+        if let Some(i) = inj.as_mut() {
+            if i.load_fails() {
+                return Err("injected artifact-load failure (faults harness)".to_string());
+            }
+        }
+        let loaded = match &h.artifact {
+            Some(a) => runtime::load_model_from_artifact(h.config, a),
+            None => runtime::load_model(h.config, &h.manifest, &h.model),
+        }
+        .map_err(|e| format!("{e:#}"))?;
+        let policy =
+            BatchPolicy::new(loaded.executors.iter().map(|e| e.batch()).collect(), h.wait)
+                .map_err(|e| format!("{e:#}"))?;
+        Ok((loaded, policy))
+    };
+    let mut runtime_slot: Option<(LoadedModel, BatchPolicy)> = match build(&mut injector) {
+        Err(e) => {
+            let _ = init_tx.send((h.ri, Err(e)));
+            return;
+        }
+        Ok(built) => {
+            let _ = init_tx.send((
+                h.ri,
+                Ok((built.0.tokens_per_image, built.0.num_classes, built.0.compile_ms)),
+            ));
+            Some(built)
+        }
+    };
+    // release the init sender BEFORE serving: if a sibling replica
+    // panics inside load_model (no message sent), the starter's recv
+    // must observe disconnection rather than block behind this
+    // replica's still-alive sender for the whole serve lifetime
+    drop(init_tx);
+    let tokens_per_image = runtime_slot.as_ref().expect("just built").0.tokens_per_image;
+    let num_classes = runtime_slot.as_ref().expect("just built").0.num_classes;
+
     let mut pending: Vec<Request> = Vec::new();
+    let mut inflight: Vec<Request> = Vec::new();
+    let mut deaths: u32 = 0;
+    let mut retired = false;
+    'supervise: loop {
+        let current = runtime_slot.as_ref().expect("runtime present while supervising");
+        let mut dispatched = false;
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            executor_loop(
+                &h.front,
+                &current.0.executors,
+                &current.1,
+                tokens_per_image,
+                num_classes,
+                &h.sinks,
+                &h.stop,
+                &mut pending,
+                &mut inflight,
+                &mut injector,
+                &mut dispatched,
+            )
+        }));
+        let payload = match run {
+            // normal return: queue closed or stop requested
+            Ok(()) => break 'supervise,
+            Err(payload) => payload,
+        };
+        let msg = panic_message(payload.as_ref());
+        drop(payload);
+        h.sinks.each(|m| m.restarts += 1);
+        // hand the replica's accepted requests back: the batch that was
+        // executing when the panic hit plus everything staged behind it
+        // returns to the FRONT of the shared queue (oldest first) for a
+        // sibling — or this replica, once restarted — to run. The
+        // forward pass is pure and no reply has been sent for any of
+        // these, so re-execution preserves exactly-once replies. Only
+        // when the queue is already closed (shutdown racing the panic)
+        // are they failed explicitly instead.
+        let orphans: Vec<Request> = inflight.drain(..).chain(pending.drain(..)).collect();
+        let mut retried = 0u64;
+        let mut lost: Vec<Request> = Vec::new();
+        for r in orphans.into_iter().rev() {
+            match h.front.requeue(r) {
+                Ok(()) => retried += 1,
+                Err(r) => lost.push(r),
+            }
+        }
+        if retried > 0 {
+            h.sinks.each(|m| m.retried += retried);
+        }
+        if !lost.is_empty() {
+            let n = lost.len() as u64;
+            h.sinks.each(|m| m.failed += n);
+            for r in lost {
+                let _ = r.reply.send(Err(anyhow::anyhow!(
+                    "replica died while request {} was queued on it ({msg}) and the server is shutting down",
+                    r.id
+                )));
+            }
+        }
+        if h.stop.load(Ordering::SeqCst) {
+            break 'supervise;
+        }
+        // tear the (possibly wedged) runtime down before rebuilding —
+        // its drop joins the fabric workers / stage threads. Teardown
+        // of a panicked runtime may itself panic; that must not kill
+        // the supervisor (the exact silent-death mode it exists to fix)
+        let old = runtime_slot.take();
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || drop(old)));
+        deaths = if dispatched { 1 } else { deaths + 1 };
+        // capped exponential backoff, then rebuild from the shared
+        // artifact. A rebuild failure (including injected load
+        // failures) counts as another death and extends the backoff.
+        loop {
+            if deaths > MAX_CONSECUTIVE_DEATHS {
+                eprintln!(
+                    "warning: replica {} of '{}' retired after {} consecutive deaths (last: {msg})",
+                    h.ri, h.model, deaths
+                );
+                h.sinks.each(|m| m.retired += 1);
+                retired = true;
+                if h.live.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    // last live replica: close the front door so new
+                    // submits fail fast and the drain below answers
+                    // whatever is still queued — graceful total
+                    // degradation instead of a silently hung fleet
+                    h.front.close();
+                }
+                break 'supervise;
+            }
+            let exp = deaths.saturating_sub(1).min(16);
+            let backoff = RESTART_BACKOFF_BASE
+                .saturating_mul(1u32 << exp)
+                .min(RESTART_BACKOFF_CAP);
+            std::thread::sleep(backoff);
+            if h.stop.load(Ordering::SeqCst) {
+                break 'supervise;
+            }
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| build(&mut injector))) {
+                Ok(Ok(built))
+                    if built.0.tokens_per_image == tokens_per_image
+                        && built.0.num_classes == num_classes =>
+                {
+                    runtime_slot = Some(built);
+                    continue 'supervise;
+                }
+                // a rebuild that comes back with different shapes means
+                // the artifact changed underneath us — flap to retirement
+                Ok(Ok(_)) => deaths = MAX_CONSECUTIVE_DEATHS + 1,
+                Ok(Err(_)) | Err(_) => deaths += 1,
+            }
+        }
+    }
+
+    // shutdown drain: runs when the stream actually ended (queue closed
+    // or stop requested) — whatever this replica still holds, plus
+    // whatever it can win from the shared queue, will never run; fail
+    // each request deterministically so no client hangs on `recv`. Pops
+    // are exclusive, so concurrent replica drains never fail one
+    // request twice. A retired replica with live siblings skips the
+    // queue drain (its own requests were already requeued): the queue
+    // still belongs to the survivors.
+    if h.stop.load(Ordering::SeqCst) || h.front.is_closed() {
+        while let Some(r) = h.front.try_pop() {
+            pending.push(r);
+        }
+    }
+    let leftovers: Vec<Request> = inflight.drain(..).chain(pending.drain(..)).collect();
+    if !leftovers.is_empty() {
+        let n = leftovers.len() as u64;
+        h.sinks.each(|m| m.failed += n);
+        for r in leftovers {
+            let _ = r.reply.send(Err(anyhow::anyhow!(
+                "server shut down before request {} was executed",
+                r.id
+            )));
+        }
+    }
+    // a normally-stopping replica is still "live" right up to shutdown;
+    // decrement only so the gauge reads 0 after the fleet is joined.
+    // (Retired replicas already decremented.)
+    if !retired {
+        h.live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn executor_loop(
+    front: &FrontQueue<Request>,
+    executables: &[Box<dyn Executor>],
+    policy: &BatchPolicy,
+    tokens_per_image: usize,
+    num_classes: usize,
+    sinks: &MetricSinks,
+    stop: &AtomicBool,
+    pending: &mut Vec<Request>,
+    inflight: &mut Vec<Request>,
+    injector: &mut Option<FaultInjector>,
+    dispatched: &mut bool,
+) {
     'serve: loop {
         if stop.load(Ordering::SeqCst) {
             break 'serve;
@@ -424,6 +746,31 @@ fn executor_loop(
             }
         }
 
+        // deadline sweep before spending any compute: a request whose
+        // answer-by time has passed gets an explicit DeadlineExceeded
+        // reply now, and never occupies a batch lane
+        let now = Instant::now();
+        if pending.iter().any(|r| r.expired(now)) {
+            let mut keep = Vec::with_capacity(pending.len());
+            let mut doomed = Vec::new();
+            for r in pending.drain(..) {
+                if r.expired(now) {
+                    doomed.push(r);
+                } else {
+                    keep.push(r);
+                }
+            }
+            *pending = keep;
+            let n = doomed.len() as u64;
+            sinks.each(|m| m.expired += n);
+            for r in doomed {
+                let _ = r.reply.send(Err(anyhow::Error::new(DeadlineExceeded { id: r.id })));
+            }
+            if pending.is_empty() {
+                continue 'serve;
+            }
+        }
+
         let head_waited = pending[0].enqueued.elapsed();
         let Some(batch) = policy.decide(pending.len(), head_waited) else {
             // a partial batch is waiting out `max_wait`: block for exactly
@@ -444,19 +791,33 @@ fn executor_loop(
 
         // the queue may be smaller than the chosen variant (head-of-line
         // timeout with a sparse queue): pad the missing lanes with zeros
-        // and discard their outputs
+        // and discard their outputs. The dispatch batch moves to the
+        // supervisor-owned `inflight` so a panic below can requeue it.
         let take = batch.min(pending.len());
-        let reqs: Vec<Request> = pending.drain(..take).collect();
+        inflight.extend(pending.drain(..take));
         let mut input = vec![0.0f32; batch * tokens_per_image];
-        for (i, r) in reqs.iter().enumerate() {
+        for (i, r) in inflight.iter().enumerate() {
             input[i * tokens_per_image..(i + 1) * tokens_per_image].copy_from_slice(&r.tokens);
         }
         // per-image attribution divides by the number of REAL images in
         // the dispatch, not the variant width: zero-padded lanes are
         // serving overhead, and dividing by `batch` understated both the
         // queue wait and the execution cost whenever lanes were padded
-        let queue_ms = reqs.iter().map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3).sum::<f64>()
-            / reqs.len() as f64;
+        let queue_ms = inflight
+            .iter()
+            .map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3)
+            .sum::<f64>()
+            / inflight.len() as f64;
+        // fault injection point (off ⇒ `injector` is None ⇒ zero cost):
+        // a Panic here simulates the replica dying mid-dispatch with the
+        // batch in flight; a Stall simulates a wedged/slow stage
+        if let Some(inj) = injector.as_mut() {
+            match inj.dispatch_fault() {
+                Some(Fault::Panic) => panic!("injected replica panic (faults harness)"),
+                Some(Fault::Stall(d)) => std::thread::sleep(d),
+                None => {}
+            }
+        }
         let t0 = Instant::now();
         let out = match exe.run_f32(&input) {
             Ok(o) => o,
@@ -465,26 +826,30 @@ fn executor_loop(
                 // dropping their senders (which left clients hanging on
                 // `recv` until an opaque "reply lost")
                 let msg = format!("{e:#}");
-                let n = reqs.len() as u64;
+                let n = inflight.len() as u64;
                 sinks.each(|m| m.failed += n);
-                for r in reqs {
+                for r in inflight.drain(..) {
                     let _ = r.reply.send(Err(anyhow::anyhow!(
                         "executor error running request {}: {msg}",
                         r.id
                     )));
                 }
+                // an error reply still *completed* a dispatch: the
+                // runtime made progress, so it counts against flapping
+                // exactly like a success does
+                *dispatched = true;
                 continue;
             }
         };
         let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let per_image_exec_ms = exec_ms / reqs.len() as f64;
+        let per_image_exec_ms = exec_ms / inflight.len() as f64;
 
         {
             // snapshot the latencies once so rollup and replica sinks
             // record identical values
             let finished = Instant::now();
             let lats: Vec<std::time::Duration> =
-                reqs.iter().map(|r| r.enqueued.elapsed()).collect();
+                inflight.iter().map(|r| r.enqueued.elapsed()).collect();
             sinks.each(|m| {
                 // replicas race on the rollup: keep the EARLIEST start
                 // and the LATEST finish, not first/last-writer-wins —
@@ -503,12 +868,15 @@ fn executor_loop(
                 }
             });
         }
-        for (i, r) in reqs.into_iter().enumerate() {
+        for (i, r) in inflight.drain(..).enumerate() {
             let logits = out[i * num_classes..(i + 1) * num_classes].to_vec();
+            // total_cmp, not partial_cmp().unwrap(): a NaN logit (e.g. a
+            // backend numerics bug) must misclassify one image, not
+            // panic the replica thread
             let argmax = logits
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(j, _)| j)
                 .unwrap_or(0);
             let _ = r.reply.send(Ok(Response {
@@ -518,26 +886,12 @@ fn executor_loop(
                 latency: r.enqueued.elapsed(),
             }));
         }
+        // a completed dispatch proves the rebuilt runtime works: the
+        // supervisor resets its consecutive-death count on this
+        *dispatched = true;
     }
-
-    // shutdown drain: whatever this replica still holds — plus whatever
-    // it can win from the shared queue — will never run; fail each
-    // request deterministically so no client hangs on `recv`. Pops are
-    // exclusive, so concurrent replica drains never fail one request
-    // twice.
-    while let Some(r) = front.try_pop() {
-        pending.push(r);
-    }
-    if !pending.is_empty() {
-        let n = pending.len() as u64;
-        sinks.each(|m| m.failed += n);
-        for r in pending {
-            let _ = r.reply.send(Err(anyhow::anyhow!(
-                "server shut down before request {} was executed",
-                r.id
-            )));
-        }
-    }
+    // the shutdown drain lives in `replica_supervisor`, which owns
+    // `pending`/`inflight` across panics
 }
 
 /// One model's slot in the [`Router`]'s zoo: the live server fleet,
@@ -660,6 +1014,18 @@ impl Router {
         tokens: Vec<f32>,
     ) -> crate::Result<Receiver<crate::Result<Response>>> {
         self.routed(model)?.submit(tokens)
+    }
+
+    /// [`Self::submit`] with an answer-by budget (see
+    /// [`ModelServer::submit_with_deadline`] for the `Overloaded` /
+    /// `DeadlineExceeded` semantics).
+    pub fn submit_with_deadline(
+        &self,
+        model: &str,
+        tokens: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> crate::Result<Receiver<crate::Result<Response>>> {
+        self.routed(model)?.submit_with_deadline(tokens, deadline)
     }
 
     /// Route a whole image set to `model`'s server and wait for replies.

@@ -14,6 +14,16 @@
 //! (handing the item back), but queued items keep draining — a popper
 //! observes [`Pop::Closed`] only once the queue is *empty*, so shutdown
 //! never strands an accepted request inside the queue.
+//!
+//! The queue can optionally be **bounded** ([`FrontQueue::bounded`]):
+//! a push against a full queue is rejected with
+//! [`Rejected::Overloaded`], handing the item back so the front door
+//! can shed load explicitly instead of queueing doomed work without
+//! limit. [`FrontQueue::requeue`] exists for the supervision path: it
+//! returns a request a dead replica had already *accepted* to the front
+//! of the line, and is therefore exempt from the capacity bound (the
+//! item was admitted once; shedding it on retry would turn a replica
+//! fault into spurious client-visible overload).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -30,16 +40,36 @@ pub enum Pop<T> {
     Closed,
 }
 
+/// Why a push was refused. The item is always handed back so the caller
+/// can answer the request explicitly instead of dropping it silently.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Rejected<T> {
+    /// The queue is closed (the server is shutting down).
+    Closed(T),
+    /// The queue is at its capacity bound (the server is overloaded).
+    Overloaded(T),
+}
+
+impl<T> Rejected<T> {
+    /// Recover the rejected item regardless of the reason.
+    pub fn into_inner(self) -> T {
+        match self {
+            Rejected::Closed(t) | Rejected::Overloaded(t) => t,
+        }
+    }
+}
+
 struct State<T> {
     items: VecDeque<T>,
     closed: bool,
 }
 
-/// An unbounded MPMC FIFO shared between one front door and N executor
-/// replicas (share it via `Arc`).
+/// An MPMC FIFO shared between one front door and N executor replicas
+/// (share it via `Arc`), unbounded by default.
 pub struct FrontQueue<T> {
     state: Mutex<State<T>>,
     available: Condvar,
+    capacity: Option<usize>,
 }
 
 impl<T> Default for FrontQueue<T> {
@@ -50,22 +80,56 @@ impl<T> Default for FrontQueue<T> {
 
 impl<T> FrontQueue<T> {
     pub fn new() -> Self {
+        Self::with_capacity(None)
+    }
+
+    /// A queue that rejects pushes beyond `capacity` queued items.
+    pub fn bounded(capacity: usize) -> Self {
+        Self::with_capacity(Some(capacity))
+    }
+
+    /// `None` = unbounded.
+    pub fn with_capacity(capacity: Option<usize>) -> Self {
         Self {
             state: Mutex::new(State { items: VecDeque::new(), closed: false }),
             available: Condvar::new(),
+            capacity,
         }
     }
 
-    /// Enqueue `t`, waking one parked popper. `Err(t)` once the queue is
-    /// closed (the server is shutting down) — the item is handed back so
-    /// the caller can reply with an explicit error instead of dropping
-    /// the request silently.
-    pub fn push(&self, t: T) -> Result<(), T> {
+    /// The capacity bound, if any.
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Enqueue `t`, waking one parked popper. Rejected (item handed
+    /// back) once the queue is closed or, for a bounded queue, full.
+    pub fn push(&self, t: T) -> Result<(), Rejected<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(Rejected::Closed(t));
+        }
+        if let Some(cap) = self.capacity {
+            if st.items.len() >= cap {
+                return Err(Rejected::Overloaded(t));
+            }
+        }
+        st.items.push_back(t);
+        drop(st);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Return an already-accepted item to the **front** of the queue
+    /// (it was admitted before its replica died, so it keeps its place
+    /// in line and is exempt from the capacity bound). `Err(t)` only if
+    /// the queue is closed.
+    pub fn requeue(&self, t: T) -> Result<(), T> {
         let mut st = self.state.lock().unwrap();
         if st.closed {
             return Err(t);
         }
-        st.items.push_back(t);
+        st.items.push_front(t);
         drop(st);
         self.available.notify_one();
         Ok(())
@@ -107,6 +171,12 @@ impl<T> FrontQueue<T> {
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.available.notify_all();
+    }
+
+    /// Whether [`FrontQueue::close`] has been called (items may still
+    /// be draining).
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
     }
 
     /// Items currently queued (snapshot; racy by nature).
@@ -151,11 +221,44 @@ mod tests {
         q.push(1u8).unwrap();
         q.push(2).unwrap();
         q.close();
-        assert_eq!(q.push(3), Err(3), "push after close hands the item back");
+        assert!(q.is_closed());
+        assert_eq!(q.push(3), Err(Rejected::Closed(3)), "push after close hands the item back");
         assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(1));
         assert_eq!(q.try_pop(), Some(2), "queued items drain after close");
         assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed);
         assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed, "Closed is sticky");
+    }
+
+    #[test]
+    fn bounded_queue_sheds_at_capacity_and_frees_on_pop() {
+        let q = FrontQueue::bounded(2);
+        assert_eq!(q.capacity(), Some(2));
+        q.push(1u8).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(Rejected::Overloaded(3)), "full queue sheds, hands item back");
+        assert_eq!(q.try_pop(), Some(1));
+        q.push(3).unwrap();
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        // closed beats overloaded: shutdown is reported as such even when full
+        q.push(4).unwrap();
+        q.push(5).unwrap();
+        q.close();
+        assert_eq!(q.push(6), Err(Rejected::Closed(6)));
+    }
+
+    #[test]
+    fn requeue_goes_to_the_front_and_ignores_capacity() {
+        let q = FrontQueue::bounded(2);
+        q.push(1u8).unwrap();
+        q.push(2).unwrap();
+        // an accepted item coming back from a dead replica is never shed
+        q.requeue(0).unwrap();
+        assert_eq!(q.len(), 3, "requeue may exceed the bound");
+        assert_eq!(q.try_pop(), Some(0), "requeued item keeps its place at the head");
+        assert_eq!(q.try_pop(), Some(1));
+        q.close();
+        assert_eq!(q.requeue(9), Err(9), "requeue after close hands the item back");
     }
 
     #[test]
@@ -206,5 +309,67 @@ mod tests {
         let mut all: Vec<usize> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..n).collect::<Vec<_>>(), "each item exactly once, none lost");
+    }
+
+    #[test]
+    fn close_while_popping_never_loses_or_duplicates() {
+        // Race close() against concurrent pushers and poppers: every item
+        // must end up either (a) rejected at push (handed back to its
+        // pusher) or (b) delivered to exactly one popper — never both,
+        // never neither. Repeated so the close lands at different phases.
+        for round in 0..16u64 {
+            let q: Arc<FrontQueue<u64>> = Arc::new(FrontQueue::new());
+            let pushers = 3u64;
+            let poppers = 3usize;
+            let per_pusher = 400u64;
+            let mut push_handles = Vec::new();
+            for p in 0..pushers {
+                let q = q.clone();
+                push_handles.push(std::thread::spawn(move || {
+                    let mut accepted = Vec::new();
+                    for i in 0..per_pusher {
+                        let tag = p * 10_000 + i;
+                        match q.push(tag) {
+                            Ok(()) => accepted.push(tag),
+                            // closed: the item came back to us, stop pushing
+                            Err(Rejected::Closed(t)) => {
+                                assert_eq!(t, tag);
+                                break;
+                            }
+                            Err(Rejected::Overloaded(_)) => unreachable!("unbounded queue"),
+                        }
+                    }
+                    accepted
+                }));
+            }
+            let mut pop_handles = Vec::new();
+            for _ in 0..poppers {
+                let q = q.clone();
+                pop_handles.push(std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop_timeout(Duration::from_secs(10)) {
+                            Pop::Item(v) => got.push(v),
+                            Pop::Closed => return got,
+                            Pop::TimedOut => panic!("queue closes, never times out here"),
+                        }
+                    }
+                }));
+            }
+            // close mid-stream at a round-dependent instant
+            std::thread::sleep(Duration::from_micros(50 * round));
+            q.close();
+            let mut accepted: Vec<u64> =
+                push_handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            let mut delivered: Vec<u64> =
+                pop_handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            accepted.sort_unstable();
+            delivered.sort_unstable();
+            assert_eq!(
+                delivered, accepted,
+                "round {round}: accepted and delivered sets must match exactly"
+            );
+            assert!(q.is_empty(), "round {round}: nothing may remain queued after Closed");
+        }
     }
 }

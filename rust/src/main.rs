@@ -13,7 +13,8 @@ use std::path::PathBuf;
 
 use hgpipe::arch::parallelism::design_network;
 use hgpipe::artifacts::Manifest;
-use hgpipe::coordinator::{ModelServer, Router};
+use hgpipe::coordinator::faults::FaultPlan;
+use hgpipe::coordinator::{ModelServer, Overloaded, Router};
 use hgpipe::model::{Precision, ViTConfig};
 use hgpipe::runtime::kernels::KernelPref;
 use hgpipe::runtime::{pipeline, BackendKind, ExecMode, RuntimeConfig};
@@ -115,6 +116,23 @@ impl Args {
             None => None,
             Some(v) => Some(KernelPref::parse(v)?),
         };
+        let queue_cap = match self.flags.get("queue-cap") {
+            None => None,
+            Some(v) => {
+                let n: usize = v.parse().map_err(|_| {
+                    anyhow::anyhow!("--queue-cap expects a positive integer, got '{v}'")
+                })?;
+                anyhow::ensure!(n >= 1, "--queue-cap must be at least 1 (omit it for unbounded)");
+                Some(n)
+            }
+        };
+        let faults = match self.flags.get("faults") {
+            None => None,
+            Some(v) => Some(
+                FaultPlan::parse(v)
+                    .map_err(|e| anyhow::anyhow!("--faults '{v}' is not a fault spec: {e}"))?,
+            ),
+        };
         let backend = self.backend()?;
         let mode = if let Some(v) = self.flags.get("pipeline") {
             // boolean flag: the parser would otherwise swallow a stray
@@ -155,7 +173,9 @@ impl Args {
             .with_lanes(lanes)
             .with_mode(mode)
             .with_replicas(replicas)
-            .with_kernels(kernels))
+            .with_kernels(kernels)
+            .with_queue_capacity(queue_cap)
+            .with_faults(faults))
     }
 }
 
@@ -209,6 +229,7 @@ COMMANDS:
                            [--backend interpreter|pjrt] [--lanes N]
                            [--replicas N] [--kernels scalar|avx2|neon|auto]
                            [--pipeline [--stages N] [--queue-depth N]]
+                           [--queue-cap N] [--deadline-ms N] [--faults SPEC]
   eval                     eval-batch accuracy of a quantized model
                            [--model tiny-synth] [--artifacts DIR]
                            [--backend interpreter|pjrt] [--lanes N]
@@ -236,6 +257,18 @@ default auto-detects avx2/neon, falling back to scalar); naming a
 backend the host cannot run is an error. Results are bit-identical at
 every lane count, stage count, queue depth, replica count and kernel
 backend.
+
+Overload & fault flags (serve): `--queue-cap N` bounds the front queue
+— at capacity, submits are rejected with a typed Overloaded error and
+counted as shed (env fallback: HGPIPE_QUEUE_CAP; unset = unbounded).
+`--deadline-ms N` attaches an answer-by deadline to every synthetic
+request; a request still queued past its deadline is answered
+DeadlineExceeded without computing the forward pass. `--faults SPEC`
+enables the deterministic fault-injection harness
+(panic:RATE,stall:RATE[:MS],load:RATE,seed:N — env fallback:
+HGPIPE_FAULTS): injected replica panics are survived by supervised
+restart, requeueing the replica's accepted requests so every accepted
+request still gets exactly one reply.
 ";
 
 fn cmd_report(args: &Args) -> Result<()> {
@@ -354,6 +387,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let config = args.runtime_config()?;
     let requests: usize = args.flag("requests", "64").parse()?;
     let rate: f64 = args.flag("rate", "0").parse()?; // 0 = closed loop
+    let deadline_ms: u64 = args.flag("deadline-ms", "0").parse()?; // 0 = no deadline
+    let deadline = (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
     let manifest = Manifest::load(&dir)?;
     // `--models a,b` fronts several per-model servers with one router;
     // `--model` (the default) is the single-model special case of it
@@ -396,6 +431,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 s.replicas()
             );
         }
+        if let Some(cap) = s.queue_capacity() {
+            println!("  admission: bounded front queue, capacity {cap} (overload sheds)");
+        }
+    }
+    if let Some(plan) = config.resolve_faults() {
+        println!(
+            "fault injection ON (seed {}): panic {:.1}%, stall {:.1}% x{}ms, load-fail {:.1}%",
+            plan.seed,
+            plan.panic_rate * 100.0,
+            plan.stall_rate * 100.0,
+            plan.stall_ms,
+            plan.load_fail_rate * 100.0
+        );
     }
 
     let mut rng = Prng::new(7);
@@ -417,7 +465,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         t0 = std::time::Instant::now();
         for i in 0..requests {
             let model: &str = &models[i % models.len()];
-            rxs.push(router.submit(model, mk_image(&mut rng, n_toks[i % models.len()]))?);
+            let image = mk_image(&mut rng, n_toks[i % models.len()]);
+            match router.submit_with_deadline(model, image, deadline) {
+                Ok(rx) => rxs.push(rx),
+                // open loop under a bounded queue: shed is the expected
+                // overload response, reported via metrics, not an abort
+                Err(e) if e.downcast_ref::<Overloaded>().is_some() => {}
+                Err(e) => return Err(e),
+            }
             let gap = rng.exp(1.0 / rate);
             std::thread::sleep(std::time::Duration::from_secs_f64(gap));
         }
@@ -432,13 +487,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .collect();
         t0 = std::time::Instant::now();
         for (model, image) in traffic {
-            rxs.push(router.submit(model, image)?);
+            rxs.push(router.submit_with_deadline(model, image, deadline)?);
         }
     }
     let mut answered = 0usize;
     for rx in rxs {
         match rx.recv() {
             Ok(Ok(_)) => answered += 1,
+            // an expired deadline is the requested overload behavior,
+            // not a serving failure — count it via metrics instead
+            Ok(Err(e)) if e.downcast_ref::<hgpipe::coordinator::DeadlineExceeded>().is_some() => {}
             // closed loop propagates failures (as `infer_all` did); the
             // open loop tolerates stragglers and reports via metrics
             Ok(Err(e)) if rate <= 0.0 => return Err(e),

@@ -159,11 +159,29 @@ pub struct RuntimeConfig {
     /// preference that names a backend this host cannot run is a load
     /// **error**, never a silent downgrade.
     pub kernels: Option<kernels::KernelPref>,
+    /// Bounded admission for the serving front queue (`--queue-cap`):
+    /// at this many queued requests, submits are rejected with a typed
+    /// `Overloaded` error instead of queueing without limit. `None`
+    /// defers to the `HGPIPE_QUEUE_CAP` read-only env fallback, then
+    /// unbounded (the pre-fault-tolerance behavior).
+    pub queue_capacity: Option<usize>,
+    /// Deterministic fault-injection plan (`--faults`). `None` defers
+    /// to the `HGPIPE_FAULTS` read-only env fallback, then no
+    /// injection — the serving hot path carries no injector at all.
+    pub faults: Option<crate::coordinator::faults::FaultPlan>,
 }
 
 impl RuntimeConfig {
     pub fn new(backend: BackendKind) -> Self {
-        Self { backend, lanes: None, mode: ExecMode::Auto, replicas: None, kernels: None }
+        Self {
+            backend,
+            lanes: None,
+            mode: ExecMode::Auto,
+            replicas: None,
+            kernels: None,
+            queue_capacity: None,
+            faults: None,
+        }
     }
 
     /// Set (or clear) the explicit lane count.
@@ -207,6 +225,59 @@ impl RuntimeConfig {
         match self.kernels {
             Some(pref) => kernels::select(pref),
             None => Ok(kernels::from_env()),
+        }
+    }
+
+    /// Set (or clear) the explicit front-queue admission bound (beats
+    /// `HGPIPE_QUEUE_CAP`). A value of 0 means unbounded.
+    pub fn with_queue_capacity(mut self, capacity: Option<usize>) -> Self {
+        self.queue_capacity = capacity;
+        self
+    }
+
+    /// The front-queue bound this config resolves to: the explicit
+    /// value wins, else the `HGPIPE_QUEUE_CAP` env fallback, else
+    /// unbounded. A 0 from either source means unbounded.
+    pub fn resolve_queue_capacity(&self) -> Option<usize> {
+        self.queue_capacity
+            .or_else(Self::queue_capacity_from_env)
+            .filter(|&cap| cap > 0)
+    }
+
+    /// Set (or clear) the explicit fault-injection plan (beats
+    /// `HGPIPE_FAULTS`).
+    pub fn with_faults(mut self, faults: Option<crate::coordinator::faults::FaultPlan>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// The fault plan this config resolves to: the explicit plan wins,
+    /// else the `HGPIPE_FAULTS` env fallback, else none. A plan whose
+    /// rates are all zero resolves to none, keeping the serving hot
+    /// path injector-free.
+    pub fn resolve_faults(&self) -> Option<crate::coordinator::faults::FaultPlan> {
+        self.faults
+            .or_else(crate::coordinator::faults::FaultPlan::from_env)
+            .filter(|p| !p.is_off())
+    }
+
+    /// The `HGPIPE_QUEUE_CAP` read-only env fallback (mirrors the other
+    /// `HGPIPE_*` vars: nothing in this crate mutates it). Unset means
+    /// unbounded admission; an unparseable value warns rather than
+    /// silently shedding load.
+    pub fn queue_capacity_from_env() -> Option<usize> {
+        match std::env::var("HGPIPE_QUEUE_CAP") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) => Some(n),
+                Err(_) => {
+                    eprintln!(
+                        "warning: HGPIPE_QUEUE_CAP='{v}' is not a queue capacity; \
+                         leaving the queue unbounded"
+                    );
+                    None
+                }
+            },
+            Err(_) => None,
         }
     }
 

@@ -5,8 +5,8 @@
 //! Two independent checks:
 //!
 //! * [`schema_errors`] — the bench artifact must contain every field the
-//!   README documents (including the `scale_out`, `kernels` and `memory`
-//!   sections), so the schema
+//!   README documents (including the `scale_out`, `kernels`, `faults`
+//!   and `memory` sections), so the schema
 //!   cannot silently drift away from the docs: the bench emits its JSON
 //!   by hand (no serde offline), and a renamed or dropped key would
 //!   otherwise only be noticed by whoever next reads the artifact.
@@ -86,6 +86,11 @@ const REQUIRED_PATHS: &[&str] = &[
     "kernels.per_op_simd_ms_per_image.attention",
     "kernels.per_op_simd_ms_per_image.layernorm",
     "kernels.per_op_simd_ms_per_image.requant",
+    "faults.enabled",
+    "faults.restarts",
+    "faults.retried",
+    "faults.shed",
+    "faults.expired",
     "memory.artifact_footprint_bytes",
     "memory.replicas",
     "memory.unshared_bytes",
@@ -256,6 +261,7 @@ mod tests {
     "per_op_simd_ms_per_image": {"quantize": 0.1, "gemm": 1.0, "layernorm": 0.2,
                                  "attention": 0.4, "requant": 0.0, "head": 0.1}
   },
+  "faults": {"enabled": false, "restarts": 0, "retried": 0, "shed": 0, "expired": 0},
   "memory": {"artifact_footprint_bytes": 1048576, "replicas": 4,
              "unshared_bytes": 4194304, "shared_bytes": 1048576,
              "savings_ratio": 4.0, "artifact_refs": 9},
@@ -303,6 +309,19 @@ mod tests {
         assert!(
             errs.iter().any(|e| e.contains("kernels.detected")),
             "kernels omission must be caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_faults_section_is_reported() {
+        let mut doc = sample();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("faults");
+        }
+        let errs = schema_errors(&doc);
+        assert!(
+            errs.iter().any(|e| e.contains("faults.restarts")),
+            "faults omission must be caught: {errs:?}"
         );
     }
 

@@ -1,0 +1,316 @@
+//! Fault-tolerance acceptance suite against the golden fixture:
+//! supervised replica restarts, deadline-aware bounded admission, and
+//! graceful total degradation, all driven by the deterministic
+//! fault-injection harness (`RuntimeConfig::with_faults` /
+//! `HGPIPE_FAULTS`).
+//!
+//! 1. **chaos** — with seeded replica panics injected at a 10% dispatch
+//!    rate under a 256-request load, every accepted request still gets
+//!    exactly one bit-exact reply, in both execution modes and at 1/2/4
+//!    replicas, and the fleet is back to full strength afterwards;
+//! 2. **admission** — a bounded front queue sheds with a downcastable
+//!    `Overloaded` error instead of queueing unboundedly, and every
+//!    request it *did* accept completes;
+//! 3. **deadlines** — an expired request is answered with
+//!    `DeadlineExceeded` at pop time without ever spending a forward
+//!    pass on it;
+//! 4. **degradation** — a fleet whose replicas all flap to retirement
+//!    fails outstanding requests explicitly (nobody hangs on `recv`)
+//!    and closes the front door;
+//! 5. **atomic startup** — injected artifact-load failures surface as a
+//!    `start_with_config` error without leaking threads.
+//!
+//! Tests serialize on a lock: `pipeline::live_stages` and
+//! `LanePool::live_workers` are process-wide counters, and concurrent
+//! replica-creating tests would make their baseline assertions racy.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::faults::FaultPlan;
+use hgpipe::coordinator::{DeadlineExceeded, ModelServer, Overloaded};
+use hgpipe::runtime::fabric::LanePool;
+use hgpipe::runtime::interpreter::QuantViT;
+use hgpipe::runtime::{pipeline, BackendKind, ExecMode, RuntimeConfig};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&fixture_dir()).expect("committed golden fixture")
+}
+
+fn golden() -> (Arc<QuantViT>, Vec<f32>, Vec<f64>) {
+    let dir = fixture_dir();
+    let net = Arc::new(QuantViT::load(&dir.join("tinyvit_bundle.json")).expect("bundle loads"));
+    let tokens = std::fs::read(dir.join("golden_tokens.bin"))
+        .unwrap()
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let logits = std::fs::read(dir.join("golden_logits.bin"))
+        .unwrap()
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    (net, tokens, logits)
+}
+
+/// Injected panics are *expected* here; the default hook would spray a
+/// backtrace per restart. Filter exactly those, keep the hook's real
+/// output for anything else (a genuine bug must stay loud).
+fn silence_injected_panics() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .is_some_and(|m| m.contains("faults harness"));
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[test]
+fn injected_panics_never_lose_a_request_in_either_mode() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    silence_injected_panics();
+    let manifest = manifest();
+    let (net, tokens, expected) = golden();
+    let per = net.tokens_per_image();
+    let nc = net.num_classes;
+    let stage_baseline = pipeline::live_stages();
+    let worker_baseline = LanePool::live_workers();
+    let n = 256usize;
+    let plan = FaultPlan { panic_rate: 0.1, seed: 42, ..FaultPlan::default() };
+    let mut total_restarts = 0u64;
+    for &replicas in &[1usize, 2, 4] {
+        for mode in [ExecMode::LaneParallel, ExecMode::Pipeline { stages: 0, queue_depth: 2 }] {
+            let config = RuntimeConfig::new(BackendKind::Interpreter)
+                .with_lanes(Some(2))
+                .with_mode(mode)
+                .with_replicas(Some(replicas))
+                .with_faults(Some(plan));
+            let server = ModelServer::start_with_config(&manifest, "tiny-synth", 2, config)
+                .unwrap_or_else(|e| panic!("start {replicas} replicas / {mode:?}: {e:#}"));
+            let rxs: Vec<_> = (0..n)
+                .map(|i| server.submit(tokens[(i % 16) * per..(i % 16 + 1) * per].to_vec()))
+                .collect::<Result<_, _>>()
+                .expect("all submits accepted (unbounded queue)");
+            // exactly-once with the correct bits: a request requeued by
+            // a dying replica re-runs the same pure forward pass, so a
+            // retry is indistinguishable from a first attempt
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let reply = rx
+                    .recv()
+                    .unwrap_or_else(|_| panic!("request {i}: reply sender dropped"))
+                    .unwrap_or_else(|e| panic!("request {i} failed under chaos: {e:#}"));
+                for (k, (&g, &w)) in reply
+                    .logits
+                    .iter()
+                    .zip(&expected[(i % 16) * nc..(i % 16 + 1) * nc])
+                    .enumerate()
+                {
+                    assert_eq!(
+                        g.to_bits(),
+                        (w as f32).to_bits(),
+                        "{replicas} replicas / {mode:?}: image {i} logit {k}"
+                    );
+                }
+            }
+            let rollup = server.metrics.lock().unwrap().clone();
+            assert_eq!(rollup.count(), n, "{replicas} replicas / {mode:?}");
+            assert_eq!(rollup.failed, 0, "{replicas} replicas / {mode:?}");
+            // a 10% per-dispatch panic rate cannot retire anyone (that
+            // takes 7 consecutive deaths): the fleet ends at strength
+            assert_eq!(server.live_replicas(), replicas, "{replicas} replicas / {mode:?}");
+            assert_eq!(rollup.retired, 0, "{replicas} replicas / {mode:?}");
+            total_restarts += rollup.restarts;
+            drop(server);
+        }
+    }
+    assert!(total_restarts > 0, "the harness must actually have killed replicas");
+    assert_eq!(pipeline::live_stages(), stage_baseline, "stage threads leaked past restarts");
+    assert_eq!(LanePool::live_workers(), worker_baseline, "fabric workers leaked past restarts");
+}
+
+#[test]
+fn bounded_queue_sheds_overload_with_a_downcastable_error() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let (net, tokens, _) = golden();
+    let per = net.tokens_per_image();
+    // one replica wedged by a 100%-rate stall holds the queue full long
+    // enough to observe deterministic shedding
+    let plan = FaultPlan { stall_rate: 1.0, stall_ms: 300, seed: 7, ..FaultPlan::default() };
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(1))
+        .with_replicas(Some(1))
+        .with_queue_capacity(Some(2))
+        .with_faults(Some(plan));
+    let server = ModelServer::start_with_config(&manifest, "tiny-synth", 0, config).unwrap();
+    assert_eq!(server.queue_capacity(), Some(2));
+    let first = server.submit(tokens[..per].to_vec()).expect("empty queue admits");
+    // wait for the replica to pop it (the stall begins right after),
+    // then give it a beat to get past its batch top-up
+    let t0 = std::time::Instant::now();
+    while server.queue_len() != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "replica never picked up request");
+        std::thread::yield_now();
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let second = server.submit(tokens[..per].to_vec()).expect("capacity 2: slot 1");
+    let third = server.submit(tokens[per..2 * per].to_vec()).expect("capacity 2: slot 2");
+    let err = server
+        .submit(tokens[..per].to_vec())
+        .expect_err("queue at capacity must shed, not grow");
+    assert_eq!(err.downcast_ref::<Overloaded>(), Some(&Overloaded { capacity: 2 }));
+    assert_eq!(server.metrics.lock().unwrap().shed, 1);
+    // pushback is about *admission*, never about accepted work: all
+    // three admitted requests complete once the stalls drain
+    for (name, rx) in [("first", first), ("second", second), ("third", third)] {
+        rx.recv()
+            .unwrap_or_else(|_| panic!("{name}: reply sender dropped"))
+            .unwrap_or_else(|e| panic!("{name} failed: {e:#}"));
+    }
+    assert_eq!(server.metrics.lock().unwrap().count(), 3);
+}
+
+#[test]
+fn expired_deadlines_are_answered_without_a_forward_pass() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let (net, tokens, _) = golden();
+    let per = net.tokens_per_image();
+    let config =
+        RuntimeConfig::new(BackendKind::Interpreter).with_lanes(Some(1)).with_replicas(Some(1));
+    let server = ModelServer::start_with_config(&manifest, "tiny-synth", 0, config).unwrap();
+    // a zero budget is expired the instant a replica pops it
+    let rxs: Vec<_> = (0..4usize)
+        .map(|_| {
+            server.submit_with_deadline(tokens[..per].to_vec(), Some(Duration::ZERO)).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx.recv().unwrap_or_else(|_| panic!("request {i}: reply sender dropped"));
+        let err = reply.expect_err("zero deadline cannot be met");
+        assert!(
+            err.downcast_ref::<DeadlineExceeded>().is_some(),
+            "request {i}: expected DeadlineExceeded, got: {err:#}"
+        );
+    }
+    {
+        let m = server.metrics.lock().unwrap();
+        assert_eq!(m.expired, 4);
+        assert_eq!(m.count(), 0, "expired requests are not latency samples");
+        assert!(m.exec_ms_total == 0.0, "no forward pass may have run");
+    }
+    // expiry is per-request: live work sharing the queue still computes
+    let live = server.submit(tokens[..per].to_vec()).unwrap();
+    let doomed =
+        server.submit_with_deadline(tokens[per..2 * per].to_vec(), Some(Duration::ZERO)).unwrap();
+    live.recv().unwrap().expect("undeadlined request completes");
+    assert!(doomed.recv().unwrap().is_err());
+    let m = server.metrics.lock().unwrap();
+    assert_eq!(m.expired, 5);
+    assert_eq!(m.count(), 1);
+}
+
+#[test]
+fn flapping_fleet_retires_gracefully_and_fails_requests_explicitly() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    silence_injected_panics();
+    let manifest = manifest();
+    let (net, tokens, _) = golden();
+    let per = net.tokens_per_image();
+    let worker_baseline = LanePool::live_workers();
+    // every dispatch panics: no replica can ever complete a request, so
+    // both flap through 7 consecutive deaths to retirement
+    let plan = FaultPlan { panic_rate: 1.0, seed: 11, ..FaultPlan::default() };
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(1))
+        .with_replicas(Some(2))
+        .with_faults(Some(plan));
+    let server = ModelServer::start_with_config(&manifest, "tiny-synth", 0, config).unwrap();
+    assert_eq!(server.live_replicas(), 2);
+    let n = 6usize;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(tokens[(i % 16) * per..(i % 16 + 1) * per].to_vec()).unwrap())
+        .collect();
+    // nobody hangs: once the last replica retires it closes the front
+    // door and fails whatever is still queued, explicitly
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx.recv().unwrap_or_else(|_| panic!("request {i}: reply sender dropped"));
+        assert!(reply.is_err(), "request {i} cannot have computed (all dispatches panic)");
+    }
+    assert_eq!(server.live_replicas(), 0, "the whole fleet must have retired");
+    {
+        let m = server.metrics.lock().unwrap();
+        assert_eq!(m.retired, 2);
+        // each replica dies exactly MAX_CONSECUTIVE_DEATHS + 1 times
+        // before retiring, and every death was a supervised restart
+        assert_eq!(m.restarts, 14);
+        assert_eq!(m.failed, n as u64);
+        assert!(m.retried > 0, "dying replicas must have requeued their batches");
+    }
+    // the front door is closed: new work is refused, fast
+    let err = server.submit(tokens[..per].to_vec()).expect_err("retired fleet accepts nothing");
+    assert!(err.to_string().contains("server stopped"), "got: {err:#}");
+    drop(server);
+    assert_eq!(LanePool::live_workers(), worker_baseline, "retired fleets must join workers");
+}
+
+#[test]
+fn injected_load_failures_fail_startup_atomically() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let manifest = manifest();
+    let stage_baseline = pipeline::live_stages();
+    let worker_baseline = LanePool::live_workers();
+    let plan = FaultPlan { load_fail_rate: 1.0, seed: 3, ..FaultPlan::default() };
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_replicas(Some(3))
+        .with_faults(Some(plan));
+    let err = ModelServer::start_with_config(&manifest, "tiny-synth", 2, config)
+        .expect_err("every replica's artifact load is injected to fail");
+    assert!(format!("{err:#}").contains("injected artifact-load failure"), "got: {err:#}");
+    assert_eq!(pipeline::live_stages(), stage_baseline, "failed startup leaked stage threads");
+    assert_eq!(LanePool::live_workers(), worker_baseline, "failed startup leaked workers");
+}
+
+#[test]
+fn fault_and_capacity_config_resolution() {
+    // resolution only (no server): explicit config beats the env
+    // fallback, and an all-zero plan resolves to "off"
+    let plan = FaultPlan { panic_rate: 0.5, ..FaultPlan::default() };
+    let config = RuntimeConfig::new(BackendKind::Interpreter).with_faults(Some(plan));
+    assert_eq!(config.resolve_faults(), Some(plan));
+    assert_eq!(
+        RuntimeConfig::new(BackendKind::Interpreter)
+            .with_faults(Some(FaultPlan::default()))
+            .resolve_faults(),
+        None,
+        "an all-zero-rate plan is OFF, not an active injector"
+    );
+    assert_eq!(
+        RuntimeConfig::new(BackendKind::Interpreter)
+            .with_queue_capacity(Some(8))
+            .resolve_queue_capacity(),
+        Some(8)
+    );
+    assert_eq!(
+        RuntimeConfig::new(BackendKind::Interpreter)
+            .with_queue_capacity(Some(0))
+            .resolve_queue_capacity(),
+        None,
+        "zero capacity means unbounded, not a queue that rejects everything"
+    );
+}

@@ -19,7 +19,7 @@ fn prop_batcher_never_exceeds_queue_or_variants() {
             (0..rng.range_i64(1, 4)).map(|_| rng.range_i64(1, 32) as usize).collect();
         variants.sort_unstable();
         variants.dedup();
-        let policy = BatchPolicy::new(variants.clone(), Duration::from_millis(2));
+        let policy = BatchPolicy::new(variants.clone(), Duration::from_millis(2)).unwrap();
         let queued = rng.range_i64(0, 100) as usize;
         let waited = Duration::from_micros(rng.range_i64(0, 5000) as u64);
         if let Some(b) = policy.decide(queued, waited) {
@@ -42,7 +42,7 @@ fn prop_batcher_never_exceeds_queue_or_variants() {
 fn prop_head_of_line_always_progresses_after_deadline() {
     for_all_seeds(200, |rng| {
         let variants: Vec<usize> = vec![rng.range_i64(1, 8) as usize, 16];
-        let policy = BatchPolicy::new(variants, Duration::from_millis(1));
+        let policy = BatchPolicy::new(variants, Duration::from_millis(1)).unwrap();
         let queued = rng.range_i64(1, 15) as usize;
         let b = policy.decide(queued, Duration::from_millis(5));
         assert!(b.is_some(), "head request starved at queue depth {queued}");
