@@ -10,7 +10,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test test-rust test-python artifacts golden bench-json bench-json-smoke bench-check
+.PHONY: build test test-rust test-python artifacts golden bench-json bench-json-smoke bench-check trace-smoke
 
 build:
 	cargo build --release
@@ -40,6 +40,16 @@ bench-check:
 	cargo run --release --bin bench_check -- \
 	  --bench $(CURDIR)/BENCH_interpreter.json \
 	  --baseline $(CURDIR)/BENCH_baseline.json
+
+# Telemetry smoke: serve a small closed-loop workload with --trace on
+# (pipeline mode, so stage residency and stall spans are exercised too),
+# then validate the emitted Chrome-trace JSONL with trace_check:
+# well-formedness of every line, span nesting per thread lane,
+# exactly-one admission per request id, and non-trivial coverage.
+trace-smoke:
+	cargo run --release --bin hgpipe -- serve --requests 32 \
+	  --pipeline --trace $(CURDIR)/TRACE_smoke.jsonl
+	cargo run --release --bin trace_check -- --trace $(CURDIR)/TRACE_smoke.jsonl
 
 test: test-rust test-python
 

@@ -41,6 +41,10 @@
 //!                           4-replica fleet would cost unshared, and
 //!                           the Arc refcount proving every replica
 //!                           borrows the same copy
+//!   telemetry               tracing overhead: the same closed-loop
+//!                           server window with tracing off vs tracing
+//!                           to a scratch JSONL, and their ratio (the
+//!                           "zero cost when off" claim, measured)
 //!   per_op_ms_per_image / per_op_pooled_ms_per_image
 
 use std::fmt::Write as _;
@@ -510,6 +514,38 @@ fn main() {
     let ksimd_ips = n_images as f64 / r_ksimd.mean.as_secs_f64();
     let kernel_speedup = ksimd_ips / kscalar_ips;
 
+    // 12. telemetry overhead: the same closed-loop server window with
+    // tracing explicitly off (`Some("")` shields the bench from a stray
+    // HGPIPE_TRACE) vs tracing to a scratch JSONL. The "zero cost when
+    // off" claim is the off/on ratio staying near 1; the on run also
+    // exercises a traced server end to end.
+    let tele_requests = n_images * if opts.smoke { 2 } else { 4 };
+    let tele_images: Vec<Vec<f32>> = (0..tele_requests)
+        .map(|i| flat[(i % n_images) * per..(i % n_images + 1) * per].to_vec())
+        .collect();
+    let tele_window = |trace: Option<&'static str>| -> f64 {
+        let cfg = RuntimeConfig::new(BackendKind::Interpreter)
+            .with_lanes(Some(1))
+            .with_trace(trace);
+        let server = ModelServer::start_with_config(&manifest, "tiny-synth", 1, cfg)
+            .expect("telemetry server");
+        server.infer_all(tele_images.clone()).expect("telemetry warm-up");
+        let t0 = Instant::now();
+        server.infer_all(tele_images.clone()).expect("telemetry window");
+        tele_requests as f64 / t0.elapsed().as_secs_f64()
+    };
+    let tele_off_ips = tele_window(Some(""));
+    let trace_scratch: &'static str = Box::leak(
+        std::env::temp_dir()
+            .join("hgpipe-bench-trace.jsonl")
+            .to_string_lossy()
+            .into_owned()
+            .into_boxed_str(),
+    );
+    let tele_on_ips = tele_window(Some(trace_scratch));
+    let tele_overhead = tele_off_ips / tele_on_ips;
+    let _ = std::fs::remove_file(trace_scratch);
+
     // per-op breakdowns: serial (clean attribution) and pooled (what the
     // serving path actually spends per op at the headline lane count)
     let prof_images = n_images.min(8);
@@ -562,6 +598,10 @@ fn main() {
         "    pipeline {:2} stages  {pipeline_ips:8.1} img/s   ({:.2}x vs lane-parallel fabric)",
         pipe.stage_count(),
         pipeline_ips / pooled_ips
+    );
+    println!(
+        "    telemetry            off {tele_off_ips:8.1} | on {tele_on_ips:8.1} img/s \
+         (off/on ratio {tele_overhead:.3}, 1 lane)"
     );
     println!("    lane sweep (persistent | spawn img/s):");
     for &(lanes, p, s) in &sweep {
@@ -761,6 +801,9 @@ fn main() {
              \"faults\": {{\n    \"enabled\": {faults_enabled},\n    \
              \"restarts\": {f_restarts},\n    \"retried\": {f_retried},\n    \
              \"shed\": {f_shed},\n    \"expired\": {f_expired}\n  }},\n  \
+             \"telemetry\": {{\n    \"tracing_off_img_s\": {tele_off_ips:.3},\n    \
+             \"tracing_on_img_s\": {tele_on_ips:.3},\n    \
+             \"overhead_ratio\": {tele_overhead:.3}\n  }},\n  \
              \"per_op_ms_per_image\": {},\n  \
              \"per_op_pooled_ms_per_image\": {}\n}}\n",
             opts.smoke,

@@ -1,0 +1,74 @@
+//! `trace_check` — the Chrome-trace smoke gate (`make trace-smoke`).
+//!
+//! Reads a JSONL trace emitted by `hgpipe serve --trace FILE` and fails
+//! (exit 1) when any line is malformed, spans on one thread lane
+//! partially overlap, a request id was admitted twice, or the trace is
+//! trivially empty (no admits or no dispatches — a trace that recorded
+//! nothing would pass a pure well-formedness check).
+//!
+//! The logic lives in `hgpipe::util::tracecheck` (unit-tested there);
+//! this binary is the argument parsing and the process exit code.
+//!
+//! Usage: trace_check [--trace PATH]
+
+use hgpipe::util::tracecheck::check;
+
+fn main() {
+    let mut trace_path = "TRACE_smoke.jsonl".to_string();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--trace" if i + 1 < argv.len() => {
+                trace_path = argv[i + 1].clone();
+                i += 1;
+            }
+            other => {
+                eprintln!("trace-check: unknown argument '{other}'");
+                eprintln!("usage: trace_check [--trace PATH]");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+
+    let text = std::fs::read_to_string(&trace_path).unwrap_or_else(|e| {
+        eprintln!("trace-check: cannot read trace '{trace_path}': {e}");
+        std::process::exit(2);
+    });
+
+    let (sum, mut errors) = check(&text);
+    if sum.admits == 0 {
+        errors.push("trace has no accepted 'admit' instants — nothing was served".into());
+    }
+    if sum.execs == 0 {
+        errors.push("trace has no 'exec' dispatch spans — nothing was executed".into());
+    }
+
+    if errors.is_empty() {
+        println!(
+            "trace-check: OK — {} events: {} admits (+{} shed), {} queue waits, \
+             {} dispatches, {} stage tiles, {} op spans, {} stalls, {} retries, \
+             {} dropped to ring overflow",
+            sum.events,
+            sum.admits,
+            sum.sheds,
+            sum.queue_waits,
+            sum.execs,
+            sum.tiles,
+            sum.op_spans,
+            sum.stalls,
+            sum.retries,
+            sum.dropped
+        );
+    } else {
+        eprintln!("trace-check: FAILED ({} problem(s))", errors.len());
+        for e in errors.iter().take(20) {
+            eprintln!("  - {e}");
+        }
+        if errors.len() > 20 {
+            eprintln!("  ... and {} more", errors.len() - 20);
+        }
+        std::process::exit(1);
+    }
+}

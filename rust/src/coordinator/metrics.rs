@@ -1,10 +1,147 @@
-//! Serving metrics: latency percentiles, throughput, batch histogram.
+//! Serving metrics: latency percentiles (log-bucketed histogram),
+//! throughput, batch histogram, fault counters, and — in pipeline mode
+//! — per-stage occupancy and channel stall counters promoted from the
+//! bench into the serving path.
 
 use std::time::Duration;
 
+/// A fixed-size HDR-style latency histogram over microseconds.
+///
+/// Values 0..64µs land in 64 exact 1µs buckets; above that each
+/// power-of-two octave is split into 32 sub-buckets, so the relative
+/// quantization error is bounded by 1/32 (~3.1%) at any magnitude up
+/// to u64::MAX. Memory is a fixed ~15KiB however long the server
+/// runs, and two histograms merge by adding counts — which is how the
+/// per-replica metrics roll up.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: u64,
+}
+
+/// Exact 1µs-wide buckets below this value.
+const LINEAR: u64 = 64;
+/// Sub-buckets per octave above the linear range.
+const SUB: usize = 32;
+/// Octaves cover top bits 6..=63.
+const NBUCKETS: usize = LINEAR as usize + 58 * SUB;
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { counts: vec![0; NBUCKETS], total: 0, sum_us: 0 }
+    }
+}
+
+impl LatencyHist {
+    fn index(v: u64) -> usize {
+        if v < LINEAR {
+            v as usize
+        } else {
+            let top = 63 - v.leading_zeros() as u64; // >= 6
+            let sub = ((v >> (top - 5)) & 31) as usize;
+            LINEAR as usize + (top as usize - 6) * SUB + sub
+        }
+    }
+
+    /// `[lo, lo+width)` bounds of the bucket holding `v` — the
+    /// guaranteed precision of any percentile near `v`.
+    pub fn bucket_bounds(v: u64) -> (u64, u64) {
+        if v < LINEAR {
+            return (v, 1);
+        }
+        let top = 63 - v.leading_zeros() as u64;
+        let width = 1u64 << (top - 5);
+        ((v >> (top - 5)) << (top - 5), width)
+    }
+
+    /// The representative value reported for a bucket: its midpoint.
+    fn value_at(idx: usize) -> u64 {
+        if idx < LINEAR as usize {
+            return idx as u64;
+        }
+        let k = idx - LINEAR as usize;
+        let top = 6 + (k / SUB) as u64;
+        let sub = (k % SUB) as u64;
+        let width = 1u64 << (top - 5);
+        ((32 + sub) << (top - 5)) + width / 2
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.counts[Self::index(us)] += 1;
+        self.total += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Sum of recorded values, for Prometheus `_sum` exposition.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// The nearest-rank percentile (same rank rule the exact sorted-vec
+    /// implementation used), accurate to within one bucket width.
+    pub fn percentile_us(&self, p: f64) -> Option<u64> {
+        if self.total == 0 {
+            return None;
+        }
+        let rank = ((self.total - 1) as f64 * p).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                return Some(Self::value_at(idx));
+            }
+        }
+        // rank == total-1 falls in the last non-empty bucket
+        self.counts.iter().rposition(|&c| c > 0).map(Self::value_at)
+    }
+
+    /// Add every count of `other` into `self` (replica rollup).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+    }
+}
+
+/// One resident pipeline stage's occupancy snapshot as seen from the
+/// serving path: compute time vs wall, plus the stage's channel stall
+/// counters (`stalls_full` = blocked sends / backpressure,
+/// `stalls_empty` = blocked recvs / bubbles).
+#[derive(Debug, Clone)]
+pub struct StageOcc {
+    pub name: String,
+    pub images: u64,
+    pub busy_ms: f64,
+    /// Wall-clock of the window the counters cover (replica uptime).
+    pub wall_ms: f64,
+    pub stalls_empty: u64,
+    pub stalls_full: u64,
+}
+
+impl StageOcc {
+    /// Fraction of the wall the stage spent computing.
+    pub fn occupancy(&self) -> f64 {
+        if self.wall_ms > 0.0 {
+            self.busy_ms / self.wall_ms
+        } else {
+            0.0
+        }
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
-    pub latencies_us: Vec<u64>,
+    /// Request latencies, log-bucketed (bounded memory under sustained
+    /// load; the old unbounded `Vec<u64>` grew forever and was
+    /// clone+sorted on every percentile call).
+    pub latency: LatencyHist,
     pub batch_hist: std::collections::BTreeMap<usize, u64>,
     pub exec_ms_total: f64,
     pub queue_ms_total: f64,
@@ -27,40 +164,60 @@ pub struct ServeMetrics {
     /// Replicas retired permanently after flapping (consecutive deaths
     /// without a completed dispatch in between).
     pub retired: u64,
+    /// Per-replica pipeline stage occupancy, keyed by replica index and
+    /// replaced wholesale on update (the counters are cumulative on the
+    /// pipeline side). Empty outside pipeline mode.
+    pub stages: std::collections::BTreeMap<usize, Vec<StageOcc>>,
     pub started: Option<std::time::Instant>,
     pub finished: Option<std::time::Instant>,
 }
 
 impl ServeMetrics {
     pub fn record(&mut self, latency: Duration, batch: usize, exec_ms: f64, queue_ms: f64) {
-        self.latencies_us.push(latency.as_micros() as u64);
+        self.latency.record_us(latency.as_micros() as u64);
         *self.batch_hist.entry(batch).or_default() += 1;
         self.exec_ms_total += exec_ms;
         self.queue_ms_total += queue_ms;
     }
 
     pub fn count(&self) -> usize {
-        self.latencies_us.len()
+        self.latency.count() as usize
     }
 
     pub fn percentile(&self, p: f64) -> Option<Duration> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        Some(Duration::from_micros(v[idx]))
+        self.latency.percentile_us(p).map(Duration::from_micros)
     }
 
+    /// Requests per second over the serving window. A live server (no
+    /// `finished` mark yet — e.g. a mid-run `/metrics` scrape before
+    /// the first dispatch lands, or right after a restart) reports
+    /// elapsed-to-now throughput instead of `None`.
     pub fn throughput(&self) -> Option<f64> {
-        let (s, f) = (self.started?, self.finished?);
-        let secs = f.duration_since(s).as_secs_f64();
+        let s = self.started?;
+        let end = self.finished.unwrap_or_else(std::time::Instant::now);
+        let secs = end.saturating_duration_since(s).as_secs_f64();
         if secs > 0.0 {
             Some(self.count() as f64 / secs)
         } else {
             None
         }
+    }
+
+    /// Replace replica `ri`'s stage occupancy snapshot (cumulative
+    /// counters, so replacement — not accumulation — is correct).
+    pub fn update_stage_occupancy(&mut self, ri: usize, stages: Vec<StageOcc>) {
+        self.stages.insert(ri, stages);
+    }
+
+    /// Total backpressure stalls (blocked sends) across all stages of
+    /// all replicas this metrics object has seen.
+    pub fn pipeline_stalls_full(&self) -> u64 {
+        self.stages.values().flatten().map(|s| s.stalls_full).sum()
+    }
+
+    /// Total bubble stalls (blocked recvs) across all stages.
+    pub fn pipeline_stalls_empty(&self) -> u64 {
+        self.stages.values().flatten().map(|s| s.stalls_empty).sum()
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -74,7 +231,7 @@ impl ServeMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} failed={} shed={} expired={} retried={} restarts={} throughput={:.1}/s p50={:?} p95={:?} p99={:?} p999={:?} mean_batch={:.2} exec={:.0}ms queue={:.0}ms",
             self.count(),
             self.failed,
@@ -90,13 +247,36 @@ impl ServeMetrics {
             self.mean_batch(),
             self.exec_ms_total,
             self.queue_ms_total,
-        )
+        );
+        if !self.stages.is_empty() {
+            // bubble visibility in serving, not just the bench: stall
+            // totals plus per-replica per-stage occupancy fractions
+            s.push_str(&format!(
+                " stalls_full={} stalls_empty={} occ=",
+                self.pipeline_stalls_full(),
+                self.pipeline_stalls_empty()
+            ));
+            for (i, (ri, stages)) in self.stages.iter().enumerate() {
+                if i > 0 {
+                    s.push('|');
+                }
+                s.push_str(&format!("r{ri}:"));
+                for (j, st) in stages.iter().enumerate() {
+                    if j > 0 {
+                        s.push(',');
+                    }
+                    s.push_str(&format!("{:.2}", st.occupancy()));
+                }
+            }
+        }
+        s
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Prng;
 
     #[test]
     fn percentiles_ordered() {
@@ -116,7 +296,73 @@ mod tests {
         }
         m.record(Duration::from_millis(50), 1, 0.0, 0.0);
         assert!(m.percentile(0.99).unwrap() <= m.percentile(0.999).unwrap());
-        assert_eq!(m.percentile(0.999).unwrap(), Duration::from_millis(50));
+        // the histogram pins the tail to within one bucket width
+        let p999 = m.percentile(0.999).unwrap().as_micros() as i64;
+        let (_, width) = LatencyHist::bucket_bounds(50_000);
+        assert!(
+            (p999 - 50_000).unsigned_abs() <= width,
+            "p999 {p999}µs strayed more than a bucket ({width}µs) from 50ms"
+        );
+    }
+
+    #[test]
+    fn histogram_matches_exact_quantiles_on_known_sample() {
+        // regression vs the exact sorted-vec percentile the histogram
+        // replaced: nearest-rank on a pseudorandom sample, error must
+        // stay within one bucket width at every probed quantile
+        let mut rng = Prng::new(0xA11CE);
+        let samples: Vec<u64> = (0..2000).map(|_| rng.range_i64(1, 2_000_000) as u64).collect();
+        let mut exact = samples.clone();
+        exact.sort_unstable();
+        let mut h = LatencyHist::default();
+        for &s in &samples {
+            h.record_us(s);
+        }
+        assert_eq!(h.count(), samples.len() as u64);
+        for p in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let rank = ((exact.len() - 1) as f64 * p).round() as usize;
+            let want = exact[rank];
+            let got = h.percentile_us(p).unwrap();
+            let (_, width) = LatencyHist::bucket_bounds(want);
+            assert!(
+                got.abs_diff(want) <= width,
+                "p{p}: hist {got}µs vs exact {want}µs exceeds bucket width {width}µs"
+            );
+        }
+    }
+
+    #[test]
+    fn histograms_merge_across_replicas() {
+        let mut rng = Prng::new(7);
+        let samples: Vec<u64> = (0..500).map(|_| rng.range_i64(0, 100_000) as u64).collect();
+        let mut whole = LatencyHist::default();
+        let (mut a, mut b) = (LatencyHist::default(), LatencyHist::default());
+        for (i, &s) in samples.iter().enumerate() {
+            whole.record_us(s);
+            if i % 2 == 0 {
+                a.record_us(s);
+            } else {
+                b.record_us(s);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.sum_us(), whole.sum_us());
+        for p in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.percentile_us(p), whole.percentile_us(p), "merge changed p{p}");
+        }
+    }
+
+    #[test]
+    fn throughput_is_live_before_finish() {
+        // a scraped-mid-run server has started but never finished: it
+        // must report elapsed-to-now throughput, not None/0.0
+        let mut m = ServeMetrics::default();
+        m.record(Duration::from_micros(10), 1, 0.0, 0.0);
+        m.started = Some(std::time::Instant::now() - Duration::from_millis(100));
+        assert!(m.finished.is_none());
+        let tp = m.throughput().expect("live server reports throughput");
+        assert!(tp > 0.0, "live throughput must be positive, got {tp}");
     }
 
     #[test]
@@ -128,6 +374,40 @@ mod tests {
         m.restarts = 1;
         let s = m.summary();
         for token in ["shed=3", "expired=2", "retried=5", "restarts=1", "p999="] {
+            assert!(s.contains(token), "summary {s:?} missing {token}");
+        }
+        // no pipeline data -> no occupancy tokens (line layout unchanged)
+        assert!(!s.contains("stalls_full="));
+    }
+
+    #[test]
+    fn summary_surfaces_stage_occupancy() {
+        let mut m = ServeMetrics::default();
+        m.update_stage_occupancy(
+            0,
+            vec![
+                StageOcc {
+                    name: "stage0".into(),
+                    images: 10,
+                    busy_ms: 50.0,
+                    wall_ms: 100.0,
+                    stalls_empty: 4,
+                    stalls_full: 7,
+                },
+                StageOcc {
+                    name: "stage1".into(),
+                    images: 10,
+                    busy_ms: 25.0,
+                    wall_ms: 100.0,
+                    stalls_empty: 1,
+                    stalls_full: 0,
+                },
+            ],
+        );
+        assert_eq!(m.pipeline_stalls_full(), 7);
+        assert_eq!(m.pipeline_stalls_empty(), 5);
+        let s = m.summary();
+        for token in ["stalls_full=7", "stalls_empty=5", "r0:0.50,0.25"] {
             assert!(s.contains(token), "summary {s:?} missing {token}");
         }
     }

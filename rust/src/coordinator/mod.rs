@@ -66,9 +66,10 @@ use std::time::{Duration, Instant};
 
 use crate::artifacts::Manifest;
 use crate::runtime::{self, BackendKind, Executor, LoadedModel, ModelArtifact, RuntimeConfig};
+use crate::telemetry::{Telemetry, TraceBuf, TraceEvent};
 use batcher::BatchPolicy;
 use faults::{Fault, FaultInjector};
-use metrics::ServeMetrics;
+use metrics::{ServeMetrics, StageOcc};
 use queue::{FrontQueue, Pop, Rejected};
 
 /// One inference request: a patchified image (flat T*P f32 tokens).
@@ -167,6 +168,10 @@ pub struct ModelServer {
     /// once and shared by every replica behind an `Arc` (interpreter
     /// backend; `None` on backends whose handles cannot cross threads).
     artifact: Option<ModelArtifact>,
+    /// This fleet's trace process (one pid per model), threaded into
+    /// every replica and resident stage. Off unless the config resolves
+    /// a trace path — then every recording site is a branch + nothing.
+    telemetry: Telemetry,
 }
 
 impl ModelServer {
@@ -220,6 +225,13 @@ impl ModelServer {
             BackendKind::Interpreter => Some(ModelArtifact::load(manifest, model)?),
             _ => None,
         };
+        // one trace process per fleet: pid + "client" tid registered
+        // here; replica supervisors and pipeline stages allocate their
+        // own named tids from the same handle. An explicit but
+        // unopenable `--trace` path fails startup (the caller asked for
+        // it); an unusable HGPIPE_TRACE only warns (see
+        // `Telemetry::from_config`).
+        let telemetry = Telemetry::from_config(&config)?.for_model(model);
         let front = Arc::new(FrontQueue::<Request>::with_capacity(queue_capacity));
         let (init_tx, init_rx) = channel::<InitResult>();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
@@ -243,6 +255,7 @@ impl ModelServer {
                 live: live.clone(),
                 wait,
                 plan: fault_plan,
+                tele: telemetry.clone(),
             };
             let itx = init_tx.clone();
             workers.push(std::thread::spawn(move || replica_supervisor(harness, itx)));
@@ -304,6 +317,7 @@ impl ModelServer {
             num_classes,
             compile_ms,
             artifact,
+            telemetry,
         })
     }
 
@@ -351,6 +365,12 @@ impl ModelServer {
     /// not per replica.
     pub fn artifact(&self) -> Option<&ModelArtifact> {
         self.artifact.as_ref()
+    }
+
+    /// This fleet's telemetry handle (off unless the config resolved a
+    /// trace path). Useful for asserting trace state in tests.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
     }
 
     /// Per-replica metrics snapshot (same order as replica indices).
@@ -401,21 +421,41 @@ impl ModelServer {
         );
         let (tx, rx) = channel();
         let now = Instant::now();
+        let rid = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id: rid,
             tokens,
             enqueued: now,
             deadline: deadline.map(|d| now + d),
             reply: tx,
         };
+        // admission instants land on tid 0 ("client"): exactly one
+        // non-shed "admit" per accepted request — a supervisor requeue
+        // after a replica death emits "retry" events, never a second
+        // admission root
+        let t_admit = self.telemetry.ts_us(now);
         match self.front.push(req) {
-            Ok(()) => Ok(rx),
+            Ok(()) => {
+                self.telemetry.record(|b| {
+                    let pid = b.pid();
+                    b.push(TraceEvent::instant("admit", "request", pid, 0, t_admit).with_id(rid));
+                });
+                Ok(rx)
+            }
             Err(Rejected::Closed(_)) => Err(anyhow::anyhow!("server stopped")),
             Err(Rejected::Overloaded(_)) => {
                 // shed requests never reach a replica: the rollup is the
                 // only sink that sees them (replica sums exclude shed by
                 // design — documented on `ServeMetrics::shed`)
                 self.metrics.lock().unwrap().shed += 1;
+                self.telemetry.record(|b| {
+                    let pid = b.pid();
+                    b.push(
+                        TraceEvent::instant("admit", "request", pid, 0, t_admit)
+                            .with_id(rid)
+                            .with_note("shed"),
+                    );
+                });
                 let capacity = self.front.capacity().expect("overload implies a bound");
                 Err(anyhow::Error::new(Overloaded { capacity }))
             }
@@ -489,6 +529,9 @@ struct ReplicaHarness {
     live: Arc<AtomicUsize>,
     wait: Duration,
     plan: Option<faults::FaultPlan>,
+    /// The fleet's trace handle; this replica allocates its own tid and
+    /// ring buffer from it, and resident pipeline stages theirs.
+    tele: Telemetry,
 }
 
 /// A flapping replica — this many consecutive deaths without a single
@@ -518,6 +561,10 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 /// boundary, so a panic can never drop a reply sender silently.
 fn replica_supervisor(h: ReplicaHarness, init_tx: Sender<InitResult>) {
     let mut injector = h.plan.map(|p| p.injector(h.ri));
+    // the replica's trace identity and ring buffer, allocated once and
+    // reused across supervised rebuilds (tid 0 when tracing is off)
+    let trace_tid = h.tele.alloc_tid(&format!("replica{}", h.ri));
+    let mut tracebuf = h.tele.buffer();
     // build this replica's mutable runtime (fabric lanes or resident
     // pipeline + scratch) — from the shared artifact when there is one,
     // else a full per-thread load (the paper's bitstream load, once per
@@ -529,7 +576,7 @@ fn replica_supervisor(h: ReplicaHarness, init_tx: Sender<InitResult>) {
             }
         }
         let loaded = match &h.artifact {
-            Some(a) => runtime::load_model_from_artifact(h.config, a),
+            Some(a) => runtime::load_model_from_artifact_traced(h.config, a, &h.tele),
             None => runtime::load_model(h.config, &h.manifest, &h.model),
         }
         .map_err(|e| format!("{e:#}"))?;
@@ -558,6 +605,9 @@ fn replica_supervisor(h: ReplicaHarness, init_tx: Sender<InitResult>) {
     drop(init_tx);
     let tokens_per_image = runtime_slot.as_ref().expect("just built").0.tokens_per_image;
     let num_classes = runtime_slot.as_ref().expect("just built").0.num_classes;
+    // wall-clock base for stage-occupancy fractions: this runtime's
+    // (re)build time — occupancy is busy/wall since the stages spawned
+    let mut built_at = Instant::now();
 
     let mut pending: Vec<Request> = Vec::new();
     let mut inflight: Vec<Request> = Vec::new();
@@ -579,6 +629,10 @@ fn replica_supervisor(h: ReplicaHarness, init_tx: Sender<InitResult>) {
                 &mut inflight,
                 &mut injector,
                 &mut dispatched,
+                h.ri,
+                built_at,
+                &mut tracebuf,
+                trace_tid,
             )
         }));
         let payload = match run {
@@ -601,8 +655,21 @@ fn replica_supervisor(h: ReplicaHarness, init_tx: Sender<InitResult>) {
         let mut retried = 0u64;
         let mut lost: Vec<Request> = Vec::new();
         for r in orphans.into_iter().rev() {
+            let rid = r.id;
             match h.front.requeue(r) {
-                Ok(()) => retried += 1,
+                Ok(()) => {
+                    retried += 1;
+                    // a requeue is a retry event, NOT a second admission:
+                    // the request keeps its one "admit" root
+                    if let Some(b) = &mut tracebuf {
+                        let pid = b.pid();
+                        let now = b.now();
+                        b.push(
+                            TraceEvent::instant("retry", "retry", pid, trace_tid, now)
+                                .with_id(rid),
+                        );
+                    }
+                }
                 Err(r) => lost.push(r),
             }
         }
@@ -663,6 +730,7 @@ fn replica_supervisor(h: ReplicaHarness, init_tx: Sender<InitResult>) {
                         && built.0.num_classes == num_classes =>
                 {
                     runtime_slot = Some(built);
+                    built_at = Instant::now();
                     continue 'supervise;
                 }
                 // a rebuild that comes back with different shapes means
@@ -718,6 +786,12 @@ fn executor_loop(
     inflight: &mut Vec<Request>,
     injector: &mut Option<FaultInjector>,
     dispatched: &mut bool,
+    ri: usize,
+    // when this replica's runtime was (re)built — the wall-clock base
+    // its stage-occupancy fractions are measured against
+    runtime_built: Instant,
+    tele: &mut Option<TraceBuf>,
+    trace_tid: u64,
 ) {
     'serve: loop {
         if stop.load(Ordering::SeqCst) {
@@ -763,6 +837,13 @@ fn executor_loop(
             *pending = keep;
             let n = doomed.len() as u64;
             sinks.each(|m| m.expired += n);
+            if let Some(b) = tele.as_mut() {
+                let pid = b.pid();
+                let ts = b.now();
+                for r in &doomed {
+                    b.push(TraceEvent::instant("expired", "request", pid, trace_tid, ts).with_id(r.id));
+                }
+            }
             for r in doomed {
                 let _ = r.reply.send(Err(anyhow::Error::new(DeadlineExceeded { id: r.id })));
             }
@@ -819,6 +900,27 @@ fn executor_loop(
             }
         }
         let t0 = Instant::now();
+        // one queue-wait span per request in the dispatch, closed at
+        // dispatch start — all ending at the same tick, so they nest
+        // cleanly on this replica's tid
+        if let Some(b) = tele.as_mut() {
+            let pid = b.pid();
+            let t_dispatch = b.ts(t0);
+            for r in inflight.iter() {
+                let ts = b.ts(r.enqueued);
+                b.push(
+                    TraceEvent::span(
+                        "queue_wait",
+                        "request",
+                        pid,
+                        trace_tid,
+                        ts,
+                        t_dispatch.saturating_sub(ts),
+                    )
+                    .with_id(r.id),
+                );
+            }
+        }
         let out = match exe.run_f32(&input) {
             Ok(o) => o,
             Err(e) => {
@@ -843,6 +945,41 @@ fn executor_loop(
         };
         let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
         let per_image_exec_ms = exec_ms / inflight.len() as f64;
+        if let Some(b) = tele.as_mut() {
+            // the dispatch span, with the interpreter's per-op kernel
+            // spans (when profiling is on) clamped inside it
+            let pid = b.pid();
+            let ts = b.ts(t0);
+            let end = b.now().max(ts);
+            b.push(
+                TraceEvent::span("exec", "dispatch", pid, trace_tid, ts, end - ts)
+                    .with_batch(inflight.len() as u64),
+            );
+            if let Some(p) = exe.take_op_profile() {
+                b.push_op_spans(trace_tid, ts, end, &p.named_ms());
+            }
+            b.maybe_flush(256);
+        }
+        // stage occupancy rides every dispatch (always on, not only
+        // when tracing): pipeline executors snapshot their cumulative
+        // stage counters into the serve metrics; other executors
+        // report nothing and skip this entirely
+        if let Some(ps) = exe.pipeline_stats() {
+            let wall_ms = runtime_built.elapsed().as_secs_f64() * 1e3;
+            let occ: Vec<StageOcc> = ps
+                .stages
+                .iter()
+                .map(|s| StageOcc {
+                    name: s.name.clone(),
+                    images: s.images,
+                    busy_ms: s.busy_ms,
+                    wall_ms,
+                    stalls_empty: s.stalls_empty,
+                    stalls_full: s.stalls_full,
+                })
+                .collect();
+            sinks.each(|m| m.update_stage_occupancy(ri, occ.clone()));
+        }
 
         {
             // snapshot the latencies once so rollup and replica sinks
@@ -1194,5 +1331,175 @@ impl Router {
             }
         }
         lines
+    }
+
+    /// Prometheus text exposition (version 0.0.4) of every serving
+    /// metric: request/fault counters, live-replica and queue-depth
+    /// gauges, the latency summary (p50/p95/p99/p999 + sum + count) and
+    /// per-replica per-stage pipeline occupancy, labelled
+    /// `model="name",version="vN"` — retired versions keep reporting
+    /// their final counters, so per-version series always sum to the
+    /// model's lifetime totals. Always on: this renders counters the
+    /// serving path maintains anyway, independent of `--trace`.
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        struct Row {
+            labels: String,
+            m: ServeMetrics,
+            /// Live gauges exist only for the currently-routed version.
+            live: Option<(usize, usize)>, // (live_replicas, queue_len)
+        }
+        let mut rows: Vec<Row> = Vec::new();
+        for e in self.entries.read().unwrap().iter() {
+            for (v, m) in &e.retired {
+                rows.push(Row {
+                    labels: format!("model=\"{}\",version=\"v{}\"", e.name, v),
+                    m: m.lock().unwrap().clone(),
+                    live: None,
+                });
+            }
+            rows.push(Row {
+                labels: format!("model=\"{}\",version=\"v{}\"", e.name, e.version),
+                m: e.server.metrics.lock().unwrap().clone(),
+                live: Some((e.server.live_replicas(), e.server.queue_len())),
+            });
+        }
+
+        let mut out = String::new();
+        let mut family = |name: &str, kind: &str, help: &str, values: Vec<(String, String)>| {
+            if values.is_empty() {
+                return;
+            }
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            for (labels, v) in values {
+                let _ = writeln!(out, "{name}{{{labels}}} {v}");
+            }
+        };
+        let counters: [(&str, &str, fn(&ServeMetrics) -> u64); 7] = [
+            ("hgpipe_requests_total", "Requests completed successfully.", |m| m.count() as u64),
+            ("hgpipe_requests_failed_total", "Requests answered with an error.", |m| m.failed),
+            ("hgpipe_requests_shed_total", "Requests rejected at admission (bounded queue full).", |m| m.shed),
+            ("hgpipe_requests_expired_total", "Requests expired before execution (deadline).", |m| m.expired),
+            ("hgpipe_requests_retried_total", "Requests requeued after a replica death.", |m| m.retried),
+            ("hgpipe_replica_restarts_total", "Replica supervisor restarts.", |m| m.restarts),
+            ("hgpipe_replicas_retired_total", "Replicas permanently retired after flapping.", |m| m.retired),
+        ];
+        for (name, help, pick) in counters {
+            family(
+                name,
+                "counter",
+                help,
+                rows.iter().map(|r| (r.labels.clone(), pick(&r.m).to_string())).collect(),
+            );
+        }
+        family(
+            "hgpipe_live_replicas",
+            "gauge",
+            "Replicas currently serving (started minus retired).",
+            rows.iter()
+                .filter_map(|r| r.live.map(|(l, _)| (r.labels.clone(), l.to_string())))
+                .collect(),
+        );
+        family(
+            "hgpipe_queue_depth",
+            "gauge",
+            "Requests waiting in the front queue right now.",
+            rows.iter()
+                .filter_map(|r| r.live.map(|(_, q)| (r.labels.clone(), q.to_string())))
+                .collect(),
+        );
+        family(
+            "hgpipe_throughput_images_per_second",
+            "gauge",
+            "Completed requests per second over the serving window.",
+            rows.iter()
+                .filter_map(|r| {
+                    r.m.throughput().map(|t| (r.labels.clone(), format!("{t:.3}")))
+                })
+                .collect(),
+        );
+        // the latency summary: quantile series plus _sum/_count, all in
+        // seconds (Prometheus base units)
+        let mut latency: Vec<(String, String)> = Vec::new();
+        for r in &rows {
+            for q in [0.5, 0.95, 0.99, 0.999] {
+                if let Some(d) = r.m.percentile(q) {
+                    latency.push((
+                        format!("{},quantile=\"{q}\"", r.labels),
+                        format!("{:.6}", d.as_secs_f64()),
+                    ));
+                }
+            }
+        }
+        family(
+            "hgpipe_request_latency_seconds",
+            "summary",
+            "End-to-end request latency (admission to reply).",
+            latency,
+        );
+        family(
+            "hgpipe_request_latency_seconds_sum",
+            "counter",
+            "Sum of request latencies.",
+            rows.iter()
+                .map(|r| {
+                    (r.labels.clone(), format!("{:.6}", r.m.latency.sum_us() as f64 / 1e6))
+                })
+                .collect(),
+        );
+        family(
+            "hgpipe_request_latency_seconds_count",
+            "counter",
+            "Count of latency observations.",
+            rows.iter().map(|r| (r.labels.clone(), r.m.count().to_string())).collect(),
+        );
+        // per-replica per-stage pipeline occupancy (pipeline mode only —
+        // empty otherwise, and the whole family is omitted)
+        let stage_rows = |pick: fn(&StageOcc) -> String| -> Vec<(String, String)> {
+            let mut v = Vec::new();
+            for r in &rows {
+                for (ri, stages) in &r.m.stages {
+                    for s in stages {
+                        v.push((
+                            format!("{},replica=\"{ri}\",stage=\"{}\"", r.labels, s.name),
+                            pick(s),
+                        ));
+                    }
+                }
+            }
+            v
+        };
+        family(
+            "hgpipe_stage_images_total",
+            "counter",
+            "Images processed by each resident pipeline stage.",
+            stage_rows(|s| s.images.to_string()),
+        );
+        family(
+            "hgpipe_stage_busy_seconds_total",
+            "counter",
+            "Compute time per resident stage (excludes channel waits).",
+            stage_rows(|s| format!("{:.6}", s.busy_ms / 1e3)),
+        );
+        family(
+            "hgpipe_stage_occupancy_ratio",
+            "gauge",
+            "Busy/wall fraction per resident stage since its runtime was built.",
+            stage_rows(|s| format!("{:.4}", s.occupancy())),
+        );
+        family(
+            "hgpipe_stage_stalls_empty_total",
+            "counter",
+            "Input-FIFO stalls (stage sat empty) per resident stage.",
+            stage_rows(|s| s.stalls_empty.to_string()),
+        );
+        family(
+            "hgpipe_stage_stalls_full_total",
+            "counter",
+            "Output-FIFO backpressure stalls per resident stage.",
+            stage_rows(|s| s.stalls_full.to_string()),
+        );
+        out
     }
 }

@@ -17,7 +17,12 @@
 //! * [`metrics`] / [`report`] — Table 2 & figure regeneration,
 //! * [`runtime`] — pluggable execution backends for the quantized ViT,
 //! * [`coordinator`] — the serving loop: request router, dynamic batcher,
-//!   pipelined execution with per-stage metrics, generic over the backend.
+//!   pipelined execution with per-stage metrics, generic over the backend,
+//! * [`telemetry`] — zero-cost-when-off tracing: per-request span trees
+//!   (admission, queue wait, dispatch, stage residency, stalls, per-op
+//!   kernel timings) recorded into per-thread ring buffers and written
+//!   as Chrome-trace JSONL (`--trace` / `HGPIPE_TRACE`), plus the
+//!   always-on `Router::prometheus_text()` exposition.
 //!
 //! ## Execution backend matrix
 //!
@@ -101,6 +106,7 @@ pub mod report;
 pub mod roofline;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result type.

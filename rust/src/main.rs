@@ -133,6 +133,20 @@ impl Args {
                     .map_err(|e| anyhow::anyhow!("--faults '{v}' is not a fault spec: {e}"))?,
             ),
         };
+        let trace = match self.flags.get("trace") {
+            None => None,
+            Some(v) => {
+                // the parser turns a value-less flag into "true"; a trace
+                // needs a real output path, not a file named "true"
+                anyhow::ensure!(
+                    v != "true",
+                    "--trace expects an output path (e.g. --trace trace.jsonl)"
+                );
+                // RuntimeConfig stays Copy via &'static str; one leak per
+                // process invocation is the cost of that
+                Some(&*Box::leak(v.clone().into_boxed_str()))
+            }
+        };
         let backend = self.backend()?;
         let mode = if let Some(v) = self.flags.get("pipeline") {
             // boolean flag: the parser would otherwise swallow a stray
@@ -175,7 +189,8 @@ impl Args {
             .with_replicas(replicas)
             .with_kernels(kernels)
             .with_queue_capacity(queue_cap)
-            .with_faults(faults))
+            .with_faults(faults)
+            .with_trace(trace))
     }
 }
 
@@ -230,6 +245,7 @@ COMMANDS:
                            [--replicas N] [--kernels scalar|avx2|neon|auto]
                            [--pipeline [--stages N] [--queue-depth N]]
                            [--queue-cap N] [--deadline-ms N] [--faults SPEC]
+                           [--trace FILE.jsonl]
   eval                     eval-batch accuracy of a quantized model
                            [--model tiny-synth] [--artifacts DIR]
                            [--backend interpreter|pjrt] [--lanes N]
@@ -269,6 +285,14 @@ enables the deterministic fault-injection harness
 HGPIPE_FAULTS): injected replica panics are survived by supervised
 restart, requeueing the replica's accepted requests so every accepted
 request still gets exactly one reply.
+
+Observability: `--trace FILE.jsonl` records every request's span tree
+(admission, queue wait, dispatch, per-stage residency with stall
+intervals, per-op kernel timings) as Chrome-trace JSONL — open the file
+in Perfetto (ui.perfetto.dev) or chrome://tracing. Env fallback:
+HGPIPE_TRACE (an explicit --trace beats it; `--trace \"\"` disables
+outright). Tracing off costs nothing on the hot path and results stay
+bit-identical either way. Check a trace with the `trace_check` binary.
 ";
 
 fn cmd_report(args: &Args) -> Result<()> {
@@ -445,6 +469,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             plan.load_fail_rate * 100.0
         );
     }
+    if let Some(path) = config.resolve_trace() {
+        println!("tracing ON -> {path} (Chrome-trace JSONL; open in Perfetto)");
+    }
 
     let mut rng = Prng::new(7);
     let mk_image = |rng: &mut Prng, n_tok: usize| -> Vec<f32> {
@@ -513,6 +540,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     for line in router.metrics_lines() {
         println!("{line}");
+    }
+    // grab a handle on the shared sink *before* the router drops (the
+    // registry only holds a Weak — letting the last Arc go would let a
+    // later open re-create the file), then drop the router so its
+    // replica/stage threads exit and flush their rings, and only then
+    // close the writer and report
+    let tele = router
+        .models()
+        .first()
+        .and_then(|m| router.server(m))
+        .map(|s| s.telemetry().clone())
+        .unwrap_or_default();
+    drop(router);
+    if let Some(path) = tele.path().map(str::to_string) {
+        tele.finish();
+        println!(
+            "trace: {} events -> {path} ({} dropped to ring overflow)",
+            tele.written(),
+            tele.dropped()
+        );
     }
     Ok(())
 }

@@ -95,6 +95,19 @@ impl OpProfile {
             + self.requant_ms
             + self.head_ms
     }
+
+    /// The profile as `(kernel family, milliseconds)` pairs, in schema
+    /// order — the shape the telemetry layer renders op spans from.
+    pub fn named_ms(&self) -> [(&'static str, f64); 6] {
+        [
+            ("quantize", self.quantize_ms),
+            ("gemm", self.gemm_ms),
+            ("layernorm", self.layernorm_ms),
+            ("attention", self.attention_ms),
+            ("requant", self.requant_ms),
+            ("head", self.head_ms),
+        ]
+    }
 }
 
 /// Lap timer feeding an [`OpProfile`] — or a no-op when detached, so
@@ -417,6 +430,12 @@ pub struct InterpreterExecutor {
     pool: LanePool,
     load_ms: f64,
     stats: Mutex<ExecStats>,
+    /// Per-op accumulation for telemetry, present only when tracing is
+    /// on (the off path never attaches a clock). Drained by the
+    /// coordinator through [`Executor::take_op_profile`]. Row-grain
+    /// dispatches attribute fully; batch-lane-grain dispatches keep the
+    /// workers' lock-free nested forwards and skip attribution.
+    profile: Option<Mutex<OpProfile>>,
 }
 
 impl Executor for InterpreterExecutor {
@@ -453,7 +472,16 @@ impl Executor for InterpreterExecutor {
         } else {
             // row grain: images serial, token rows banded inside each
             for (i, lane) in input.chunks_exact(per).enumerate() {
-                let logits = self.net.forward_image_pooled(lane, &self.pool)?;
+                let logits = match &self.profile {
+                    // tracing on: same forward (pooled is profiled with
+                    // the profile discarded), but keep the laps
+                    Some(acc) => {
+                        let (logits, p) = self.net.forward_profiled(lane, &self.pool)?;
+                        acc.lock().unwrap().merge(&p);
+                        logits
+                    }
+                    None => self.net.forward_image_pooled(lane, &self.pool)?,
+                };
                 for (o, &v) in out[i * nc..(i + 1) * nc].iter_mut().zip(&logits) {
                     *o = v as f32;
                 }
@@ -472,6 +500,10 @@ impl Executor for InterpreterExecutor {
 
     fn stats(&self) -> ExecStats {
         *self.stats.lock().unwrap()
+    }
+
+    fn take_op_profile(&self) -> Option<OpProfile> {
+        self.profile.as_ref().map(|m| std::mem::take(&mut *m.lock().unwrap()))
     }
 }
 
@@ -531,6 +563,18 @@ pub fn executors_from_artifact(
     lanes: usize,
     kern: &'static Kernels,
 ) -> LoadedModel {
+    executors_from_artifact_profiled(artifact, lanes, kern, false)
+}
+
+/// [`executors_from_artifact`] with per-op profiling switched on for
+/// telemetry: each executor accumulates an [`OpProfile`] the
+/// coordinator drains into per-op trace spans after every dispatch.
+pub fn executors_from_artifact_profiled(
+    artifact: &ModelArtifact,
+    lanes: usize,
+    kern: &'static Kernels,
+    profiled: bool,
+) -> LoadedModel {
     let net = artifact.net().clone();
     let load_ms = artifact.load_ms();
     let pool = LanePool::with_kernels(lanes, kern);
@@ -544,6 +588,7 @@ pub fn executors_from_artifact(
                 pool: pool.clone(),
                 load_ms,
                 stats: Mutex::new(ExecStats::default()),
+                profile: profiled.then(|| Mutex::new(OpProfile::default())),
             }) as Box<dyn Executor>
         })
         .collect();

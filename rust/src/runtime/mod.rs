@@ -169,6 +169,13 @@ pub struct RuntimeConfig {
     /// to the `HGPIPE_FAULTS` read-only env fallback, then no
     /// injection — the serving hot path carries no injector at all.
     pub faults: Option<crate::coordinator::faults::FaultPlan>,
+    /// Trace output path (`--trace out.jsonl`): when set, the serving
+    /// stack records a Chrome-trace span tree per request (see
+    /// [`crate::telemetry`]). `None` defers to the `HGPIPE_TRACE`
+    /// read-only env fallback, then tracing stays off (the hot path
+    /// pays one branch). `Some("")` explicitly disables. A `&'static`
+    /// so the config stays `Copy`; the CLI leaks its one flag string.
+    pub trace: Option<&'static str>,
 }
 
 impl RuntimeConfig {
@@ -181,6 +188,7 @@ impl RuntimeConfig {
             kernels: None,
             queue_capacity: None,
             faults: None,
+            trace: None,
         }
     }
 
@@ -259,6 +267,31 @@ impl RuntimeConfig {
         self.faults
             .or_else(crate::coordinator::faults::FaultPlan::from_env)
             .filter(|p| !p.is_off())
+    }
+
+    /// Set (or clear) the explicit trace output path (beats
+    /// `HGPIPE_TRACE`). `Some("")` disables tracing outright.
+    pub fn with_trace(mut self, trace: Option<&'static str>) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// The trace path this config resolves to: the explicit path wins
+    /// (empty = explicitly off), else the `HGPIPE_TRACE` env fallback,
+    /// else none (tracing off).
+    pub fn resolve_trace(&self) -> Option<String> {
+        match self.trace {
+            Some(p) if !p.is_empty() => Some(p.to_string()),
+            Some(_) => None,
+            None => Self::trace_from_env(),
+        }
+    }
+
+    /// The `HGPIPE_TRACE` read-only env fallback (mirrors the other
+    /// `HGPIPE_*` vars: nothing in this crate mutates it). Unset or
+    /// empty means tracing stays off.
+    pub fn trace_from_env() -> Option<String> {
+        std::env::var("HGPIPE_TRACE").ok().filter(|v| !v.trim().is_empty())
     }
 
     /// The `HGPIPE_QUEUE_CAP` read-only env fallback (mirrors the other
@@ -350,6 +383,17 @@ pub trait Executor {
     /// One-time load/compile cost attributed to this variant.
     fn compile_ms(&self) -> f64;
     fn stats(&self) -> ExecStats;
+    /// Pipeline-mode executors expose their resident stages' cumulative
+    /// occupancy and stall counters so the coordinator can fold them
+    /// into `ServeMetrics`; every other executor reports `None`.
+    fn pipeline_stats(&self) -> Option<pipeline::PipelineStats> {
+        None
+    }
+    /// Drain the per-op kernel profile accumulated since the last call
+    /// — `Some` only for executors built with telemetry profiling on.
+    fn take_op_profile(&self) -> Option<interpreter::OpProfile> {
+        None
+    }
 }
 
 /// A loaded model: all batch-variant executors plus shape metadata.
@@ -452,6 +496,18 @@ pub fn load_model_from_artifact(
     cfg: RuntimeConfig,
     artifact: &ModelArtifact,
 ) -> crate::Result<LoadedModel> {
+    load_model_from_artifact_traced(cfg, artifact, &crate::telemetry::Telemetry::off())
+}
+
+/// [`load_model_from_artifact`] with a telemetry handle: pipeline
+/// stages get their own trace buffers/tids, lane-parallel executors
+/// get per-op profiling. An off handle builds exactly what
+/// [`load_model_from_artifact`] builds.
+pub fn load_model_from_artifact_traced(
+    cfg: RuntimeConfig,
+    artifact: &ModelArtifact,
+    tele: &crate::telemetry::Telemetry,
+) -> crate::Result<LoadedModel> {
     anyhow::ensure!(
         matches!(cfg.backend, BackendKind::Interpreter),
         "shared model artifacts require the interpreter backend (got '{}')",
@@ -462,10 +518,20 @@ pub fn load_model_from_artifact(
     // every resident pipeline stage built below inherits this vtable
     let kern = cfg.resolve_kernels()?;
     match cfg.mode.resolve() {
-        ExecMode::Pipeline { stages, queue_depth } => {
-            Ok(pipeline::executors_from_artifact(artifact, lanes, stages, queue_depth, kern))
-        }
-        _ => Ok(interpreter::executors_from_artifact(artifact, lanes, kern)),
+        ExecMode::Pipeline { stages, queue_depth } => Ok(pipeline::executors_from_artifact_traced(
+            artifact,
+            lanes,
+            stages,
+            queue_depth,
+            kern,
+            tele,
+        )),
+        _ => Ok(interpreter::executors_from_artifact_profiled(
+            artifact,
+            lanes,
+            kern,
+            tele.enabled(),
+        )),
     }
 }
 

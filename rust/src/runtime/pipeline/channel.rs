@@ -29,6 +29,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Stall counters for one channel, shared with the pipeline's stats
 /// snapshot (the channel endpoints move into stage threads; the
@@ -87,6 +88,33 @@ impl<T> Sender<T> {
             Err(mpsc::SendError(t)) => Err(t),
         }
     }
+
+    /// As [`send`](Sender::send), additionally reporting the wall-clock
+    /// interval the call spent parked on a full queue (`None` when it
+    /// did not block). The clock is read only on the blocked path, so
+    /// the unblocked fast path stays identical to `send` — this is the
+    /// tracing variant the stage loop switches to when telemetry is on.
+    pub(crate) fn send_timed(&self, t: T) -> Result<Option<(Instant, Instant)>, T> {
+        let t = match self.tx.try_send(t) {
+            Ok(()) => {
+                self.stats.sends.fetch_add(1, Ordering::Relaxed);
+                return Ok(None);
+            }
+            Err(TrySendError::Disconnected(t)) => return Err(t),
+            Err(TrySendError::Full(t)) => {
+                self.stats.blocked_sends.fetch_add(1, Ordering::Relaxed);
+                t
+            }
+        };
+        let t0 = Instant::now();
+        match self.tx.send(t) {
+            Ok(()) => {
+                self.stats.sends.fetch_add(1, Ordering::Relaxed);
+                Ok(Some((t0, Instant::now())))
+            }
+            Err(mpsc::SendError(t)) => Err(t),
+        }
+    }
 }
 
 /// Consuming endpoint.
@@ -106,6 +134,22 @@ impl<T> Receiver<T> {
             Err(TryRecvError::Empty) => {
                 self.stats.blocked_recvs.fetch_add(1, Ordering::Relaxed);
                 self.rx.recv().ok()
+            }
+        }
+    }
+
+    /// As [`recv`](Receiver::recv), additionally reporting the
+    /// wall-clock interval spent parked on an empty queue (`None` when
+    /// an item was ready). Clock reads only happen on the blocked path.
+    pub(crate) fn recv_timed(&self) -> (Option<T>, Option<(Instant, Instant)>) {
+        match self.rx.try_recv() {
+            Ok(t) => (Some(t), None),
+            Err(TryRecvError::Disconnected) => (None, None),
+            Err(TryRecvError::Empty) => {
+                self.stats.blocked_recvs.fetch_add(1, Ordering::Relaxed);
+                let t0 = Instant::now();
+                let got = self.rx.recv().ok();
+                (got, Some((t0, Instant::now())))
             }
         }
     }
@@ -188,6 +232,37 @@ mod tests {
         tx.send(9u8).unwrap();
         assert_eq!(h.join().unwrap(), Some(9));
         assert_eq!(stats.blocked_recvs.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn timed_send_reports_the_blocked_interval() {
+        let (tx, rx, stats) = bounded(1);
+        assert_eq!(tx.send_timed(1u8).unwrap(), None, "uncontended send does not block");
+        let h = std::thread::spawn(move || tx.send_timed(2));
+        while stats.blocked_sends.load(Ordering::Relaxed) == 0 {
+            std::thread::yield_now();
+        }
+        assert_eq!(rx.recv(), Some(1));
+        let stall = h.join().unwrap().unwrap().expect("blocked send reports an interval");
+        assert!(stall.1 >= stall.0);
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(stats.sends.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn timed_recv_reports_the_blocked_interval() {
+        let (tx, rx, stats) = bounded(2);
+        tx.send(5u8).unwrap();
+        assert_eq!(rx.recv_timed(), (Some(5), None), "ready item does not block");
+        let h = std::thread::spawn(move || rx.recv_timed());
+        while stats.blocked_recvs.load(Ordering::Relaxed) == 0 {
+            std::thread::yield_now();
+        }
+        tx.send(6u8).unwrap();
+        let (got, stall) = h.join().unwrap();
+        assert_eq!(got, Some(6));
+        let (s, e) = stall.expect("blocked recv reports an interval");
+        assert!(e >= s);
     }
 
     #[test]

@@ -325,6 +325,19 @@ impl Pipeline {
     /// Spatially unroll `net` into resident stages. Threads spawn here
     /// and park on their input FIFOs until images arrive.
     pub fn new(net: Arc<QuantViT>, cfg: PipelineConfig) -> Self {
+        Self::new_traced(net, cfg, &crate::telemetry::Telemetry::off())
+    }
+
+    /// As [`new`](Pipeline::new), additionally wiring each resident
+    /// stage to `tele`: every stage gets its own named trace tid and
+    /// ring buffer, and records per-tile residency, stall intervals and
+    /// per-op kernel spans. An off handle builds the exact untraced
+    /// pipeline — stages receive no buffer and skip every clock read.
+    pub fn new_traced(
+        net: Arc<QuantViT>,
+        cfg: PipelineConfig,
+        tele: &crate::telemetry::Telemetry,
+    ) -> Self {
         let depth = net.depth;
         let stages = resolve_stage_count(depth, cfg.stages);
         let queue_depth = cfg.queue_depth.max(1);
@@ -384,6 +397,11 @@ impl Pipeline {
             let rx_stage = cur_rx.take().expect("one receiver per stage");
             let net2 = net.clone();
             let shared2 = shared.clone();
+            // each stage owns its trace buffer + named tid; None keeps
+            // the loop on the untraced (clock-free) path
+            let stage_tele = tele
+                .buffer()
+                .map(|buf| (buf, tele.alloc_tid(&format!("stage{si}"))));
             LIVE_STAGES.fetch_add(1, Ordering::SeqCst);
             let handle = std::thread::Builder::new()
                 .name(format!("hgpipe-stage-{si}"))
@@ -396,7 +414,9 @@ impl Pipeline {
                         }
                     }
                     let _live = Live;
-                    stage::stage_loop(net2, spec, rx_stage, out, shared2, stage_pool, kern);
+                    stage::stage_loop(
+                        net2, spec, rx_stage, out, shared2, stage_pool, kern, stage_tele,
+                    );
                 });
             let handle = match handle {
                 Ok(h) => h,
@@ -624,6 +644,10 @@ impl Executor for PipelineExecutor {
     fn stats(&self) -> ExecStats {
         *self.stats.lock().unwrap()
     }
+
+    fn pipeline_stats(&self) -> Option<PipelineStats> {
+        Some(self.pipe.stats())
+    }
 }
 
 /// Load a model's bundle and spatially unroll it into a resident-stage
@@ -653,11 +677,33 @@ pub fn executors_from_artifact(
     queue_depth: usize,
     kern: &'static Kernels,
 ) -> LoadedModel {
+    executors_from_artifact_traced(
+        artifact,
+        lanes,
+        stages,
+        queue_depth,
+        kern,
+        &crate::telemetry::Telemetry::off(),
+    )
+}
+
+/// [`executors_from_artifact`] with a telemetry handle: the resident
+/// stages record residency/stall/op spans onto per-stage tids of the
+/// handle's trace process.
+pub fn executors_from_artifact_traced(
+    artifact: &ModelArtifact,
+    lanes: usize,
+    stages: usize,
+    queue_depth: usize,
+    kern: &'static Kernels,
+    tele: &crate::telemetry::Telemetry,
+) -> LoadedModel {
     let net = artifact.net().clone();
     let t0 = Instant::now();
-    let pipe = Arc::new(Pipeline::new(
+    let pipe = Arc::new(Pipeline::new_traced(
         net.clone(),
         PipelineConfig { stages, queue_depth, lanes, kernels: kern, ..Default::default() },
+        tele,
     ));
     let load_ms = artifact.load_ms() + t0.elapsed().as_secs_f64() * 1e3;
     let executors: Vec<Box<dyn Executor>> = artifact

@@ -15,8 +15,9 @@ use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 use crate::runtime::fabric::{Exec, LanePool, LaneScratch};
-use crate::runtime::interpreter::{OpClock, QuantViT};
+use crate::runtime::interpreter::{OpClock, OpProfile, QuantViT};
 use crate::runtime::kernels::Kernels;
+use crate::telemetry::{TraceBuf, TraceEvent};
 
 use super::channel;
 
@@ -87,15 +88,35 @@ pub(crate) fn stage_loop(
     // the kernel backend resolved once at model load; serial stages
     // drive it directly, pooled stages carry it inside their pool
     kernels: &'static Kernels,
+    // trace buffer + named tid when telemetry is on; `None` keeps the
+    // loop on the original clock-free path (plain send/recv, detached
+    // op clock, zero Instant reads beyond the busy_ns accounting)
+    mut tele: Option<(TraceBuf, u64)>,
 ) {
-    // stage-resident state: the scratch box and a detached op clock —
-    // nobody reads a per-op profile here, so the segments' lap calls
-    // cost zero clock reads
+    // stage-resident state: the scratch box (the op clock is per tile —
+    // detached unless this stage traces, so the segments' lap calls
+    // cost zero clock reads on the untraced path)
     let mut scratch = Box::<LaneScratch>::default();
-    let mut clk = OpClock::detached();
 
-    while let Some(mut w) = rx.recv() {
+    loop {
+        // a recv that parks on an empty input FIFO is a fill/drain
+        // bubble — traced stages record the parked interval as a span
+        let (got, stall_in) = match &tele {
+            Some(_) => rx.recv_timed(),
+            None => (rx.recv(), None),
+        };
+        let Some(mut w) = got else { break };
+        if let Some((buf, tid)) = &mut tele {
+            if let Some((s, e)) = stall_in {
+                let ts = buf.ts(s);
+                let dur = buf.ts(e).saturating_sub(ts);
+                let pid = buf.pid();
+                buf.push(TraceEvent::span("blocked_recv", "stall", pid, *tid, ts, dur));
+            }
+        }
         let t0 = Instant::now();
+        let traced = tele.is_some();
+        let mut prof = OpProfile::default();
         // contain a panicking kernel: park its message where run_batch
         // can attach it to the error, then exit (dropping the endpoints
         // cascades the shutdown; the stage is not reusable after this)
@@ -104,6 +125,10 @@ pub(crate) fn stage_loop(
             let mut exec = match &pool {
                 Some(p) => Exec::pool(p),
                 None => Exec::serial(band, kernels),
+            };
+            let mut clk = match traced {
+                true => OpClock::attached(&mut prof),
+                false => OpClock::detached(),
             };
             if spec.embed {
                 net.embed_into(&w.tokens, &mut w.x, pass, &mut exec, &mut clk);
@@ -133,13 +158,50 @@ pub(crate) fn stage_loop(
         };
         shared.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         shared.images.fetch_add(1, Ordering::Relaxed);
+        if let Some((buf, tid)) = &mut tele {
+            // one residency span per tile, with the per-op kernel spans
+            // nested inside it
+            let ts = buf.ts(t0);
+            let end = buf.now().max(ts);
+            let pid = buf.pid();
+            buf.push(
+                TraceEvent::span("tile", "stage", pid, *tid, ts, end - ts)
+                    .with_id(w.idx as u64),
+            );
+            buf.push_op_spans(*tid, ts, end, &prof.named_ms());
+        }
 
         match &tx {
             StageOut::Next(next) => {
-                if next.send(w).is_err() {
-                    // downstream stage is gone; stop consuming so the
-                    // shutdown cascades upstream through our rx drop
-                    break;
+                // a send parked on a full output FIFO is backpressure —
+                // traced stages record the parked interval
+                let sent = match &tele {
+                    Some(_) => next.send_timed(w),
+                    None => next.send(w).map(|()| None),
+                };
+                match sent {
+                    Ok(stall_out) => {
+                        if let Some((buf, tid)) = &mut tele {
+                            if let Some((s, e)) = stall_out {
+                                let ts = buf.ts(s);
+                                let dur = buf.ts(e).saturating_sub(ts);
+                                let pid = buf.pid();
+                                buf.push(TraceEvent::span(
+                                    "blocked_send",
+                                    "stall",
+                                    pid,
+                                    *tid,
+                                    ts,
+                                    dur,
+                                ));
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        // downstream stage is gone; stop consuming so the
+                        // shutdown cascades upstream through our rx drop
+                        break;
+                    }
                 }
             }
             StageOut::Done { logits: out, recycle } => {
@@ -150,5 +212,9 @@ pub(crate) fn stage_loop(
                 recycle.lock().unwrap_or_else(PoisonError::into_inner).push(w);
             }
         }
+        if let Some((buf, _)) = &mut tele {
+            buf.maybe_flush(256);
+        }
     }
+    // TraceBuf's Drop flushes whatever the ring still holds
 }

@@ -1,0 +1,713 @@
+//! Zero-cost-when-off telemetry: per-request trace spans recorded into
+//! per-thread ring buffers and drained by a writer thread into
+//! Chrome-trace-compatible JSONL (opens directly in Perfetto or
+//! `chrome://tracing`).
+//!
+//! Design contract:
+//! - One [`Telemetry`] handle per serving stack (cheap `Arc` clone).
+//!   When tracing is off the handle holds `None` and every recording
+//!   call is a single branch — no locks, no clock reads, no allocation.
+//! - Recording threads own a [`TraceBuf`]: a fixed-capacity ring that
+//!   drops the OLDEST events on overflow (counted, surfaced as
+//!   `trace_dropped`) and flushes in batches over an mpsc channel to a
+//!   dedicated writer thread, so the hot path never touches a lock or
+//!   a file descriptor.
+//! - Events follow the Chrome trace event format: `X` complete spans
+//!   (`ts`/`dur` in microseconds), `M` metadata events naming pids and
+//!   tids, `i` instants, and one final `C` counter carrying the drop
+//!   total. pid = model, tid = replica / pipeline stage / client.
+//! - The file's first line is `[` and every event line ends with a
+//!   comma; Chrome's trace importer explicitly tolerates the missing
+//!   `]`, and each line stays individually parseable after stripping
+//!   the trailing comma (the `util::tracecheck` contract).
+//!
+//! Handles for the same output path share one writer (a process-global
+//! registry keyed on the path), so a `Router` fleet of several
+//! `ModelServer`s — or several tests in one process — interleave into
+//! a single well-formed trace.
+
+use std::borrow::Cow;
+use std::collections::{HashMap, VecDeque};
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+use crate::runtime::RuntimeConfig;
+
+/// Default per-thread ring capacity, in events. A thread that outruns
+/// its flushes overwrites its oldest events (counted, never blocking).
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// One Chrome-trace event. `ph`: `X` complete span, `M` metadata,
+/// `i` instant, `C` counter.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub ph: char,
+    pub name: Cow<'static, str>,
+    pub cat: &'static str,
+    pub pid: u32,
+    pub tid: u64,
+    /// Microseconds since the trace epoch.
+    pub ts_us: u64,
+    /// Span duration in microseconds (`X` events only).
+    pub dur_us: u64,
+    /// Request id, rendered as `args.id`.
+    pub id: Option<u64>,
+    /// Batch size (or counter value for `C`), rendered as `args.batch`.
+    pub batch: Option<u64>,
+    /// Free-form annotation, rendered as `args.note` (`args.name` for
+    /// `M` metadata events).
+    pub note: Option<String>,
+}
+
+impl TraceEvent {
+    pub fn span(
+        name: impl Into<Cow<'static, str>>,
+        cat: &'static str,
+        pid: u32,
+        tid: u64,
+        ts_us: u64,
+        dur_us: u64,
+    ) -> Self {
+        TraceEvent {
+            ph: 'X',
+            name: name.into(),
+            cat,
+            pid,
+            tid,
+            ts_us,
+            dur_us,
+            id: None,
+            batch: None,
+            note: None,
+        }
+    }
+
+    pub fn instant(
+        name: impl Into<Cow<'static, str>>,
+        cat: &'static str,
+        pid: u32,
+        tid: u64,
+        ts_us: u64,
+    ) -> Self {
+        TraceEvent { ph: 'i', ..TraceEvent::span(name, cat, pid, tid, ts_us, 0) }
+    }
+
+    fn meta(kind: &'static str, pid: u32, tid: u64, label: String) -> Self {
+        TraceEvent { ph: 'M', note: Some(label), ..TraceEvent::span(kind, "meta", pid, tid, 0, 0) }
+    }
+
+    pub fn with_id(mut self, id: u64) -> Self {
+        self.id = Some(id);
+        self
+    }
+
+    pub fn with_batch(mut self, n: u64) -> Self {
+        self.batch = Some(n);
+        self
+    }
+
+    pub fn with_note(mut self, note: impl Into<String>) -> Self {
+        self.note = Some(note.into());
+        self
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one event as a JSONL line (trailing comma + newline: the
+/// Chrome array form whose closing bracket is optional).
+fn render(ev: &TraceEvent, out: &mut String) {
+    let _ = write!(
+        out,
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{}\",\"pid\":{},\"tid\":{}",
+        esc(&ev.name),
+        ev.cat,
+        ev.ph,
+        ev.pid,
+        ev.tid
+    );
+    if ev.ph != 'M' {
+        let _ = write!(out, ",\"ts\":{}", ev.ts_us);
+    }
+    if ev.ph == 'X' {
+        let _ = write!(out, ",\"dur\":{}", ev.dur_us);
+    }
+    let mut args = String::new();
+    match ev.ph {
+        'M' => {
+            if let Some(n) = &ev.note {
+                let _ = write!(args, "\"name\":\"{}\"", esc(n));
+            }
+        }
+        'C' => {
+            let _ = write!(args, "\"dropped\":{}", ev.batch.unwrap_or(0));
+        }
+        _ => {
+            if let Some(id) = ev.id {
+                let _ = write!(args, "\"id\":{id}");
+            }
+            if let Some(b) = ev.batch {
+                let _ = write!(args, "{}\"batch\":{b}", if args.is_empty() { "" } else { "," });
+            }
+            if let Some(n) = &ev.note {
+                let _ = write!(
+                    args,
+                    "{}\"note\":\"{}\"",
+                    if args.is_empty() { "" } else { "," },
+                    esc(n)
+                );
+            }
+        }
+    }
+    if !args.is_empty() {
+        let _ = write!(out, ",\"args\":{{{args}}}");
+    }
+    out.push_str("},\n");
+}
+
+struct Batch {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+struct TraceInner {
+    id: u64,
+    path: String,
+    epoch: Instant,
+    ring_cap: usize,
+    tx: Mutex<Option<mpsc::Sender<Batch>>>,
+    writer: Mutex<Option<std::thread::JoinHandle<()>>>,
+    closing: Arc<AtomicBool>,
+    dropped: Arc<AtomicU64>,
+    written: Arc<AtomicU64>,
+    next_pid: AtomicU32,
+    next_tid: AtomicU64,
+}
+
+impl TraceInner {
+    fn spawn(path: &str, ring_cap: usize) -> crate::Result<Arc<TraceInner>> {
+        static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("cannot open trace file {path:?}: {e}"))?;
+        let mut w = std::io::BufWriter::new(file);
+        writeln!(w, "[").map_err(|e| anyhow::anyhow!("cannot write trace file {path:?}: {e}"))?;
+        let (tx, rx) = mpsc::channel::<Batch>();
+        let epoch = Instant::now();
+        let closing = Arc::new(AtomicBool::new(false));
+        let dropped = Arc::new(AtomicU64::new(0));
+        let written = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let (closing, dropped, written) = (closing.clone(), dropped.clone(), written.clone());
+            std::thread::Builder::new()
+                .name("hgpipe-trace-writer".into())
+                .spawn(move || {
+                    let mut line = String::new();
+                    let mut take = |w: &mut std::io::BufWriter<std::fs::File>, b: Batch| {
+                        for ev in &b.events {
+                            line.clear();
+                            render(ev, &mut line);
+                            let _ = w.write_all(line.as_bytes());
+                        }
+                        written.fetch_add(b.events.len() as u64, Ordering::Relaxed);
+                        if b.dropped > 0 {
+                            dropped.fetch_add(b.dropped, Ordering::Relaxed);
+                        }
+                    };
+                    loop {
+                        match rx.recv_timeout(Duration::from_millis(50)) {
+                            Ok(b) => {
+                                take(&mut w, b);
+                                let _ = w.flush();
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                if closing.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                    // drain anything that raced with the close
+                    while let Ok(b) = rx.try_recv() {
+                        take(&mut w, b);
+                    }
+                    let d = dropped.load(Ordering::Relaxed);
+                    if d > 0 {
+                        // droppage is visible in the trace itself
+                        let ev = TraceEvent {
+                            ph: 'C',
+                            batch: Some(d),
+                            ..TraceEvent::span(
+                                "trace_dropped",
+                                "telemetry",
+                                0,
+                                0,
+                                epoch.elapsed().as_micros() as u64,
+                                0,
+                            )
+                        };
+                        let mut line = String::new();
+                        render(&ev, &mut line);
+                        let _ = w.write_all(line.as_bytes());
+                    }
+                    let _ = w.flush();
+                })
+                .map_err(|e| anyhow::anyhow!("cannot spawn trace writer: {e}"))?
+        };
+        Ok(Arc::new(TraceInner {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            path: path.to_string(),
+            epoch,
+            ring_cap: ring_cap.max(1),
+            tx: Mutex::new(Some(tx)),
+            writer: Mutex::new(Some(handle)),
+            closing,
+            dropped,
+            written,
+            next_pid: AtomicU32::new(1),
+            next_tid: AtomicU64::new(1),
+        }))
+    }
+
+    fn emit_now(&self, ev: TraceEvent) {
+        if let Some(tx) = self.tx.lock().unwrap().as_ref() {
+            let _ = tx.send(Batch { events: vec![ev], dropped: 0 });
+        }
+    }
+
+    fn close(&self) {
+        self.closing.store(true, Ordering::SeqCst);
+        *self.tx.lock().unwrap() = None;
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TraceInner {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Weak<TraceInner>>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, Weak<TraceInner>>>> = OnceLock::new();
+    REGISTRY.get_or_init(Default::default)
+}
+
+thread_local! {
+    static TLS_BUFS: std::cell::RefCell<Vec<(u64, TraceBuf)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// The telemetry handle. Off by default; every recording entry point
+/// is a no-op branch when off.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<TraceInner>>,
+    pid: u32,
+}
+
+impl Telemetry {
+    /// The disabled handle: every call is a branch + nothing.
+    pub fn off() -> Telemetry {
+        Telemetry::default()
+    }
+
+    /// Open (or join) the trace sink at `path`. Handles for the same
+    /// path share one writer thread and one epoch.
+    pub fn to_file(path: &str) -> crate::Result<Telemetry> {
+        Telemetry::to_file_with_ring(path, DEFAULT_RING_CAPACITY)
+    }
+
+    /// As [`to_file`](Telemetry::to_file) with an explicit per-thread
+    /// ring capacity (only honored when this call creates the sink).
+    pub fn to_file_with_ring(path: &str, ring_cap: usize) -> crate::Result<Telemetry> {
+        let mut reg = registry().lock().unwrap();
+        if let Some(inner) = reg.get(path).and_then(Weak::upgrade) {
+            if !inner.closing.load(Ordering::Relaxed) {
+                return Ok(Telemetry { inner: Some(inner), pid: 0 });
+            }
+        }
+        let inner = TraceInner::spawn(path, ring_cap)?;
+        reg.insert(path.to_string(), Arc::downgrade(&inner));
+        Ok(Telemetry { inner: Some(inner), pid: 0 })
+    }
+
+    /// Resolve tracing from the config: an explicit
+    /// `RuntimeConfig::trace` path wins (and an unopenable one is an
+    /// error — the caller asked for it); the `HGPIPE_TRACE` env
+    /// fallback warns and disables instead, matching the other
+    /// `HGPIPE_*` read-only fallbacks.
+    pub fn from_config(cfg: &RuntimeConfig) -> crate::Result<Telemetry> {
+        if let Some(p) = cfg.trace {
+            if p.is_empty() {
+                return Ok(Telemetry::off());
+            }
+            return Telemetry::to_file(p);
+        }
+        match RuntimeConfig::trace_from_env() {
+            Some(p) => match Telemetry::to_file(&p) {
+                Ok(t) => Ok(t),
+                Err(e) => {
+                    eprintln!("warning: HGPIPE_TRACE={p:?} is unusable ({e}); tracing disabled");
+                    Ok(Telemetry::off())
+                }
+            },
+            None => Ok(Telemetry::off()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The output path, when tracing is on.
+    pub fn path(&self) -> Option<&str> {
+        self.inner.as_deref().map(|i| i.path.as_str())
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    /// A handle scoped to one model: allocates a fresh pid and names it
+    /// (Chrome `process_name` metadata). Each `for_model` call gets its
+    /// own pid, so hot-swapped versions stay distinguishable.
+    pub fn for_model(&self, name: &str) -> Telemetry {
+        let Some(inner) = &self.inner else { return Telemetry::off() };
+        let pid = inner.next_pid.fetch_add(1, Ordering::Relaxed);
+        inner.emit_now(TraceEvent::meta("process_name", pid, 0, name.to_string()));
+        inner.emit_now(TraceEvent::meta("thread_name", pid, 0, "client".to_string()));
+        Telemetry { inner: Some(inner.clone()), pid }
+    }
+
+    /// Allocate a named tid (replica or stage lane). Returns 0 when off.
+    pub fn alloc_tid(&self, label: &str) -> u64 {
+        let Some(inner) = &self.inner else { return 0 };
+        let tid = inner.next_tid.fetch_add(1, Ordering::Relaxed);
+        inner.emit_now(TraceEvent::meta("thread_name", self.pid, tid, label.to_string()));
+        tid
+    }
+
+    /// An owned per-thread ring buffer for a long-running loop (replica
+    /// executor, pipeline stage). `None` when tracing is off or closed.
+    pub fn buffer(&self) -> Option<TraceBuf> {
+        let cap = self.inner.as_ref()?.ring_cap;
+        self.buffer_with_capacity(cap)
+    }
+
+    /// As [`buffer`](Telemetry::buffer) with an explicit ring capacity.
+    pub fn buffer_with_capacity(&self, cap: usize) -> Option<TraceBuf> {
+        let inner = self.inner.as_ref()?;
+        let tx = inner.tx.lock().unwrap().clone()?;
+        Some(TraceBuf {
+            ring: VecDeque::with_capacity(cap.min(1024)),
+            cap: cap.max(1),
+            dropped: 0,
+            tx,
+            epoch: inner.epoch,
+            pid: self.pid,
+        })
+    }
+
+    /// Record through this thread's cached buffer (lazily created, one
+    /// per sink per thread, flushed at a watermark and on thread exit).
+    /// For call sites that don't own a loop — e.g. request admission.
+    pub fn record(&self, f: impl FnOnce(&mut TraceBuf)) {
+        let Some(inner) = &self.inner else { return };
+        TLS_BUFS.with(|cell| {
+            let mut bufs = cell.borrow_mut();
+            if let Some((_, b)) = bufs.iter_mut().find(|(id, _)| *id == inner.id) {
+                f(b);
+                b.maybe_flush(64);
+                return;
+            }
+            if let Some(mut b) = self.buffer() {
+                f(&mut b);
+                b.maybe_flush(64);
+                bufs.push((inner.id, b));
+            }
+        });
+    }
+
+    /// Microseconds since the trace epoch (0 when off).
+    pub fn ts_us(&self, t: Instant) -> u64 {
+        match &self.inner {
+            Some(i) => t.checked_duration_since(i.epoch).unwrap_or_default().as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    pub fn now_us(&self) -> u64 {
+        match &self.inner {
+            Some(i) => i.epoch.elapsed().as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    /// Total events dropped to ring overflow (as of the last flushes).
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.dropped.load(Ordering::Relaxed))
+    }
+
+    /// Total events written to the sink.
+    pub fn written(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.written.load(Ordering::Relaxed))
+    }
+
+    /// Flush this thread's cached buffer and shut the writer down
+    /// (joins it). Buffers still held by other threads keep counting
+    /// drops but stop reaching the file. Idempotent.
+    pub fn finish(&self) {
+        let Some(inner) = &self.inner else { return };
+        TLS_BUFS.with(|cell| {
+            cell.borrow_mut().retain_mut(|(id, b)| {
+                if *id == inner.id {
+                    b.flush();
+                    false
+                } else {
+                    true
+                }
+            })
+        });
+        inner.close();
+    }
+}
+
+/// A thread-owned event ring: plain local writes on push, drop-oldest
+/// on overflow (counted), batch-flushed to the writer thread.
+pub struct TraceBuf {
+    ring: VecDeque<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+    tx: mpsc::Sender<Batch>,
+    epoch: Instant,
+    pid: u32,
+}
+
+impl TraceBuf {
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    /// Microseconds since the trace epoch.
+    pub fn ts(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch).unwrap_or_default().as_micros() as u64
+    }
+
+    pub fn now(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(ev);
+    }
+
+    /// Lay per-op kernel spans back-to-back from `start_us` on `tid`,
+    /// clamped to end no later than `end_us` so they always nest inside
+    /// the parent span that measured them (µs rounding can otherwise
+    /// overhang it). Ops with sub-microsecond totals are elided.
+    pub fn push_op_spans(
+        &mut self,
+        tid: u64,
+        start_us: u64,
+        end_us: u64,
+        ops: &[(&'static str, f64)],
+    ) {
+        let pid = self.pid;
+        let mut t = start_us;
+        for &(name, ms) in ops {
+            if t >= end_us {
+                break;
+            }
+            let dur = ((ms * 1e3) as u64).min(end_us - t);
+            if dur == 0 {
+                continue;
+            }
+            self.push(TraceEvent::span(name, "op", pid, tid, t, dur));
+            t += dur;
+        }
+    }
+
+    pub fn maybe_flush(&mut self, watermark: usize) {
+        if self.ring.len() >= watermark {
+            self.flush();
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if self.ring.is_empty() && self.dropped == 0 {
+            return;
+        }
+        let b = Batch {
+            events: self.ring.drain(..).collect(),
+            dropped: std::mem::take(&mut self.dropped),
+        };
+        let _ = self.tx.send(b);
+    }
+}
+
+impl Drop for TraceBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{BackendKind, RuntimeConfig};
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("hgpipe_tele_{}_{name}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn off_handle_is_inert() {
+        let t = Telemetry::off();
+        assert!(!t.enabled());
+        assert!(t.buffer().is_none());
+        assert_eq!(t.ts_us(Instant::now()), 0);
+        assert_eq!(t.alloc_tid("x"), 0);
+        assert!(!t.for_model("m").enabled());
+        let mut called = false;
+        t.record(|_| called = true);
+        assert!(!called, "record must not run the closure when tracing is off");
+        t.finish();
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let path = tmp("overflow");
+        let t = Telemetry::to_file_with_ring(&path, 4).expect("open trace");
+        let tm = t.for_model("m");
+        let mut buf = tm.buffer_with_capacity(4).expect("buffer");
+        for i in 0..10u64 {
+            let ev = TraceEvent::span("ev", "op", buf.pid(), 1, i, 1).with_id(i);
+            buf.push(ev);
+        }
+        buf.flush();
+        drop(buf);
+        t.finish();
+        assert_eq!(t.dropped(), 6);
+        let text = std::fs::read_to_string(&path).expect("trace file");
+        let survivors: Vec<&str> =
+            text.lines().filter(|l| l.contains("\"name\":\"ev\"")).collect();
+        assert_eq!(survivors.len(), 4, "ring of 4 keeps the 4 newest events");
+        for want in 6..10 {
+            assert!(
+                text.contains(&format!("\"id\":{want}")),
+                "newest event {want} must survive"
+            );
+        }
+        assert!(!text.contains("\"id\":0,") && !text.contains("\"id\":0}"));
+        assert!(
+            text.contains("\"dropped\":6"),
+            "the drop total is a counter event in the trace: {text}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn same_path_shares_one_sink() {
+        let path = tmp("shared");
+        let t1 = Telemetry::to_file(&path).expect("open").for_model("a");
+        let t2 = Telemetry::to_file(&path).expect("join").for_model("b");
+        t1.record(|b| {
+            let ev = TraceEvent::span("from_a", "op", b.pid(), 1, 0, 1);
+            b.push(ev);
+        });
+        t2.record(|b| {
+            let ev = TraceEvent::span("from_b", "op", b.pid(), 1, 0, 1);
+            b.push(ev);
+        });
+        t1.finish();
+        let text = std::fs::read_to_string(&path).expect("trace file");
+        assert!(text.contains("from_a") && text.contains("from_b"));
+        assert_ne!(t1.pid(), t2.pid(), "each for_model gets its own pid");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn every_line_is_parseable_json() {
+        let path = tmp("parse");
+        let t = Telemetry::to_file(&path).expect("open").for_model("quoted \"model\"");
+        let tid = t.alloc_tid("replica0");
+        t.record(|b| {
+            let pid = b.pid();
+            let ev = TraceEvent::span("exec", "request", pid, tid, 10, 50)
+                .with_id(7)
+                .with_batch(2)
+                .with_note("line\nbreak");
+            b.push(ev);
+            b.push(TraceEvent::instant("expired", "request", pid, tid, 99).with_id(8));
+        });
+        t.finish();
+        let text = std::fs::read_to_string(&path).expect("trace file");
+        let mut events = 0;
+        for line in text.lines() {
+            let line = line.trim().trim_end_matches(',');
+            if line.is_empty() || line == "[" {
+                continue;
+            }
+            let v = crate::util::json::Json::parse(line)
+                .unwrap_or_else(|e| panic!("unparseable trace line {line:?}: {e}"));
+            assert!(v.get("name").is_some() && v.get("ph").is_some());
+            events += 1;
+        }
+        assert!(events >= 5, "metadata + recorded events expected, got {events}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn explicit_config_path_beats_env() {
+        let path = tmp("explicit");
+        let leaked: &'static str = Box::leak(path.clone().into_boxed_str());
+        let cfg = RuntimeConfig::new(BackendKind::Interpreter).with_trace(Some(leaked));
+        let t = Telemetry::from_config(&cfg).expect("explicit trace path opens");
+        assert!(t.enabled());
+        assert_eq!(t.path(), Some(path.as_str()));
+        t.finish();
+        // explicit empty string disables even when HGPIPE_TRACE is set
+        let off = Telemetry::from_config(
+            &RuntimeConfig::new(BackendKind::Interpreter).with_trace(Some("")),
+        )
+        .expect("empty trace path is off");
+        assert!(!off.enabled());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn explicit_unopenable_path_is_an_error() {
+        let cfg = RuntimeConfig::new(BackendKind::Interpreter)
+            .with_trace(Some("/nonexistent-dir/definitely/not/here.jsonl"));
+        assert!(Telemetry::from_config(&cfg).is_err());
+    }
+}

@@ -5,8 +5,8 @@
 //! Two independent checks:
 //!
 //! * [`schema_errors`] — the bench artifact must contain every field the
-//!   README documents (including the `scale_out`, `kernels`, `faults`
-//!   and `memory` sections), so the schema
+//!   README documents (including the `scale_out`, `kernels`, `faults`,
+//!   `telemetry` and `memory` sections), so the schema
 //!   cannot silently drift away from the docs: the bench emits its JSON
 //!   by hand (no serde offline), and a renamed or dropped key would
 //!   otherwise only be noticed by whoever next reads the artifact.
@@ -91,6 +91,9 @@ const REQUIRED_PATHS: &[&str] = &[
     "faults.retried",
     "faults.shed",
     "faults.expired",
+    "telemetry.tracing_off_img_s",
+    "telemetry.tracing_on_img_s",
+    "telemetry.overhead_ratio",
     "memory.artifact_footprint_bytes",
     "memory.replicas",
     "memory.unshared_bytes",
@@ -262,6 +265,8 @@ mod tests {
                                  "attention": 0.4, "requant": 0.0, "head": 0.1}
   },
   "faults": {"enabled": false, "restarts": 0, "retried": 0, "shed": 0, "expired": 0},
+  "telemetry": {"tracing_off_img_s": 400.0, "tracing_on_img_s": 390.0,
+                "overhead_ratio": 1.026},
   "memory": {"artifact_footprint_bytes": 1048576, "replicas": 4,
              "unshared_bytes": 4194304, "shared_bytes": 1048576,
              "savings_ratio": 4.0, "artifact_refs": 9},
@@ -322,6 +327,19 @@ mod tests {
         assert!(
             errs.iter().any(|e| e.contains("faults.restarts")),
             "faults omission must be caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_telemetry_section_is_reported() {
+        let mut doc = sample();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("telemetry");
+        }
+        let errs = schema_errors(&doc);
+        assert!(
+            errs.iter().any(|e| e.contains("telemetry.overhead_ratio")),
+            "telemetry omission must be caught: {errs:?}"
         );
     }
 

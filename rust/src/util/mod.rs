@@ -6,6 +6,7 @@ pub mod bench;
 pub mod benchcheck;
 pub mod json;
 pub mod prng;
+pub mod tracecheck;
 
 /// Render an ASCII table (used by the report generators).
 pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {

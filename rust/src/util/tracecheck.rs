@@ -1,0 +1,341 @@
+//! Chrome-trace JSONL validation (`make trace-smoke` / `trace_check`).
+//!
+//! A trace produced by [`crate::telemetry`] must be loadable by
+//! Perfetto and internally consistent. This module checks, line by
+//! line:
+//!
+//! * every event line parses as a JSON object with the Chrome trace
+//!   required fields (`name`, `ph`, `pid`, `tid`, `ts` except for `M`
+//!   metadata, `dur` for `X` complete spans);
+//! * `ph` is one of the phases the exporter emits (`X M i C B E` —
+//!   `B`/`E` begin/end pairs are accepted and balance-checked even
+//!   though the current exporter only writes complete spans);
+//! * `X` spans on one `(pid, tid)` lane nest properly — two spans may
+//!   be disjoint or contained, never strictly partially overlapping.
+//!   Spans of category `request` are exempt: a `queue_wait` interval
+//!   for dispatch N+1 legitimately straddles the `exec` span of
+//!   dispatch N (requests arrive while a prior batch is running);
+//! * every request id is admitted exactly once per process — duplicate
+//!   non-shed `admit` instants for one `(pid, id)` mean the admission
+//!   seam double-fired.
+//!
+//! The checker is pure text-in / errors-out so the integration tests
+//! can drive it without touching the filesystem; the `trace_check`
+//! binary owns the exit codes.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// What a valid trace contained — printed by `trace_check` so the
+/// smoke test's log shows coverage, not just "ok".
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Total event lines (excluding the opening `[`).
+    pub events: usize,
+    /// Accepted `admit` instants.
+    pub admits: usize,
+    /// Shed `admit` instants (`args.note == "shed"`).
+    pub sheds: usize,
+    /// `queue_wait` spans.
+    pub queue_waits: usize,
+    /// `exec` dispatch spans.
+    pub execs: usize,
+    /// Per-tile stage residency spans.
+    pub tiles: usize,
+    /// Per-op kernel spans (cat `op`).
+    pub op_spans: usize,
+    /// Channel stall spans (cat `stall`).
+    pub stalls: usize,
+    /// Retry instants (supervised-restart requeues).
+    pub retries: usize,
+    /// Events dropped to ring overflow (the closing `C` counter).
+    pub dropped: u64,
+}
+
+/// Validate a whole trace file's text. Returns the summary and every
+/// problem found (empty = valid).
+pub fn check(text: &str) -> (TraceSummary, Vec<String>) {
+    let mut sum = TraceSummary::default();
+    let mut errors = Vec::new();
+    // per-(pid,tid) open B count, X spans (ts, end, name, cat)
+    let mut open: BTreeMap<(u64, u64), i64> = BTreeMap::new();
+    let mut spans: BTreeMap<(u64, u64), Vec<(u64, u64, String)>> = BTreeMap::new();
+    // per-(pid,id) accepted-admit count
+    let mut admits: BTreeMap<(u64, i64), usize> = BTreeMap::new();
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim().trim_end_matches(',');
+        if line.is_empty() || line == "[" || line == "]" {
+            continue;
+        }
+        let lineno = ln + 1;
+        let v = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                errors.push(format!("line {lineno}: not valid JSON: {e}"));
+                continue;
+            }
+        };
+        if v.as_obj().is_none() {
+            errors.push(format!("line {lineno}: event is not a JSON object"));
+            continue;
+        }
+        sum.events += 1;
+        let name = match v.get("name").and_then(Json::as_str) {
+            Some(n) => n.to_string(),
+            None => {
+                errors.push(format!("line {lineno}: missing string field 'name'"));
+                continue;
+            }
+        };
+        let ph = match v.get("ph").and_then(Json::as_str) {
+            Some(p) if ["X", "M", "i", "C", "B", "E"].contains(&p) => p.to_string(),
+            Some(p) => {
+                errors.push(format!("line {lineno}: unknown phase '{p}'"));
+                continue;
+            }
+            None => {
+                errors.push(format!("line {lineno}: missing string field 'ph'"));
+                continue;
+            }
+        };
+        let (Some(pid), Some(tid)) = (
+            v.get("pid").and_then(Json::as_i64).map(|n| n as u64),
+            v.get("tid").and_then(Json::as_i64).map(|n| n as u64),
+        ) else {
+            errors.push(format!("line {lineno}: missing numeric 'pid'/'tid'"));
+            continue;
+        };
+        let ts = v.get("ts").and_then(Json::as_i64);
+        if ph != "M" && ts.is_none() {
+            errors.push(format!("line {lineno}: '{name}' ({ph}) has no numeric 'ts'"));
+            continue;
+        }
+        let cat = v.get("cat").and_then(Json::as_str).unwrap_or("").to_string();
+        match ph.as_str() {
+            "X" => {
+                let Some(dur) = v.get("dur").and_then(Json::as_i64) else {
+                    errors.push(format!("line {lineno}: X span '{name}' has no 'dur'"));
+                    continue;
+                };
+                if dur < 0 {
+                    errors.push(format!("line {lineno}: X span '{name}' has negative dur"));
+                    continue;
+                }
+                let t = ts.unwrap_or(0).max(0) as u64;
+                // `request` spans are logical waiting intervals, not
+                // thread occupancy — exempt from lane nesting
+                if cat != "request" {
+                    spans
+                        .entry((pid, tid))
+                        .or_default()
+                        .push((t, t + dur as u64, name.clone()));
+                }
+            }
+            "B" => *open.entry((pid, tid)).or_default() += 1,
+            "E" => {
+                let c = open.entry((pid, tid)).or_default();
+                *c -= 1;
+                if *c < 0 {
+                    errors.push(format!(
+                        "line {lineno}: 'E' without matching 'B' on pid {pid} tid {tid}"
+                    ));
+                    *c = 0;
+                }
+            }
+            "C" if name == "trace_dropped" => {
+                sum.dropped = v
+                    .get("args")
+                    .and_then(|a| a.get("dropped"))
+                    .and_then(Json::as_i64)
+                    .unwrap_or(0)
+                    .max(0) as u64;
+            }
+            _ => {}
+        }
+        match name.as_str() {
+            "admit" if ph == "i" => {
+                let shed = v
+                    .get("args")
+                    .and_then(|a| a.get("note"))
+                    .and_then(Json::as_str)
+                    .is_some_and(|n| n == "shed");
+                if shed {
+                    sum.sheds += 1;
+                } else {
+                    sum.admits += 1;
+                    match v.get("args").and_then(|a| a.get("id")).and_then(Json::as_i64) {
+                        Some(id) => *admits.entry((pid, id)).or_default() += 1,
+                        None => errors
+                            .push(format!("line {lineno}: 'admit' instant has no args.id")),
+                    }
+                }
+            }
+            "queue_wait" => sum.queue_waits += 1,
+            "exec" => sum.execs += 1,
+            "tile" => sum.tiles += 1,
+            "retry" => sum.retries += 1,
+            _ => {}
+        }
+        if cat == "op" {
+            sum.op_spans += 1;
+        } else if cat == "stall" {
+            sum.stalls += 1;
+        }
+    }
+
+    for ((pid, tid), c) in &open {
+        if *c != 0 {
+            errors.push(format!("{c} unclosed 'B' event(s) on pid {pid} tid {tid}"));
+        }
+    }
+    for ((pid, id), c) in &admits {
+        if *c > 1 {
+            errors.push(format!("request id {id} admitted {c} times on pid {pid}"));
+        }
+    }
+    for ((pid, tid), lane) in &mut spans {
+        errors.extend(nesting_errors(lane).into_iter().map(|e| format!(
+            "pid {pid} tid {tid}: {e}"
+        )));
+    }
+    (sum, errors)
+}
+
+/// Errors only — the shape most tests want.
+pub fn trace_errors(text: &str) -> Vec<String> {
+    check(text).1
+}
+
+/// Strict-partial-overlap detection on one lane's complete spans. Two
+/// spans may be disjoint or contained (shared endpoints allowed); a
+/// span that starts inside another and ends outside it is a broken
+/// parent/child relationship.
+fn nesting_errors(lane: &mut [(u64, u64, String)]) -> Vec<String> {
+    // parents first: by start ascending, then by end descending so a
+    // containing span sorts before the spans it contains
+    lane.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+    let mut errors = Vec::new();
+    let mut stack: Vec<(u64, u64, &str)> = Vec::new();
+    for (ts, end, name) in lane.iter() {
+        while let Some(top) = stack.last() {
+            if top.1 <= *ts {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(top) = stack.last() {
+            if *end > top.1 {
+                errors.push(format!(
+                    "span '{name}' [{ts}, {end}] partially overlaps '{}' [{}, {}]",
+                    top.2, top.0, top.1
+                ));
+                continue; // don't push the malformed span as a parent
+            }
+        }
+        stack.push((*ts, *end, name));
+    }
+    errors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(s: &str) -> String {
+        format!("{s},\n")
+    }
+
+    fn valid_trace() -> String {
+        let mut t = String::from("[\n");
+        t += &ev(r#"{"name":"process_name","cat":"meta","ph":"M","pid":1,"tid":0,"args":{"name":"tiny-synth"}}"#);
+        t += &ev(r#"{"name":"thread_name","cat":"meta","ph":"M","pid":1,"tid":1,"args":{"name":"replica0"}}"#);
+        t += &ev(r#"{"name":"admit","cat":"request","ph":"i","pid":1,"tid":0,"ts":10,"args":{"id":0}}"#);
+        t += &ev(r#"{"name":"admit","cat":"request","ph":"i","pid":1,"tid":0,"ts":12,"args":{"id":1}}"#);
+        t += &ev(r#"{"name":"admit","cat":"request","ph":"i","pid":1,"tid":0,"ts":14,"args":{"id":2,"note":"shed"}}"#);
+        // queue_wait for id 1 straddles the first exec span — legal
+        t += &ev(r#"{"name":"queue_wait","cat":"request","ph":"X","pid":1,"tid":1,"ts":10,"dur":10,"args":{"id":0}}"#);
+        t += &ev(r#"{"name":"exec","cat":"dispatch","ph":"X","pid":1,"tid":1,"ts":20,"dur":30,"args":{"batch":1}}"#);
+        t += &ev(r#"{"name":"queue_wait","cat":"request","ph":"X","pid":1,"tid":1,"ts":12,"dur":48,"args":{"id":1}}"#);
+        t += &ev(r#"{"name":"gemm","cat":"op","ph":"X","pid":1,"tid":1,"ts":22,"dur":20}"#);
+        t += &ev(r#"{"name":"exec","cat":"dispatch","ph":"X","pid":1,"tid":1,"ts":60,"dur":5,"args":{"batch":1}}"#);
+        t += &ev(r#"{"name":"tile","cat":"stage","ph":"X","pid":1,"tid":2,"ts":21,"dur":8,"args":{"id":0}}"#);
+        t += &ev(r#"{"name":"blocked_recv","cat":"stall","ph":"X","pid":1,"tid":2,"ts":30,"dur":3}"#);
+        t += &ev(r#"{"name":"trace_dropped","cat":"meta","ph":"C","pid":0,"tid":0,"ts":99,"args":{"dropped":4}}"#);
+        t
+    }
+
+    #[test]
+    fn valid_trace_passes_with_summary() {
+        let (sum, errors) = check(&valid_trace());
+        assert!(errors.is_empty(), "unexpected errors: {errors:?}");
+        assert_eq!(sum.admits, 2);
+        assert_eq!(sum.sheds, 1);
+        assert_eq!(sum.queue_waits, 2);
+        assert_eq!(sum.execs, 2);
+        assert_eq!(sum.tiles, 1);
+        assert_eq!(sum.op_spans, 1);
+        assert_eq!(sum.stalls, 1);
+        assert_eq!(sum.dropped, 4);
+    }
+
+    #[test]
+    fn bad_json_line_is_an_error() {
+        let t = format!("{}{{not json\n", valid_trace());
+        assert!(trace_errors(&t).iter().any(|e| e.contains("not valid JSON")));
+    }
+
+    #[test]
+    fn missing_required_fields_are_errors() {
+        let no_ts = ev(r#"{"name":"exec","cat":"dispatch","ph":"X","pid":1,"tid":1,"dur":5}"#);
+        assert!(trace_errors(&no_ts).iter().any(|e| e.contains("no numeric 'ts'")));
+        let no_dur = ev(r#"{"name":"exec","cat":"dispatch","ph":"X","pid":1,"tid":1,"ts":5}"#);
+        assert!(trace_errors(&no_dur).iter().any(|e| e.contains("no 'dur'")));
+        let bad_ph = ev(r#"{"name":"x","cat":"y","ph":"Z","pid":1,"tid":1,"ts":5}"#);
+        assert!(trace_errors(&bad_ph).iter().any(|e| e.contains("unknown phase")));
+    }
+
+    #[test]
+    fn duplicate_admit_is_an_error() {
+        let mut t = valid_trace();
+        t += &ev(r#"{"name":"admit","cat":"request","ph":"i","pid":1,"tid":0,"ts":40,"args":{"id":0}}"#);
+        assert!(trace_errors(&t).iter().any(|e| e.contains("admitted 2 times")));
+        // ...but the same id on another pid (another model) is fine
+        let mut t2 = valid_trace();
+        t2 += &ev(r#"{"name":"admit","cat":"request","ph":"i","pid":2,"tid":0,"ts":40,"args":{"id":0}}"#);
+        assert!(trace_errors(&t2).is_empty());
+    }
+
+    #[test]
+    fn unbalanced_begin_end_is_an_error() {
+        let e_only = ev(r#"{"name":"x","cat":"y","ph":"E","pid":1,"tid":1,"ts":5}"#);
+        assert!(trace_errors(&e_only).iter().any(|e| e.contains("without matching 'B'")));
+        let b_only = ev(r#"{"name":"x","cat":"y","ph":"B","pid":1,"tid":1,"ts":5}"#);
+        assert!(trace_errors(&b_only).iter().any(|e| e.contains("unclosed 'B'")));
+    }
+
+    #[test]
+    fn partial_overlap_on_a_checked_cat_is_an_error() {
+        let mut t = String::from("[\n");
+        t += &ev(r#"{"name":"tile","cat":"stage","ph":"X","pid":1,"tid":2,"ts":10,"dur":20,"args":{"id":0}}"#);
+        t += &ev(r#"{"name":"tile","cat":"stage","ph":"X","pid":1,"tid":2,"ts":20,"dur":20,"args":{"id":1}}"#);
+        assert!(trace_errors(&t).iter().any(|e| e.contains("partially overlaps")));
+        // contained and back-to-back spans are fine
+        let mut ok = String::from("[\n");
+        ok += &ev(r#"{"name":"tile","cat":"stage","ph":"X","pid":1,"tid":2,"ts":10,"dur":20,"args":{"id":0}}"#);
+        ok += &ev(r#"{"name":"gemm","cat":"op","ph":"X","pid":1,"tid":2,"ts":12,"dur":18}"#);
+        ok += &ev(r#"{"name":"tile","cat":"stage","ph":"X","pid":1,"tid":2,"ts":30,"dur":5,"args":{"id":1}}"#);
+        assert!(trace_errors(&ok).is_empty());
+    }
+
+    #[test]
+    fn request_cat_spans_are_exempt_from_nesting() {
+        // queue_wait straddling exec on the same tid must NOT error
+        let mut t = String::from("[\n");
+        t += &ev(r#"{"name":"exec","cat":"dispatch","ph":"X","pid":1,"tid":1,"ts":20,"dur":30}"#);
+        t += &ev(r#"{"name":"queue_wait","cat":"request","ph":"X","pid":1,"tid":1,"ts":25,"dur":40,"args":{"id":7}}"#);
+        assert!(trace_errors(&t).is_empty());
+    }
+}

@@ -1,0 +1,291 @@
+//! Telemetry acceptance suite against the golden fixture:
+//!
+//! 1. **span tree** — a traced pipeline-mode serve emits Chrome-trace
+//!    JSONL that `util::tracecheck` validates end to end: every line
+//!    parses, spans nest per thread lane, every request is admitted
+//!    exactly once, and the expected span kinds (admission, queue wait,
+//!    dispatch, stage residency, per-op kernels) are all present;
+//! 2. **chaos** — the same holds with the fault harness killing
+//!    replicas: requeued requests show up as `retry` instants, never as
+//!    duplicate admissions;
+//! 3. **zero cost when off** — logits are bit-identical to the golden
+//!    fixture with tracing off, explicitly disabled, and on;
+//! 4. **Prometheus exposition** — `Router::prometheus_text()` renders
+//!    every metric family with `model`/`version` labels (and
+//!    `replica`/`stage` for pipeline occupancy), pinned by exact line.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::faults::FaultPlan;
+use hgpipe::coordinator::{ModelServer, Router};
+use hgpipe::runtime::{BackendKind, ExecMode, RuntimeConfig};
+use hgpipe::util::tracecheck;
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&fixture_dir()).expect("committed golden fixture")
+}
+
+/// The fixture's 16 input images (flat) and their expected logits.
+fn golden_io() -> (Vec<f32>, Vec<f64>) {
+    let dir = fixture_dir();
+    let tokens = std::fs::read(dir.join("golden_tokens.bin"))
+        .unwrap()
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let logits = std::fs::read(dir.join("golden_logits.bin"))
+        .unwrap()
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    (tokens, logits)
+}
+
+/// A per-test trace path, leaked to the `&'static str` the `Copy`
+/// config carries (one small leak per test process).
+fn trace_path(name: &str) -> (String, &'static str) {
+    let path = std::env::temp_dir()
+        .join(format!("hgpipe_tele_test_{}_{name}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let leaked: &'static str = Box::leak(path.clone().into_boxed_str());
+    (path, leaked)
+}
+
+/// Injected panics are *expected* in the chaos test; filter exactly
+/// those from the hook, keep everything else loud.
+fn silence_injected_panics() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .is_some_and(|m| m.contains("faults harness"));
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[test]
+fn traced_pipeline_serve_emits_a_valid_span_tree() {
+    let manifest = manifest();
+    let (tokens, _) = golden_io();
+    let (path, leaked) = trace_path("pipeline");
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(2))
+        .with_mode(ExecMode::Pipeline { stages: 0, queue_depth: 2 })
+        .with_replicas(Some(1))
+        .with_trace(Some(leaked));
+    let server = ModelServer::start_with_config(&manifest, "tiny-synth", 2, config)
+        .expect("traced pipeline server");
+    let per = server.tokens_per_image();
+    let n = 24usize;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(tokens[(i % 16) * per..(i % 16 + 1) * per].to_vec()).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply").expect("inference ok");
+    }
+    // dropping the server joins replicas and stages (their rings flush
+    // on thread exit), then the last sink handle joins the writer
+    drop(server);
+
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let (sum, errors) = tracecheck::check(&text);
+    assert!(errors.is_empty(), "trace must validate: {errors:#?}");
+    assert_eq!(sum.admits, n, "one admission instant per accepted request");
+    assert_eq!(sum.sheds, 0);
+    assert_eq!(sum.queue_waits, n, "one queue-wait span per dispatched request");
+    assert!(sum.execs >= 1, "at least one dispatch span");
+    assert!(sum.tiles >= n, "every image crosses at least one resident stage");
+    assert!(sum.op_spans > 0, "per-op kernel spans nest inside stage tiles");
+    // the lanes are named for Perfetto's track labels
+    assert!(text.contains("process_name") && text.contains("tiny-synth"));
+    assert!(text.contains("\"name\":\"client\""));
+    assert!(text.contains("replica0") && text.contains("stage0"));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn chaos_trace_admits_each_request_exactly_once() {
+    silence_injected_panics();
+    let manifest = manifest();
+    let (tokens, _) = golden_io();
+    let (path, leaked) = trace_path("chaos");
+    let plan = FaultPlan { panic_rate: 0.15, seed: 42, ..FaultPlan::default() };
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(1))
+        .with_replicas(Some(2))
+        .with_faults(Some(plan))
+        .with_trace(Some(leaked));
+    let server = ModelServer::start_with_config(&manifest, "tiny-synth", 2, config)
+        .expect("traced chaos server");
+    let per = server.tokens_per_image();
+    let n = 64usize;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(tokens[(i % 16) * per..(i % 16 + 1) * per].to_vec()).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        rx.recv()
+            .unwrap_or_else(|_| panic!("request {i}: reply sender dropped"))
+            .unwrap_or_else(|e| panic!("request {i} failed under chaos: {e:#}"));
+    }
+    let retried = server.metrics.lock().unwrap().retried;
+    drop(server);
+
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    // tracecheck's exactly-one-admission rule is the real assertion
+    // here: a replica death must requeue (traced as `retry`), never
+    // re-admit
+    let (sum, errors) = tracecheck::check(&text);
+    assert!(errors.is_empty(), "chaos trace must validate: {errors:#?}");
+    assert_eq!(sum.admits, n);
+    if retried > 0 {
+        assert!(sum.retries > 0, "requeued requests must leave retry instants");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tracing_is_invisible_to_results() {
+    let manifest = manifest();
+    let (tokens, expected) = golden_io();
+    let images: Vec<Vec<f32>> = {
+        let per = tokens.len() / 16;
+        (0..16).map(|i| tokens[i * per..(i + 1) * per].to_vec()).collect()
+    };
+    let run = |trace: Option<&'static str>| -> Vec<Vec<f32>> {
+        let config = RuntimeConfig::new(BackendKind::Interpreter)
+            .with_lanes(Some(2))
+            .with_trace(trace);
+        let server = ModelServer::start_with_config(&manifest, "tiny-synth", 2, config)
+            .expect("server");
+        let responses = server.infer_all(images.clone()).expect("inference");
+        responses.into_iter().map(|r| r.logits).collect()
+    };
+    // explicitly off (shields the comparison from a CI-set HGPIPE_TRACE)
+    let off = run(Some(""));
+    let (path, leaked) = trace_path("bitexact");
+    let on = run(Some(leaked));
+    let nc = expected.len() / 16;
+    for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+        for (k, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "image {i} logit {k}: tracing changed bits");
+            let want = expected[i * nc + k] as f32;
+            assert_eq!(x.to_bits(), want.to_bits(), "image {i} logit {k}: golden mismatch");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn prometheus_text_exposes_every_family_with_model_version_labels() {
+    let manifest = manifest();
+    let (tokens, _) = golden_io();
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(2))
+        .with_mode(ExecMode::Pipeline { stages: 0, queue_depth: 2 })
+        .with_replicas(Some(1));
+    let router = Router::start(&manifest, &["tiny-synth".to_string()], 2, config)
+        .expect("router");
+    let server = router.server("tiny-synth").expect("routed");
+    let per = server.tokens_per_image();
+    let n = 8usize;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            router
+                .submit("tiny-synth", tokens[(i % 16) * per..(i % 16 + 1) * per].to_vec())
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply").expect("inference ok");
+    }
+    // a reply can arrive a beat before the replica records its metrics
+    let t0 = Instant::now();
+    while server.metrics.lock().unwrap().count() < n {
+        assert!(t0.elapsed() < Duration::from_secs(5), "metrics never caught up");
+        std::thread::yield_now();
+    }
+
+    let text = router.prometheus_text();
+    let labels = "model=\"tiny-synth\",version=\"v1\"";
+    // counters, with exact values
+    assert!(text.contains("# TYPE hgpipe_requests_total counter"), "{text}");
+    assert!(text.contains(&format!("hgpipe_requests_total{{{labels}}} {n}\n")), "{text}");
+    for zeroed in [
+        "hgpipe_requests_failed_total",
+        "hgpipe_requests_shed_total",
+        "hgpipe_requests_expired_total",
+        "hgpipe_requests_retried_total",
+        "hgpipe_replica_restarts_total",
+        "hgpipe_replicas_retired_total",
+    ] {
+        assert!(text.contains(&format!("{zeroed}{{{labels}}} 0\n")), "{zeroed}: {text}");
+    }
+    // gauges exist for the live version
+    assert!(text.contains("# TYPE hgpipe_live_replicas gauge"), "{text}");
+    assert!(text.contains(&format!("hgpipe_live_replicas{{{labels}}} 1\n")), "{text}");
+    assert!(text.contains(&format!("hgpipe_queue_depth{{{labels}}} 0\n")), "{text}");
+    assert!(text.contains("# TYPE hgpipe_throughput_images_per_second gauge"), "{text}");
+    // the latency summary: quantile series + _sum/_count
+    assert!(text.contains("# TYPE hgpipe_request_latency_seconds summary"), "{text}");
+    for q in ["0.5", "0.95", "0.99", "0.999"] {
+        assert!(
+            text.contains(&format!(
+                "hgpipe_request_latency_seconds{{{labels},quantile=\"{q}\"}}"
+            )),
+            "quantile {q}: {text}"
+        );
+    }
+    assert!(
+        text.contains(&format!("hgpipe_request_latency_seconds_count{{{labels}}} {n}\n")),
+        "{text}"
+    );
+    assert!(text.contains(&format!("hgpipe_request_latency_seconds_sum{{{labels}}}")), "{text}");
+    // pipeline mode: the per-stage occupancy families carry
+    // replica/stage labels (promoted from the bench into ServeMetrics)
+    for fam in [
+        "hgpipe_stage_images_total",
+        "hgpipe_stage_busy_seconds_total",
+        "hgpipe_stage_occupancy_ratio",
+        "hgpipe_stage_stalls_empty_total",
+        "hgpipe_stage_stalls_full_total",
+    ] {
+        assert!(
+            text.contains(&format!("{fam}{{{labels},replica=\"0\",stage=\"")),
+            "{fam}: {text}"
+        );
+    }
+}
+
+#[test]
+fn lane_parallel_prometheus_omits_stage_families() {
+    let manifest = manifest();
+    let (tokens, _) = golden_io();
+    let config = RuntimeConfig::new(BackendKind::Interpreter)
+        .with_lanes(Some(2))
+        .with_mode(ExecMode::LaneParallel)
+        .with_replicas(Some(1));
+    let router = Router::start(&manifest, &["tiny-synth".to_string()], 2, config)
+        .expect("router");
+    let per = router.server("tiny-synth").expect("routed").tokens_per_image();
+    let rx = router.submit("tiny-synth", tokens[..per].to_vec()).unwrap();
+    rx.recv().expect("reply").expect("inference ok");
+    let text = router.prometheus_text();
+    assert!(text.contains("hgpipe_requests_total"), "{text}");
+    assert!(
+        !text.contains("hgpipe_stage_occupancy_ratio"),
+        "lane-parallel replicas have no stages to report: {text}"
+    );
+}
