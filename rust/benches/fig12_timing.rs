@@ -18,8 +18,14 @@ fn main() {
     let r = sim::run(&pipeline, 3, 5_000_000);
     let s = sim::trace::summarize(&r, 425e6).expect("completes");
     println!("{}", sim::trace::render_gantt(&r, 100));
-    println!("stable II {} (paper 57,624) | image1 {} cycles (paper 824,843)", s.stable_ii, s.first_image_cycles);
-    println!("latency {:.3} ms (paper 0.136) | ideal {:.0} img/s (paper 7,353)", s.latency_ms, s.ideal_fps);
+    println!(
+        "stable II {} (paper 57,624) | image1 {} cycles (paper 824,843)",
+        s.stable_ii, s.first_image_cycles
+    );
+    println!(
+        "latency {:.3} ms (paper 0.136) | ideal {:.0} img/s (paper 7,353)",
+        s.latency_ms, s.ideal_fps
+    );
 
     println!("\n--- simulator throughput (before/after the §Perf pass) ---");
     let cycles = r.cycles as f64;

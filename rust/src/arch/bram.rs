@@ -27,7 +27,8 @@ pub fn fig9b_sweep(dw: u64, ci: u64, co: u64, cop: u64) -> Vec<(u64, u64, f64)> 
     let mut cip = 1;
     while cip <= ci {
         if ci % cip == 0 {
-            rows.push((cip, bram_count(dw, ci, co, cip, cop), bram_efficiency(dw, ci, co, cip, cop)));
+            let count = bram_count(dw, ci, co, cip, cop);
+            rows.push((cip, count, bram_efficiency(dw, ci, co, cip, cop)));
         }
         cip += 1;
     }

@@ -61,7 +61,11 @@ pub fn segmented_cost(depth_each: usize, entry_bits: u32, in_bits: u32) -> UnitC
 pub fn lut_mac_cost(bits: u32) -> u64 {
     // product bits = 2b, each a LUT-6 for b<=3; wider multiplies grow
     // quadratically (Karatsuba-free array multiplier), plus the adder.
-    let mult = if bits <= 3 { 2 * bits as u64 } else { (bits as u64 * bits as u64) / 2 + bits as u64 };
+    let mult = if bits <= 3 {
+        2 * bits as u64
+    } else {
+        (bits as u64 * bits as u64) / 2 + bits as u64
+    };
     let acc = (2 * bits + 4) as u64 / 2; // accumulator add, 2 bits per LUT
     mult + acc
 }

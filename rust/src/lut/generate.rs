@@ -48,7 +48,13 @@ pub fn build_table<F: Fn(f64) -> f64>(
             numerics::index_midpoint(alpha, i, shift)
         };
         let y = f(mid * in_scale);
-        entries.push(numerics::quantize_entry(y, out.scale, out.zero_point, out.qmin(), out.qmax()));
+        entries.push(numerics::quantize_entry(
+            y,
+            out.scale,
+            out.zero_point,
+            out.qmin(),
+            out.qmax(),
+        ));
     }
     LutTable {
         name: name.to_string(),
@@ -133,10 +139,14 @@ pub fn recip_table_segmented(name: &str, alpha: i64, beta: i64, in_scale: f64) -
     let alpha = alpha.max(1);
     let span = beta - alpha;
     let pivot = alpha + (span >> 3).max(1);
-    let steep_out =
-        OutQuant::unsigned(pot_out_scale(1.0 / (alpha as f64 * in_scale), RECIP_OUT_BITS, false), RECIP_OUT_BITS);
-    let flat_out =
-        OutQuant::unsigned(pot_out_scale(1.0 / (pivot as f64 * in_scale), RECIP_OUT_BITS, false), RECIP_OUT_BITS);
+    let steep_out = OutQuant::unsigned(
+        pot_out_scale(1.0 / (alpha as f64 * in_scale), RECIP_OUT_BITS, false),
+        RECIP_OUT_BITS,
+    );
+    let flat_out = OutQuant::unsigned(
+        pot_out_scale(1.0 / (pivot as f64 * in_scale), RECIP_OUT_BITS, false),
+        RECIP_OUT_BITS,
+    );
     let steep = build_table(
         &format!("{name}.steep"),
         |x| 1.0 / x,
@@ -225,7 +235,8 @@ mod tests {
     fn joint_calibration_removes_saturation() {
         let raw = requant_table("r", -100_000, 100_000, 0.001, out4());
         let sat = |e: &Vec<i64>| {
-            e.iter().filter(|&&v| v == e[0]).count() + e.iter().filter(|&&v| v == e[e.len() - 1]).count()
+            e.iter().filter(|&&v| v == e[0]).count()
+                + e.iter().filter(|&&v| v == e[e.len() - 1]).count()
         };
         let cal = joint_calibrate("r", |x| x, -100_000, 100_000, 0.001, 6, out4());
         assert!(sat(&cal.entries) < sat(&raw.entries));

@@ -241,7 +241,9 @@ impl AnyTable {
     pub fn entry_bits(&self) -> u32 {
         match self {
             AnyTable::Lut(t) => bits_needed(&t.entries),
-            AnyTable::Segmented(s) => bits_needed(&s.steep.entries).max(bits_needed(&s.flat.entries)),
+            AnyTable::Segmented(s) => {
+                bits_needed(&s.steep.entries).max(bits_needed(&s.flat.entries))
+            }
         }
     }
 }

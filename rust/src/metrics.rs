@@ -158,11 +158,81 @@ pub fn prior_art() -> Vec<AcceleratorRow> {
         scale: 1,
     };
     vec![
-        row("Deit GPU baseline", "GPU", "V100", 1455.0, "deit-tiny", 2.5, "fp32", 2529.0, 6322.5, f64::NAN, 0, f64::NAN, 250.0),
-        row("TCAS-I 2023", "GeMM", "ZCU102", 300.0, "vit-tiny", 2.5, "A8W8", 245.0, 762.7, 114.0, 1268, 648.0, 29.6),
-        row("AutoViTAcc (FPL22)", "GeMM", "ZCU102", 150.0, "deit-small", 9.2, "A4W4+A4W3", 155.8, 1418.4, 193.0, 1549, f64::NAN, 10.34),
-        row("HeatViT (HPCA23)", "GeMM", "ZCU102", 150.0, "deit-tiny", 2.5, "A8W8", 183.4, 366.8, 137.6, 1968, 355.5, 9.45),
-        row("SSR (FPGA24)", "Coarse-Grained Pipeline", "VCK190", 250.0, "deit-tiny", 2.5, "A8W8", 4545.0, 11362.5, 619.0, 14405, 1456.0, 46.0),
+        row(
+            "Deit GPU baseline",
+            "GPU",
+            "V100",
+            1455.0,
+            "deit-tiny",
+            2.5,
+            "fp32",
+            2529.0,
+            6322.5,
+            f64::NAN,
+            0,
+            f64::NAN,
+            250.0,
+        ),
+        row(
+            "TCAS-I 2023",
+            "GeMM",
+            "ZCU102",
+            300.0,
+            "vit-tiny",
+            2.5,
+            "A8W8",
+            245.0,
+            762.7,
+            114.0,
+            1268,
+            648.0,
+            29.6,
+        ),
+        row(
+            "AutoViTAcc (FPL22)",
+            "GeMM",
+            "ZCU102",
+            150.0,
+            "deit-small",
+            9.2,
+            "A4W4+A4W3",
+            155.8,
+            1418.4,
+            193.0,
+            1549,
+            f64::NAN,
+            10.34,
+        ),
+        row(
+            "HeatViT (HPCA23)",
+            "GeMM",
+            "ZCU102",
+            150.0,
+            "deit-tiny",
+            2.5,
+            "A8W8",
+            183.4,
+            366.8,
+            137.6,
+            1968,
+            355.5,
+            9.45,
+        ),
+        row(
+            "SSR (FPGA24)",
+            "Coarse-Grained Pipeline",
+            "VCK190",
+            250.0,
+            "deit-tiny",
+            2.5,
+            "A8W8",
+            4545.0,
+            11362.5,
+            619.0,
+            14405,
+            1456.0,
+            46.0,
+        ),
     ]
 }
 

@@ -114,7 +114,14 @@ pub fn fig2c() -> String {
     format!(
         "Figure 2c — paradigm comparison (simulated, DeiT-tiny)\n{}",
         ascii_table(
-            &["paradigm", "act-buffer BRAMs", "DRAM MB/inf", "ViT compat", "latency (cyc)", "stable II"],
+            &[
+                "paradigm",
+                "act-buffer BRAMs",
+                "DRAM MB/inf",
+                "ViT compat",
+                "latency (cyc)",
+                "stable II",
+            ],
             &rows
         )
     )
@@ -130,7 +137,11 @@ pub fn tab1() -> String {
                 m.spec.name.clone(),
                 format!("{}/{}={}", m.spec.t, m.tp, m.tt),
                 format!("{}/{}={}", m.spec.ci, m.cip, m.cit),
-                if m.spec.is_mm() { format!("{}/{}={}", m.spec.co, m.cop, m.cot) } else { "-".into() },
+                if m.spec.is_mm() {
+                    format!("{}/{}={}", m.spec.co, m.cop, m.cot)
+                } else {
+                    "-".into()
+                },
                 format!("{:.2}", m.mops()),
                 format!("{}", m.p),
                 format!("{}", m.ii),
@@ -140,7 +151,10 @@ pub fn tab1() -> String {
         .collect::<Vec<_>>();
     format!(
         "Table 1 — parallelism design on DeiT-tiny (computed; paper hand-crafted)\n{}accelerator II = {} (paper: 57624)\n",
-        ascii_table(&["module", "T/TP=TT", "CI/CIP=CIT", "CO/COP=COT", "MOPs", "P", "II", "eta"], &rows),
+        ascii_table(
+            &["module", "T/TP=TT", "CI/CIP=CIT", "CO/COP=COT", "MOPs", "P", "II", "eta"],
+            &rows
+        ),
         d.accelerator_ii()
     )
 }
@@ -154,9 +168,33 @@ pub fn fig9a() -> String {
         let mut p = Pipeline::default();
         let c0 = p.add_channel("s->a", ChannelKind::Fifo { cap: 4 });
         let c1 = p.add_channel("a->b", ChannelKind::Fifo { cap: 4 });
-        p.add_stage(StageSpec { name: "src".into(), block: "s".into(), cost: 2, firings_per_image: 8, inputs: vec![], outputs: vec![c0], is_source: true });
-        p.add_stage(StageSpec { name: "Matmul1".into(), block: "m1".into(), cost: cost_a, firings_per_image: 8, inputs: vec![c0], outputs: vec![c1], is_source: false });
-        let sink = p.add_stage(StageSpec { name: "Matmul2".into(), block: "m2".into(), cost: cost_b, firings_per_image: 8, inputs: vec![c1], outputs: vec![], is_source: false });
+        p.add_stage(StageSpec {
+            name: "src".into(),
+            block: "s".into(),
+            cost: 2,
+            firings_per_image: 8,
+            inputs: vec![],
+            outputs: vec![c0],
+            is_source: true,
+        });
+        p.add_stage(StageSpec {
+            name: "Matmul1".into(),
+            block: "m1".into(),
+            cost: cost_a,
+            firings_per_image: 8,
+            inputs: vec![c0],
+            outputs: vec![c1],
+            is_source: false,
+        });
+        let sink = p.add_stage(StageSpec {
+            name: "Matmul2".into(),
+            block: "m2".into(),
+            cost: cost_b,
+            firings_per_image: 8,
+            inputs: vec![c1],
+            outputs: vec![],
+            is_source: false,
+        });
         p.sink = sink;
         p
     };
@@ -223,7 +261,8 @@ pub fn fig10c() -> String {
     let raw = generate::requant_table("rq", -100_000, 100_000, 0.001, out);
     let cal = generate::joint_calibrate("rq", |x| x, -100_000, 100_000, 0.001, 6, out);
     let sat = |e: &Vec<i64>| -> usize {
-        e.iter().filter(|&&v| v == e[0]).count() + e.iter().filter(|&&v| v == *e.last().unwrap()).count()
+        e.iter().filter(|&&v| v == e[0]).count()
+            + e.iter().filter(|&&v| v == *e.last().unwrap()).count()
     };
     format!(
         "Figure 10c — joint table range calibration\n\
@@ -295,7 +334,9 @@ pub fn fig11b(artifacts_dir: &std::path::Path) -> String {
     for prec in ["a4w4", "a3w3"] {
         let Some(p) = v.get(prec) else { continue };
         out.push_str(&format!("\n[{prec}]\n"));
-        if let Some(full) = p.get("ladder").and_then(|l| l.get("+segmented_recip")).and_then(|x| x.as_f64()) {
+        if let Some(full) =
+            p.get("ladder").and_then(|l| l.get("+segmented_recip")).and_then(|x| x.as_f64())
+        {
             out.push_str(&format!("  full pipeline accuracy: {:.3}\n", full));
             if let Some(abl) = p.get("ablation").and_then(|a| a.as_obj()) {
                 for (name, acc) in abl {
@@ -325,7 +366,14 @@ pub fn fig11c_report() -> String {
     format!(
         "Figure 11c — non-linear function resource reduction\n{}",
         ascii_table(
-            &["function", "depth", "bits", "LUT-6 naive->table", "table (paper)", "DSP naive->table"],
+            &[
+                "function",
+                "depth",
+                "bits",
+                "LUT-6 naive->table",
+                "table (paper)",
+                "DSP naive->table",
+            ],
             &rows
         )
     )
@@ -372,7 +420,21 @@ pub fn tab2() -> String {
     format!(
         "Table 2 — comparison with prior art (ours computed, prior art as reported)\n{}",
         ascii_table(
-            &["accelerator", "device", "MHz", "network", "prec", "FPS", "GOPs", "kLUT", "DSP", "BRAM", "W", "GOPs/kLUT", "GOPs/W"],
+            &[
+                "accelerator",
+                "device",
+                "MHz",
+                "network",
+                "prec",
+                "FPS",
+                "GOPs",
+                "kLUT",
+                "DSP",
+                "BRAM",
+                "W",
+                "GOPs/kLUT",
+                "GOPs/W",
+            ],
             &rows
         )
     )

@@ -76,7 +76,10 @@ pub struct BandScratch {
 impl BandScratch {
     fn footprint(&self) -> usize {
         (self.prob.capacity()) * std::mem::size_of::<i32>()
-            + (self.acc.capacity() + self.ln_c.capacity() + self.scores.capacity() + self.rv.capacity())
+            + (self.acc.capacity()
+                + self.ln_c.capacity()
+                + self.scores.capacity()
+                + self.rv.capacity())
                 * std::mem::size_of::<i64>()
             + self.softmax.footprint()
     }

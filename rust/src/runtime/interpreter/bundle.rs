@@ -181,7 +181,8 @@ impl QuantViT {
                 .ok_or_else(|| anyhow::anyhow!("bundle missing guard '{name}'"))
         };
         let gemm = |wk: &str, bk: &str, ci: usize, co: usize| -> crate::Result<PackedGemm> {
-            Ok(PackedGemm::pack(ints_i32(weights, wk, ci * co)?, ci, co, ints_i64(weights, bk, co)?))
+            let w = ints_i32(weights, wk, ci * co)?;
+            Ok(PackedGemm::pack(w, ci, co, ints_i64(weights, bk, co)?))
         };
 
         let mut blocks = Vec::with_capacity(depth);

@@ -253,7 +253,13 @@ pub(crate) fn attention_into(
 /// The pre-fabric attention: head-outer, full `t x t` probability
 /// matrix, column-outer `R @ V`, per-row softmax allocations. Kept as
 /// the differential oracle / scalar baseline.
-pub(crate) fn attention_naive(blk: &BlockParams, qkv: &[i32], t: usize, d: usize, h: usize) -> Vec<i32> {
+pub(crate) fn attention_naive(
+    blk: &BlockParams,
+    qkv: &[i32],
+    t: usize,
+    d: usize,
+    h: usize,
+) -> Vec<i32> {
     let dh = d / h;
     let mut a_q = vec![0i32; t * d];
     let mut scores = vec![0i64; t];
@@ -339,7 +345,8 @@ mod tests {
     #[test]
     fn seg_i32_selects_by_pivot_and_shifts() {
         let steep = LutTable { out_scale: 1.0, ..mk_lut(0, 2, 2, false, vec![100, 90, 80, 70]) };
-        let flat = LutTable { out_scale: 0.25, alpha: 16, ..mk_lut(0, 2, 2, false, vec![5, 4, 3, 2]) };
+        let flat =
+            LutTable { out_scale: 0.25, alpha: 16, ..mk_lut(0, 2, 2, false, vec![5, 4, 3, 2]) };
         let s = SegmentedTable { name: "s".into(), pivot: 16, steep, flat };
         assert_eq!(seg_i32(&s, 0), 400); // 100 << 2
         assert_eq!(seg_i32(&s, 16), 5);
@@ -353,7 +360,8 @@ mod tests {
         let x: Vec<i32> = (0..5 * d as i32).map(|i| (i * 37 % 113) - 56).collect();
         let mut serial = Vec::new();
         let mut band = BandScratch::default();
-        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut serial, &mut Exec::serial(&mut band, kernels::scalar()));
+        let mut exec = Exec::serial(&mut band, kernels::scalar());
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut serial, &mut exec);
         assert_eq!(serial.len(), x.len());
         for lanes in [1usize, 2, 3, 7] {
             let pool = LanePool::new(lanes);
@@ -371,10 +379,11 @@ mod tests {
         let x: Vec<i32> = (0..4 * d as i32).map(|i| (i * 11 % 37) - 18).collect();
         let mut band = BandScratch::default();
         let mut out = Vec::new();
-        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut Exec::serial(&mut band, kernels::scalar()));
+        let mut exec = Exec::serial(&mut band, kernels::scalar());
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut exec);
         let want = out.clone();
         let ptr = out.as_ptr();
-        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut Exec::serial(&mut band, kernels::scalar()));
+        layernorm_into(&x, d, 2, &rsqrt, &rq, &mut out, &mut exec);
         assert_eq!(out, want);
         assert_eq!(out.as_ptr(), ptr, "steady-state layernorm must not reallocate");
     }

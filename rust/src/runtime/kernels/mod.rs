@@ -83,7 +83,8 @@ pub struct Kernels {
     /// Four [`Kernels::axpy`]s sharing one weight row: the 4-row
     /// register-blocked GEMM microkernel body. Each output tile has
     /// `w.len()` elements.
-    pub axpy4: fn(a: [i32; 4], w: &[i32], o0: &mut [i64], o1: &mut [i64], o2: &mut [i64], o3: &mut [i64]),
+    pub axpy4:
+        fn(a: [i32; 4], w: &[i32], o0: &mut [i64], o1: &mut [i64], o2: &mut [i64], o3: &mut [i64]),
     /// `out[j] = lut(rq, acc[j] as i32)` — the fused requant epilogue
     /// applied to a GEMM/attention accumulator band. Lengths equal.
     pub requant: fn(rq: &LutTable, acc: &[i64], out: &mut [i32]),

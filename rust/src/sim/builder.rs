@@ -75,15 +75,21 @@ pub fn build_vit(
     // channel constructors per paradigm
     let stream = |p: &mut Pipeline, name: String| -> usize {
         match paradigm {
-            Paradigm::CoarseGrained => p.add_channel(name, ChannelKind::Pipo { groups_per_image: tt }),
+            Paradigm::CoarseGrained => {
+                p.add_channel(name, ChannelKind::Pipo { groups_per_image: tt })
+            }
             _ => p.add_channel(name, ChannelKind::Fifo { cap: sim.small_fifo_cap }),
         }
     };
     let deep_fifo = |p: &mut Pipeline, name: String| -> usize {
         match paradigm {
-            Paradigm::CoarseGrained => p.add_channel(name, ChannelKind::Pipo { groups_per_image: tt }),
+            Paradigm::CoarseGrained => {
+                p.add_channel(name, ChannelKind::Pipo { groups_per_image: tt })
+            }
             Paradigm::Hybrid => p.add_channel(name, ChannelKind::Fifo { cap: sim.deep_fifo_cap }),
-            Paradigm::FineGrained => p.add_channel(name, ChannelKind::Fifo { cap: sim.small_fifo_cap }),
+            Paradigm::FineGrained => {
+                p.add_channel(name, ChannelKind::Fifo { cap: sim.small_fifo_cap })
+            }
         }
     };
     // K/V deep buffers are double-banked (Fig. 6: Image2's K/V tokens load

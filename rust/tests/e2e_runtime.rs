@@ -61,7 +61,8 @@ fn tinyvit_accuracy_through_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
     let Some((tokens, labels, per)) = load_eval(&dir) else { return };
     let manifest = Manifest::load(&dir).unwrap();
-    let server = ModelServer::start_with_backend(&manifest, "tiny-synth", 2, BackendKind::Pjrt).unwrap();
+    let server =
+        ModelServer::start_with_backend(&manifest, "tiny-synth", 2, BackendKind::Pjrt).unwrap();
     let images: Vec<Vec<f32>> = tokens.chunks(per).map(|c| c.to_vec()).collect();
     let responses = server.infer_all(images).unwrap();
     let correct = responses.iter().zip(&labels).filter(|(r, &l)| r.argmax == l as usize).count();
@@ -76,7 +77,8 @@ fn deterministic_across_runs() {
     let Some(dir) = artifacts_dir() else { return };
     let Some((tokens, _, per)) = load_eval(&dir) else { return };
     let manifest = Manifest::load(&dir).unwrap();
-    let server = ModelServer::start_with_backend(&manifest, "tiny-synth", 2, BackendKind::Pjrt).unwrap();
+    let server =
+        ModelServer::start_with_backend(&manifest, "tiny-synth", 2, BackendKind::Pjrt).unwrap();
     let img: Vec<f32> = tokens[..per].to_vec();
     let a = server.submit(img.clone()).unwrap().recv().unwrap().unwrap();
     let b = server.submit(img).unwrap().recv().unwrap().unwrap();
@@ -109,7 +111,10 @@ fn block_pallas_artifact_loads_and_runs() {
 
 // Engine::compile is private; go through the public load path with a
 // scratch manifest entry instead.
-fn engine_compile(engine: &hgpipe::runtime::pjrt::Engine, comp: &xla::XlaComputation) -> xla::PjRtLoadedExecutable {
+fn engine_compile(
+    engine: &hgpipe::runtime::pjrt::Engine,
+    comp: &xla::XlaComputation,
+) -> xla::PjRtLoadedExecutable {
     let _ = engine;
     let client = xla::PjRtClient::cpu().unwrap();
     client.compile(comp).unwrap()
@@ -119,7 +124,8 @@ fn engine_compile(engine: &hgpipe::runtime::pjrt::Engine, comp: &xla::XlaComputa
 fn mismatched_input_shape_is_rejected() {
     let Some(dir) = artifacts_dir() else { return };
     let manifest = Manifest::load(&dir).unwrap();
-    let server = ModelServer::start_with_backend(&manifest, "tiny-synth", 2, BackendKind::Pjrt).unwrap();
+    let server =
+        ModelServer::start_with_backend(&manifest, "tiny-synth", 2, BackendKind::Pjrt).unwrap();
     assert!(server.submit(vec![0.0; 7]).is_err());
 }
 
@@ -127,5 +133,6 @@ fn mismatched_input_shape_is_rejected() {
 fn unknown_model_fails_to_start() {
     let Some(dir) = artifacts_dir() else { return };
     let manifest = Manifest::load(&dir).unwrap();
-    assert!(ModelServer::start_with_backend(&manifest, "no-such-model", 2, BackendKind::Pjrt).is_err());
+    let started = ModelServer::start_with_backend(&manifest, "no-such-model", 2, BackendKind::Pjrt);
+    assert!(started.is_err());
 }

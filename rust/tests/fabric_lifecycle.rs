@@ -169,7 +169,11 @@ fn repeated_model_load_unload_leaks_no_threads() {
             for i in 0..b {
                 for (k, &g) in out[i * nc..(i + 1) * nc].iter().enumerate() {
                     let w = expected[i * nc + k] as f32;
-                    assert_eq!(g.to_bits(), w.to_bits(), "round {round} batch {b} img {i} logit {k}");
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "round {round} batch {b} img {i} logit {k}"
+                    );
                 }
             }
         }

@@ -125,7 +125,10 @@ fn full_deit_table_set_loads() {
             other => panic!("b{i}.attn.exp wrong kind: {other:?}"),
         }
         assert!(
-            matches!(tables.get(&format!("b{i}.attn.recip")), Some(hgpipe::lut::AnyTable::Segmented(_))),
+            matches!(
+                tables.get(&format!("b{i}.attn.recip")),
+                Some(hgpipe::lut::AnyTable::Segmented(_))
+            ),
             "b{i}.attn.recip must be segmented"
         );
     }

@@ -171,7 +171,13 @@ fn both_partition_strategies_are_bit_exact_and_embed_stage_is_dedicated() {
     for strategy in [PartitionStrategy::WorkProportional, PartitionStrategy::NearEven] {
         let pipe = Pipeline::new(
             net.clone(),
-            PipelineConfig { stages: 0, queue_depth: 2, lanes: 1, partition: strategy, ..Default::default() },
+            PipelineConfig {
+                stages: 0,
+                queue_depth: 2,
+                lanes: 1,
+                partition: strategy,
+                ..Default::default()
+            },
         );
         assert_eq!(pipe.partition_strategy(), strategy);
         let out = pipe.run_batch(&tokens[..n * per], n).unwrap();

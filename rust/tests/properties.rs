@@ -33,7 +33,9 @@ fn prop_batcher_never_exceeds_queue_or_variants() {
         } else {
             // only legitimate reasons to wait: empty queue, or a partial
             // batch whose head hasn't timed out
-            assert!(queued == 0 || (queued < policy.largest() && waited < Duration::from_millis(2)));
+            assert!(
+                queued == 0 || (queued < policy.largest() && waited < Duration::from_millis(2))
+            );
         }
     });
 }
