@@ -10,7 +10,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test test-rust test-python artifacts golden bench-json bench-json-smoke bench-check trace-smoke
+.PHONY: build test test-rust test-python artifacts golden bench-json bench-json-smoke bench-check trace-smoke http-smoke
 
 build:
 	cargo build --release
@@ -50,6 +50,17 @@ trace-smoke:
 	cargo run --release --bin hgpipe -- serve --requests 32 \
 	  --pipeline --trace $(CURDIR)/TRACE_smoke.jsonl
 	cargo run --release --bin trace_check -- --trace $(CURDIR)/TRACE_smoke.jsonl
+
+# Network front door smoke: boot the real binary with
+# `serve --http 127.0.0.1:0` on the golden fixture, POST every golden
+# image over the socket (bit-exact reply check), line-parse /metrics
+# against the pinned Prometheus families, hit /healthz, then restart
+# with `--queue-cap 1` + a stall fault and verify overload answers 429
+# with the shed attributed to source="http". The hgpipe binary is built
+# first because the harness execs it as a sibling of its own executable.
+http-smoke:
+	cargo build --release --bin hgpipe
+	cargo run --release --bin http_smoke
 
 test: test-rust test-python
 

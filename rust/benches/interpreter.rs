@@ -45,14 +45,19 @@
 //!                           server window with tracing off vs tracing
 //!                           to a scratch JSONL, and their ratio (the
 //!                           "zero cost when off" claim, measured)
+//!   http                    network front door overhead: the same
+//!                           window driven in-process (Router::submit)
+//!                           vs over HTTP loopback on 8 keep-alive
+//!                           connections, and the inproc/loopback ratio
 //!   per_op_ms_per_image / per_op_pooled_ms_per_image
 
 use std::fmt::Write as _;
+use std::io::Write as _;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hgpipe::artifacts::Manifest;
-use hgpipe::coordinator::ModelServer;
+use hgpipe::coordinator::{ModelServer, Router};
 use hgpipe::runtime::fabric::gemm::PackedGemm;
 use hgpipe::runtime::fabric::LanePool;
 use hgpipe::runtime::interpreter::{self, OpProfile, QuantViT};
@@ -61,6 +66,7 @@ use hgpipe::runtime::pipeline::{
     PartitionStrategy, Pipeline, PipelineConfig, DEFAULT_QUEUE_DEPTH,
 };
 use hgpipe::runtime::{BackendKind, ModelArtifact, RuntimeConfig};
+use hgpipe::server::{HttpConfig, HttpServer};
 use hgpipe::util::bench::{bench, black_box};
 use hgpipe::util::prng::Prng;
 
@@ -305,9 +311,13 @@ fn main() {
             got.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
             "pipeline logits diverged from the naive baseline at {resolved} stages"
         );
-        let r = bench(&format!("  pipeline, {resolved} stages (depth {queue_depth} FIFOs)"), sweep_budget, || {
-            black_box(pipe.run_batch(&flat, n_images).unwrap());
-        });
+        let r = bench(
+            &format!("  pipeline, {resolved} stages (depth {queue_depth} FIFOs)"),
+            sweep_budget,
+            || {
+                black_box(pipe.run_batch(&flat, n_images).unwrap());
+            },
+        );
         println!("{r}");
         pipe_sweep.push((pipe.stage_count(), n_images as f64 / r.mean.as_secs_f64()));
         headline = Some(pipe); // ascending sweep: the last benched entry is the most unrolled
@@ -546,6 +556,74 @@ fn main() {
     let tele_overhead = tele_off_ips / tele_on_ips;
     let _ = std::fs::remove_file(trace_scratch);
 
+    // 13. network front door overhead: the same closed-loop window
+    // driven in-process (Router::submit, 8 outstanding) vs over HTTP
+    // loopback (8 keep-alive connections posting binary bodies against
+    // one shared fleet). The quotient is what the hand-rolled HTTP/1.1
+    // edge costs on top of the router it fronts.
+    let http_batch = 8usize;
+    let http_requests = n_images * if opts.smoke { 2 } else { 4 };
+    let http_images: Vec<Vec<f32>> = (0..http_requests)
+        .map(|i| flat[(i % n_images) * per..(i % n_images + 1) * per].to_vec())
+        .collect();
+    let http_cfg =
+        RuntimeConfig::new(BackendKind::Interpreter).with_lanes(Some(1)).with_trace(Some(""));
+    let http_router = Arc::new(
+        Router::start(&manifest, &["tiny-synth".to_string()], 1, http_cfg)
+            .expect("http bench fleet"),
+    );
+    let inproc_window = |images: &[Vec<f32>]| -> f64 {
+        let t0 = Instant::now();
+        for wave in images.chunks(http_batch) {
+            let rxs: Vec<_> = wave
+                .iter()
+                .map(|img| {
+                    http_router
+                        .submit_with_deadline("tiny-synth", img.clone(), None)
+                        .expect("in-process submit")
+                })
+                .collect();
+            for rx in rxs {
+                rx.recv().expect("reply").expect("in-process inference");
+            }
+        }
+        images.len() as f64 / t0.elapsed().as_secs_f64()
+    };
+    inproc_window(&http_images[..http_batch.min(http_images.len())]); // warm-up
+    let http_inproc_ips = inproc_window(&http_images);
+    let http_server = HttpServer::bind("127.0.0.1:0", http_router.clone(), HttpConfig::default())
+        .expect("bench http edge");
+    let http_addr = http_server.local_addr().to_string();
+    let loopback_window = |images: &[Vec<f32>]| -> f64 {
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..http_batch.min(images.len()) {
+                let addr = &http_addr;
+                s.spawn(move || {
+                    let mut stream = std::net::TcpStream::connect(addr).expect("bench connect");
+                    let _ = stream.set_nodelay(true);
+                    for img in images.iter().skip(c).step_by(http_batch) {
+                        let body: Vec<u8> = img.iter().flat_map(|v| v.to_le_bytes()).collect();
+                        let head = format!(
+                            "POST /v1/models/tiny-synth/infer HTTP/1.1\r\nHost: bench\r\n\
+                             Content-Length: {}\r\n\r\n",
+                            body.len()
+                        );
+                        stream.write_all(head.as_bytes()).expect("bench post head");
+                        stream.write_all(&body).expect("bench post body");
+                        read_http_reply(&mut stream);
+                    }
+                });
+            }
+        });
+        images.len() as f64 / t0.elapsed().as_secs_f64()
+    };
+    loopback_window(&http_images[..http_batch.min(http_images.len())]); // warm-up
+    let http_loopback_ips = loopback_window(&http_images);
+    let http_overhead = http_inproc_ips / http_loopback_ips;
+    drop(http_server);
+    drop(http_router);
+
     // per-op breakdowns: serial (clean attribution) and pooled (what the
     // serving path actually spends per op at the headline lane count)
     let prof_images = n_images.min(8);
@@ -602,6 +680,11 @@ fn main() {
     println!(
         "    telemetry            off {tele_off_ips:8.1} | on {tele_on_ips:8.1} img/s \
          (off/on ratio {tele_overhead:.3}, 1 lane)"
+    );
+    println!(
+        "    http edge            inproc {http_inproc_ips:8.1} | loopback \
+         {http_loopback_ips:8.1} img/s (inproc/loopback {http_overhead:.3}, \
+         {http_batch} conns)"
     );
     println!("    lane sweep (persistent | spawn img/s):");
     for &(lanes, p, s) in &sweep {
@@ -804,6 +887,11 @@ fn main() {
              \"telemetry\": {{\n    \"tracing_off_img_s\": {tele_off_ips:.3},\n    \
              \"tracing_on_img_s\": {tele_on_ips:.3},\n    \
              \"overhead_ratio\": {tele_overhead:.3}\n  }},\n  \
+             \"http\": {{\n    \"inproc_img_s\": {http_inproc_ips:.3},\n    \
+             \"loopback_img_s\": {http_loopback_ips:.3},\n    \
+             \"overhead_ratio\": {http_overhead:.3},\n    \
+             \"connections\": {http_batch},\n    \
+             \"requests\": {http_requests}\n  }},\n  \
              \"per_op_ms_per_image\": {},\n  \
              \"per_op_pooled_ms_per_image\": {}\n}}\n",
             opts.smoke,
@@ -830,5 +918,37 @@ fn main() {
         );
         std::fs::write(path, &json).expect("write bench json");
         println!("\nwrote {path}");
+    }
+}
+
+/// Drain exactly one HTTP/1.1 response (which must be a 200) so the
+/// bench connection can be reused for its next request.
+fn read_http_reply(stream: &mut std::net::TcpStream) {
+    use std::io::Read as _;
+    let mut buf = Vec::new();
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("http reply head");
+        assert!(n > 0, "server closed mid-reply");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).expect("ascii reply head");
+    assert!(head.starts_with("HTTP/1.1 200"), "bench expects 200s, got: {head}");
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+        })
+        .expect("content-length in reply");
+    let mut have = buf.len() - (head_end + 4);
+    while have < len {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("http reply body");
+        assert!(n > 0, "server closed mid-body");
+        have += n;
     }
 }

@@ -1,0 +1,416 @@
+//! End-to-end smoke for the network front door (`make http-smoke`).
+//!
+//! Unlike `tests/http_edge.rs` (which binds `HttpServer` in-process),
+//! this harness exercises the *binary*: it spawns the sibling `hgpipe`
+//! executable with `serve --http 127.0.0.1:0` on the committed golden
+//! fixture, parses the bound port off the child's stdout, and then
+//! talks to it over real sockets:
+//!
+//! 1. POSTs every golden image (binary bodies, plus one JSON body) and
+//!    asserts the replies are bit-exact against `golden_logits.bin`,
+//! 2. scrapes `/metrics` and line-parses the whole exposition against
+//!    the pinned Prometheus families (exact request count included),
+//! 3. checks `/healthz` reports a healthy fleet,
+//! 4. restarts the server with `--queue-cap 1` + a stall fault and
+//!    fires concurrent posts to force at least one `429`, verifying the
+//!    shed is attributed to `source="http"` in the scrape.
+//!
+//! Exits non-zero on the first violation; prints `http-smoke OK` on
+//! success. The child is killed on drop, so a panicking assertion never
+//! leaks a listener.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+use hgpipe::util::json::Json;
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+/// The serving binary, resolved next to this harness (both live in
+/// `target/<profile>/`; `make http-smoke` builds `hgpipe` first).
+fn hgpipe_bin() -> PathBuf {
+    let mut p = std::env::current_exe().expect("own path");
+    p.set_file_name("hgpipe");
+    assert!(p.exists(), "{} not built — run via `make http-smoke`", p.display());
+    p
+}
+
+/// Golden images and their expected (argmax, f32 logits), sized off the
+/// manifest's eval_set shape — no model load needed on the harness side.
+fn golden() -> (Vec<Vec<f32>>, Vec<(usize, Vec<f32>)>) {
+    let dir = fixture_dir();
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).expect("golden manifest");
+    let v = Json::parse(&manifest).expect("manifest parses");
+    let shape: Vec<usize> = v
+        .get("eval_set")
+        .and_then(|e| e.get("shape"))
+        .and_then(Json::as_arr)
+        .expect("eval_set.shape")
+        .iter()
+        .map(|x| x.as_i64().unwrap() as usize)
+        .collect();
+    let (n, per) = (shape[0], shape[1] * shape[2]);
+    let tokens: Vec<f32> = std::fs::read(dir.join("golden_tokens.bin"))
+        .unwrap()
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let logits: Vec<f64> = std::fs::read(dir.join("golden_logits.bin"))
+        .unwrap()
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect();
+    assert_eq!(tokens.len(), n * per, "golden token size vs eval_set shape");
+    let nc = logits.len() / n;
+    let images: Vec<Vec<f32>> = tokens.chunks_exact(per).map(<[f32]>::to_vec).collect();
+    let expected = logits
+        .chunks_exact(nc)
+        .map(|row| {
+            let row: Vec<f32> = row.iter().map(|&v| v as f32).collect();
+            // same reduction as the coordinator: total_cmp, last max wins
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            (argmax, row)
+        })
+        .collect();
+    (images, expected)
+}
+
+/// A spawned `hgpipe serve --http` child, killed on drop.
+struct Server {
+    child: Child,
+    addr: String,
+}
+
+impl Server {
+    fn start(extra_flags: &[&str]) -> Server {
+        let mut cmd = Command::new(hgpipe_bin());
+        cmd.arg("serve")
+            .arg("--http")
+            .arg("127.0.0.1:0")
+            .arg("--artifacts")
+            .arg(fixture_dir())
+            .arg("--lanes")
+            .arg("2")
+            .args(extra_flags)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit());
+        let mut child = cmd.spawn().expect("spawn hgpipe serve --http");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut lines = BufReader::new(stdout);
+        let addr = loop {
+            let mut line = String::new();
+            let n = lines.read_line(&mut line).expect("child stdout");
+            assert!(n > 0, "server exited before announcing its listen address");
+            print!("  [server] {line}");
+            if let Some(rest) = line.split("listening on http://").nth(1) {
+                break rest.split_whitespace().next().expect("addr token").to_string();
+            }
+        };
+        // keep draining so the child never blocks on a full pipe
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while matches!(lines.read_line(&mut sink), Ok(n) if n > 0) {
+                sink.clear();
+            }
+        });
+        Server { child, addr }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+// ---------------- tiny blocking HTTP/1.1 client ----------------
+
+struct Reply {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Reply {
+    fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+fn read_reply(stream: &mut TcpStream) -> Reply {
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("response head");
+        assert!(n > 0, "connection closed before a full response head");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+    let mut lines = head.split("\r\n");
+    let status: u16 =
+        lines.next().unwrap().split(' ').nth(1).expect("status code").parse().unwrap();
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse().unwrap())
+        .unwrap_or(0);
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < len {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("response body");
+        assert!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(len);
+    Reply { status, headers, body }
+}
+
+fn request(addr: &str, method: &str, path: &str, hs: &[(&str, &str)], body: &[u8]) -> Reply {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: t\r\n");
+    for (k, v) in hs {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.write_all(body).unwrap();
+    read_reply(&mut stream)
+}
+
+fn infer_path() -> &'static str {
+    "/v1/models/tiny-synth/infer"
+}
+
+fn image_bytes(image: &[f32]) -> Vec<u8> {
+    image.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+fn reply_argmax(body: &str) -> usize {
+    body.split("\"argmax\":")
+        .nth(1)
+        .expect("argmax in reply")
+        .split(|c: char| !c.is_ascii_digit())
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+fn reply_logits(body: &str) -> Vec<f32> {
+    body.split("\"logits\":[")
+        .nth(1)
+        .expect("logits array in reply")
+        .split(']')
+        .next()
+        .unwrap()
+        .split(',')
+        .map(|t| t.parse().unwrap())
+        .collect()
+}
+
+// ---------------- the checks ----------------
+
+/// Every line of the exposition must be `# HELP`, `# TYPE` (with a
+/// known kind) or a `name{labels} value` sample whose value parses.
+fn check_prometheus_shape(text: &str) {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut toks = rest.splitn(3, ' ');
+            let keyword = toks.next().unwrap_or("");
+            let name = toks.next().unwrap_or("");
+            let tail = toks.next().unwrap_or("");
+            assert!(
+                (keyword == "HELP" || keyword == "TYPE")
+                    && name.starts_with("hgpipe_")
+                    && !tail.is_empty(),
+                "bad comment line: {line:?}"
+            );
+            if keyword == "TYPE" {
+                assert!(
+                    ["counter", "gauge", "summary"].contains(&tail),
+                    "unknown metric kind in {line:?}"
+                );
+            }
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("sample line has no value: {line:?}");
+        });
+        assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        let name = series.split('{').next().unwrap();
+        assert!(name.starts_with("hgpipe_"), "foreign family in {line:?}");
+        if series.contains('{') {
+            assert!(series.ends_with('}'), "unbalanced labels in {line:?}");
+        }
+    }
+}
+
+/// Grab the (single) sample value of `family`, if the family is present.
+fn sample_value(text: &str, family: &str) -> Option<f64> {
+    text.lines()
+        .find(|l| l.starts_with(&format!("{family}{{")))
+        .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+}
+
+fn check_bit_exact_inference(addr: &str) -> usize {
+    let (images, expected) = golden();
+    for (i, (image, (want_argmax, want_logits))) in images.iter().zip(&expected).enumerate() {
+        let reply = request(addr, "POST", infer_path(), &[], &image_bytes(image));
+        assert_eq!(reply.status, 200, "image {i}: {}", reply.text());
+        let body = reply.text();
+        assert_eq!(reply_argmax(&body), *want_argmax, "image {i} argmax");
+        let logits = reply_logits(&body);
+        assert_eq!(logits.len(), want_logits.len(), "image {i} logit count");
+        for (j, (got, want)) in logits.iter().zip(want_logits).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "image {i} logit {j} must cross the socket bit-exact"
+            );
+        }
+    }
+    // one JSON-array body must decode to the same tokens as binary
+    let json = format!(
+        "[{}]",
+        images[0].iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+    );
+    let reply = request(
+        addr,
+        "POST",
+        infer_path(),
+        &[("Content-Type", "application/json")],
+        json.as_bytes(),
+    );
+    assert_eq!(reply.status, 200, "{}", reply.text());
+    assert_eq!(reply_argmax(&reply.text()), expected[0].0, "json body argmax");
+    images.len() + 1
+}
+
+fn check_metrics(addr: &str, want_requests: usize) {
+    let reply = request(addr, "GET", "/metrics", &[], b"");
+    assert_eq!(reply.status, 200);
+    assert_eq!(
+        reply.header("content-type"),
+        Some("text/plain; version=0.0.4"),
+        "prometheus content type"
+    );
+    let text = reply.text();
+    check_prometheus_shape(&text);
+    for family in [
+        "hgpipe_requests_total",
+        "hgpipe_requests_failed_total",
+        "hgpipe_requests_shed_total",
+        "hgpipe_requests_expired_total",
+        "hgpipe_requests_retried_total",
+        "hgpipe_replica_restarts_total",
+        "hgpipe_replicas_retired_total",
+        "hgpipe_live_replicas",
+        "hgpipe_queue_depth",
+        "hgpipe_request_latency_seconds",
+        "hgpipe_request_latency_seconds_sum",
+        "hgpipe_request_latency_seconds_count",
+    ] {
+        assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
+    }
+    let line =
+        format!("hgpipe_requests_total{{model=\"tiny-synth\",version=\"v1\"}} {want_requests}");
+    assert!(text.contains(&line), "expected {line:?} in:\n{text}");
+}
+
+fn check_healthz(addr: &str) {
+    let reply = request(addr, "GET", "/healthz", &[], b"");
+    assert_eq!(reply.status, 200, "{}", reply.text());
+    let body = reply.text();
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    assert!(body.contains("tiny-synth"), "{body}");
+}
+
+/// Capacity-1 queue behind one stalled replica: concurrent posts must
+/// produce at least one `429`, visible in the scrape as an http shed.
+fn check_overload_sheds_429(addr: &str) {
+    let (images, _) = golden();
+    let body = Arc::new(image_bytes(&images[0]));
+    let statuses: Vec<u16> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let body = body.clone();
+                s.spawn(move || {
+                    let reply = request(addr, "POST", infer_path(), &[], &body);
+                    if reply.status == 429 {
+                        assert_eq!(reply.header("retry-after"), Some("1"), "429 advises a retry");
+                    }
+                    reply.status
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(statuses.iter().all(|s| *s == 200 || *s == 429), "{statuses:?}");
+    let sheds = statuses.iter().filter(|s| **s == 429).count();
+    assert!(sheds >= 1, "capacity-1 queue under 8 posts must shed: {statuses:?}");
+
+    let text = request(addr, "GET", "/metrics", &[], b"").text();
+    check_prometheus_shape(&text);
+    let scraped = sample_value(&text, "hgpipe_requests_shed_total").expect("shed family");
+    assert!(scraped as usize >= sheds, "scraped shed {scraped} < observed 429s {sheds}");
+    let by_http = text
+        .lines()
+        .find(|l| {
+            l.starts_with("hgpipe_requests_shed_by_source_total{") && l.contains("source=\"http\"")
+        })
+        .expect("per-source shed family");
+    let by_http: usize = by_http.rsplit(' ').next().unwrap().parse().unwrap();
+    assert_eq!(by_http as f64, scraped, "every shed came over http");
+}
+
+fn main() {
+    println!("http-smoke: golden-fixture inference over the wire");
+    let server = Server::start(&[]);
+    let answered = check_bit_exact_inference(&server.addr);
+    println!("  {answered} bit-exact replies from http://{}", server.addr);
+    check_metrics(&server.addr, answered);
+    println!("  /metrics line-parses, request count exact");
+    check_healthz(&server.addr);
+    println!("  /healthz ok");
+    drop(server);
+
+    println!("http-smoke: overload shedding behind --queue-cap 1");
+    let server = Server::start(&[
+        "--queue-cap",
+        "1",
+        "--replicas",
+        "1",
+        "--faults",
+        "stall:1.0:400,seed:7",
+    ]);
+    check_overload_sheds_429(&server.addr);
+    println!("  429 + Retry-After observed, shed attributed to source=\"http\"");
+    drop(server);
+
+    println!("http-smoke OK");
+}

@@ -152,8 +152,14 @@ pub struct ServeMetrics {
     /// requests never reach a replica, so this counter lives only in
     /// the rollup — per-replica copies stay 0.
     pub shed: u64,
-    /// Requests answered with `DeadlineExceeded` at pop time, without
-    /// ever executing a forward pass.
+    /// `shed` broken down by admission source label
+    /// (`AdmitSource::label`: `"inprocess"` / `"http"`); values sum
+    /// to `shed`. Rollup-only, like `shed` itself.
+    pub shed_by_source: std::collections::BTreeMap<&'static str, u64>,
+    /// Requests answered with `DeadlineExceeded` without ever
+    /// executing a forward pass — at admission when the deadline was
+    /// already dead on arrival (rollup-only, like `shed`), otherwise
+    /// at pop time.
     pub expired: u64,
     /// Requests returned to the front queue after their replica died
     /// mid-dispatch (each such request is counted once per retry).

@@ -45,11 +45,14 @@
 //! every remaining request is failed explicitly instead of hanging.
 //! The front door can be **bounded** ([`RuntimeConfig::queue_capacity`]
 //! / `HGPIPE_QUEUE_CAP`): at capacity, [`ModelServer::submit`] rejects
-//! with a typed [`Overloaded`] error (counted as `shed`) instead of
-//! queueing doomed work without limit. Requests may carry a deadline
+//! with a typed [`Overloaded`] error (counted as `shed`, attributed
+//! to its [`AdmitSource`]) instead of queueing doomed work without
+//! limit. Requests may carry a deadline
 //! ([`ModelServer::submit_with_deadline`]): an expired request is
-//! answered with a typed [`DeadlineExceeded`] at pop time, without
-//! computing its forward pass (counted as `expired`). The [`faults`]
+//! answered with a typed [`DeadlineExceeded`] without computing its
+//! forward pass (counted as `expired`) — dead-on-arrival deadlines
+//! short-circuit at admission, never enqueueing; the rest expire at
+//! pop time. The [`faults`]
 //! harness injects replica panics / stalls / load failures
 //! deterministically so all of the above is pinned by reproducible
 //! chaos tests (`tests/fault_tolerance.rs`).
@@ -128,6 +131,50 @@ impl std::fmt::Display for DeadlineExceeded {
 }
 
 impl std::error::Error for DeadlineExceeded {}
+
+/// Typed routing error: the request named a model the [`Router`] is
+/// not serving. Downcast at the serving edge (the HTTP front door
+/// maps it to `404`) to distinguish a client-side routing miss from
+/// an internal failure; `Display` names what *is* being served.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownModel {
+    /// The model the request asked for.
+    pub model: String,
+    /// Names currently routed, in routing-table order.
+    pub serving: Vec<String>,
+}
+
+impl std::fmt::Display for UnknownModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "no server for model '{}' (serving: {})", self.model, self.serving.join(", "))
+    }
+}
+
+impl std::error::Error for UnknownModel {}
+
+/// Where a request entered the system. Admission-control accounting
+/// (`shed`) is broken down by source — an overloaded fleet shows
+/// *who* it is shedding (`ServeMetrics::shed_by_source`, exported as
+/// the `hgpipe_requests_shed_by_source_total{source=...}` family).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitSource {
+    /// In-process callers: `submit`/`infer_all`, benches, tests, the
+    /// synthetic `hgpipe serve` traffic loop.
+    InProcess,
+    /// The network front door ([`crate::server`]).
+    Http,
+}
+
+impl AdmitSource {
+    /// Stable label used as the metrics-map key and the Prometheus
+    /// `source="..."` label value.
+    pub fn label(self) -> &'static str {
+        match self {
+            AdmitSource::InProcess => "inprocess",
+            AdmitSource::Http => "http",
+        }
+    }
+}
 
 /// The reply: logits + timing.
 #[derive(Debug, Clone)]
@@ -413,6 +460,25 @@ impl ModelServer {
         tokens: Vec<f32>,
         deadline: Option<Duration>,
     ) -> crate::Result<Receiver<crate::Result<Response>>> {
+        self.submit_from(AdmitSource::InProcess, tokens, deadline)
+    }
+
+    /// [`Self::submit_with_deadline`] with an explicit admission
+    /// source, so overload accounting attributes shed requests to the
+    /// entry point that produced them (the HTTP front door submits
+    /// with [`AdmitSource::Http`]).
+    ///
+    /// A deadline that has *already* expired at admission — including
+    /// `Some(Duration::ZERO)` — never enqueues: the reply channel is
+    /// answered with [`DeadlineExceeded`] immediately and the request
+    /// is counted as `expired` (not `shed`), exactly as if it had
+    /// died waiting at the front of the queue.
+    pub fn submit_from(
+        &self,
+        source: AdmitSource,
+        tokens: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> crate::Result<Receiver<crate::Result<Response>>> {
         anyhow::ensure!(
             tokens.len() == self.tokens_per_image,
             "expected {} token values, got {}",
@@ -434,6 +500,24 @@ impl ModelServer {
         // after a replica death emits "retry" events, never a second
         // admission root
         let t_admit = self.telemetry.ts_us(now);
+        if req.expired(now) {
+            // dead on arrival: short-circuit at admission instead of
+            // queueing work every executor would only throw away. The
+            // reply still flows through the channel, so callers see
+            // the same one-reply shape as a pop-time expiry. Like
+            // `shed`, this never reaches a replica — rollup only.
+            self.metrics.lock().unwrap().expired += 1;
+            self.telemetry.record(|b| {
+                let pid = b.pid();
+                b.push(
+                    TraceEvent::instant("admit", "request", pid, 0, t_admit)
+                        .with_id(rid)
+                        .with_note("expired"),
+                );
+            });
+            let _ = req.reply.send(Err(anyhow::Error::new(DeadlineExceeded { id: rid })));
+            return Ok(rx);
+        }
         match self.front.push(req) {
             Ok(()) => {
                 self.telemetry.record(|b| {
@@ -447,7 +531,11 @@ impl ModelServer {
                 // shed requests never reach a replica: the rollup is the
                 // only sink that sees them (replica sums exclude shed by
                 // design — documented on `ServeMetrics::shed`)
-                self.metrics.lock().unwrap().shed += 1;
+                {
+                    let mut m = self.metrics.lock().unwrap();
+                    m.shed += 1;
+                    *m.shed_by_source.entry(source.label()).or_default() += 1;
+                }
                 self.telemetry.record(|b| {
                     let pid = b.pid();
                     b.push(
@@ -841,7 +929,8 @@ fn executor_loop(
                 let pid = b.pid();
                 let ts = b.now();
                 for r in &doomed {
-                    b.push(TraceEvent::instant("expired", "request", pid, trace_tid, ts).with_id(r.id));
+                    let ev = TraceEvent::instant("expired", "request", pid, trace_tid, ts);
+                    b.push(ev.with_id(r.id));
                 }
             }
             for r in doomed {
@@ -1129,14 +1218,11 @@ impl Router {
         self.entries.read().unwrap().iter().find(|e| e.name == model).map(|e| e.version)
     }
 
-    /// The server for `model`, or an actionable routing error naming
-    /// what *is* being served.
+    /// The server for `model`, or a downcastable [`UnknownModel`]
+    /// naming what *is* being served (the front door maps it to 404).
     fn routed(&self, model: &str) -> crate::Result<Arc<ModelServer>> {
         self.server(model).ok_or_else(|| {
-            anyhow::anyhow!(
-                "no server for model '{model}' (serving: {})",
-                self.models().join(", ")
-            )
+            anyhow::Error::new(UnknownModel { model: model.to_string(), serving: self.models() })
         })
     }
 
@@ -1163,6 +1249,19 @@ impl Router {
         deadline: Option<Duration>,
     ) -> crate::Result<Receiver<crate::Result<Response>>> {
         self.routed(model)?.submit_with_deadline(tokens, deadline)
+    }
+
+    /// [`Self::submit_with_deadline`] with an explicit
+    /// [`AdmitSource`], so the edge's shed accounting is attributed
+    /// (see [`ModelServer::submit_from`]).
+    pub fn submit_from(
+        &self,
+        source: AdmitSource,
+        model: &str,
+        tokens: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> crate::Result<Receiver<crate::Result<Response>>> {
+        self.routed(model)?.submit_from(source, tokens, deadline)
     }
 
     /// Route a whole image set to `model`'s server and wait for replies.
@@ -1379,11 +1478,27 @@ impl Router {
         let counters: [(&str, &str, fn(&ServeMetrics) -> u64); 7] = [
             ("hgpipe_requests_total", "Requests completed successfully.", |m| m.count() as u64),
             ("hgpipe_requests_failed_total", "Requests answered with an error.", |m| m.failed),
-            ("hgpipe_requests_shed_total", "Requests rejected at admission (bounded queue full).", |m| m.shed),
-            ("hgpipe_requests_expired_total", "Requests expired before execution (deadline).", |m| m.expired),
-            ("hgpipe_requests_retried_total", "Requests requeued after a replica death.", |m| m.retried),
+            (
+                "hgpipe_requests_shed_total",
+                "Requests rejected at admission (bounded queue full).",
+                |m| m.shed,
+            ),
+            (
+                "hgpipe_requests_expired_total",
+                "Requests expired before execution (deadline).",
+                |m| m.expired,
+            ),
+            (
+                "hgpipe_requests_retried_total",
+                "Requests requeued after a replica death.",
+                |m| m.retried,
+            ),
             ("hgpipe_replica_restarts_total", "Replica supervisor restarts.", |m| m.restarts),
-            ("hgpipe_replicas_retired_total", "Replicas permanently retired after flapping.", |m| m.retired),
+            (
+                "hgpipe_replicas_retired_total",
+                "Replicas permanently retired after flapping.",
+                |m| m.retired,
+            ),
         ];
         for (name, help, pick) in counters {
             family(
@@ -1393,6 +1508,20 @@ impl Router {
                 rows.iter().map(|r| (r.labels.clone(), pick(&r.m).to_string())).collect(),
             );
         }
+        // shed, broken down by admission source (in-process callers vs
+        // the HTTP front door); versions that never shed emit nothing
+        let mut shed_by_source: Vec<(String, String)> = Vec::new();
+        for r in &rows {
+            for (src, n) in &r.m.shed_by_source {
+                shed_by_source.push((format!("{},source=\"{src}\"", r.labels), n.to_string()));
+            }
+        }
+        family(
+            "hgpipe_requests_shed_by_source_total",
+            "counter",
+            "Requests rejected at admission, by entry point.",
+            shed_by_source,
+        );
         family(
             "hgpipe_live_replicas",
             "gauge",

@@ -18,6 +18,10 @@
 //! * [`runtime`] — pluggable execution backends for the quantized ViT,
 //! * [`coordinator`] — the serving loop: request router, dynamic batcher,
 //!   pipelined execution with per-stage metrics, generic over the backend,
+//! * [`server`] — the network front door: a dependency-free HTTP/1.1
+//!   edge (`hgpipe serve --http ADDR` / `HGPIPE_HTTP`) mapping
+//!   `POST /v1/models/{name}/infer`, `GET /metrics` and `GET /healthz`
+//!   onto the router with typed-error → status-code downcasts,
 //! * [`telemetry`] — zero-cost-when-off tracing: per-request span trees
 //!   (admission, queue wait, dispatch, stage residency, stalls, per-op
 //!   kernel timings) recorded into per-thread ring buffers and written
@@ -105,6 +109,7 @@ pub mod quant;
 pub mod report;
 pub mod roofline;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod telemetry;
 pub mod util;

@@ -5,7 +5,8 @@
 //!   design               parallelism design for a network
 //!   simulate             cycle-accurate pipeline simulation
 //!   fifo-search          minimal deadlock-free deep-FIFO depth
-//!   serve                serve synthetic requests through the AOT model
+//!   serve                serve synthetic requests through the AOT model,
+//!                        or real ones over HTTP (--http ADDR)
 //!   eval                 accuracy of an AOT model on the eval batch
 //!   artifacts            list the AOT artifact manifest
 
@@ -245,7 +246,7 @@ COMMANDS:
                            [--replicas N] [--kernels scalar|avx2|neon|auto]
                            [--pipeline [--stages N] [--queue-depth N]]
                            [--queue-cap N] [--deadline-ms N] [--faults SPEC]
-                           [--trace FILE.jsonl]
+                           [--trace FILE.jsonl] [--http ADDR]
   eval                     eval-batch accuracy of a quantized model
                            [--model tiny-synth] [--artifacts DIR]
                            [--backend interpreter|pjrt] [--lanes N]
@@ -285,6 +286,16 @@ enables the deterministic fault-injection harness
 HGPIPE_FAULTS): injected replica panics are survived by supervised
 restart, requeueing the replica's accepted requests so every accepted
 request still gets exactly one reply.
+
+Network front door (serve): `--http ADDR` (e.g. 127.0.0.1:8080; port 0
+picks an ephemeral port, printed on stdout) serves real requests over a
+dependency-free HTTP/1.1 edge instead of the synthetic loop:
+POST /v1/models/<name>/infer (binary little-endian f32 or JSON-array
+image body, optional Deadline-Ms header), GET /metrics (Prometheus
+text), GET /healthz. Typed overload errors map onto the wire: 429 +
+Retry-After on Overloaded, 504 on DeadlineExceeded, 404 on an unknown
+model. Env fallback: HGPIPE_HTTP (an explicit --http beats it;
+`--http \"\"` disables outright). The process serves until killed.
 
 Observability: `--trace FILE.jsonl` records every request's span tree
 (admission, queue wait, dispatch, per-stage residency with stall
@@ -473,6 +484,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("tracing ON -> {path} (Chrome-trace JSONL; open in Perfetto)");
     }
 
+    // `--http ADDR` flips serve from the synthetic traffic loop to the
+    // network front door. Flag precedence matches every other knob:
+    // explicit --http beats the HGPIPE_HTTP env fallback, and
+    // `--http ""` disables an env-configured edge outright.
+    let http_addr: Option<String> = match args.flags.get("http") {
+        Some(v) => {
+            anyhow::ensure!(
+                v != "true",
+                "--http expects a listen address (e.g. --http 127.0.0.1:8080; \
+                 port 0 picks an ephemeral port)"
+            );
+            if v.is_empty() {
+                None
+            } else {
+                Some(v.clone())
+            }
+        }
+        None => hgpipe::server::addr_from_env(),
+    };
+    if let Some(addr) = http_addr {
+        anyhow::ensure!(
+            !args.flags.contains_key("requests") && !args.flags.contains_key("rate"),
+            "--requests/--rate drive the synthetic loop and do not apply with --http"
+        );
+        return serve_http(&addr, router);
+    }
+
     let mut rng = Prng::new(7);
     let mk_image = |rng: &mut Prng, n_tok: usize| -> Vec<f32> {
         (0..n_tok).map(|_| rng.f64() as f32).collect()
@@ -564,6 +602,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `serve --http` mode: real requests over a socket instead of the
+/// synthetic loop. Parks forever once bound — the process serves until
+/// it is killed (the smoke harness and deployments both stop it with a
+/// signal; queued requests on a live drain still get their one reply,
+/// see `hgpipe::server`).
+fn serve_http(addr: &str, router: Router) -> Result<()> {
+    let router = std::sync::Arc::new(router);
+    let server =
+        hgpipe::server::HttpServer::bind(addr, router, hgpipe::server::HttpConfig::default())?;
+    println!(
+        "http: listening on http://{} ({} workers; POST /v1/models/<name>/infer, \
+         GET /metrics, GET /healthz)",
+        server.local_addr(),
+        server.live_workers()
+    );
+    // a parent polling our stdout for the bound port (the ephemeral
+    // `--http 127.0.0.1:0` smoke path) must see the line immediately
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let dir = args.artifacts_dir();
     let model = args.flag("model", "tiny-synth");
@@ -625,7 +687,10 @@ fn load_eval_set(dir: &std::path::Path) -> Result<(Vec<f32>, Vec<u8>, [usize; 3]
 
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts_dir())?;
-    println!("{:<28} {:<12} {:<8} {:<18} {:<12}", "artifact (pjrt)", "model", "prec", "input", "output");
+    println!(
+        "{:<28} {:<12} {:<8} {:<18} {:<12}",
+        "artifact (pjrt)", "model", "prec", "input", "output"
+    );
     for a in &manifest.artifacts {
         println!(
             "{:<28} {:<12} {:<8} {:<18} {:<12}",

@@ -1,0 +1,395 @@
+//! Minimal HTTP/1.1 wire codec for the front door: request framing
+//! (head + `Content-Length` body) and response serialization over a
+//! blocking [`TcpStream`], with the abuse limits the edge needs —
+//! a head-size cap, a body-size cap, and a per-request read budget so
+//! a slow or stalled client cannot pin a worker forever.
+//!
+//! Deliberately not a general HTTP implementation: no chunked
+//! transfer encoding (rejected with `501`), no continuation lines, no
+//! multi-valued header folding. The serving API only needs `POST`
+//! with a sized body and bodyless `GET`s, and every limit violation
+//! maps to a precise status code so misbehaving clients get an
+//! answer, not a hang (see [`ReadError`]).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Wire-level limits and budgets, fixed per server.
+#[derive(Debug, Clone, Copy)]
+pub struct Wire {
+    /// Max bytes of request line + headers (`431` beyond this).
+    pub max_head_bytes: usize,
+    /// Max declared `Content-Length` (`413` beyond this, before any
+    /// body byte is read).
+    pub max_body_bytes: usize,
+    /// Budget for receiving one complete head and, separately, one
+    /// complete body. A client that trickles bytes slower than this
+    /// is disconnected, not waited on.
+    pub read_timeout: Duration,
+}
+
+/// One parsed request. Header names are lowercased at parse time;
+/// values keep their case with surrounding whitespace trimmed.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// `HTTP/1.0` or `HTTP/1.1` (anything else is rejected with 505).
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of `name` (case-insensitive lookup).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to keep the connection open:
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
+    pub fn wants_keep_alive(&self) -> bool {
+        let conn = self.header("connection").map(|v| v.to_ascii_lowercase());
+        match self.version.as_str() {
+            "HTTP/1.0" => conn.as_deref() == Some("keep-alive"),
+            _ => conn.as_deref() != Some("close"),
+        }
+    }
+}
+
+/// Why a request could not be read off the connection.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Clean end of stream between requests — the peer closed an idle
+    /// keep-alive connection. Not an error; just stop serving it.
+    Eof,
+    /// The connection is unusable (closed mid-request, read failure,
+    /// or the read budget expired with an incomplete request). No
+    /// response can be framed; drop the connection.
+    Disconnect(String),
+    /// The request violated the protocol or a limit in a way that can
+    /// still be answered: respond with `status`, then close (framing
+    /// is not trustworthy after a malformed request).
+    Bad { status: u16, msg: String },
+}
+
+fn bad(status: u16, msg: impl Into<String>) -> ReadError {
+    ReadError::Bad { status, msg: msg.into() }
+}
+
+/// Read one request from `stream`. `carry` holds bytes already read
+/// past the previous request's body (pipelined or coalesced reads)
+/// and is maintained across calls on the same connection.
+///
+/// `shutting_down` lets a draining server close *idle* keep-alive
+/// connections promptly: if the flag is set and not a single byte of
+/// the next request has arrived, the read stops with
+/// [`ReadError::Eof`]. A half-received request keeps its full read
+/// budget — in-flight work is drained, not dropped.
+pub fn read_request(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    wire: &Wire,
+    shutting_down: &AtomicBool,
+) -> Result<Request, ReadError> {
+    // -------- head: read until the blank line --------
+    let head_deadline = Instant::now() + wire.read_timeout;
+    let head_end = loop {
+        match find_head_end(carry) {
+            Some(pos) if pos <= wire.max_head_bytes => break pos,
+            // over the cap — whether the terminator arrived or not
+            Some(_) => {
+                return Err(bad(
+                    431,
+                    format!("request head exceeds {} bytes", wire.max_head_bytes),
+                ));
+            }
+            None if carry.len() > wire.max_head_bytes + 4 => {
+                return Err(bad(
+                    431,
+                    format!("request head exceeds {} bytes", wire.max_head_bytes),
+                ));
+            }
+            None => {}
+        }
+        if shutting_down.load(Ordering::SeqCst) && carry.is_empty() {
+            return Err(ReadError::Eof);
+        }
+        let now = Instant::now();
+        if now >= head_deadline {
+            return Err(ReadError::Disconnect(if carry.is_empty() {
+                "idle past the read budget".into()
+            } else {
+                "request head incomplete past the read budget".into()
+            }));
+        }
+        // short read slices so both the shutdown flag and the budget
+        // are re-checked at least every 100ms
+        match read_chunk(stream, carry, (head_deadline - now).min(Duration::from_millis(100))) {
+            ReadChunk::Data | ReadChunk::TimedOut => {}
+            ReadChunk::Eof => {
+                return Err(if carry.is_empty() {
+                    ReadError::Eof
+                } else {
+                    ReadError::Disconnect("peer closed mid-head".into())
+                });
+            }
+            ReadChunk::Failed(e) => return Err(ReadError::Disconnect(e)),
+        }
+    };
+    let head: Vec<u8> = carry.drain(..head_end + 4).take(head_end).collect();
+    let (method, path, version, headers) = parse_head(&head)?;
+
+    // -------- body: exactly Content-Length bytes --------
+    if header_value(&headers, "transfer-encoding").is_some() {
+        return Err(bad(501, "chunked transfer encoding is not supported"));
+    }
+    let content_length = match header_value(&headers, "content-length") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| bad(400, format!("unparseable Content-Length {v:?}")))?,
+        None if method == "POST" || method == "PUT" => {
+            return Err(bad(411, "request body requires a Content-Length header"));
+        }
+        None => 0,
+    };
+    if content_length > wire.max_body_bytes {
+        // answered before reading a single body byte — the connection
+        // closes after the 413, so the unread body is never drained
+        return Err(bad(
+            413,
+            format!(
+                "body of {content_length} bytes exceeds the {} byte limit",
+                wire.max_body_bytes
+            ),
+        ));
+    }
+    let body_deadline = Instant::now() + wire.read_timeout;
+    while carry.len() < content_length {
+        let now = Instant::now();
+        if now >= body_deadline {
+            return Err(ReadError::Disconnect(format!(
+                "body incomplete past the read budget ({} of {content_length} bytes)",
+                carry.len()
+            )));
+        }
+        match read_chunk(stream, carry, (body_deadline - now).min(Duration::from_millis(100))) {
+            ReadChunk::Data | ReadChunk::TimedOut => {}
+            ReadChunk::Eof => return Err(ReadError::Disconnect("peer closed mid-body".into())),
+            ReadChunk::Failed(e) => return Err(ReadError::Disconnect(e)),
+        }
+    }
+    let body: Vec<u8> = carry.drain(..content_length).collect();
+    Ok(Request { method, path, version, headers, body })
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+enum ReadChunk {
+    Data,
+    TimedOut,
+    Eof,
+    Failed(String),
+}
+
+/// One bounded read into `into`. The socket's read timeout is set to
+/// `timeout` for this read only (clamped to ≥1ms — a zero timeout is
+/// an error on std sockets).
+fn read_chunk(stream: &mut TcpStream, into: &mut Vec<u8>, timeout: Duration) -> ReadChunk {
+    if stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1)))).is_err() {
+        return ReadChunk::Failed("set_read_timeout failed".into());
+    }
+    let mut buf = [0u8; 4096];
+    match stream.read(&mut buf) {
+        Ok(0) => ReadChunk::Eof,
+        Ok(n) => {
+            into.extend_from_slice(&buf[..n]);
+            ReadChunk::Data
+        }
+        Err(e) => match e.kind() {
+            std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted => ReadChunk::TimedOut,
+            _ => ReadChunk::Failed(e.to_string()),
+        },
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn parse_head(head: &[u8]) -> Result<(String, String, String, Vec<(String, String)>), ReadError> {
+    let text = std::str::from_utf8(head).map_err(|_| bad(400, "request head is not UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    // exactly `METHOD SP PATH SP VERSION` — split on single spaces so
+    // a truncated or over-spaced line is rejected, not reinterpreted
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && !p.is_empty() && !v.is_empty() => {
+            (m.to_string(), p.to_string(), v.to_string())
+        }
+        _ => return Err(bad(400, format!("malformed request line {request_line:?}"))),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(bad(505, format!("unsupported protocol version {version:?}")));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(bad(400, format!("malformed header line {line:?}")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok((method, path, version, headers))
+}
+
+fn header_value<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+/// One response to serialize. `Connection:` is decided by the caller
+/// at write time (keep-alive vs close/drain), not stored here.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Extra headers (e.g. `Retry-After` on 429, `Allow` on 405).
+    pub headers: Vec<(&'static str, String)>,
+}
+
+impl Response {
+    pub fn new(status: u16, content_type: &'static str, body: Vec<u8>) -> Self {
+        Response { status, content_type, body, headers: Vec::new() }
+    }
+
+    /// A JSON reply (the serving API's default content type).
+    pub fn json(status: u16, body: String) -> Self {
+        Self::new(status, "application/json", body.into_bytes())
+    }
+
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Self {
+        self.headers.push((name, value.into()));
+        self
+    }
+}
+
+/// Serialize `resp`. `keep_alive` picks the `Connection:` header; the
+/// status line is always HTTP/1.1 (valid to send to 1.0 clients).
+pub fn write_response(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+/// Reason phrases for the statuses the front door emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_terminator_found() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some(16));
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n"), None);
+    }
+
+    #[test]
+    fn request_line_parses() {
+        let (m, p, v, h) = parse_head(b"POST /v1/x HTTP/1.1\r\nContent-Length: 4").unwrap();
+        assert_eq!((m.as_str(), p.as_str(), v.as_str()), ("POST", "/v1/x", "HTTP/1.1"));
+        assert_eq!(h, vec![("content-length".to_string(), "4".to_string())]);
+    }
+
+    #[test]
+    fn header_names_lowercase_values_trimmed() {
+        let (_, _, _, h) = parse_head(b"GET / HTTP/1.1\r\nDeadline-Ms:  25 ").unwrap();
+        assert_eq!(h, vec![("deadline-ms".to_string(), "25".to_string())]);
+    }
+
+    #[test]
+    fn truncated_request_line_is_400() {
+        for line in ["GET", "GET /", "", "GET  / HTTP/1.1", "GET / HTTP/1.1 extra"] {
+            match parse_head(line.as_bytes()) {
+                Err(ReadError::Bad { status: 400, .. }) => {}
+                other => panic!("{line:?}: expected 400, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_version_is_505() {
+        match parse_head(b"GET / HTTP/2.0") {
+            Err(ReadError::Bad { status: 505, .. }) => {}
+            other => panic!("expected 505, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn keep_alive_defaults_by_version() {
+        let req = |version: &str, conn: Option<&str>| Request {
+            method: "GET".into(),
+            path: "/".into(),
+            version: version.into(),
+            headers: conn.map(|c| ("connection".to_string(), c.to_string())).into_iter().collect(),
+            body: Vec::new(),
+        };
+        assert!(req("HTTP/1.1", None).wants_keep_alive());
+        assert!(!req("HTTP/1.1", Some("close")).wants_keep_alive());
+        assert!(!req("HTTP/1.0", None).wants_keep_alive());
+        assert!(req("HTTP/1.0", Some("keep-alive")).wants_keep_alive());
+    }
+
+    #[test]
+    fn reason_phrases_cover_the_emitted_statuses() {
+        for s in [200, 400, 404, 405, 411, 413, 429, 431, 500, 501, 503, 504, 505] {
+            assert_ne!(reason(s), "Unknown", "missing reason for {s}");
+        }
+    }
+}

@@ -1,0 +1,526 @@
+//! L4 network front door: a hand-rolled, dependency-free HTTP/1.1
+//! server over [`std::net::TcpListener`] in front of the
+//! [`crate::coordinator::Router`] — the socket edge of the paper's
+//! end-to-end serving claim. One acceptor thread plus a small pool of
+//! connection workers (`HttpConfig::workers`) handle keep-alive
+//! connections pulled from a bounded [`FrontQueue`], the same MPMC
+//! primitive the coordinator's admission queue uses.
+//!
+//! Endpoints:
+//!
+//! | route | method | reply |
+//! |---|---|---|
+//! | `/v1/models/{name}/infer` | POST | run one image (binary LE f32 or JSON array body), JSON logits reply |
+//! | `/metrics` | GET | [`Router::prometheus_text`] verbatim (`text/plain; version=0.0.4`) |
+//! | `/healthz` | GET | liveness JSON from [`ModelServer::live_replicas`] per model |
+//!
+//! The coordinator's typed admission errors are downcast *at the
+//! edge* and mapped onto the wire: [`Overloaded`] → `429` +
+//! `Retry-After`, [`DeadlineExceeded`] (from a `Deadline-Ms` request
+//! header) → `504`, [`UnknownModel`] → `404`; shutdown rejections →
+//! `503`; malformed bodies and the wire limits of [`http::Wire`] →
+//! `400`/`411`/`413`/`431`. Shed accounting is per-source
+//! ([`AdmitSource::Http`]), so `/metrics` shows who overload hit.
+//!
+//! Exactly-one-reply, extended across the socket: every request read
+//! off an accepted connection is answered with exactly one HTTP
+//! response, and graceful shutdown ([`HttpServer::shutdown`] or drop)
+//! drains — the acceptor stops, already-accepted connections are
+//! served until their in-flight request completes (idle keep-alive
+//! connections close immediately), and only then do the workers
+//! (and, at the caller's leisure, the Router) go away.
+//!
+//! Traces gain an `http` lane per connection (`http-conn-N`): each
+//! served request is one `X` span noting `METHOD path -> status`,
+//! bracketing the coordinator's `admit` instant and `exec` span so a
+//! trace shows socket→admit→exec end to end.
+
+pub mod http;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::queue::{FrontQueue, Pop};
+use crate::coordinator::{AdmitSource, DeadlineExceeded, Overloaded, Router, UnknownModel};
+use crate::telemetry::{Telemetry, TraceEvent};
+use crate::util::json::Json;
+use http::{read_request, write_response, ReadError, Request, Response, Wire};
+
+/// Content type of the `/metrics` exposition (Prometheus text 0.0.4).
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// The `HGPIPE_HTTP` env fallback for `serve --http` (read-only, like
+/// every other `HGPIPE_*` fallback; the explicit flag wins). Empty
+/// means disabled, mirroring `--http ""`.
+pub fn addr_from_env() -> Option<String> {
+    std::env::var("HGPIPE_HTTP").ok().filter(|v| !v.is_empty())
+}
+
+/// Front-door tuning. The defaults suit tests and the CI smoke; a
+/// real deployment would size `workers` to its expected concurrent
+/// connection count (one blocked worker per in-flight request).
+#[derive(Debug, Clone, Copy)]
+pub struct HttpConfig {
+    /// Connection worker threads (each owns one connection at a time).
+    pub workers: usize,
+    /// Per-request read budget against slow clients (see
+    /// [`Wire::read_timeout`]); also the socket write timeout.
+    pub read_timeout: Duration,
+    /// Request head cap (`431` beyond it).
+    pub max_head_bytes: usize,
+    /// Request body cap (`413` beyond it, before reading the body).
+    pub max_body_bytes: usize,
+    /// Accepted-but-unclaimed connection bound; beyond it new
+    /// connections are dropped at accept (the TCP analogue of shed).
+    pub pending_conns: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            workers: 8,
+            read_timeout: Duration::from_secs(5),
+            max_head_bytes: 16 * 1024,
+            max_body_bytes: 8 * 1024 * 1024,
+            pending_conns: 1024,
+        }
+    }
+}
+
+struct Shared {
+    router: Arc<Router>,
+    /// The trace handle of the first routed model: `HGPIPE_TRACE` /
+    /// `--trace` point every fleet at one JSONL sink, so the edge
+    /// lane records into that shared file regardless of which model a
+    /// request routes to.
+    tele: Telemetry,
+    wire: Wire,
+    conns: FrontQueue<TcpStream>,
+    stop: AtomicBool,
+    live_workers: AtomicUsize,
+    conn_seq: AtomicU64,
+}
+
+/// The running front door. Dropping it performs the graceful drain
+/// documented on the module; the [`Router`] behind it is untouched
+/// and can keep serving in-process callers.
+pub struct HttpServer {
+    shared: Arc<Shared>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// start the acceptor + worker pool in front of `router`.
+    pub fn bind(addr: &str, router: Arc<Router>, cfg: HttpConfig) -> crate::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("http: cannot bind {addr}: {e}"))?;
+        // nonblocking accept so the acceptor can poll the stop flag;
+        // accepted sockets are switched back to blocking-with-timeout
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let tele = router
+            .models()
+            .first()
+            .and_then(|m| router.server(m))
+            .map(|s| s.telemetry().clone())
+            .unwrap_or_default();
+        let shared = Arc::new(Shared {
+            router,
+            tele,
+            wire: Wire {
+                max_head_bytes: cfg.max_head_bytes,
+                max_body_bytes: cfg.max_body_bytes,
+                read_timeout: cfg.read_timeout,
+            },
+            conns: FrontQueue::bounded(cfg.pending_conns.max(1)),
+            stop: AtomicBool::new(false),
+            live_workers: AtomicUsize::new(0),
+            conn_seq: AtomicU64::new(0),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for i in 0..cfg.workers.max(1) {
+            // counted before spawn so `live_workers()` reads the full
+            // pool size the moment `bind` returns
+            shared.live_workers.fetch_add(1, Ordering::SeqCst);
+            let s = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("http-worker-{i}"))
+                    .spawn(move || worker_loop(&s))?,
+            );
+        }
+        let s = shared.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("http-acceptor".into())
+            .spawn(move || acceptor_loop(listener, &s))?;
+        Ok(HttpServer { shared, acceptor: Some(acceptor), workers, addr: local })
+    }
+
+    /// The bound address (with the real port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connection workers currently alive — the leak gauge the edge
+    /// tests pin: malformed input must never wedge or kill a worker,
+    /// so this stays at the configured pool size until shutdown.
+    pub fn live_workers(&self) -> usize {
+        self.shared.live_workers.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown (also runs on drop): stop accepting, serve
+    /// every already-accepted connection's in-flight request, join
+    /// the pool. Named so call sites read as intent, not cleanup.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // close-drains-before-EOS: workers serve every connection the
+        // acceptor already queued, then see `Closed` and exit
+        self.shared.conns.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn acceptor_loop(listener: TcpListener, shared: &Shared) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // blocking + budgeted from here on; a socket that
+                // cannot even be configured is dropped on the floor
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let _ = stream.set_write_timeout(Some(shared.wire.read_timeout));
+                let _ = stream.set_nodelay(true);
+                // a push rejected by the bound (or by close during
+                // shutdown) drops the socket: the peer sees EOF, the
+                // pool never learns the connection existed
+                let _ = shared.conns.push(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    // decrement on every exit path (including a handler panic
+    // unwinding through this frame) so `live_workers` is truthful
+    struct LiveGuard<'a>(&'a AtomicUsize);
+    impl Drop for LiveGuard<'_> {
+        fn drop(&mut self) {
+            self.0.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    let _guard = LiveGuard(&shared.live_workers);
+    loop {
+        match shared.conns.pop_timeout(Duration::from_millis(50)) {
+            Pop::Item(stream) => {
+                // one poisoned connection must not shrink the pool:
+                // swallow handler panics, keep serving the next one
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    handle_connection(shared, stream);
+                }));
+            }
+            Pop::TimedOut => continue,
+            Pop::Closed => break,
+        }
+    }
+}
+
+/// Serve one keep-alive connection to completion: read → route →
+/// respond, until the peer closes, a wire limit trips, or shutdown
+/// drains us. Every request read gets exactly one response.
+fn handle_connection(shared: &Shared, mut stream: TcpStream) {
+    let conn = shared.conn_seq.fetch_add(1, Ordering::Relaxed);
+    let tid = shared.tele.alloc_tid(&format!("http-conn-{conn}"));
+    let mut carry = Vec::new();
+    loop {
+        let req = match read_request(&mut stream, &mut carry, &shared.wire, &shared.stop) {
+            Ok(req) => req,
+            Err(ReadError::Eof) | Err(ReadError::Disconnect(_)) => return,
+            Err(ReadError::Bad { status, msg }) => {
+                // answerable protocol violation: one response, then
+                // close (framing is not trustworthy afterwards)
+                let _ = write_response(&mut stream, &error_json(status, &msg), false);
+                return;
+            }
+        };
+        let t0 = shared.tele.now_us();
+        let resp = route(shared, &req);
+        // a drain that began mid-request still answers it — but on a
+        // closing connection, so the client re-resolves
+        let keep = req.wants_keep_alive() && !shared.stop.load(Ordering::SeqCst);
+        let wrote = write_response(&mut stream, &resp, keep);
+        let dur = shared.tele.now_us().saturating_sub(t0);
+        shared.tele.record(|b| {
+            let pid = b.pid();
+            b.push(
+                TraceEvent::span("http", "http", pid, tid, t0, dur)
+                    .with_note(format!("{} {} -> {}", req.method, req.path, resp.status)),
+            );
+        });
+        if !keep || wrote.is_err() {
+            return;
+        }
+    }
+}
+
+fn route(shared: &Shared, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => Response::new(
+            200,
+            PROMETHEUS_CONTENT_TYPE,
+            shared.router.prometheus_text().into_bytes(),
+        ),
+        (_, "/metrics") | (_, "/healthz") if req.method != "GET" => {
+            error_json(405, "method not allowed").with_header("Allow", "GET")
+        }
+        ("GET", "/healthz") => healthz(shared),
+        (method, path) if path.starts_with("/v1/models/") && path.ends_with("/infer") => {
+            let name = &path["/v1/models/".len()..path.len() - "/infer".len()];
+            if name.is_empty() || name.contains('/') {
+                return error_json(404, &format!("no route for {path}"));
+            }
+            if method != "POST" {
+                return error_json(405, "inference requires POST").with_header("Allow", "POST");
+            }
+            infer(shared, name, req)
+        }
+        (_, path) => error_json(404, &format!("no route for {path}")),
+    }
+}
+
+/// `POST /v1/models/{name}/infer`: decode the image, submit through
+/// the router (per-source admission accounting + typed rejections),
+/// block for the single reply, serialize it.
+fn infer(shared: &Shared, model: &str, req: &Request) -> Response {
+    let deadline = match req.header("deadline-ms") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) => Some(Duration::from_millis(ms)),
+            Err(_) => return error_json(400, &format!("unparseable Deadline-Ms {v:?}")),
+        },
+    };
+    let tokens = match decode_tokens(req) {
+        Ok(t) => t,
+        Err(msg) => return error_json(400, &msg),
+    };
+    let rx = match shared.router.submit_from(AdmitSource::Http, model, tokens, deadline) {
+        Ok(rx) => rx,
+        Err(e) => return admission_error(&e),
+    };
+    match rx.recv() {
+        Ok(Ok(resp)) => Response::json(200, infer_body(model, &resp)),
+        Ok(Err(e)) => {
+            if e.downcast_ref::<DeadlineExceeded>().is_some() {
+                error_json(504, &format!("{e}"))
+            } else {
+                // dispatch failed or the fleet shut down mid-flight:
+                // the explicit one-reply error crosses the socket too
+                error_json(500, &format!("{e}"))
+            }
+        }
+        Err(_) => error_json(500, "reply channel lost"),
+    }
+}
+
+/// Map a submit-time rejection onto the wire via typed downcasts.
+fn admission_error(e: &anyhow::Error) -> Response {
+    if let Some(o) = e.downcast_ref::<Overloaded>() {
+        // tell the client when to come back; 1s is the shortest
+        // integral Retry-After and the queue drains far faster
+        return error_json(429, &format!("{o}")).with_header("Retry-After", "1");
+    }
+    if e.downcast_ref::<UnknownModel>().is_some() {
+        return error_json(404, &format!("{e}"));
+    }
+    let msg = format!("{e:#}");
+    if msg.contains("server stopped") {
+        return error_json(503, &msg);
+    }
+    // everything else submit rejects is a malformed request (e.g.
+    // wrong token count for the model's input shape)
+    error_json(400, &msg)
+}
+
+/// The image body: raw little-endian f32 by default, or a JSON array
+/// of numbers when the content type (or the payload itself) says so.
+fn decode_tokens(req: &Request) -> Result<Vec<f32>, String> {
+    let content_type = req.header("content-type").unwrap_or("");
+    let first = req.body.iter().find(|b| !b.is_ascii_whitespace());
+    if content_type.contains("json") || first == Some(&b'[') {
+        let text = std::str::from_utf8(&req.body).map_err(|_| "JSON body is not UTF-8")?;
+        let parsed = Json::parse(text).map_err(|e| format!("malformed JSON body: {e}"))?;
+        let arr = parsed.as_arr().ok_or("JSON body must be an array of numbers")?;
+        return arr
+            .iter()
+            .map(|v| match v.as_f64() {
+                Some(f) => Ok(f as f32),
+                None => Err("JSON body must contain only numbers".to_string()),
+            })
+            .collect();
+    }
+    if req.body.len() % 4 != 0 {
+        return Err(format!(
+            "binary body length {} is not a multiple of 4 (little-endian f32s)",
+            req.body.len()
+        ));
+    }
+    Ok(req
+        .body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn infer_body(model: &str, r: &crate::coordinator::Response) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(64 + r.logits.len() * 12);
+    let _ = write!(
+        s,
+        "{{\"id\":{},\"model\":{},\"argmax\":{},\"latency_us\":{},\"logits\":[",
+        r.id,
+        json_str(model),
+        r.argmax,
+        r.latency.as_micros()
+    );
+    for (i, l) in r.logits.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        // f32 Display is the shortest decimal that round-trips, so
+        // clients parsing with `str::parse::<f32>` recover the exact
+        // bits — the smoke gate's bit-exactness rides on this
+        let _ = write!(s, "{l}");
+    }
+    s.push_str("]}");
+    s
+}
+
+/// `GET /healthz`: 200 while every routed model has at least one live
+/// replica, 503 (with the same body shape) once any fleet degraded to
+/// zero — load balancers eject the instance, scrapes keep working.
+fn healthz(shared: &Shared) -> Response {
+    let models = shared.router.models();
+    let mut all_live = !models.is_empty();
+    let mut items = Vec::new();
+    for name in &models {
+        if let Some(s) = shared.router.server(name) {
+            let live = s.live_replicas();
+            if live == 0 {
+                all_live = false;
+            }
+            items.push(format!(
+                "{{\"name\":{},\"live_replicas\":{live},\"replicas\":{},\"queue_depth\":{}}}",
+                json_str(name),
+                s.replicas(),
+                s.queue_len()
+            ));
+        }
+    }
+    let status = if all_live { 200 } else { 503 };
+    let body = format!(
+        "{{\"status\":{},\"models\":[{}]}}",
+        json_str(if all_live { "ok" } else { "degraded" }),
+        items.join(",")
+    );
+    Response::json(status, body)
+}
+
+fn error_json(status: u16, msg: &str) -> Response {
+    Response::json(status, format!("{{\"error\":{},\"status\":{status}}}", json_str(msg)))
+}
+
+/// Serialize one JSON string literal (quotes, backslashes, control
+/// bytes) — error messages quote client input, so this is load-bearing.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_strings_escape_quotes_and_control_bytes() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("line\nbreak\x01"), "\"line\\nbreak\\u0001\"");
+    }
+
+    #[test]
+    fn binary_and_json_bodies_decode_identically() {
+        let vals = [0.5f32, -1.25, 3.0];
+        let bin: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let req = |body: Vec<u8>, ct: Option<&'static str>| Request {
+            method: "POST".into(),
+            path: "/v1/models/m/infer".into(),
+            version: "HTTP/1.1".into(),
+            headers: ct.map(|c| ("content-type".to_string(), c.to_string())).into_iter().collect(),
+            body,
+        };
+        assert_eq!(decode_tokens(&req(bin, None)).unwrap(), vals);
+        assert_eq!(
+            decode_tokens(&req(b"[0.5, -1.25, 3]".to_vec(), Some("application/json"))).unwrap(),
+            vals
+        );
+        assert!(decode_tokens(&req(vec![0u8; 5], None)).is_err());
+        assert!(decode_tokens(&req(b"[1, \"x\"]".to_vec(), None)).is_err());
+    }
+
+    #[test]
+    fn infer_body_round_trips_f32_logits() {
+        let r = crate::coordinator::Response {
+            id: 7,
+            logits: vec![0.1f32, -2.7182817, 1.0],
+            argmax: 2,
+            latency: Duration::from_micros(1234),
+        };
+        let body = infer_body("tiny-synth", &r);
+        assert!(body.contains("\"id\":7"));
+        assert!(body.contains("\"argmax\":2"));
+        let logits: Vec<f32> = body
+            .split("\"logits\":[")
+            .nth(1)
+            .unwrap()
+            .trim_end_matches("]}")
+            .split(',')
+            .map(|t| t.parse().unwrap())
+            .collect();
+        for (got, want) in logits.iter().zip(&r.logits) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+}

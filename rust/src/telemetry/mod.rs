@@ -15,7 +15,10 @@
 //! - Events follow the Chrome trace event format: `X` complete spans
 //!   (`ts`/`dur` in microseconds), `M` metadata events naming pids and
 //!   tids, `i` instants, and one final `C` counter carrying the drop
-//!   total. pid = model, tid = replica / pipeline stage / client.
+//!   total. pid = model, tid = replica / pipeline stage / client — the
+//!   HTTP front door ([`crate::server`]) allocates one `http-conn-N`
+//!   tid lane per accepted connection and records an `http` span per
+//!   request served on it, alongside the router's admission instants.
 //! - The file's first line is `[` and every event line ends with a
 //!   comma; Chrome's trace importer explicitly tolerates the missing
 //!   `]`, and each line stays individually parseable after stripping

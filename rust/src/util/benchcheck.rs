@@ -6,7 +6,7 @@
 //!
 //! * [`schema_errors`] — the bench artifact must contain every field the
 //!   README documents (including the `scale_out`, `kernels`, `faults`,
-//!   `telemetry` and `memory` sections), so the schema
+//!   `telemetry`, `http` and `memory` sections), so the schema
 //!   cannot silently drift away from the docs: the bench emits its JSON
 //!   by hand (no serde offline), and a renamed or dropped key would
 //!   otherwise only be noticed by whoever next reads the artifact.
@@ -94,6 +94,11 @@ const REQUIRED_PATHS: &[&str] = &[
     "telemetry.tracing_off_img_s",
     "telemetry.tracing_on_img_s",
     "telemetry.overhead_ratio",
+    "http.inproc_img_s",
+    "http.loopback_img_s",
+    "http.overhead_ratio",
+    "http.connections",
+    "http.requests",
     "memory.artifact_footprint_bytes",
     "memory.replicas",
     "memory.unshared_bytes",
@@ -116,7 +121,16 @@ const REQUIRED_ARRAY_ELEMENTS: &[(&str, &[&str])] = &[
     ("pipeline.stage_sweep", &["stages", "img_s"]),
     (
         "pipeline.per_stage",
-        &["name", "blocks", "lanes", "images", "busy_ms", "occupancy", "stalls_empty", "stalls_full"],
+        &[
+            "name",
+            "blocks",
+            "lanes",
+            "images",
+            "busy_ms",
+            "occupancy",
+            "stalls_empty",
+            "stalls_full",
+        ],
     ),
     ("scale_out.replica_sweep", &["replicas", "img_s", "speedup_vs_1", "per_replica"]),
 ];
@@ -267,6 +281,8 @@ mod tests {
   "faults": {"enabled": false, "restarts": 0, "retried": 0, "shed": 0, "expired": 0},
   "telemetry": {"tracing_off_img_s": 400.0, "tracing_on_img_s": 390.0,
                 "overhead_ratio": 1.026},
+  "http": {"inproc_img_s": 400.0, "loopback_img_s": 380.0,
+           "overhead_ratio": 1.053, "connections": 8, "requests": 64},
   "memory": {"artifact_footprint_bytes": 1048576, "replicas": 4,
              "unshared_bytes": 4194304, "shared_bytes": 1048576,
              "savings_ratio": 4.0, "artifact_refs": 9},
@@ -340,6 +356,19 @@ mod tests {
         assert!(
             errs.iter().any(|e| e.contains("telemetry.overhead_ratio")),
             "telemetry omission must be caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_http_section_is_reported() {
+        let mut doc = sample();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("http");
+        }
+        let errs = schema_errors(&doc);
+        assert!(
+            errs.iter().any(|e| e.contains("http.overhead_ratio")),
+            "http omission must be caught: {errs:?}"
         );
     }
 

@@ -1,0 +1,515 @@
+//! The network front door over the committed golden fixture: bit-exact
+//! replies across the socket, typed-error → status-code mapping,
+//! malformed-input robustness (no wedged or leaked workers — pinned by
+//! the `live_workers` gauge), keep-alive, overload shedding with
+//! per-source accounting, admission-time deadline expiry, and the
+//! exactly-one-reply invariant across a graceful drain.
+//!
+//! Bind address honors the `HGPIPE_HTTP` env fallback (the CI
+//! chaos-over-HTTP matrix entry routes through it with `127.0.0.1:0`),
+//! defaulting to an ephemeral loopback port.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hgpipe::artifacts::Manifest;
+use hgpipe::coordinator::faults::FaultPlan;
+use hgpipe::coordinator::Router;
+use hgpipe::runtime::{BackendKind, RuntimeConfig};
+use hgpipe::server::{HttpConfig, HttpServer, PROMETHEUS_CONTENT_TYPE};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&fixture_dir()).expect("committed golden fixture")
+}
+
+fn config() -> RuntimeConfig {
+    RuntimeConfig::new(BackendKind::Interpreter).with_lanes(Some(2))
+}
+
+fn bind_addr() -> String {
+    hgpipe::server::addr_from_env().unwrap_or_else(|| "127.0.0.1:0".into())
+}
+
+fn start(cfg: RuntimeConfig, http: HttpConfig) -> (HttpServer, Arc<Router>) {
+    let router =
+        Arc::new(Router::start(&manifest(), &["tiny-synth".to_string()], 2, cfg).unwrap());
+    let server = HttpServer::bind(&bind_addr(), router.clone(), http).unwrap();
+    (server, router)
+}
+
+fn read_f32(path: &Path) -> Vec<f32> {
+    let bytes = std::fs::read(path).unwrap();
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn read_f64(path: &Path) -> Vec<f64> {
+    let bytes = std::fs::read(path).unwrap();
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect()
+}
+
+/// Golden fixture: per-image token slices and the expected (argmax,
+/// f32 logits) the interpreter must reproduce bit-exactly.
+fn golden() -> (Vec<Vec<f32>>, Vec<(usize, Vec<f32>)>) {
+    let dir = fixture_dir();
+    let tokens = read_f32(&dir.join("golden_tokens.bin"));
+    let logits = read_f64(&dir.join("golden_logits.bin"));
+    let server = Router::start(&manifest(), &["tiny-synth".to_string()], 2, config()).unwrap();
+    let per = server.server("tiny-synth").unwrap().tokens_per_image();
+    let nc = server.server("tiny-synth").unwrap().num_classes();
+    drop(server);
+    let images: Vec<Vec<f32>> = tokens.chunks_exact(per).map(<[f32]>::to_vec).collect();
+    let expected: Vec<(usize, Vec<f32>)> = logits
+        .chunks_exact(nc)
+        .map(|row| {
+            let row: Vec<f32> = row.iter().map(|&v| v as f32).collect();
+            // same reduction as the coordinator: total_cmp, last max wins
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            (argmax, row)
+        })
+        .collect();
+    (images, expected)
+}
+
+// ---------------- tiny blocking HTTP/1.1 client ----------------
+
+struct Reply {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Reply {
+    fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Read exactly one response off `stream` (keep-alive safe: stops at
+/// Content-Length, never waits for EOF).
+fn read_reply(stream: &mut TcpStream) -> Reply {
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("response head");
+        assert!(n > 0, "connection closed before a full response head: {buf:?}");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+    let mut lines = head.split("\r\n");
+    let status: u16 =
+        lines.next().unwrap().split(' ').nth(1).expect("status code").parse().unwrap();
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse().unwrap())
+        .unwrap_or(0);
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < len {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("response body");
+        assert!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(len);
+    Reply { status, headers, body }
+}
+
+fn send_raw(addr: &str, raw: &[u8]) -> Reply {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(raw).unwrap();
+    read_reply(&mut stream)
+}
+
+fn request_on(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Reply {
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: t\r\n");
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.write_all(body).unwrap();
+    read_reply(stream)
+}
+
+fn request(addr: &str, method: &str, path: &str, hs: &[(&str, &str)], body: &[u8]) -> Reply {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    request_on(&mut stream, method, path, hs, body)
+}
+
+fn infer_path() -> &'static str {
+    "/v1/models/tiny-synth/infer"
+}
+
+fn image_bytes(image: &[f32]) -> Vec<u8> {
+    image.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+fn parse_reply_logits(body: &str) -> Vec<f32> {
+    body.split("\"logits\":[")
+        .nth(1)
+        .expect("logits array in reply")
+        .split(']')
+        .next()
+        .unwrap()
+        .split(',')
+        .map(|t| t.parse().unwrap())
+        .collect()
+}
+
+fn parse_reply_argmax(body: &str) -> usize {
+    body.split("\"argmax\":")
+        .nth(1)
+        .expect("argmax in reply")
+        .split(|c: char| !c.is_ascii_digit())
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+// ---------------- the tests ----------------
+
+#[test]
+fn binary_bodies_reply_bit_exact_vs_golden() {
+    let (server, _router) = start(config(), HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let (images, expected) = golden();
+    for (image, (want_argmax, want_logits)) in images.iter().zip(&expected).take(4) {
+        let reply = request(&addr, "POST", infer_path(), &[], &image_bytes(image));
+        assert_eq!(reply.status, 200, "{}", reply.text());
+        let body = reply.text();
+        assert_eq!(parse_reply_argmax(&body), *want_argmax);
+        let logits = parse_reply_logits(&body);
+        assert_eq!(logits.len(), want_logits.len());
+        for (got, want) in logits.iter().zip(want_logits) {
+            assert_eq!(got.to_bits(), want.to_bits(), "logits must cross the socket bit-exact");
+        }
+    }
+}
+
+#[test]
+fn json_bodies_decode_like_binary_ones() {
+    let (server, _router) = start(config(), HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let (images, expected) = golden();
+    let json = format!(
+        "[{}]",
+        images[0].iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+    );
+    let reply = request(
+        &addr,
+        "POST",
+        infer_path(),
+        &[("Content-Type", "application/json")],
+        json.as_bytes(),
+    );
+    assert_eq!(reply.status, 200, "{}", reply.text());
+    assert_eq!(parse_reply_argmax(&reply.text()), expected[0].0);
+}
+
+#[test]
+fn keep_alive_serves_many_requests_on_one_connection() {
+    let (server, _router) = start(config(), HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let (images, expected) = golden();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    for (image, (want_argmax, _)) in images.iter().zip(&expected).take(3) {
+        let reply = request_on(&mut stream, "POST", infer_path(), &[], &image_bytes(image));
+        assert_eq!(reply.status, 200);
+        assert_eq!(reply.header("connection"), Some("keep-alive"));
+        assert_eq!(parse_reply_argmax(&reply.text()), *want_argmax);
+    }
+    // a GET rides the same connection
+    let health = request_on(&mut stream, "GET", "/healthz", &[], b"");
+    assert_eq!(health.status, 200);
+}
+
+#[test]
+fn unknown_model_maps_to_404_naming_whats_served() {
+    let (server, _router) = start(config(), HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let per = _router.server("tiny-synth").unwrap().tokens_per_image();
+    let reply =
+        request(&addr, "POST", "/v1/models/nope/infer", &[], &image_bytes(&vec![0.0; per]));
+    assert_eq!(reply.status, 404);
+    let body = reply.text();
+    assert!(body.contains("nope") && body.contains("tiny-synth"), "{body}");
+}
+
+#[test]
+fn unknown_routes_404_and_wrong_methods_405() {
+    let (server, _router) = start(config(), HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    assert_eq!(request(&addr, "GET", "/nope", &[], b"").status, 404);
+    let infer_get = request(&addr, "GET", infer_path(), &[], b"");
+    assert_eq!(infer_get.status, 405);
+    assert_eq!(infer_get.header("allow"), Some("POST"));
+    let metrics_del = request(&addr, "DELETE", "/metrics", &[], b"");
+    assert_eq!(metrics_del.status, 405);
+    assert_eq!(metrics_del.header("allow"), Some("GET"));
+}
+
+#[test]
+fn malformed_input_is_answered_and_never_wedges_a_worker() {
+    // small caps so every violation fits in one client write (nothing
+    // is left unread when the server answers-and-closes)
+    let http = HttpConfig {
+        workers: 3,
+        max_head_bytes: 256,
+        // big enough for a real tiny-synth image (12 KiB), small
+        // enough that an oversized declaration is cheap to make
+        max_body_bytes: 16 * 1024,
+        read_timeout: Duration::from_millis(500),
+        ..HttpConfig::default()
+    };
+    let (server, _router) = start(config(), http);
+    let addr = server.local_addr().to_string();
+    assert_eq!(server.live_workers(), 3);
+
+    // truncated request line
+    assert_eq!(send_raw(&addr, b"GET /\r\n\r\n").status, 400);
+    // garbage Content-Length
+    let r = send_raw(
+        &addr,
+        b"POST /v1/models/tiny-synth/infer HTTP/1.1\r\nContent-Length: x\r\n\r\n",
+    );
+    assert_eq!(r.status, 400);
+    // missing Content-Length on POST
+    let r = send_raw(&addr, b"POST /v1/models/tiny-synth/infer HTTP/1.1\r\n\r\n");
+    assert_eq!(r.status, 411);
+    // declared body over the cap: 413 before any body byte is read
+    let r = send_raw(
+        &addr,
+        b"POST /v1/models/tiny-synth/infer HTTP/1.1\r\nContent-Length: 32768\r\n\r\n",
+    );
+    assert_eq!(r.status, 413);
+    // unsupported protocol version
+    assert_eq!(send_raw(&addr, b"GET /healthz HTTP/3.0\r\n\r\n").status, 505);
+    // oversized head (complete, over the 256-byte cap)
+    let big = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(1024));
+    assert_eq!(send_raw(&addr, big.as_bytes()).status, 431);
+    // body not a multiple of 4 / wrong token count are 400s from decode
+    assert_eq!(request(&addr, "POST", infer_path(), &[], &[1, 2, 3]).status, 400);
+    assert_eq!(request(&addr, "POST", infer_path(), &[], &image_bytes(&[0.5; 3])).status, 400);
+
+    // the pool survived all of it and still serves real work
+    assert_eq!(server.live_workers(), 3, "malformed input must not kill or leak workers");
+    let (images, expected) = golden();
+    let reply = request(&addr, "POST", infer_path(), &[], &image_bytes(&images[0]));
+    assert_eq!(reply.status, 200);
+    assert_eq!(parse_reply_argmax(&reply.text()), expected[0].0);
+}
+
+#[test]
+fn slow_client_is_disconnected_within_the_read_budget() {
+    let http = HttpConfig {
+        workers: 2,
+        read_timeout: Duration::from_millis(300),
+        ..HttpConfig::default()
+    };
+    let (server, _router) = start(config(), http);
+    let addr = server.local_addr().to_string();
+
+    // trickle half a request head, then stall: the server must hang up
+    let mut slow = TcpStream::connect(&addr).unwrap();
+    slow.write_all(b"POST /v1/models/tiny-synth/inf").unwrap();
+    slow.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let t0 = Instant::now();
+    let mut sink = [0u8; 64];
+    let n = slow.read(&mut sink).expect("server should close, not error");
+    assert_eq!(n, 0, "expected EOF from the server's slow-client disconnect");
+    assert!(t0.elapsed() < Duration::from_secs(4), "disconnect must come from the budget");
+
+    // the worker that served the slow client is free again
+    assert_eq!(server.live_workers(), 2);
+    assert_eq!(request(&addr, "GET", "/healthz", &[], b"").status, 200);
+}
+
+#[test]
+fn overload_sheds_429_with_retry_after_and_http_source_accounting() {
+    // one replica stalled 300ms per dispatch behind a capacity-1 queue:
+    // concurrent posts must shed. Explicit faults beat any env chaos.
+    let cfg = config()
+        .with_replicas(Some(1))
+        .with_queue_capacity(Some(1))
+        .with_faults(Some(FaultPlan::parse("stall:1.0:300,seed:7").unwrap()));
+    let (server, _router) = start(cfg, HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let (images, _) = golden();
+    let body = Arc::new(image_bytes(&images[0]));
+
+    let results: Vec<u16> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = addr.clone();
+                let body = body.clone();
+                s.spawn(move || {
+                    let reply = request(&addr, "POST", infer_path(), &[], &body);
+                    if reply.status == 429 {
+                        assert_eq!(reply.header("retry-after"), Some("1"));
+                        assert!(reply.text().contains("overloaded"), "{}", reply.text());
+                    }
+                    reply.status
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // exactly one reply per request, and overload produced at least one 429
+    assert_eq!(results.len(), 8);
+    assert!(results.iter().all(|s| *s == 200 || *s == 429), "{results:?}");
+    let sheds = results.iter().filter(|s| **s == 429).count();
+    assert!(sheds >= 1, "a capacity-1 queue under 8 concurrent posts must shed: {results:?}");
+
+    // the shed shows up in /metrics, attributed to the http source
+    let metrics = request(&addr, "GET", "/metrics", &[], b"").text();
+    let line = metrics
+        .lines()
+        .find(|l| l.starts_with("hgpipe_requests_shed_total{"))
+        .expect("shed family present");
+    let total: usize = line.rsplit(' ').next().unwrap().parse().unwrap();
+    assert!(total >= sheds, "scraped shed {total} < observed 429s {sheds}");
+    let by_source = metrics
+        .lines()
+        .find(|l| {
+            l.starts_with("hgpipe_requests_shed_by_source_total{")
+                && l.contains("source=\"http\"")
+        })
+        .expect("per-source shed family present");
+    let per_src: usize = by_source.rsplit(' ').next().unwrap().parse().unwrap();
+    assert_eq!(per_src, total, "every shed came over http");
+}
+
+#[test]
+fn deadline_zero_is_504_at_admission_without_enqueueing() {
+    let (server, router) = start(config(), HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let (images, _) = golden();
+    let reply = request(
+        &addr,
+        "POST",
+        infer_path(),
+        &[("Deadline-Ms", "0")],
+        &image_bytes(&images[0]),
+    );
+    assert_eq!(reply.status, 504, "{}", reply.text());
+    assert!(reply.text().contains("deadline exceeded"), "{}", reply.text());
+
+    let m = &router.metrics()[0].1;
+    assert_eq!(m.expired, 1, "dead-on-arrival deadlines count as expired");
+    assert_eq!(m.shed, 0, "...not as shed");
+    assert_eq!(m.count(), 0, "...and never execute");
+    // garbage deadlines are a client error, not a 5xx
+    let bad = request(
+        &addr,
+        "POST",
+        infer_path(),
+        &[("Deadline-Ms", "soon")],
+        &image_bytes(&images[0]),
+    );
+    assert_eq!(bad.status, 400);
+}
+
+#[test]
+fn graceful_drain_answers_the_in_flight_request() {
+    // a 300ms stall guarantees the drain begins while the request is
+    // mid-dispatch; the shutdown must still deliver its one reply
+    let cfg = config()
+        .with_replicas(Some(1))
+        .with_faults(Some(FaultPlan::parse("stall:1.0:300,seed:7").unwrap()));
+    let (server, _router) = start(cfg, HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let (images, expected) = golden();
+    let body = image_bytes(&images[0]);
+
+    let inflight = std::thread::spawn({
+        let addr = addr.clone();
+        move || request(&addr, "POST", infer_path(), &[], &body)
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    server.shutdown(); // blocks until the in-flight request is answered
+
+    let reply = inflight.join().unwrap();
+    assert_eq!(reply.status, 200, "{}", reply.text());
+    assert_eq!(parse_reply_argmax(&reply.text()), expected[0].0);
+    assert_eq!(reply.header("connection"), Some("close"), "drain closes the connection");
+    // and the door is actually closed
+    assert!(TcpStream::connect(&addr).is_err() || {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        matches!(s.read(&mut [0u8; 16]), Ok(0) | Err(_))
+    });
+}
+
+#[test]
+fn metrics_endpoint_is_prometheus_text_with_request_counts() {
+    let (server, _router) = start(config(), HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let (images, _) = golden();
+    for image in images.iter().take(3) {
+        assert_eq!(request(&addr, "POST", infer_path(), &[], &image_bytes(image)).status, 200);
+    }
+    let reply = request(&addr, "GET", "/metrics", &[], b"");
+    assert_eq!(reply.status, 200);
+    assert_eq!(reply.header("content-type"), Some(PROMETHEUS_CONTENT_TYPE));
+    let text = reply.text();
+    assert!(
+        text.contains("hgpipe_requests_total{model=\"tiny-synth\",version=\"v1\"} 3"),
+        "{text}"
+    );
+    for family in [
+        "# TYPE hgpipe_requests_total counter",
+        "# TYPE hgpipe_live_replicas gauge",
+        "# TYPE hgpipe_request_latency_seconds summary",
+    ] {
+        assert!(text.contains(family), "missing {family} in:\n{text}");
+    }
+}
+
+#[test]
+fn healthz_reflects_live_replicas() {
+    let (server, router) = start(config().with_replicas(Some(2)), HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let reply = request(&addr, "GET", "/healthz", &[], b"");
+    assert_eq!(reply.status, 200);
+    let body = reply.text();
+    let live = router.server("tiny-synth").unwrap().live_replicas();
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    assert!(body.contains(&format!("\"live_replicas\":{live}")), "{body}");
+    assert!(body.contains("tiny-synth"), "{body}");
+}
